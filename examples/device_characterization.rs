@@ -1,0 +1,25 @@
+//! Device characterization walk-through (Fig. 4a–g): program an array,
+//! sample read traces, print the noise statistics and the CIM/CAM impact.
+//!
+//! ```bash
+//! cargo run --release --example device_characterization
+//! ```
+
+use anyhow::Result;
+use memdyn::figures::common::Setup;
+use memdyn::figures::fig4;
+use memdyn::model::artifacts_dir;
+
+fn main() -> Result<()> {
+    let dir = artifacts_dir(None);
+    let setup = Setup::new(&dir, 100);
+    println!("{}", fig4::fig4a(&setup)?);
+    println!("{}", fig4::fig4bcde(&setup)?);
+    println!("{}", fig4::fig4f(&setup)?);
+    // fig4g needs artifacts (real semantic centers); skip gracefully without
+    match fig4::fig4g(&setup) {
+        Ok(s) => println!("{s}"),
+        Err(e) => println!("[fig4g skipped: {e}]"),
+    }
+    Ok(())
+}

@@ -1,0 +1,87 @@
+//! 3D pipeline demo: dynamic PointNet++ classifying synthetic ModelNet10
+//! clouds, on both the XLA artifact backend and the crossbar simulation.
+//!
+//! ```bash
+//! cargo run --release --example pointcloud_demo
+//! ```
+
+use anyhow::Result;
+use memdyn::budget::BudgetModel;
+use memdyn::coordinator::dynmodel::XlaPointNetModel;
+use memdyn::coordinator::{CenterSource, Engine, ExitMemory, ThresholdConfig};
+use memdyn::figures::common::{self as figcommon, Variant};
+use memdyn::model::{artifacts_dir, DatasetBundle, ModelBundle};
+use memdyn::nn::NoiseSpec;
+use memdyn::runtime::Runtime;
+
+const CLASSES: [&str; 10] = [
+    "bathtub", "bed", "chair", "desk", "dresser",
+    "monitor", "night_stand", "sofa", "table", "toilet",
+];
+
+fn main() -> Result<()> {
+    let dir = artifacts_dir(None);
+    let bundle = ModelBundle::load(&dir, "pointnet")?;
+    let data = DatasetBundle::load(&dir, "modelnet")?;
+    let budget = BudgetModel::new(
+        bundle.block_ops.clone(),
+        &bundle.exit_dims,
+        bundle.classes,
+    );
+    let thr = ThresholdConfig::load_or_default(
+        &bundle.dir.join("thresholds.json"),
+        bundle.blocks,
+        0.9,
+    );
+
+    println!("== XLA backend: 8-SA-layer dynamic PointNet++ ==");
+    let rt = Runtime::cpu()?;
+    let model = XlaPointNetModel::load(&rt, &bundle)?;
+    let memory =
+        ExitMemory::build(&bundle, CenterSource::TernaryQ, &NoiseSpec::Digital, 7)?;
+    let engine = Engine::new(model, memory, thr.values.clone());
+    let n = 24usize.min(data.n_test());
+    let out = engine.infer_batch(&data.x_test[..n * data.sample_len], n)?;
+    let mut correct = 0;
+    for (i, o) in out.iter().enumerate() {
+        let label = data.y_test[i] as usize;
+        if o.class == label {
+            correct += 1;
+        }
+        if i < 8 {
+            println!(
+                "cloud {:>2}: {:<12} -> {:<12} exit SA {}{}",
+                i,
+                CLASSES[label],
+                CLASSES[o.class],
+                o.exit + 1,
+                if o.exited_early { " (early)" } else { "" }
+            );
+        }
+    }
+    let exits: Vec<usize> = out.iter().map(|o| o.exit).collect();
+    let b = budget.summarize(&exits);
+    println!(
+        "accuracy {}/{n}  budget drop {:.1}%\n",
+        correct,
+        b.budget_drop * 100.0
+    );
+
+    println!("== crossbar (noisy) backend on 12 clouds ==");
+    let mut mem_engine = figcommon::pointnet_engine(&bundle, Variant::EeQunNoise, 9)?;
+    mem_engine.thresholds = thr.values;
+    let nm = 12usize.min(data.n_test());
+    let mem_out = mem_engine.infer_batch(&data.x_test[..nm * data.sample_len], nm)?;
+    let mem_correct = mem_out
+        .iter()
+        .zip(&data.y_test[..nm])
+        .filter(|(o, &y)| o.class == y as usize)
+        .count();
+    let c = mem_engine.model.net.take_counters();
+    println!(
+        "accuracy {mem_correct}/{nm} under device noise | analogue MVMs {} | \
+         device reads {:.2e}",
+        c.mvms, c.device_reads as f64
+    );
+    Ok(())
+}

@@ -1,0 +1,56 @@
+//! Quickstart: load the AOT artifacts, classify a handful of digits with
+//! the early-exit engine, and print where each sample left the network.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+use memdyn::coordinator::dynmodel::XlaResNetModel;
+use memdyn::coordinator::{CenterSource, Engine, ExitMemory, ThresholdConfig};
+use memdyn::model::{artifacts_dir, DatasetBundle, ModelBundle};
+use memdyn::nn::NoiseSpec;
+use memdyn::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let dir = artifacts_dir(None);
+    let bundle = ModelBundle::load(&dir, "resnet")?;
+    let data = DatasetBundle::load(&dir, "mnist")?;
+
+    // XLA backend: the per-block HLO artifacts through PJRT.
+    let rt = Runtime::cpu()?;
+    let model = XlaResNetModel::load(&rt, &bundle)?;
+    let memory =
+        ExitMemory::build(&bundle, CenterSource::TernaryQ, &NoiseSpec::Digital, 7)?;
+    let thr = ThresholdConfig::load_or_default(
+        &bundle.dir.join("thresholds.json"),
+        bundle.blocks,
+        0.9,
+    );
+    let engine = Engine::new(model, memory, thr.values);
+
+    let n = 16usize;
+    let out = engine.infer_batch(&data.x_test[..n * data.sample_len], n)?;
+    println!("sample | true | pred | exit block | via");
+    let mut correct = 0;
+    for (i, o) in out.iter().enumerate() {
+        let label = data.y_test[i];
+        if o.class == label as usize {
+            correct += 1;
+        }
+        println!(
+            "{:>6} | {:>4} | {:>4} | {:>10} | {}",
+            i,
+            label,
+            o.class,
+            o.exit + 1,
+            if o.exited_early {
+                format!("CAM (sim {:.3})", o.similarity)
+            } else {
+                "head".to_string()
+            }
+        );
+    }
+    println!("accuracy: {correct}/{n}");
+    Ok(())
+}

@@ -1,0 +1,88 @@
+//! Serving demo: the dynamic batcher + early-exit engine under a Poisson
+//! request stream, reporting latency percentiles and throughput — the
+//! vLLM-router-style view of the paper's system.
+//!
+//! ```bash
+//! cargo run --release --example serve_vision -- --requests 300 --rate 300
+//! ```
+
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+use memdyn::coordinator::dynmodel::XlaResNetModel;
+use memdyn::coordinator::{
+    CenterSource, Engine, ExitMemory, Server, ServerConfig, ThresholdConfig,
+};
+use memdyn::data;
+use memdyn::model::{artifacts_dir, DatasetBundle, ModelBundle};
+use memdyn::nn::NoiseSpec;
+use memdyn::runtime::Runtime;
+use memdyn::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let dir = artifacts_dir(args.get("artifacts"));
+    let n_requests = args.get_usize("requests", 300);
+    let rate = args.get_f64("rate", 300.0);
+    let data = DatasetBundle::load(&dir, "mnist")?;
+    let bundle = ModelBundle::load(&dir, "resnet")?;
+    let thr = ThresholdConfig::load_or_default(
+        &bundle.dir.join("thresholds.json"),
+        bundle.blocks,
+        0.9,
+    );
+
+    for (max_batch, wait_ms) in [(1usize, 0u64), (8, 2), (16, 5)] {
+        let dir2 = dir.clone();
+        let thr_values = thr.values.clone();
+        let server = Server::start(
+            move || {
+                let bundle = ModelBundle::load(&dir2, "resnet")?;
+                let rt = Runtime::cpu()?;
+                let model = XlaResNetModel::load(&rt, &bundle)?;
+                let memory = ExitMemory::build(
+                    &bundle,
+                    CenterSource::TernaryQ,
+                    &NoiseSpec::Digital,
+                    7,
+                )?;
+                Ok(Engine::new(model, memory, thr_values))
+            },
+            ServerConfig {
+                max_batch,
+                max_wait: Duration::from_millis(wait_ms),
+                queue_depth: 4096,
+            },
+        );
+        let client = server.client();
+        let stream = data::poisson_stream(rate, n_requests, data.n_test(), 5);
+        let t0 = Instant::now();
+        let mut pending = Vec::with_capacity(n_requests);
+        for a in &stream {
+            if let Some(sleep) =
+                Duration::from_micros(a.at_us).checked_sub(t0.elapsed())
+            {
+                std::thread::sleep(sleep);
+            }
+            pending.push((
+                client.submit(data.test_sample(a.sample).to_vec())?,
+                data.y_test[a.sample],
+            ));
+        }
+        let mut correct = 0usize;
+        for (rx, label) in pending {
+            let r = rx.recv().map_err(|_| anyhow!("request dropped"))?;
+            if r.outcome.class == label as usize {
+                correct += 1;
+            }
+        }
+        drop(client);
+        let snap = server.shutdown()?;
+        println!(
+            "max_batch={max_batch:<2} wait={wait_ms}ms | accuracy {:.1}% | {}",
+            100.0 * correct as f64 / n_requests as f64,
+            snap.report()
+        );
+    }
+    Ok(())
+}

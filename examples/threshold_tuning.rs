@@ -1,0 +1,74 @@
+//! Threshold tuning walk-through (Fig. 6): grid-search frontier, then TPE
+//! vs random search on the same evaluation budget, with the convergence
+//! trace the paper plots in Fig. 6h–k.
+//!
+//! ```bash
+//! cargo run --release --example threshold_tuning
+//! ```
+
+use anyhow::Result;
+use memdyn::budget::BudgetModel;
+use memdyn::figures::common::{self as figcommon, Variant};
+use memdyn::model::{artifacts_dir, DatasetBundle, ModelBundle};
+use memdyn::opt::{self, Objective};
+
+fn main() -> Result<()> {
+    let dir = artifacts_dir(None);
+    let bundle = ModelBundle::load(&dir, "resnet")?;
+    let data = DatasetBundle::load(&dir, "mnist")?;
+    let budget = BudgetModel::new(
+        bundle.block_ops.clone(),
+        &bundle.exit_dims,
+        bundle.classes,
+    );
+    println!("[1/3] recording calibration trace (600 train samples)...");
+    let engine = figcommon::resnet_engine(&bundle, Variant::EeQun, 11)?;
+    let trace = figcommon::trace_train(&engine, &data, 600, 25)?;
+    let objective = Objective::default();
+
+    println!("[2/3] grid search (shared threshold, Fig 6a):");
+    for o in opt::grid::shared_threshold_sweep(&trace, &budget, &objective, 0.5, 1.0, 6)
+    {
+        println!(
+            "  thr {:.2}: acc {:>6.2}%, budget drop {:>6.2}%, score {:.4}",
+            o.thresholds[0],
+            o.accuracy * 100.0,
+            o.budget_drop * 100.0,
+            o.score
+        );
+    }
+
+    println!("[3/3] TPE vs random search (400 evaluations each):");
+    let tpe = opt::tpe::optimize(
+        &trace,
+        &budget,
+        &objective,
+        &opt::tpe::TpeConfig {
+            n_iters: 400,
+            ..Default::default()
+        },
+    );
+    let rnd = opt::random::search(&trace, &budget, &objective, 0.3, 1.05, 400, 99);
+    println!(
+        "  TPE    best score {:.4} (acc {:.2}%, budget {:.2}%)",
+        tpe.best.score,
+        tpe.best.accuracy * 100.0,
+        tpe.best.budget_drop * 100.0
+    );
+    println!(
+        "  random best score {:.4} (acc {:.2}%, budget {:.2}%)",
+        rnd.best.score,
+        rnd.best.accuracy * 100.0,
+        rnd.best.budget_drop * 100.0
+    );
+    println!("  TPE thresholds: {:?}", tpe.best.thresholds);
+    println!("  convergence (mean score per 50-iter window):");
+    for w in 0..8 {
+        let lo = w * 50;
+        let hi = (lo + 50).min(tpe.history.len());
+        let m: f64 =
+            tpe.history[lo..hi].iter().map(|h| h.score).sum::<f64>() / (hi - lo) as f64;
+        println!("    iters {lo:>3}..{hi:<3}: {m:.4}");
+    }
+    Ok(())
+}

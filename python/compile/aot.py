@@ -1,0 +1,394 @@
+"""AOT entrypoint: train, quantize, extract centers, lower to HLO text.
+
+``python -m compile.aot --out ../artifacts`` is the single build-time Python
+invocation (`make artifacts`).  After it finishes, the Rust binary is fully
+self-contained: per-exit-block HLO artifacts + weight/center/dataset bundles.
+
+HLO **text** (not a serialized HloModuleProto) is the interchange format —
+jax >= 0.5 emits protos with 64-bit instruction ids that the runtime's
+xla_extension 0.5.1 rejects; the text parser reassigns ids cleanly (see
+/opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import datasets, io_bin
+from . import model as M
+from . import train as T
+from .kernels import ternary_matmul as ktm
+from .quantize import ternarize
+
+RESNET_BUCKETS = [1, 8]
+POINTNET_BUCKETS = [1, 4]
+
+
+# ----------------------------------------------------------------------------
+# HLO lowering
+# ----------------------------------------------------------------------------
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    # print_large_constants: the baked ternary weights exceed HLO's default
+    # constant-elision threshold; an elided "{...}" constant re-parses as
+    # zeros on the Rust side.
+    text = comp.as_hlo_text(print_large_constants=True)
+    assert "{...}" not in text, "elided constant survived in HLO text"
+    return text
+
+
+def lower_to_file(fn, example_args, path: str) -> int:
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    return len(text)
+
+
+# ----------------------------------------------------------------------------
+# Weight preparation: bake hard-ternary weights into the forward functions
+# ----------------------------------------------------------------------------
+
+def quantize_tree(tree):
+    """Ternarize every tensor named w* in a param tree (returns np arrays)."""
+    if isinstance(tree, dict):
+        return {k: (np.asarray(ternarize(jnp.asarray(v)))
+                    if k.startswith("w") else quantize_tree(v))
+                for k, v in tree.items()}
+    if isinstance(tree, list):
+        return [quantize_tree(v) for v in tree]
+    return np.asarray(tree)
+
+
+def _flatten_params(tree, prefix, out):
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            _flatten_params(v, f"{prefix}.{k}" if prefix else k, out)
+    elif isinstance(tree, list):
+        for i, v in enumerate(tree):
+            _flatten_params(v, f"{prefix}.{i}", out)
+    else:
+        out[prefix] = np.asarray(tree)
+
+
+def export_weights(out_dir: str, name: str, fp_params, q_params,
+                   centers_fp, centers_q, stats_fp, stats_q, meta: dict):
+    tensors = {}
+    flat_fp, flat_q = {}, {}
+    _flatten_params(fp_params, "", flat_fp)
+    _flatten_params(q_params, "", flat_q)
+    for k, v in flat_fp.items():
+        tensors[f"fp.{k}"] = v.astype(np.float32)
+    for k, v in flat_q.items():
+        # ternary weights as i8; norm/bias params stay f32
+        last = k.split(".")[-1]
+        if last.startswith("w"):
+            tensors[f"q.{k}"] = v.astype(np.int8)
+        else:
+            tensors[f"q.{k}"] = v.astype(np.float32)
+    for i, (cf, cq) in enumerate(zip(centers_fp, centers_q)):
+        tensors[f"centers_fp.{i}"] = cf.astype(np.float32)
+        tensors[f"centers_q.{i}"] = cq.astype(np.int8)
+        tensors[f"stats_fp_mu.{i}"] = stats_fp[0][i]
+        tensors[f"stats_fp_sd.{i}"] = stats_fp[1][i]
+        tensors[f"stats_q_mu.{i}"] = stats_q[0][i]
+        tensors[f"stats_q_sd.{i}"] = stats_q[1][i]
+    io_bin.write_bundle(os.path.join(out_dir, name, "weights"), tensors, meta)
+
+
+# ----------------------------------------------------------------------------
+# Per-block ops accounting (MAC*2 = OPs), exported for the Rust budget module
+# ----------------------------------------------------------------------------
+
+def resnet_block_ops() -> list:
+    ops = []
+    h = w = 28
+    cin = M.RESNET_CHANNELS[0]
+    for cout, stride in zip(M.RESNET_CHANNELS, M.RESNET_STRIDES):
+        ho, wo = h // stride, w // stride
+        o = ho * wo * 9 * cin * cout * 2 + ho * wo * 9 * cout * cout * 2
+        if stride != 1 or cin != cout:
+            o += ho * wo * cin * cout * 2
+        ops.append(o)
+        h, w, cin = ho, wo, cout
+    return ops
+
+
+def pointnet_block_ops() -> list:
+    ops = []
+    n_in = M.N_POINTS
+    cin = 0
+    for i, cout in enumerate(M.SA_CHANNELS):
+        npts, k = M.SA_NPOINT[i], M.SA_K[i]
+        din, mid = cin + 3, max(cout, 16)
+        mlp = npts * k * (din * mid + mid * cout) * 2
+        dist = npts * n_in * 3 * 2        # FPS + ball-query distance compute
+        ops.append(mlp + dist)
+        n_in, cin = npts, cout
+    return ops
+
+
+# ----------------------------------------------------------------------------
+# Build steps
+# ----------------------------------------------------------------------------
+
+def export_datasets(out: str, quick: bool):
+    n_tr, n_te = (400, 100) if quick else (6000, 1500)
+    x_tr, y_tr, x_te, y_te = datasets.synthetic_mnist(n_tr, n_te)
+    io_bin.write_bundle(os.path.join(out, "data", "mnist"), {
+        "x_train": x_tr, "y_train": y_tr, "x_test": x_te, "y_test": y_te,
+    }, {"img": 28, "classes": 10})
+    m_tr, m_te = (120, 60) if quick else (800, 200)
+    px_tr, py_tr, px_te, py_te = datasets.synthetic_modelnet(m_tr, m_te)
+    io_bin.write_bundle(os.path.join(out, "data", "modelnet"), {
+        "x_train": px_tr, "y_train": py_tr, "x_test": px_te, "y_test": py_te,
+    }, {"points": M.N_POINTS, "classes": 10,
+        "class_names": datasets.MODELNET_CLASSES})
+    return (x_tr, y_tr, x_te, y_te), (px_tr, py_tr, px_te, py_te)
+
+
+def build_resnet(out: str, data, quick: bool, log=print):
+    x_tr, y_tr, x_te, y_te = data
+    ep_fp, ep_q = (1, 1) if quick else (5, 8)
+    ckpt = os.path.join(out, "resnet", "fp_ckpt")
+    fp = None if quick else T.load_params(ckpt, M.init_resnet(0))
+    if fp is None:
+        log("[resnet] training full-precision (SFP) backbone...")
+        fp = T.train_resnet(x_tr, y_tr, x_te, y_te, quant="none",
+                            epochs=ep_fp, log=log)
+        if not quick:
+            T.save_params(ckpt, fp)
+    else:
+        log("[resnet] loaded cached FP backbone")
+    q_ckpt = os.path.join(out, "resnet", "q_ckpt")
+    q = None if quick else T.load_params(q_ckpt, M.init_resnet(0))
+    if q is None:
+        log("[resnet] ternary STE fine-tune (Qun, soft->hard anneal)...")
+        q = T.train_resnet(x_tr, y_tr, x_te, y_te, quant="ste",
+                           init_params=fp, epochs=ep_q, lr=4e-4, log=log)
+        if not quick:
+            T.save_params(q_ckpt, q)
+    else:
+        log("[resnet] loaded cached ternary backbone")
+
+    qh = quantize_tree(jax.tree_util.tree_map(np.asarray, q))
+
+    @jax.jit
+    def svs_q(p, xb):
+        return M.resnet_forward(p, xb, impl="ref", quant="none")[1]
+
+    centers_fp_model, mu_fp, sd_fp = T.semantic_centers(
+        jax.jit(lambda p, xb: M.resnet_forward(p, xb, impl="ref",
+                                               quant="none")[1]),
+        fp, x_tr, y_tr, M.RESNET_BLOCKS)
+    centers_q_fp, mu_q, sd_q = T.semantic_centers(svs_q, T._to_jnp(qh),
+                                                  x_tr, y_tr, M.RESNET_BLOCKS)
+    centers_q = T.ternarize_centers(centers_q_fp)
+
+    meta = {
+        "model": "resnet", "blocks": M.RESNET_BLOCKS,
+        "channels": M.RESNET_CHANNELS, "strides": M.RESNET_STRIDES,
+        "classes": M.N_CLASSES, "gn_groups": M.GN_GROUPS,
+        "weights": M.count_weights(qh),
+        "block_ops": resnet_block_ops(),
+        "buckets": RESNET_BUCKETS,
+        "exit_dims": [int(c.shape[-1]) for c in centers_q],
+    }
+    export_weights(out, "resnet", jax.tree_util.tree_map(np.asarray, fp),
+                   qh, centers_fp_model, centers_q, (mu_fp, sd_fp),
+                   (mu_q, sd_q), meta)
+
+    # --- lower per-block HLO with baked ternary weights -------------------
+    qj = T._to_jnp(qh)
+    d = os.path.join(out, "resnet")
+    files = {}
+    h = w = 28
+    shapes = []  # per-block input feature shape
+    cin = M.RESNET_CHANNELS[0]
+    for cout, stride in zip(M.RESNET_CHANNELS, M.RESNET_STRIDES):
+        shapes.append((h, w, cin))
+        h, w = h // stride, w // stride
+        cin = cout
+    head_shape = (h, w, cin)
+
+    for b in RESNET_BUCKETS:
+        spec = jax.ShapeDtypeStruct((b, 28, 28, 1), jnp.float32)
+        fn = functools.partial(
+            lambda x: (M.resnet_stem(qj, x, impl="pallas", quant="none"),))
+        files[f"stem_b{b}"] = f"stem_b{b}.hlo.txt"
+        lower_to_file(fn, (spec,), os.path.join(d, files[f"stem_b{b}"]))
+        for i, (stride, shp) in enumerate(zip(M.RESNET_STRIDES, shapes)):
+            spec = jax.ShapeDtypeStruct((b,) + shp, jnp.float32)
+            blk = qj["blocks"][i]
+
+            def block_fn(x, blk=blk, stride=stride):
+                return M.resnet_block(blk, x, stride, impl="pallas",
+                                      quant="none")
+
+            files[f"block_{i:02d}_b{b}"] = f"block_{i:02d}_b{b}.hlo.txt"
+            lower_to_file(block_fn, (spec,),
+                          os.path.join(d, files[f"block_{i:02d}_b{b}"]))
+        spec = jax.ShapeDtypeStruct((b,) + head_shape, jnp.float32)
+        files[f"head_b{b}"] = f"head_b{b}.hlo.txt"
+        lower_to_file(
+            lambda x: (M.resnet_head(qj, x, impl="pallas", quant="none"),),
+            (spec,), os.path.join(d, files[f"head_b{b}"]))
+        log(f"[resnet] lowered bucket B={b}")
+
+    meta["files"] = files
+    meta["block_input_shapes"] = [list(s) for s in shapes]
+    meta["head_input_shape"] = list(head_shape)
+    return meta
+
+
+def build_pointnet(out: str, data, quick: bool, log=print):
+    x_tr, y_tr, x_te, y_te = data
+    ep_fp, ep_q = (1, 1) if quick else (14, 24)
+    ckpt = os.path.join(out, "pointnet", "fp_ckpt")
+    fp = None if quick else T.load_params(ckpt, M.init_pointnet(1))
+    if fp is None:
+        log("[pointnet] training full-precision (SFP) backbone...")
+        fp = T.train_pointnet(x_tr, y_tr, x_te, y_te, quant="none",
+                              epochs=ep_fp, log=log)
+        if not quick:
+            T.save_params(ckpt, fp)
+    else:
+        log("[pointnet] loaded cached FP backbone")
+    q_ckpt = os.path.join(out, "pointnet", "q_ckpt")
+    q = None if quick else T.load_params(q_ckpt, M.init_pointnet(1))
+    if q is None:
+        log("[pointnet] ternary STE fine-tune (Qun, soft->hard anneal)...")
+        q = T.train_pointnet(x_tr, y_tr, x_te, y_te, quant="ste",
+                             init_params=fp, epochs=ep_q, lr=4e-4, log=log)
+        if not quick:
+            T.save_params(q_ckpt, q)
+    else:
+        log("[pointnet] loaded cached ternary backbone")
+
+    qh = quantize_tree(jax.tree_util.tree_map(np.asarray, q))
+    qj = T._to_jnp(qh)
+
+    @jax.jit
+    def svs_q(p, xb):
+        return M.pointnet_forward_batch(p, xb, impl="ref", quant="none")[1]
+
+    centers_fp_model, pmu_fp, psd_fp = T.semantic_centers(
+        jax.jit(lambda p, xb: M.pointnet_forward_batch(
+            p, xb, impl="ref", quant="none")[1]),
+        fp, x_tr, y_tr, M.SA_LAYERS, batch=50)
+    centers_q_fp, pmu_q, psd_q = T.semantic_centers(svs_q, qj, x_tr, y_tr,
+                                                    M.SA_LAYERS, batch=50)
+    centers_q = T.ternarize_centers(centers_q_fp)
+
+    meta = {
+        "model": "pointnet", "blocks": M.SA_LAYERS,
+        "npoint": M.SA_NPOINT, "radius": M.SA_RADIUS, "k": M.SA_K,
+        "channels": M.SA_CHANNELS, "classes": M.N_CLASSES,
+        "n_points": M.N_POINTS,
+        "weights": M.count_weights(qh),
+        "block_ops": pointnet_block_ops(),
+        "buckets": POINTNET_BUCKETS,
+        "exit_dims": [int(c.shape[-1]) for c in centers_q],
+    }
+    export_weights(out, "pointnet", jax.tree_util.tree_map(np.asarray, fp),
+                   qh, centers_fp_model, centers_q, (pmu_fp, psd_fp),
+                   (pmu_q, psd_q), meta)
+
+    d = os.path.join(out, "pointnet")
+    files = {}
+    for b in POINTNET_BUCKETS:
+        n_in, cin = M.N_POINTS, 0
+        for i in range(M.SA_LAYERS):
+            p_sa = qj["sa"][i]
+            npts, radius, k = M.SA_NPOINT[i], M.SA_RADIUS[i], M.SA_K[i]
+
+            if i == 0:
+                def fn(xyz, p_sa=p_sa, npts=npts, radius=radius, k=k):
+                    return jax.vmap(lambda x: M.sa_layer(
+                        p_sa, x, None, npts, radius, k, impl="pallas",
+                        quant="none"))(xyz)
+                args = (jax.ShapeDtypeStruct((b, n_in, 3), jnp.float32),)
+            else:
+                def fn(xyz, feats, p_sa=p_sa, npts=npts, radius=radius, k=k):
+                    return jax.vmap(lambda x, f: M.sa_layer(
+                        p_sa, x, f, npts, radius, k, impl="pallas",
+                        quant="none"))(xyz, feats)
+                args = (jax.ShapeDtypeStruct((b, n_in, 3), jnp.float32),
+                        jax.ShapeDtypeStruct((b, n_in, cin), jnp.float32))
+            files[f"sa_{i}_b{b}"] = f"sa_{i}_b{b}.hlo.txt"
+            lower_to_file(fn, args, os.path.join(d, files[f"sa_{i}_b{b}"]))
+            n_in, cin = npts, M.SA_CHANNELS[i]
+
+        def head_fn(feats):
+            return (jax.vmap(lambda f: M.pointnet_head(
+                qj, f, impl="pallas", quant="none"))(feats),)
+
+        files[f"head_b{b}"] = f"head_b{b}.hlo.txt"
+        lower_to_file(head_fn,
+                      (jax.ShapeDtypeStruct((b, M.SA_NPOINT[-1],
+                                             M.SA_CHANNELS[-1]), jnp.float32),),
+                      os.path.join(d, files[f"head_b{b}"]))
+        log(f"[pointnet] lowered bucket B={b}")
+
+    meta["files"] = files
+    return meta
+
+
+def export_kernel_smoke(out: str):
+    """Tiny standalone CIM-kernel artifact for runtime integration tests."""
+    rng = np.random.default_rng(3)
+    w = rng.choice([-1.0, 0.0, 1.0], size=(128, 32)).astype(np.float32)
+    wj = jnp.asarray(w)
+
+    def fn(x):
+        return (ktm.cim_matmul(x, wj),)
+
+    os.makedirs(os.path.join(out, "kernels"), exist_ok=True)
+    lower_to_file(fn, (jax.ShapeDtypeStruct((16, 128), jnp.float32),),
+                  os.path.join(out, "kernels", "cim_smoke.hlo.txt"))
+    io_bin.write_bundle(os.path.join(out, "kernels", "cim_smoke"),
+                        {"w": w}, {"m": 16, "k": 128, "n": 32})
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny data + 1 epoch (CI smoke)")
+    args = ap.parse_args()
+    out = args.out
+    os.makedirs(out, exist_ok=True)
+    t0 = time.time()
+
+    print("[aot] exporting datasets...")
+    mnist, modelnet = export_datasets(out, args.quick)
+    export_kernel_smoke(out)
+
+    resnet_meta = build_resnet(out, mnist, args.quick)
+    pointnet_meta = build_pointnet(out, modelnet, args.quick)
+
+    index = {
+        "version": 1,
+        "quick": args.quick,
+        "models": {"resnet": resnet_meta, "pointnet": pointnet_meta},
+        "datasets": {"resnet": "data/mnist", "pointnet": "data/modelnet"},
+    }
+    with open(os.path.join(out, "index.json"), "w") as f:
+        json.dump(index, f, indent=1)
+    print(f"[aot] done in {time.time() - t0:.0f}s -> {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,333 @@
+"""Deterministic synthetic datasets (substitutes for MNIST / ModelNet).
+
+No network access is available in the build environment, so we generate the
+two workloads procedurally (documented in DESIGN.md §Substitutions):
+
+* ``synthetic_mnist`` — 28x28 grayscale digits rendered from per-class stroke
+  skeletons with random affine jitter and stroke-thickness variation.  The
+  task keeps the properties the paper's early-exit mechanism exploits: 10-way
+  classification with a broad easy→hard difficulty spectrum (heavy jitter
+  produces ambiguous digits that need deeper layers).
+
+* ``synthetic_modelnet`` — 256-point 3D point clouds sampled from parametric
+  furniture shapes (10 classes mirroring ModelNet10).  Classes are built from
+  box / cylinder primitives and deliberately overlap in geometry
+  (table↔desk, dresser↔night_stand) to reproduce the paper's confusable
+  classes in Fig. 5b–d/f.
+
+Everything is seeded; the *same* binary tensors are exported to
+``artifacts/data/`` so the Rust side consumes byte-identical splits.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# ----------------------------------------------------------------------------
+# Synthetic MNIST
+# ----------------------------------------------------------------------------
+
+# Stroke skeletons per digit in a unit box (x right, y DOWN like image coords).
+# Each stroke is a polyline; rendering measures distance-to-segment.
+_DIGIT_STROKES = {
+    0: [[(0.5, 0.1), (0.75, 0.2), (0.8, 0.5), (0.75, 0.8), (0.5, 0.9),
+         (0.25, 0.8), (0.2, 0.5), (0.25, 0.2), (0.5, 0.1)]],
+    1: [[(0.35, 0.25), (0.55, 0.1), (0.55, 0.9)]],
+    2: [[(0.25, 0.25), (0.4, 0.1), (0.65, 0.12), (0.75, 0.3), (0.6, 0.5),
+         (0.3, 0.75), (0.25, 0.9), (0.78, 0.9)]],
+    3: [[(0.25, 0.15), (0.6, 0.1), (0.75, 0.28), (0.55, 0.47), (0.75, 0.67),
+         (0.6, 0.88), (0.25, 0.85)], [(0.42, 0.47), (0.55, 0.47)]],
+    4: [[(0.62, 0.9), (0.62, 0.1), (0.2, 0.62), (0.8, 0.62)]],
+    5: [[(0.72, 0.1), (0.3, 0.1), (0.27, 0.45), (0.6, 0.42), (0.75, 0.62),
+         (0.6, 0.88), (0.25, 0.85)]],
+    6: [[(0.65, 0.1), (0.35, 0.35), (0.25, 0.65), (0.4, 0.9), (0.65, 0.85),
+         (0.72, 0.62), (0.5, 0.5), (0.3, 0.58)]],
+    7: [[(0.22, 0.12), (0.78, 0.12), (0.45, 0.9)], [(0.35, 0.5), (0.65, 0.5)]],
+    8: [[(0.5, 0.1), (0.72, 0.2), (0.68, 0.42), (0.5, 0.5), (0.32, 0.42),
+         (0.28, 0.2), (0.5, 0.1)],
+        [(0.5, 0.5), (0.75, 0.62), (0.7, 0.85), (0.5, 0.9), (0.3, 0.85),
+         (0.25, 0.62), (0.5, 0.5)]],
+    9: [[(0.7, 0.42), (0.5, 0.5), (0.3, 0.38), (0.28, 0.18), (0.5, 0.1),
+         (0.7, 0.18), (0.72, 0.42), (0.68, 0.75), (0.5, 0.9), (0.3, 0.82)]],
+}
+
+_IMG = 28
+
+
+def _segments_for(digit: int) -> np.ndarray:
+    """(S, 2, 2) array of stroke segments for a digit skeleton."""
+    segs = []
+    for stroke in _DIGIT_STROKES[digit]:
+        for a, b in zip(stroke[:-1], stroke[1:]):
+            segs.append((a, b))
+    return np.asarray(segs, dtype=np.float64)  # (S, 2, 2)
+
+
+def _render_digit(digit: int, rng: np.random.Generator,
+                  hard: bool = False) -> np.ndarray:
+    """Render one 28x28 digit with random affine + thickness jitter.
+
+    ``hard`` widens the jitter ranges, producing the ambiguous tail of the
+    difficulty distribution (the samples that should reach deep layers).
+    """
+    segs = _segments_for(digit).copy()          # (S, 2, 2) in unit box
+    pts = segs.reshape(-1, 2)
+
+    # Random affine about the glyph center.
+    jit = 2.0 if hard else 1.0
+    ang = rng.uniform(-0.22, 0.22) * jit
+    scale = rng.uniform(0.85, 1.12) * (rng.uniform(0.78, 1.0) if hard else 1.0)
+    shear = rng.uniform(-0.12, 0.12) * jit
+    ca, sa = np.cos(ang), np.sin(ang)
+    mat = np.array([[ca, -sa], [sa, ca]]) @ np.array([[1.0, shear], [0.0, 1.0]])
+    center = np.array([0.5, 0.5])
+    shift = rng.uniform(-0.06, 0.06, size=2) * jit
+    pts = (pts - center) @ mat.T * scale + center + shift
+
+    # Per-vertex wobble (handwriting-ish deformation).
+    wob = 0.035 if hard else 0.018
+    pts = pts + rng.normal(0.0, wob, size=pts.shape)
+    segs = pts.reshape(-1, 2, 2) * (_IMG - 1)
+
+    # Distance from every pixel to every segment.
+    ys, xs = np.mgrid[0:_IMG, 0:_IMG]
+    p = np.stack([xs, ys], axis=-1).reshape(-1, 1, 2).astype(np.float64)
+    a = segs[None, :, 0, :]                     # (1, S, 2)
+    b = segs[None, :, 1, :]
+    ab = b - a
+    denom = np.maximum((ab * ab).sum(-1), 1e-9)
+    t = np.clip(((p - a) * ab).sum(-1) / denom, 0.0, 1.0)
+    proj = a + t[..., None] * ab
+    d = np.sqrt(((p - proj) ** 2).sum(-1)).min(axis=1).reshape(_IMG, _IMG)
+
+    thick = rng.uniform(0.85, 1.6) * (rng.uniform(0.7, 1.0) if hard else 1.0)
+    img = 1.0 / (1.0 + np.exp((d - thick) / 0.45))
+    img += rng.normal(0.0, 0.02, size=img.shape)  # sensor noise
+    return np.clip(img, 0.0, 1.0).astype(np.float32)
+
+
+def synthetic_mnist(n_train: int = 8000, n_test: int = 2000, seed: int = 7):
+    """Deterministic synthetic digit dataset.
+
+    Returns ``(x_train, y_train, x_test, y_test)`` with images in
+    ``(N, 28, 28, 1)`` float32 ``[0, 1]`` (NHWC) and int32 labels.
+    ~25% of samples are drawn from the widened "hard" jitter regime.
+    """
+    rng = np.random.default_rng(seed)
+
+    def split(n, rng):
+        xs = np.empty((n, _IMG, _IMG, 1), dtype=np.float32)
+        ys = np.empty((n,), dtype=np.int32)
+        for i in range(n):
+            digit = int(rng.integers(0, 10))
+            hard = bool(rng.uniform() < 0.25)
+            xs[i, :, :, 0] = _render_digit(digit, rng, hard=hard)
+            ys[i] = digit
+        return xs, ys
+
+    x_tr, y_tr = split(n_train, rng)
+    x_te, y_te = split(n_test, rng)
+    return x_tr, y_tr, x_te, y_te
+
+
+# ----------------------------------------------------------------------------
+# Synthetic ModelNet (10 classes)
+# ----------------------------------------------------------------------------
+
+MODELNET_CLASSES = [
+    "bathtub", "bed", "chair", "desk", "dresser",
+    "monitor", "night_stand", "sofa", "table", "toilet",
+]
+
+
+def _sample_box(rng, center, size, n):
+    """Sample n points on the surface of an axis-aligned box."""
+    size = np.asarray(size, dtype=np.float64)
+    center = np.asarray(center, dtype=np.float64)
+    areas = np.array([size[1] * size[2], size[1] * size[2],
+                      size[0] * size[2], size[0] * size[2],
+                      size[0] * size[1], size[0] * size[1]])
+    face = rng.choice(6, size=n, p=areas / areas.sum())
+    u = rng.uniform(-0.5, 0.5, size=(n, 2))
+    pts = np.zeros((n, 3))
+    for f in range(6):
+        m = face == f
+        axis = f // 2
+        sgn = 1.0 if f % 2 == 0 else -1.0
+        others = [a for a in range(3) if a != axis]
+        pts[m, axis] = sgn * 0.5 * size[axis]
+        pts[m, others[0]] = u[m, 0] * size[others[0]]
+        pts[m, others[1]] = u[m, 1] * size[others[1]]
+    return pts + center
+
+
+def _sample_cyl(rng, center, radius, height, n, axis=2):
+    """Sample n points on a cylinder (side + caps) aligned with `axis`."""
+    side_area = 2 * np.pi * radius * height
+    cap_area = np.pi * radius ** 2
+    p_side = side_area / (side_area + 2 * cap_area)
+    on_side = rng.uniform(size=n) < p_side
+    th = rng.uniform(0, 2 * np.pi, size=n)
+    r = np.where(on_side, radius, radius * np.sqrt(rng.uniform(size=n)))
+    z = np.where(on_side, rng.uniform(-0.5, 0.5, size=n) * height,
+                 np.sign(rng.uniform(-1, 1, size=n)) * 0.5 * height)
+    pts = np.stack([r * np.cos(th), r * np.sin(th), z], axis=-1)
+    if axis != 2:
+        perm = [0, 1, 2]
+        perm[2], perm[axis] = perm[axis], perm[2]
+        pts = pts[:, perm]
+    return pts + np.asarray(center, dtype=np.float64)
+
+
+def _legs(rng, w, d, h, n, r=0.035):
+    """Four cylindrical legs under a (w × d) top at height h."""
+    pts = []
+    for sx in (-1, 1):
+        for sy in (-1, 1):
+            pts.append(_sample_cyl(
+                rng, (sx * (w / 2 - 0.06), sy * (d / 2 - 0.06), h / 2),
+                r, h, n // 4))
+    return np.concatenate(pts, axis=0)
+
+
+def _shape_parts(cls: str, rng) -> list:
+    """Return list of (sampler_fn, relative_weight) building one instance."""
+    J = lambda lo, hi: rng.uniform(lo, hi)  # noqa: E731
+    if cls == "chair":
+        w, d = J(0.42, 0.55), J(0.42, 0.55)
+        seat_h, back_h = J(0.4, 0.5), J(0.45, 0.6)
+        return [
+            (lambda n: _sample_box(rng, (0, 0, seat_h), (w, d, 0.06), n), 2.2),
+            (lambda n: _sample_box(rng, (0, -d / 2 + 0.03, seat_h + back_h / 2),
+                                   (w, 0.06, back_h), n), 2.0),
+            (lambda n: _legs(rng, w, d, seat_h, n), 1.6),
+        ]
+    if cls == "table":
+        w, d, h = J(0.9, 1.3), J(0.55, 0.8), J(0.65, 0.78)
+        return [
+            (lambda n: _sample_box(rng, (0, 0, h), (w, d, 0.05), n), 3.2),
+            (lambda n: _legs(rng, w, d, h, n, r=0.04), 1.8),
+        ]
+    if cls == "desk":
+        # like a table but with side panels (confusable with table — intended)
+        w, d, h = J(1.0, 1.3), J(0.5, 0.7), J(0.68, 0.8)
+        return [
+            (lambda n: _sample_box(rng, (0, 0, h), (w, d, 0.05), n), 3.0),
+            (lambda n: _sample_box(rng, (-w / 2 + 0.03, 0, h / 2),
+                                   (0.05, d, h), n), 1.4),
+            (lambda n: _sample_box(rng, (w / 2 - 0.03, 0, h / 2),
+                                   (0.05, d, h), n), 1.4),
+        ]
+    if cls == "sofa":
+        w, d, sh = J(1.2, 1.6), J(0.6, 0.8), J(0.35, 0.45)
+        return [
+            (lambda n: _sample_box(rng, (0, 0, sh), (w, d, 0.25), n), 2.6),
+            (lambda n: _sample_box(rng, (0, -d / 2 + 0.06, sh + 0.3),
+                                   (w, 0.14, 0.6), n), 2.0),
+            (lambda n: _sample_box(rng, (-w / 2 + 0.07, 0, sh + 0.12),
+                                   (0.14, d, 0.32), n), 1.0),
+            (lambda n: _sample_box(rng, (w / 2 - 0.07, 0, sh + 0.12),
+                                   (0.14, d, 0.32), n), 1.0),
+        ]
+    if cls == "bed":
+        w, d, h = J(1.0, 1.3), J(1.8, 2.2), J(0.3, 0.42)
+        return [
+            (lambda n: _sample_box(rng, (0, 0, h / 2), (w, d, h), n), 3.4),
+            (lambda n: _sample_box(rng, (0, -d / 2 + 0.04, h + 0.3),
+                                   (w, 0.08, 0.6), n), 1.4),
+        ]
+    if cls == "monitor":
+        w, h = J(0.5, 0.7), J(0.32, 0.45)
+        return [
+            (lambda n: _sample_box(rng, (0, 0, 0.25 + h / 2),
+                                   (w, 0.045, h), n), 3.0),
+            (lambda n: _sample_cyl(rng, (0, 0, 0.125), 0.035, 0.25, n), 0.7),
+            (lambda n: _sample_box(rng, (0, 0, 0.015), (0.3, 0.2, 0.03), n), 0.9),
+        ]
+    if cls == "toilet":
+        return [
+            (lambda n: _sample_cyl(rng, (0, 0.08, 0.38), J(0.19, 0.23),
+                                   0.07, n), 2.0),
+            (lambda n: _sample_cyl(rng, (0, 0.08, 0.19), 0.14, 0.38, n), 1.4),
+            (lambda n: _sample_box(rng, (0, -0.24, 0.5),
+                                   (0.42, 0.18, J(0.32, 0.42)), n), 1.8),
+        ]
+    if cls == "bathtub":
+        w, d, h = J(1.4, 1.7), J(0.65, 0.8), J(0.5, 0.6)
+        return [
+            (lambda n: _sample_box(rng, (0, 0, h / 2), (w, d, h), n), 2.6),
+            # inner basin (offset inward, open top)
+            (lambda n: _sample_box(rng, (0, 0, h * 0.55),
+                                   (w - 0.18, d - 0.18, h * 0.7), n), 1.6),
+        ]
+    if cls == "dresser":
+        w, d, h = J(0.8, 1.1), J(0.4, 0.5), J(0.75, 0.95)
+        return [
+            (lambda n: _sample_box(rng, (0, 0, h / 2), (w, d, h), n), 3.4),
+            (lambda n: _sample_box(rng, (0, d / 2, h * 0.66),
+                                   (w * 0.8, 0.02, 0.03), n), 0.5),
+            (lambda n: _sample_box(rng, (0, d / 2, h * 0.33),
+                                   (w * 0.8, 0.02, 0.03), n), 0.5),
+        ]
+    if cls == "night_stand":
+        # small dresser (confusable with dresser — intended)
+        w, d, h = J(0.4, 0.55), J(0.35, 0.45), J(0.45, 0.6)
+        return [
+            (lambda n: _sample_box(rng, (0, 0, h / 2 + 0.08),
+                                   (w, d, h), n), 3.0),
+            (lambda n: _legs(rng, w, d, 0.08, n, r=0.025), 0.8),
+        ]
+    raise ValueError(cls)
+
+
+def _sample_cloud(cls: str, rng, n_points: int) -> np.ndarray:
+    parts = _shape_parts(cls, rng)
+    weights = np.array([w for _, w in parts])
+    counts = np.maximum(1, (weights / weights.sum() * n_points).astype(int))
+    while counts.sum() < n_points:
+        counts[int(rng.integers(len(counts)))] += 1
+    while counts.sum() > n_points:
+        counts[np.argmax(counts)] -= 1
+    pts = np.concatenate([f(int(c)) for (f, _), c in zip(parts, counts)], axis=0)
+    # Samplers may round counts internally (e.g. _legs splits by 4); repair.
+    if pts.shape[0] > n_points:
+        pts = pts[:n_points]
+    elif pts.shape[0] < n_points:
+        extra = rng.integers(0, pts.shape[0], size=n_points - pts.shape[0])
+        pts = np.concatenate([pts, pts[extra]], axis=0)
+
+    # Random upright rotation, anisotropic scale jitter, point jitter.
+    ang = rng.uniform(0, 2 * np.pi)
+    ca, sa = np.cos(ang), np.sin(ang)
+    rot = np.array([[ca, -sa, 0], [sa, ca, 0], [0, 0, 1]])
+    pts = pts @ rot.T
+    pts *= rng.uniform(0.9, 1.1, size=3)
+    pts += rng.normal(0, 0.008, size=pts.shape)
+
+    # Normalize to unit sphere (standard ModelNet preprocessing).
+    pts -= pts.mean(axis=0)
+    pts /= max(np.linalg.norm(pts, axis=1).max(), 1e-9)
+    return pts.astype(np.float32)
+
+
+def synthetic_modelnet(n_train: int = 800, n_test: int = 200,
+                       n_points: int = 256, seed: int = 11):
+    """Deterministic synthetic 10-class point-cloud dataset.
+
+    Returns ``(x_train, y_train, x_test, y_test)`` with clouds in
+    ``(N, n_points, 3)`` float32 (unit sphere) and int32 labels.
+    """
+    rng = np.random.default_rng(seed)
+
+    def split(n, rng):
+        xs = np.empty((n, n_points, 3), dtype=np.float32)
+        ys = np.empty((n,), dtype=np.int32)
+        for i in range(n):
+            c = int(rng.integers(0, len(MODELNET_CLASSES)))
+            xs[i] = _sample_cloud(MODELNET_CLASSES[c], rng, n_points)
+            ys[i] = c
+        return xs, ys
+
+    x_tr, y_tr = split(n_train, rng)
+    x_te, y_te = split(n_test, rng)
+    return x_tr, y_tr, x_te, y_te

@@ -1,0 +1,59 @@
+"""Tensor bundle (de)serialization shared with the Rust side.
+
+Layout (see rust/src/util/bin_io.rs for the reader):
+
+* ``<name>.bin``       — raw little-endian tensor payloads, concatenated.
+* ``<name>.json``      — manifest: ``{"meta": {...}, "tensors": [
+                           {"name", "dtype", "shape", "offset", "nbytes"}]}``
+
+dtypes: ``f32`` | ``i8`` | ``i32``.  Everything is written deterministically
+(sorted by insertion order) so artifact diffs are stable.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict
+
+import numpy as np
+
+_DTYPES = {"float32": "f32", "int8": "i8", "int32": "i32"}
+
+
+def write_bundle(path_prefix: str, tensors: Dict[str, np.ndarray],
+                 meta: dict | None = None) -> None:
+    os.makedirs(os.path.dirname(path_prefix), exist_ok=True)
+    entries = []
+    offset = 0
+    with open(path_prefix + ".bin", "wb") as f:
+        for name, arr in tensors.items():
+            arr = np.ascontiguousarray(arr)
+            if arr.dtype.name not in _DTYPES:
+                raise TypeError(f"{name}: unsupported dtype {arr.dtype}")
+            data = arr.tobytes()
+            f.write(data)
+            entries.append({
+                "name": name,
+                "dtype": _DTYPES[arr.dtype.name],
+                "shape": list(arr.shape),
+                "offset": offset,
+                "nbytes": len(data),
+            })
+            offset += len(data)
+    with open(path_prefix + ".json", "w") as f:
+        json.dump({"meta": meta or {}, "tensors": entries}, f, indent=1)
+
+
+def read_bundle(path_prefix: str) -> tuple[dict, Dict[str, np.ndarray]]:
+    """Inverse of write_bundle (used by python tests for round-trip)."""
+    with open(path_prefix + ".json") as f:
+        manifest = json.load(f)
+    raw = open(path_prefix + ".bin", "rb").read()
+    inv = {v: k for k, v in _DTYPES.items()}
+    out = {}
+    for e in manifest["tensors"]:
+        arr = np.frombuffer(raw[e["offset"]:e["offset"] + e["nbytes"]],
+                            dtype=np.dtype(inv[e["dtype"]]))
+        out[e["name"]] = arr.reshape(e["shape"])
+    return manifest["meta"], out

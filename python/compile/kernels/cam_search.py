@@ -1,0 +1,52 @@
+"""L1 Pallas kernel: memristive CAM cosine-similarity search.
+
+The paper's CAM stores ternary semantic centers as conductances; a search
+vector applied as word-line voltages produces match-line currents
+proportional to the dot product with every stored center, which — after the
+digital norm correction — is the cosine similarity used for the early-exit
+confidence test.
+
+On TPU the whole CAM fits one VMEM block (centers are at most
+``n_classes x dim`` — a few KiB), so the kernel is a single grid step:
+a fused dot + rsqrt-normalization.  Lowered with ``interpret=True`` for the
+CPU PJRT runtime (see ternary_matmul.py for the rationale).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _cam_kernel(sv_ref, c_ref, o_ref):
+    sv = sv_ref[...]                      # (B, D) search vectors (voltages)
+    c = c_ref[...]                        # (C, D) ternary centers (conductances)
+    # Match-line currents: one dot product per stored center.
+    num = jnp.dot(sv, c.T, preferred_element_type=jnp.float32)
+    # Digital norm correction -> cosine similarity.
+    sn = jnp.sqrt(jnp.sum(sv * sv, axis=-1, keepdims=True))
+    cn = jnp.sqrt(jnp.sum(c * c, axis=-1))
+    o_ref[...] = num / jnp.maximum(sn * cn[None, :], 1e-9)
+
+
+@jax.jit
+def cam_cosine(sv: jnp.ndarray, centers: jnp.ndarray) -> jnp.ndarray:
+    """Cosine similarities ``(B, D) x (C, D) -> (B, C)`` in f32."""
+    b, d = sv.shape
+    c, d2 = centers.shape
+    assert d == d2, f"dim mismatch {d} vs {d2}"
+    return pl.pallas_call(
+        _cam_kernel,
+        out_shape=jax.ShapeDtypeStruct((b, c), jnp.float32),
+        interpret=True,
+    )(sv.astype(jnp.float32), centers.astype(jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=())
+def cam_best_match(sv: jnp.ndarray, centers: jnp.ndarray):
+    """Top-1 search: returns ``(best_class, best_similarity)`` per row."""
+    sims = cam_cosine(sv, centers)
+    return jnp.argmax(sims, axis=-1).astype(jnp.int32), jnp.max(sims, axis=-1)

@@ -1,0 +1,42 @@
+"""Convolution lowered onto the CIM matmul kernel (im2col mapping).
+
+The chip computes convolutions exactly this way: the digital core unrolls
+input patches (im2col) and the crossbar performs the resulting matmul.  The
+patch extraction is a pure data-movement op (digital peripheral / XLA
+gather); the FLOPs all flow through :func:`ternary_matmul.cim_matmul` so the
+L1 kernel is the only compute primitive in the exported HLO.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import ternary_matmul
+
+
+def im2col(x: jnp.ndarray, kh: int, kw: int, stride: int) -> jnp.ndarray:
+    """NHWC -> (N, Ho, Wo, kh*kw*C) SAME-padded patch extraction."""
+    patches = jax.lax.conv_general_dilated_patches(
+        x, (kh, kw), (stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    # conv_general_dilated_patches yields channel-major patches
+    # (C, kh, kw ordering on the last axis); reorder to (kh, kw, C) to match
+    # the HWIO weight layout.
+    n, ho, wo, _ = patches.shape
+    c = x.shape[-1]
+    patches = patches.reshape(n, ho, wo, c, kh * kw)
+    patches = jnp.moveaxis(patches, -2, -1)          # (..., kh*kw, C)
+    return patches.reshape(n, ho, wo, kh * kw * c)
+
+
+def conv2d_cim(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1, *,
+               adc: bool = False) -> jnp.ndarray:
+    """'SAME' conv: NHWC input x HWIO ternary weights via the CIM kernel."""
+    kh, kw, cin, cout = w.shape
+    cols = im2col(x, kh, kw, stride)                 # (N, Ho, Wo, kh*kw*Cin)
+    n, ho, wo, k = cols.shape
+    flat = cols.reshape(n * ho * wo, k)
+    wmat = w.reshape(kh * kw * cin, cout)
+    out = ternary_matmul.cim_matmul(flat, wmat, adc=adc)
+    return out.reshape(n, ho, wo, cout)

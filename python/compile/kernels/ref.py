@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for every L1 Pallas kernel.
+
+These are the correctness ground truth: pytest sweeps shapes/dtypes with
+hypothesis and asserts the Pallas kernels (interpret=True) match these
+references to float tolerance.  They are also the fast path used during
+training (the Pallas kernels only need to be in the *exported* HLO).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Plain f32 matmul oracle for the ternary CIM kernel (no ADC model)."""
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def adc_quant_ref(v: jnp.ndarray, full_scale: float, bits: int) -> jnp.ndarray:
+    """Mid-tread uniform quantizer over [-full_scale, full_scale]."""
+    step = 2.0 * full_scale / (2 ** bits)
+    return jnp.clip(jnp.round(v / step) * step, -full_scale, full_scale)
+
+
+def matmul_adc_ref(x: jnp.ndarray, w: jnp.ndarray, tile_k: int,
+                   adc_bits: int) -> jnp.ndarray:
+    """CIM matmul oracle with per-crossbar-tile ADC quantization.
+
+    The analogue array is ``tile_k`` rows tall: every ``tile_k`` slice of the
+    contraction axis is one analogue MVM whose bit-line current is digitized
+    by an ``adc_bits`` ADC before digital accumulation.
+    """
+    k = x.shape[-1]
+    out = jnp.zeros((x.shape[0], w.shape[1]), dtype=jnp.float32)
+    fs = float(tile_k)  # worst-case current: every device on, max input
+    for k0 in range(0, k, tile_k):
+        part = jnp.dot(x[:, k0:k0 + tile_k], w[k0:k0 + tile_k, :],
+                       preferred_element_type=jnp.float32)
+        out = out + adc_quant_ref(part, fs, adc_bits)
+    return out
+
+
+def cam_cosine_ref(sv: jnp.ndarray, centers: jnp.ndarray) -> jnp.ndarray:
+    """Cosine similarity of search vectors (B, D) vs centers (C, D)."""
+    num = jnp.dot(sv, centers.T, preferred_element_type=jnp.float32)
+    sn = jnp.linalg.norm(sv, axis=-1, keepdims=True)
+    cn = jnp.linalg.norm(centers, axis=-1)
+    return num / jnp.maximum(sn * cn[None, :], 1e-9)
+
+
+def conv2d_ref(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1) -> jnp.ndarray:
+    """NHWC x HWIO 'SAME' conv oracle."""
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))

@@ -1,0 +1,122 @@
+"""L1 Pallas kernel: the digital twin of one memristive CIM tile.
+
+The paper's compute hot-spot is the analogue matrix-vector multiply of a
+512x512 memristor crossbar (Ohm's law multiply, Kirchhoff's law accumulate,
+14-bit ADC read-out).  On TPU the same insight — *keep the operand matrix
+resident and stream activations through it* — maps to:
+
+* the ternary weight block is pinned in VMEM (the TPU analogue of the
+  crossbar's physical conductance array) via its BlockSpec;
+* one grid step == one analogue MVM: a ``(bm, K) x (K, bn)`` MXU matmul;
+* the optional per-tile ADC quantization models the bit-line current
+  digitization between analogue tiles (``tile_k`` rows per analogue tile).
+
+The kernel is lowered with ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls); the BlockSpec structure is still what a real TPU lowering
+would use — see DESIGN.md §Hardware-Adaptation and §Perf for the VMEM/MXU
+estimates.
+
+Weights are float tensors holding exactly {-1, 0, 1}: a ternary matmul *is*
+a matmul with a ternary matrix, and the MXU consumes it natively (no CUDA
+style bit-plane tricks needed).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Physical constants of the modelled macro.
+CROSSBAR_ROWS = 512      # analogue tile height -> ADC granularity
+ADC_BITS = 14            # ADS8324 in the paper's platform
+
+# TPU-shaped tile defaults (multiples of the 128-lane register / MXU edge).
+DEF_BM = 256
+DEF_BN = 128
+
+
+def _cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _adc_quant(v, full_scale: float, bits: int):
+    step = 2.0 * full_scale / (2 ** bits)
+    return jnp.clip(jnp.round(v / step) * step, -full_scale, full_scale)
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, *, tile_k: int, adc_bits: int | None):
+    """One (bm, K) x (K, bn) block: full contraction, optional ADC model.
+
+    K is deliberately *not* gridded: the weight block column stays VMEM
+    resident for the whole contraction (crossbar semantics).  The ADC model
+    splits K into ``tile_k`` analogue tiles and quantizes each partial sum.
+    """
+    x = x_ref[...]
+    w = w_ref[...]
+    k = x.shape[-1]
+    if adc_bits is None or k <= 0:
+        o_ref[...] = jnp.dot(x, w, preferred_element_type=jnp.float32)
+        return
+    fs = float(tile_k)
+    acc = jnp.zeros((x.shape[0], w.shape[1]), dtype=jnp.float32)
+    # Static unroll over analogue tiles (k is a compile-time constant).
+    for k0 in range(0, k, tile_k):
+        part = jnp.dot(x[:, k0:k0 + tile_k], w[k0:k0 + tile_k, :],
+                       preferred_element_type=jnp.float32)
+        acc = acc + _adc_quant(part, fs, adc_bits)
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "adc", "tile_k",
+                                             "adc_bits"))
+def cim_matmul(x: jnp.ndarray, w: jnp.ndarray, *, bm: int = DEF_BM,
+               bn: int = DEF_BN, adc: bool = False,
+               tile_k: int = CROSSBAR_ROWS,
+               adc_bits: int = ADC_BITS) -> jnp.ndarray:
+    """Ternary CIM matmul: ``(M, K) @ (K, N) -> (M, N)`` f32.
+
+    ``adc=True`` enables the per-analogue-tile ADC quantization model
+    (quantization of every ``tile_k``-row partial sum to ``adc_bits``).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    bm = min(bm, m)
+    bn = min(bn, n)
+    grid = (_cdiv(m, bm), _cdiv(n, bn))
+    kern = functools.partial(_matmul_kernel, tile_k=tile_k,
+                             adc_bits=adc_bits if adc else None)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32), w.astype(jnp.float32))
+
+
+def vmem_bytes(bm: int, bn: int, k: int) -> int:
+    """Static VMEM footprint estimate of one grid step (f32)."""
+    return 4 * (bm * k + k * bn + bm * bn)
+
+
+def mxu_util_estimate(m: int, n: int, k: int, bm: int = DEF_BM,
+                      bn: int = DEF_BN) -> float:
+    """Fraction of MXU-issue slots doing useful work for a full matmul.
+
+    Padding waste only (the grid covers ceil(m/bm) x ceil(n/bn) tiles whose
+    last row/column are partially filled); the contraction is never padded.
+    """
+    bm = min(bm, m)
+    bn = min(bn, n)
+    tiles = _cdiv(m, bm) * _cdiv(n, bn)
+    useful = m * n * k
+    issued = tiles * bm * bn * k
+    return useful / issued

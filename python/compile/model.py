@@ -1,0 +1,316 @@
+"""L2: the paper's backbones in JAX — ResNet-11 (2D) and PointNet++ (3D).
+
+Both are written as *per-exit-block* forward functions so `aot.py` can lower
+each block to its own HLO artifact: the Rust coordinator owns the control
+flow between blocks (that's the paper's dynamic-network contribution).
+
+Every block returns ``(feature_map, search_vector)`` — the GAP'd search
+vector is fused into the block's HLO so the host never re-touches the
+feature map just to check an exit.
+
+``impl='pallas'`` routes all matmul FLOPs through the L1 CIM kernel (used in
+the exported artifacts); ``impl='ref'`` uses plain XLA ops (used during
+training, where the interpret-mode Pallas kernel would be needlessly slow —
+pytest proves the two are numerically interchangeable).
+
+Normalization is GroupNorm (4 groups) for ResNet and LayerNorm for
+PointNet++: batch-statistics-free so a single HLO serves both calibration
+and inference, executed per-sample in the digital domain exactly like the
+paper's ZYNQ-side BN peripherals.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import conv as kconv
+from .kernels import ref as kref
+from .kernels import ternary_matmul as ktm
+from .quantize import ternarize, ternarize_ste
+
+Params = Dict[str, Any]
+
+# ----------------------------------------------------------------------------
+# ResNet-11 configuration (≈100k ternary weights, 11 residual blocks — the
+# paper reports "11 residual blocks, ~88k weight parameters, ~2k CAM values")
+# ----------------------------------------------------------------------------
+
+RESNET_CHANNELS: List[int] = [16, 16, 16, 16, 24, 24, 24, 24, 32, 32, 32]
+RESNET_STRIDES: List[int] = [1, 1, 1, 1, 2, 1, 1, 1, 2, 1, 1]
+RESNET_BLOCKS = len(RESNET_CHANNELS)
+N_CLASSES = 10
+GN_GROUPS = 4
+
+
+def _conv_fn(impl: str, adc: bool = False):
+    if impl == "pallas":
+        return functools.partial(kconv.conv2d_cim, adc=adc)
+    return kref.conv2d_ref
+
+
+def _matmul_fn(impl: str, adc: bool = False):
+    if impl == "pallas":
+        return functools.partial(ktm.cim_matmul, adc=adc)
+    return kref.matmul_ref
+
+
+def group_norm(x: jnp.ndarray, gamma: jnp.ndarray, beta: jnp.ndarray,
+               groups: int = GN_GROUPS, eps: float = 1e-5) -> jnp.ndarray:
+    """GroupNorm over the channel axis of an NHWC tensor."""
+    n, h, w, c = x.shape
+    g = x.reshape(n, h, w, groups, c // groups)
+    mean = g.mean(axis=(1, 2, 4), keepdims=True)
+    var = g.var(axis=(1, 2, 4), keepdims=True)
+    g = (g - mean) * jax.lax.rsqrt(var + eps)
+    return g.reshape(n, h, w, c) * gamma + beta
+
+
+def layer_norm(x: jnp.ndarray, gamma: jnp.ndarray, beta: jnp.ndarray,
+               eps: float = 1e-5) -> jnp.ndarray:
+    mean = x.mean(axis=-1, keepdims=True)
+    var = x.var(axis=-1, keepdims=True)
+    return (x - mean) * jax.lax.rsqrt(var + eps) * gamma + beta
+
+
+def gap(x: jnp.ndarray) -> jnp.ndarray:
+    """Global average pooling NHWC -> (N, C): the semantic/search vector."""
+    return x.mean(axis=(1, 2))
+
+
+# -- parameter init -----------------------------------------------------------
+
+def _he(rng, shape):
+    fan_in = int(np.prod(shape[:-1]))
+    return (rng.standard_normal(shape) * np.sqrt(2.0 / fan_in)).astype(np.float32)
+
+
+def init_resnet(seed: int = 0) -> Params:
+    rng = np.random.default_rng(seed)
+    p: Params = {"stem": {"w": _he(rng, (3, 3, 1, RESNET_CHANNELS[0])),
+                          "g": np.ones(RESNET_CHANNELS[0], np.float32),
+                          "b": np.zeros(RESNET_CHANNELS[0], np.float32)}}
+    blocks = []
+    cin = RESNET_CHANNELS[0]
+    for cout, stride in zip(RESNET_CHANNELS, RESNET_STRIDES):
+        blk = {
+            "w1": _he(rng, (3, 3, cin, cout)),
+            "g1": np.ones(cout, np.float32), "b1": np.zeros(cout, np.float32),
+            "w2": _he(rng, (3, 3, cout, cout)),
+            "g2": np.ones(cout, np.float32), "b2": np.zeros(cout, np.float32),
+        }
+        if stride != 1 or cin != cout:
+            blk["wp"] = _he(rng, (1, 1, cin, cout))
+        blocks.append(blk)
+        cin = cout
+    p["blocks"] = blocks
+    p["head"] = {"w": _he(rng, (RESNET_CHANNELS[-1], N_CLASSES)),
+                 "b": np.zeros(N_CLASSES, np.float32)}
+    return p
+
+
+# -- forward ------------------------------------------------------------------
+
+def _maybe_q(w, quant: str, lam=1.0):
+    """quant: 'none' (FP), 'ste' (training, annealed by ``lam``),
+    'hard' (inference/export)."""
+    if quant == "ste":
+        return ternarize_ste(w, lam)
+    if quant == "hard":
+        return ternarize(w)
+    return w
+
+
+def resnet_stem(p: Params, x: jnp.ndarray, *, impl: str = "ref",
+                quant: str = "none", lam=1.0) -> jnp.ndarray:
+    conv = _conv_fn(impl)
+    h = conv(x, _maybe_q(p["stem"]["w"], quant, lam), 1)
+    return jax.nn.relu(group_norm(h, p["stem"]["g"], p["stem"]["b"]))
+
+
+def resnet_block(p_blk: Params, x: jnp.ndarray, stride: int, *,
+                 impl: str = "ref", quant: str = "none", lam=1.0
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One residual block; returns (feature_map, search_vector)."""
+    conv = _conv_fn(impl)
+    h = conv(x, _maybe_q(p_blk["w1"], quant, lam), stride)
+    h = jax.nn.relu(group_norm(h, p_blk["g1"], p_blk["b1"]))
+    h = conv(h, _maybe_q(p_blk["w2"], quant, lam), 1)
+    h = group_norm(h, p_blk["g2"], p_blk["b2"])
+    if "wp" in p_blk:
+        sc = conv(x, _maybe_q(p_blk["wp"], quant, lam), stride)
+    else:
+        sc = x
+    y = jax.nn.relu(h + sc)
+    return y, gap(y)
+
+
+def resnet_head(p: Params, x: jnp.ndarray, *, impl: str = "ref",
+                quant: str = "none", lam=1.0) -> jnp.ndarray:
+    mm = _matmul_fn(impl)
+    return mm(gap(x), _maybe_q(p["head"]["w"], quant, lam)) + p["head"]["b"]
+
+
+def resnet_forward(p: Params, x: jnp.ndarray, *, impl: str = "ref",
+                   quant: str = "none", lam=1.0):
+    """Full static forward; returns (logits, [search_vector per block])."""
+    svs = []
+    h = resnet_stem(p, x, impl=impl, quant=quant, lam=lam)
+    for blk, stride in zip(p["blocks"], RESNET_STRIDES):
+        h, sv = resnet_block(blk, h, stride, impl=impl, quant=quant, lam=lam)
+        svs.append(sv)
+    return resnet_head(p, h, impl=impl, quant=quant, lam=lam), svs
+
+
+# ----------------------------------------------------------------------------
+# PointNet++ (8 set-abstraction layers, as in the paper's experiment)
+# ----------------------------------------------------------------------------
+
+N_POINTS = 256
+SA_NPOINT = [128, 96, 64, 48, 32, 24, 16, 8]
+SA_RADIUS = [0.22, 0.28, 0.34, 0.42, 0.52, 0.64, 0.8, 1.0]
+SA_K = [16, 16, 12, 12, 8, 8, 8, 8]
+SA_CHANNELS = [24, 32, 40, 48, 64, 80, 96, 128]
+SA_LAYERS = len(SA_NPOINT)
+PN_HEAD_HIDDEN = 64
+
+
+def init_pointnet(seed: int = 1) -> Params:
+    rng = np.random.default_rng(seed)
+    layers = []
+    cin = 0  # first layer consumes only relative xyz
+    for cout in SA_CHANNELS:
+        din = cin + 3
+        mid = max(cout, 16)
+        layers.append({
+            "w1": _he(rng, (din, mid)),
+            "g1": np.ones(mid, np.float32), "b1": np.zeros(mid, np.float32),
+            "w2": _he(rng, (mid, cout)),
+            "g2": np.ones(cout, np.float32), "b2": np.zeros(cout, np.float32),
+        })
+        cin = cout
+    head = {
+        "w1": _he(rng, (SA_CHANNELS[-1], PN_HEAD_HIDDEN)),
+        "b1": np.zeros(PN_HEAD_HIDDEN, np.float32),
+        "w2": _he(rng, (PN_HEAD_HIDDEN, N_CLASSES)),
+        "b2": np.zeros(N_CLASSES, np.float32),
+    }
+    return {"sa": layers, "head": head}
+
+
+def farthest_point_sample(xyz: jnp.ndarray, npoint: int) -> jnp.ndarray:
+    """FPS indices for one cloud (N, 3) -> (npoint,) int32."""
+    n = xyz.shape[0]
+
+    def body(i, state):
+        idxs, dists = state
+        last = xyz[idxs[i - 1]]
+        d = jnp.sum((xyz - last) ** 2, axis=-1)
+        dists = jnp.minimum(dists, d)
+        idxs = idxs.at[i].set(jnp.argmax(dists).astype(jnp.int32))
+        return idxs, dists
+
+    idxs = jnp.zeros((npoint,), jnp.int32)
+    dists = jnp.full((n,), 1e10, jnp.float32)
+    idxs, _ = jax.lax.fori_loop(1, npoint, body, (idxs, dists))
+    return idxs
+
+
+def ball_query(xyz: jnp.ndarray, new_xyz: jnp.ndarray, radius: float,
+               k: int) -> jnp.ndarray:
+    """Indices (npoint, k) of up to k neighbours within `radius`.
+
+    Neighbours outside the radius are replaced by the nearest point
+    (standard PointNet++ duplication trick, keeps shapes static).
+    """
+    d2 = jnp.sum((new_xyz[:, None, :] - xyz[None, :, :]) ** 2, axis=-1)
+    biased = jnp.where(d2 <= radius * radius, d2, d2 + 1e6)
+    idx = jnp.argsort(biased, axis=-1)[:, :k].astype(jnp.int32)
+    d_sel = jnp.take_along_axis(biased, idx, axis=-1)
+    nearest = idx[:, :1]
+    return jnp.where(d_sel <= 1e5, idx, nearest)
+
+
+def sa_layer(p_sa: Params, xyz: jnp.ndarray, feats: jnp.ndarray | None,
+             npoint: int, radius: float, k: int, *, impl: str = "ref",
+             quant: str = "none", lam=1.0):
+    """One set-abstraction layer for a single cloud.
+
+    xyz (N, 3), feats (N, C) or None -> (new_xyz (np,3), new_feats (np,C'),
+    search_vector (C',)).
+    """
+    mm = _matmul_fn(impl)
+    fps_idx = farthest_point_sample(xyz, npoint)
+    new_xyz = xyz[fps_idx]                               # (np, 3)
+    nbr = ball_query(xyz, new_xyz, radius, k)            # (np, k)
+    grouped_xyz = xyz[nbr] - new_xyz[:, None, :]         # (np, k, 3)
+    if feats is None:
+        grouped = grouped_xyz
+    else:
+        grouped = jnp.concatenate([grouped_xyz, feats[nbr]], axis=-1)
+    npts, kk, din = grouped.shape
+    flat = grouped.reshape(npts * kk, din)
+    h = mm(flat, _maybe_q(p_sa["w1"], quant, lam))
+    h = jax.nn.relu(layer_norm(h, p_sa["g1"], p_sa["b1"]))
+    h = mm(h, _maybe_q(p_sa["w2"], quant, lam))
+    h = jax.nn.relu(layer_norm(h, p_sa["g2"], p_sa["b2"]))
+    h = h.reshape(npts, kk, -1).max(axis=1)              # max over neighbours
+    sv = h.mean(axis=0)                                  # GAP -> search vector
+    return new_xyz, h, sv
+
+
+def pointnet_head(p: Params, feats: jnp.ndarray, *, impl: str = "ref",
+                  quant: str = "none", lam=1.0) -> jnp.ndarray:
+    """Classifier head over the final representative points (np, C)."""
+    mm = _matmul_fn(impl)
+    g = feats.max(axis=0, keepdims=True)                 # (1, C) global max
+    h = jax.nn.relu(mm(g, _maybe_q(p["head"]["w1"], quant, lam))
+                    + p["head"]["b1"])
+    return (mm(h, _maybe_q(p["head"]["w2"], quant, lam)) + p["head"]["b2"])[0]
+
+
+def pointnet_forward(p: Params, xyz: jnp.ndarray, *, impl: str = "ref",
+                     quant: str = "none", lam=1.0):
+    """Full forward for one cloud (N,3); returns (logits, [sv per SA])."""
+    feats = None
+    svs = []
+    cur = xyz
+    for i, p_sa in enumerate(p["sa"]):
+        cur, feats, sv = sa_layer(p_sa, cur, feats, SA_NPOINT[i],
+                                  SA_RADIUS[i], SA_K[i], impl=impl,
+                                  quant=quant, lam=lam)
+        svs.append(sv)
+    return pointnet_head(p, feats, impl=impl, quant=quant, lam=lam), svs
+
+
+def pointnet_forward_batch(p: Params, xyz: jnp.ndarray, *, impl: str = "ref",
+                           quant: str = "none", lam=1.0):
+    """vmapped full forward over a batch (B, N, 3)."""
+    fn = functools.partial(pointnet_forward, impl=impl, quant=quant, lam=lam)
+    return jax.vmap(lambda x: fn(p, x))(xyz)
+
+
+# -- parameter accounting -----------------------------------------------------
+
+def count_weights(p: Params) -> int:
+    """Number of crossbar-mapped (ternary) weight scalars in a param tree."""
+    total = 0
+
+    def visit(t):
+        nonlocal total
+        if isinstance(t, dict):
+            for k, v in t.items():
+                if k.startswith("w"):
+                    total += int(np.prod(np.shape(v)))
+                else:
+                    visit(v)
+        elif isinstance(t, (list, tuple)):
+            for v in t:
+                visit(v)
+
+    visit(p)
+    return total

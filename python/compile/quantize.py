@@ -1,0 +1,48 @@
+"""Ternary quantization (paper Eq. 4–5) and the straight-through estimator.
+
+The paper quantizes per *block*: with ``w_min = min(W^l)``, ``w_max = max(W^l)``
+and ``range = w_max - w_min``::
+
+    l_in = w_min + range / 3        h_in = w_max - range / 3
+
+    w_q = -1  if w <  l_in
+           0  if l_in <= w <= h_in
+           1  if w >  h_in
+
+Quantized values are exactly {-1, 0, 1} — the two memristors of a
+differential pair (no per-layer scale; BatchNorm in the digital domain
+re-normalizes magnitudes, matching the chip where BN runs on the ZYNQ core).
+
+Training uses the straight-through estimator: ternary forward, identity
+backward.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ternary_thresholds(w: jnp.ndarray):
+    """Return (l_in, h_in) per Eq. 4 for a full weight tensor."""
+    w_min = jnp.min(w)
+    w_max = jnp.max(w)
+    rng = w_max - w_min
+    return w_min + rng / 3.0, w_max - rng / 3.0
+
+
+def ternarize(w: jnp.ndarray) -> jnp.ndarray:
+    """Eq. 5: map a float tensor to {-1, 0, 1} (same dtype as input)."""
+    l_in, h_in = ternary_thresholds(w)
+    return jnp.where(w < l_in, -1.0, jnp.where(w > h_in, 1.0, 0.0)).astype(w.dtype)
+
+
+def ternarize_ste(w: jnp.ndarray, lam=1.0) -> jnp.ndarray:
+    """Ternary forward / identity backward (straight-through estimator).
+
+    ``lam`` anneals the quantization: the forward value is
+    ``(1-lam)·w + lam·ternarize(w)`` with identity backward.  ``lam=1`` is
+    the classic STE; ramping 0→1 during fine-tuning (soft→hard) avoids the
+    optimization cliff of quantizing a converged FP solution at once.
+    """
+    return w + lam * jax.lax.stop_gradient(ternarize(w) - w)

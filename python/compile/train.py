@@ -1,0 +1,271 @@
+"""Ex-situ training of both backbones + semantic-center extraction.
+
+Matches the paper's software pipeline:
+
+1. train the full-precision (SFP) backbone;
+2. fine-tune with ternary straight-through quantization (Qun);
+3. run the *training* set through the frozen backbone, GAP every exit block,
+   and average per class -> semantic centers; ternarize the centers (they
+   are stored in the CAM as conductances).
+
+No exit is ever trained (the paper's early-exit is training-free).
+
+A hand-rolled Adam is used — the build image has no optax.
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+from typing import Callable, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import io_bin
+from . import model as M
+from .quantize import ternarize
+
+Array = jnp.ndarray
+
+
+# ----------------------------------------------------------------------------
+# Minimal Adam
+# ----------------------------------------------------------------------------
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(lambda p: jnp.zeros_like(p), params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, zeros),
+            "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g,
+                               state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                               state["v"], grads)
+    mh = jax.tree_util.tree_map(lambda m: m / (1 - b1 ** t), m)
+    vh = jax.tree_util.tree_map(lambda v: v / (1 - b2 ** t), v)
+    new = jax.tree_util.tree_map(
+        lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + eps), params, mh, vh)
+    return new, {"m": m, "v": v, "t": t}
+
+
+def clip_by_global_norm(grads, max_norm: float = 5.0):
+    leaves = jax.tree_util.tree_leaves(grads)
+    norm = jnp.sqrt(sum(jnp.sum(g * g) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads)
+
+
+def _ce(logits: Array, labels: Array) -> Array:
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.take_along_axis(logp, labels[:, None], axis=1).mean()
+
+
+def _to_jnp(tree):
+    return jax.tree_util.tree_map(jnp.asarray, tree)
+
+
+# ----------------------------------------------------------------------------
+# ResNet training
+# ----------------------------------------------------------------------------
+
+def train_resnet(x_tr, y_tr, x_te, y_te, *, quant: str, init_params=None,
+                 epochs: int = 6, batch: int = 64, lr: float = 1e-3,
+                 seed: int = 0, log: Callable = print):
+    params = _to_jnp(init_params if init_params is not None
+                     else M.init_resnet(seed))
+
+    def loss_fn(p, xb, yb, lam):
+        logits, _ = M.resnet_forward(p, xb, impl="ref", quant=quant, lam=lam)
+        return _ce(logits, yb)
+
+    @jax.jit
+    def step(p, opt, xb, yb, lr, lam):
+        l, g = jax.value_and_grad(loss_fn)(p, xb, yb, lam)
+        p, opt = adam_update(p, clip_by_global_norm(g), opt, lr)
+        return p, opt, l
+
+    @jax.jit
+    def eval_logits(p, xb):
+        q = "hard" if quant == "ste" else quant
+        return M.resnet_forward(p, xb, impl="ref", quant=q)[0]
+
+    opt = adam_init(params)
+    rng = np.random.default_rng(seed)
+    n = x_tr.shape[0]
+    t0 = time.time()
+    ramp = max(1, int(epochs * 0.6))
+    for ep in range(epochs):
+        order = rng.permutation(n)
+        losses = []
+        cur_lr = lr * (0.5 ** (ep // 3))
+        lam = jnp.float32(min(1.0, (ep + 1) / ramp) if quant == "ste" else 1.0)
+        for i in range(0, n - batch + 1, batch):
+            idx = order[i:i + batch]
+            params, opt, l = step(params, opt, jnp.asarray(x_tr[idx]),
+                                  jnp.asarray(y_tr[idx]), cur_lr, lam)
+            losses.append(float(l))
+        acc = eval_accuracy(eval_logits, params, x_te, y_te, batch=200)
+        log(f"  [resnet/{quant}] epoch {ep}: loss={np.mean(losses):.4f} "
+            f"lam={float(lam):.2f} test_acc={acc:.4f} "
+            f"({time.time() - t0:.0f}s)")
+    return params
+
+
+def eval_accuracy(logits_fn, params, x, y, batch: int = 200) -> float:
+    correct = 0
+    for i in range(0, x.shape[0], batch):
+        lg = np.asarray(logits_fn(params, jnp.asarray(x[i:i + batch])))
+        correct += int((lg.argmax(-1) == y[i:i + batch]).sum())
+    return correct / x.shape[0]
+
+
+# ----------------------------------------------------------------------------
+# PointNet++ training
+# ----------------------------------------------------------------------------
+
+def train_pointnet(x_tr, y_tr, x_te, y_te, *, quant: str, init_params=None,
+                   epochs: int = 12, batch: int = 16, lr: float = 1e-3,
+                   seed: int = 1, log: Callable = print):
+    params = _to_jnp(init_params if init_params is not None
+                     else M.init_pointnet(seed))
+
+    def loss_fn(p, xb, yb, lam):
+        logits, _ = M.pointnet_forward_batch(p, xb, impl="ref", quant=quant,
+                                             lam=lam)
+        return _ce(logits, yb)
+
+    @jax.jit
+    def step(p, opt, xb, yb, lr, lam):
+        l, g = jax.value_and_grad(loss_fn)(p, xb, yb, lam)
+        p, opt = adam_update(p, clip_by_global_norm(g), opt, lr)
+        return p, opt, l
+
+    @jax.jit
+    def eval_logits(p, xb):
+        q = "hard" if quant == "ste" else quant
+        return M.pointnet_forward_batch(p, xb, impl="ref", quant=q)[0]
+
+    opt = adam_init(params)
+    rng = np.random.default_rng(seed)
+    n = x_tr.shape[0]
+    t0 = time.time()
+    ramp = max(1, int(epochs * 0.6))
+    for ep in range(epochs):
+        order = rng.permutation(n)
+        losses = []
+        cur_lr = lr * (0.5 ** (ep // 5))
+        lam = jnp.float32(min(1.0, (ep + 1) / ramp) if quant == "ste" else 1.0)
+        for i in range(0, n - batch + 1, batch):
+            idx = order[i:i + batch]
+            params, opt, l = step(params, opt, jnp.asarray(x_tr[idx]),
+                                  jnp.asarray(y_tr[idx]), cur_lr, lam)
+            losses.append(float(l))
+        acc = eval_accuracy(eval_logits, params, x_te, y_te, batch=50)
+        log(f"  [pointnet/{quant}] epoch {ep}: loss={np.mean(losses):.4f} "
+            f"lam={float(lam):.2f} test_acc={acc:.4f} "
+            f"({time.time() - t0:.0f}s)")
+    return params
+
+
+# ----------------------------------------------------------------------------
+# Semantic centers (the CAM contents)
+# ----------------------------------------------------------------------------
+
+def semantic_centers(forward_svs: Callable, params, x_tr, y_tr,
+                     n_exits: int, batch: int = 100):
+    """Per-exit semantic centers + feature standardization stats.
+
+    ``forward_svs(params, xb) -> list[(B, D_i)]``.  GAP vectors are
+    post-ReLU (non-negative) and heavily share a common component, so the
+    digital periphery z-scores them with training-set statistics before the
+    CAM compare (the ZYNQ-side preprocessing; without it nearest-center
+    cosine barely discriminates).  Returns ``(centers, mus, sds)`` where
+    ``centers[e]`` is the (n_classes, D_e) matrix of *z-scored* class means.
+    """
+    cls_sums: List[np.ndarray | None] = [None] * n_exits
+    sums: List[np.ndarray | None] = [None] * n_exits
+    sumsq: List[np.ndarray | None] = [None] * n_exits
+    counts = np.zeros(M.N_CLASSES, np.int64)
+    total = 0
+    for i in range(0, x_tr.shape[0], batch):
+        xb = jnp.asarray(x_tr[i:i + batch])
+        yb = y_tr[i:i + batch]
+        svs = forward_svs(params, xb)
+        for e in range(n_exits):
+            sv = np.asarray(svs[e], dtype=np.float64)
+            if cls_sums[e] is None:
+                cls_sums[e] = np.zeros((M.N_CLASSES, sv.shape[-1]), np.float64)
+                sums[e] = np.zeros(sv.shape[-1], np.float64)
+                sumsq[e] = np.zeros(sv.shape[-1], np.float64)
+            np.add.at(cls_sums[e], yb, sv)
+            sums[e] += sv.sum(axis=0)
+            sumsq[e] += (sv * sv).sum(axis=0)
+        np.add.at(counts, yb, 1)
+        total += len(yb)
+    centers, mus, sds = [], [], []
+    for e in range(n_exits):
+        mu = sums[e] / max(total, 1)
+        var = np.maximum(sumsq[e] / max(total, 1) - mu * mu, 0.0)
+        sd = np.sqrt(var) + 1e-6
+        cm = cls_sums[e] / np.maximum(counts[:, None], 1)
+        centers.append(((cm - mu) / sd).astype(np.float32))
+        mus.append(mu.astype(np.float32))
+        sds.append(sd.astype(np.float32))
+    return centers, mus, sds
+
+
+def ternarize_centers(centers: List[np.ndarray]) -> List[np.ndarray]:
+    """Eq. 4–5 applied per exit block's (z-scored) center matrix."""
+    return [np.asarray(ternarize(jnp.asarray(c)), dtype=np.float32)
+            for c in centers]
+
+
+# ----------------------------------------------------------------------------
+# Parameter checkpoints (FP backbones are cached across aot.py reruns)
+# ----------------------------------------------------------------------------
+
+def _flatten(tree, prefix, out):
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            _flatten(v, f"{prefix}.{k}" if prefix else k, out)
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            _flatten(v, f"{prefix}.{i}", out)
+    else:
+        out[prefix] = np.asarray(v_ := tree)
+
+
+def save_params(prefix: str, params) -> None:
+    flat: Dict[str, np.ndarray] = {}
+    _flatten(jax.tree_util.tree_map(np.asarray, params), "", flat)
+    io_bin.write_bundle(prefix, {k: v.astype(np.float32)
+                                 for k, v in flat.items()}, {"ckpt": 1})
+
+
+def load_params(prefix: str, template):
+    """Rebuild a param tree from a checkpoint using `template`'s structure."""
+    import os
+    if not (os.path.exists(prefix + ".json") and os.path.exists(prefix + ".bin")):
+        return None
+    _, flat = io_bin.read_bundle(prefix)
+
+    def rebuild(t, prefix):
+        if isinstance(t, dict):
+            return {k: rebuild(v, f"{prefix}.{k}" if prefix else k)
+                    for k, v in t.items()}
+        if isinstance(t, (list, tuple)):
+            return [rebuild(v, f"{prefix}.{i}") for i, v in enumerate(t)]
+        arr = flat.get(prefix)
+        if arr is None or list(arr.shape) != list(np.shape(t)):
+            raise KeyError(f"checkpoint missing/mismatched tensor {prefix}")
+        return arr.astype(np.float32)
+
+    try:
+        return rebuild(template, "")
+    except KeyError:
+        return None

@@ -1,0 +1,55 @@
+"""AOT plumbing tests: HLO text generation + ops accounting (no training)."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot
+from compile import model as M
+
+
+def test_lower_to_file_produces_hlo_text(tmp_path):
+    def fn(x):
+        return (jnp.tanh(x) @ jnp.ones((4, 3), jnp.float32),)
+
+    path = str(tmp_path / "t.hlo.txt")
+    n = aot.lower_to_file(fn, (jax.ShapeDtypeStruct((2, 4), jnp.float32),),
+                          path)
+    assert n > 0 and os.path.exists(path)
+    text = open(path).read()
+    assert text.startswith("HloModule")
+    assert "f32[2,4]" in text
+
+
+def test_quantize_tree_only_touches_weights():
+    tree = {"w1": np.array([0.9, -0.9, 0.01], np.float32),
+            "g1": np.array([2.5], np.float32),
+            "nested": [{"w2": np.array([[0.7]], np.float32),
+                        "b2": np.array([0.3], np.float32)}]}
+    q = aot.quantize_tree(tree)
+    assert set(np.unique(q["w1"])).issubset({-1.0, 0.0, 1.0})
+    np.testing.assert_array_equal(q["g1"], tree["g1"])
+    assert set(np.unique(q["nested"][0]["w2"])).issubset({-1.0, 0.0, 1.0})
+    np.testing.assert_array_equal(q["nested"][0]["b2"], tree["nested"][0]["b2"])
+
+
+def test_resnet_block_ops_accounting():
+    ops = aot.resnet_block_ops()
+    assert len(ops) == M.RESNET_BLOCKS
+    # block 0: 28*28*9*16*16 MACs * 2 convs * 2 ops/MAC
+    assert ops[0] == 28 * 28 * 9 * 16 * 16 * 2 * 2
+    assert all(o > 0 for o in ops)
+
+
+def test_pointnet_block_ops_accounting():
+    ops = aot.pointnet_block_ops()
+    assert len(ops) == M.SA_LAYERS
+    assert all(o > 0 for o in ops)
+
+
+def test_flatten_params_stable_names():
+    out = {}
+    aot._flatten_params({"a": [{"x": np.zeros(1)}, {"x": np.ones(1)}]}, "", out)
+    assert sorted(out) == ["a.0.x", "a.1.x"]

@@ -1,0 +1,70 @@
+"""Synthetic dataset determinism + sanity (the Rust side reads the export)."""
+
+import numpy as np
+
+from compile import datasets
+from compile.io_bin import read_bundle, write_bundle
+
+
+def test_mnist_deterministic():
+    a = datasets.synthetic_mnist(20, 5, seed=3)
+    b = datasets.synthetic_mnist(20, 5, seed=3)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+
+
+def test_mnist_ranges_and_shapes():
+    x_tr, y_tr, x_te, y_te = datasets.synthetic_mnist(30, 10)
+    assert x_tr.shape == (30, 28, 28, 1) and x_tr.dtype == np.float32
+    assert x_tr.min() >= 0.0 and x_tr.max() <= 1.0
+    assert set(np.unique(y_tr)).issubset(set(range(10)))
+    # digits should actually contain ink
+    assert x_tr.mean() > 0.02
+
+
+def test_mnist_classes_are_distinguishable():
+    """Nearest-centroid in pixel space must beat chance by a wide margin —
+    guards against a degenerate renderer."""
+    x_tr, y_tr, x_te, y_te = datasets.synthetic_mnist(400, 100, seed=5)
+    cents = np.stack([x_tr[y_tr == c].mean(0).ravel() for c in range(10)])
+    pred = np.argmin(
+        ((x_te.reshape(len(x_te), -1)[:, None, :] - cents[None]) ** 2).sum(-1),
+        axis=1)
+    assert (pred == y_te).mean() > 0.5
+
+
+def test_modelnet_deterministic():
+    a = datasets.synthetic_modelnet(10, 4, seed=9)
+    b = datasets.synthetic_modelnet(10, 4, seed=9)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+
+
+def test_modelnet_normalized():
+    x_tr, y_tr, _, _ = datasets.synthetic_modelnet(20, 4)
+    assert x_tr.shape == (20, 256, 3)
+    r = np.linalg.norm(x_tr, axis=-1).max(axis=-1)
+    np.testing.assert_allclose(r, 1.0, atol=1e-5)  # unit-sphere normalized
+    np.testing.assert_allclose(x_tr.mean(axis=1), 0.0, atol=1e-5)
+
+
+def test_modelnet_all_classes_constructible():
+    rng = np.random.default_rng(0)
+    for cls in datasets.MODELNET_CLASSES:
+        pts = datasets._sample_cloud(cls, rng, 128)
+        assert pts.shape == (128, 3)
+        assert np.isfinite(pts).all()
+
+
+def test_bundle_roundtrip(tmp_path):
+    t = {
+        "a": np.arange(12, dtype=np.float32).reshape(3, 4),
+        "b": np.array([-1, 0, 1], np.int8),
+        "c": np.array([7, 8], np.int32),
+    }
+    write_bundle(str(tmp_path / "x"), t, {"k": 1})
+    meta, back = read_bundle(str(tmp_path / "x"))
+    assert meta == {"k": 1}
+    for k in t:
+        np.testing.assert_array_equal(t[k], back[k])
+        assert t[k].dtype == back[k].dtype

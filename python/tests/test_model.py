@@ -1,0 +1,112 @@
+"""L2 model structure tests: shapes, exits, impl-interchangeability."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.train import _to_jnp
+
+
+@pytest.fixture(scope="module")
+def resnet_params():
+    return _to_jnp(M.init_resnet(0))
+
+
+@pytest.fixture(scope="module")
+def pointnet_params():
+    return _to_jnp(M.init_pointnet(1))
+
+
+def test_resnet_shapes_and_exit_dims(resnet_params):
+    x = jnp.zeros((2, 28, 28, 1), jnp.float32)
+    logits, svs = M.resnet_forward(resnet_params, x)
+    assert logits.shape == (2, M.N_CLASSES)
+    assert len(svs) == M.RESNET_BLOCKS
+    for sv, c in zip(svs, M.RESNET_CHANNELS):
+        assert sv.shape == (2, c)
+
+
+def test_resnet_spatial_downsampling(resnet_params):
+    """Strided blocks halve the spatial extent: 28 -> 14 -> 7."""
+    x = jnp.zeros((1, 28, 28, 1), jnp.float32)
+    h = M.resnet_stem(resnet_params, x)
+    sizes = []
+    for blk, stride in zip(resnet_params["blocks"], M.RESNET_STRIDES):
+        h, _ = M.resnet_block(blk, h, stride)
+        sizes.append(h.shape[1])
+    assert sizes == [28, 28, 28, 28, 14, 14, 14, 14, 7, 7, 7]
+
+
+def test_resnet_pallas_matches_ref(resnet_params):
+    """The exported (pallas) forward equals the training (ref) forward."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(1, 28, 28, 1)).astype(np.float32))
+    lr_, svr = M.resnet_forward(resnet_params, x, impl="ref", quant="hard")
+    lp_, svp = M.resnet_forward(resnet_params, x, impl="pallas", quant="hard")
+    np.testing.assert_allclose(np.asarray(lr_), np.asarray(lp_),
+                               rtol=1e-3, atol=1e-3)
+    for a, b in zip(svr, svp):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-3, atol=1e-3)
+
+
+def test_pointnet_shapes(pointnet_params):
+    xyz = jnp.zeros((M.N_POINTS, 3), jnp.float32)
+    logits, svs = M.pointnet_forward(pointnet_params, xyz)
+    assert logits.shape == (M.N_CLASSES,)
+    assert [s.shape[-1] for s in svs] == M.SA_CHANNELS
+
+
+def test_pointnet_batch_matches_single(pointnet_params):
+    rng = np.random.default_rng(1)
+    xyz = rng.normal(size=(3, M.N_POINTS, 3)).astype(np.float32)
+    lb, svb = M.pointnet_forward_batch(pointnet_params, jnp.asarray(xyz))
+    for i in range(3):
+        ls, svs = M.pointnet_forward(pointnet_params, jnp.asarray(xyz[i]))
+        np.testing.assert_allclose(np.asarray(lb[i]), np.asarray(ls),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(svb[0][i]), np.asarray(svs[0]),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_fps_covers_spread_points():
+    """FPS must pick spatially spread points: on a line, the two extremes."""
+    xyz = jnp.asarray(np.linspace(0, 1, 64)[:, None] *
+                      np.array([1.0, 0, 0])[None, :], jnp.float32)
+    idx = np.asarray(M.farthest_point_sample(xyz, 4))
+    assert 0 in idx and 63 in idx
+    assert len(set(idx.tolist())) == 4
+
+
+def test_ball_query_respects_radius():
+    rng = np.random.default_rng(2)
+    xyz = jnp.asarray(rng.uniform(-1, 1, size=(128, 3)).astype(np.float32))
+    new_xyz = xyz[:4]
+    idx = np.asarray(M.ball_query(xyz, new_xyz, 0.5, 8))
+    x = np.asarray(xyz)
+    for q in range(4):
+        d = np.linalg.norm(x[idx[q]] - x[np.newaxis, q], axis=-1)
+        assert np.all(d <= 0.5 + 1e-5)
+
+
+def test_group_norm_normalizes():
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(3.0, 2.0, size=(2, 8, 8, 8)).astype(np.float32))
+    y = np.asarray(M.group_norm(x, jnp.ones(8), jnp.zeros(8), groups=2))
+    g = y.reshape(2, 8, 8, 2, 4)
+    np.testing.assert_allclose(g.mean(axis=(1, 2, 4)), 0.0, atol=1e-4)
+    np.testing.assert_allclose(g.std(axis=(1, 2, 4)), 1.0, atol=1e-2)
+
+
+def test_weight_count_matches_paper_scale():
+    """Paper: ~88k ternary weights for the 11-block ResNet; we are ~113k."""
+    n = M.count_weights(M.init_resnet(0))
+    assert 50_000 < n < 200_000
+
+
+def test_cam_values_scale():
+    """Paper: ~2k values in CAM for ResNet; centers = classes x sum(dims)."""
+    total = M.N_CLASSES * sum(M.RESNET_CHANNELS)
+    assert 1500 < total < 5000

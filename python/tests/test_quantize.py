@@ -1,0 +1,62 @@
+"""Ternary quantization laws (paper Eq. 4–5) — property tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.quantize import ternarize, ternarize_ste, ternary_thresholds
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(2, 400))
+def test_output_is_ternary(seed, n):
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=n).astype(np.float32) * rng.uniform(0.1, 10)
+    q = np.asarray(ternarize(jnp.asarray(w)))
+    assert set(np.unique(q)).issubset({-1.0, 0.0, 1.0})
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_thirds_rule(seed):
+    """Eq. 4: the interval split is exactly at thirds of the range."""
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=100).astype(np.float32)
+    l_in, h_in = ternary_thresholds(jnp.asarray(w))
+    rng_ = float(w.max() - w.min())
+    np.testing.assert_allclose(float(l_in), w.min() + rng_ / 3, rtol=1e-5)
+    np.testing.assert_allclose(float(h_in), w.max() - rng_ / 3, rtol=1e-5)
+    q = np.asarray(ternarize(jnp.asarray(w)))
+    assert np.all(q[w < float(l_in)] == -1)
+    assert np.all(q[w > float(h_in)] == 1)
+
+
+def test_monotonicity():
+    """Quantization preserves ordering (is monotone non-decreasing)."""
+    w = np.linspace(-2, 2, 101).astype(np.float32)
+    q = np.asarray(ternarize(jnp.asarray(w)))
+    assert np.all(np.diff(q) >= 0)
+
+
+def test_idempotence_on_symmetric_input():
+    """Ternarizing an already-ternary symmetric tensor is the identity."""
+    w = np.array([-1.0, 0.0, 1.0, 1.0, -1.0, 0.0], np.float32)
+    np.testing.assert_array_equal(np.asarray(ternarize(jnp.asarray(w))), w)
+
+
+def test_ste_gradient_is_identity():
+    """Backward pass of the STE must be the identity (Eq. straight-through)."""
+    w = jnp.asarray(np.random.default_rng(0).normal(size=32).astype(np.float32))
+    g = jax.grad(lambda w: jnp.sum(ternarize_ste(w) * 3.0))(w)
+    np.testing.assert_allclose(np.asarray(g), 3.0, rtol=1e-6)
+
+
+def test_sign_symmetry():
+    """ternarize(-w) == -ternarize(w) for symmetric-range tensors."""
+    rng = np.random.default_rng(5)
+    w = rng.normal(size=256).astype(np.float32)
+    w = np.concatenate([w, -w])  # force symmetric range
+    q1 = np.asarray(ternarize(jnp.asarray(w)))
+    q2 = np.asarray(ternarize(jnp.asarray(-w)))
+    np.testing.assert_array_equal(q1, -q2)

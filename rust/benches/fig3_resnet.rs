@@ -1,0 +1,60 @@
+//! Fig. 3 bench: regenerates the ResNet/MNIST ablation (3e), OPs/layer
+//! (3g) and energy comparison (3h) end-to-end, and times the trace
+//! recording that every row depends on.  Skips cleanly without artifacts.
+
+use memdyn::budget::BudgetModel;
+use memdyn::figures::common::{self as common, Setup, Variant};
+use memdyn::figures::fig3;
+use memdyn::model::artifacts_dir;
+use memdyn::util::bench::standard_bencher;
+
+fn main() {
+    let dir = artifacts_dir(None);
+    if !dir.join("index.json").exists() {
+        println!("SKIP fig3 bench: no artifacts (run `make artifacts`)");
+        return;
+    }
+    let b = standard_bencher("fig3: dynamic ResNet on synthetic MNIST");
+    let samples = std::env::var("MEMDYN_BENCH_SAMPLES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(150);
+    let setup = Setup::new(&dir, samples);
+
+    // time the per-sample early-exit inference on the digital backend
+    let (bundle, data) = setup.resnet().unwrap();
+    let budget = BudgetModel::new(
+        bundle.block_ops.clone(),
+        &bundle.exit_dims,
+        bundle.classes,
+    );
+    let engine = common::resnet_engine(&bundle, Variant::EeQun, 11).unwrap();
+    let calib = common::trace_train(&engine, &data, 300, 25).unwrap();
+    let thr = common::tuned_thresholds(&bundle, &calib, &budget, 200).unwrap();
+    let mut engine = engine;
+    engine.thresholds = thr.values.clone();
+    let n = 50usize;
+    let input = &data.x_test[..n * data.sample_len];
+    let quick = memdyn::util::bench::Bencher::new(1, 3);
+    println!(
+        "{}",
+        quick
+            .run_items("ee_infer_digital_50 (samples/s)", n as f64, || {
+                engine.infer_batch(input, n).unwrap().len()
+            })
+            .report()
+    );
+    let _ = b;
+
+    // the actual figure regenerations
+    for fig in ["3e", "3g", "3h"] {
+        let t0 = std::time::Instant::now();
+        match memdyn::figures::run(fig, &setup) {
+            Ok(text) => {
+                println!("{text}");
+                println!("[fig {fig}: {:.1}s]\n", t0.elapsed().as_secs_f64());
+            }
+            Err(e) => println!("[fig {fig} FAILED: {e:#}]"),
+        }
+    }
+}

@@ -1,0 +1,56 @@
+//! Fig. 4 bench: device characterization statistics + the write/read-noise
+//! accuracy sweeps (ternary vs direct-FP mapping), plus programming
+//! throughput of the crossbar substrate.
+
+use memdyn::cim::CimMatrix;
+use memdyn::crossbar::ConverterConfig;
+use memdyn::device::DeviceConfig;
+use memdyn::figures::common::Setup;
+use memdyn::model::artifacts_dir;
+use memdyn::util::bench::standard_bencher;
+use memdyn::util::rng::Pcg64;
+
+fn main() {
+    let b = standard_bencher("fig4: memristor noise + ternary defence");
+    let mut rng = Pcg64::new(3);
+
+    // programming throughput (device writes/s) — program-verify ablation
+    let (k, n) = (512usize, 128usize);
+    let w: Vec<i8> = (0..k * n).map(|_| [-1i8, 0, 1][rng.below(3)]).collect();
+    println!(
+        "{}",
+        b.run_items("program_512x128 (device writes/s)", (k * 2 * n) as f64, || {
+            CimMatrix::program(
+                &w,
+                k,
+                n,
+                &DeviceConfig::default(),
+                &ConverterConfig::default(),
+                &mut rng,
+            )
+            .tile_count()
+        })
+        .report()
+    );
+
+    let dir = artifacts_dir(None);
+    if !dir.join("index.json").exists() {
+        println!("SKIP fig4 accuracy sweeps: no artifacts");
+        return;
+    }
+    let samples = std::env::var("MEMDYN_BENCH_SAMPLES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(60);
+    let setup = Setup::new(&dir, samples);
+    for fig in ["4a", "4bcde", "4f", "4g", "4h", "4i"] {
+        let t0 = std::time::Instant::now();
+        match memdyn::figures::run(fig, &setup) {
+            Ok(text) => {
+                println!("{text}");
+                println!("[fig {fig}: {:.1}s]\n", t0.elapsed().as_secs_f64());
+            }
+            Err(e) => println!("[fig {fig} FAILED: {e:#}]"),
+        }
+    }
+}

@@ -1,0 +1,51 @@
+//! Fig. 5 bench: dynamic PointNet++ ablation (5e), OPs/pass-through (5g)
+//! and energy (5h), plus FPS/ball-query substrate timings.
+
+use memdyn::figures::common::Setup;
+use memdyn::model::artifacts_dir;
+use memdyn::nn::pointnet::{ball_query, farthest_point_sample};
+use memdyn::util::bench::standard_bencher;
+use memdyn::util::rng::Pcg64;
+
+fn main() {
+    let b = standard_bencher("fig5: dynamic PointNet++ on synthetic ModelNet");
+    let mut rng = Pcg64::new(4);
+    let n = 256usize;
+    let xyz: Vec<f32> = (0..n * 3)
+        .map(|_| rng.uniform_in(-1.0, 1.0) as f32)
+        .collect();
+    println!(
+        "{}",
+        b.run("fps_256->128", || farthest_point_sample(&xyz, n, 128).len())
+            .report()
+    );
+    let centers = farthest_point_sample(&xyz, n, 128);
+    println!(
+        "{}",
+        b.run("ball_query_128x256_k16", || {
+            ball_query(&xyz, n, &centers, 0.3, 16).len()
+        })
+        .report()
+    );
+
+    let dir = artifacts_dir(None);
+    if !dir.join("index.json").exists() {
+        println!("SKIP fig5 figures: no artifacts");
+        return;
+    }
+    let samples = std::env::var("MEMDYN_BENCH_SAMPLES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(60);
+    let setup = Setup::new(&dir, samples);
+    for fig in ["5e", "5g", "5h"] {
+        let t0 = std::time::Instant::now();
+        match memdyn::figures::run(fig, &setup) {
+            Ok(text) => {
+                println!("{text}");
+                println!("[fig {fig}: {:.1}s]\n", t0.elapsed().as_secs_f64());
+            }
+            Err(e) => println!("[fig {fig} FAILED: {e:#}]"),
+        }
+    }
+}

@@ -1,0 +1,89 @@
+//! Fig. 6 bench: TPE optimizer — iterations/second on a real calibration
+//! trace, plus the TPE vs random-search vs coordinate-descent quality
+//! comparison at equal evaluation budgets.
+
+use memdyn::budget::BudgetModel;
+use memdyn::figures::common::{self as common, Setup, Variant};
+use memdyn::model::artifacts_dir;
+use memdyn::opt::{self, Objective};
+use memdyn::util::bench::standard_bencher;
+
+fn main() {
+    let dir = artifacts_dir(None);
+    if !dir.join("index.json").exists() {
+        println!("SKIP fig6 bench: no artifacts");
+        return;
+    }
+    let b = standard_bencher("fig6: TPE threshold optimization");
+    let setup = Setup::new(&dir, 100);
+    let (bundle, data) = setup.resnet().unwrap();
+    let budget = BudgetModel::new(
+        bundle.block_ops.clone(),
+        &bundle.exit_dims,
+        bundle.classes,
+    );
+    let engine = common::resnet_engine(&bundle, Variant::EeQun, 11).unwrap();
+    let trace = common::trace_train(&engine, &data, 400, 25).unwrap();
+    let objective = Objective::default();
+
+    println!(
+        "{}",
+        b.run_items("tpe_200_iters (evals/s)", 200.0, || {
+            opt::tpe::optimize(
+                &trace,
+                &budget,
+                &objective,
+                &opt::tpe::TpeConfig {
+                    n_iters: 200,
+                    ..Default::default()
+                },
+            )
+            .best
+            .score
+        })
+        .report()
+    );
+
+    // quality at equal budget
+    for iters in [100usize, 400, 1000] {
+        let tpe = opt::tpe::optimize(
+            &trace,
+            &budget,
+            &objective,
+            &opt::tpe::TpeConfig {
+                n_iters: iters,
+                ..Default::default()
+            },
+        );
+        let rnd = opt::random::search(&trace, &budget, &objective, 0.3, 1.05, iters, 7);
+        println!(
+            "iters {iters:>4}: TPE score {:.4} (acc {:.1}%, budget {:.1}%) | random {:.4}",
+            tpe.best.score,
+            tpe.best.accuracy * 100.0,
+            tpe.best.budget_drop * 100.0,
+            rnd.best.score
+        );
+    }
+    let cd = opt::grid::coordinate_descent(
+        &trace,
+        &budget,
+        &objective,
+        &vec![0.9; trace.n_exits],
+        0.3,
+        1.05,
+        16,
+        3,
+    );
+    println!("coordinate-descent baseline: score {:.4}", cd.score);
+
+    for fig in ["6a", "6hk"] {
+        let t0 = std::time::Instant::now();
+        match memdyn::figures::run(fig, &setup) {
+            Ok(text) => {
+                println!("{text}");
+                println!("[fig {fig}: {:.1}s]\n", t0.elapsed().as_secs_f64());
+            }
+            Err(e) => println!("[fig {fig} FAILED: {e:#}]"),
+        }
+    }
+}

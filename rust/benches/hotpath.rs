@@ -1,0 +1,111 @@
+//! §Perf hot-path micro-benches: the numbers tracked before/after each
+//! optimization in EXPERIMENTS.md §Perf.
+//!
+//! Covers the L3 request path end to end: crossbar MVM (the Mem backend's
+//! inner loop), im2col, a native residual block, CAM search, the batcher,
+//! and a full native-engine inference.
+
+use memdyn::cim::CimMatrix;
+use memdyn::crossbar::ConverterConfig;
+use memdyn::device::DeviceConfig;
+use memdyn::nn::ops;
+use memdyn::util::bench::standard_bencher;
+use memdyn::util::rng::Pcg64;
+
+fn main() {
+    let b = standard_bencher("hotpath micro-benches");
+    let mut rng = Pcg64::new(1);
+
+    // --- crossbar MVM: 512x256 tile, the Mem backend's inner loop --------
+    let (k, n) = (512usize, 256usize);
+    let w: Vec<i8> = (0..k * n).map(|_| [-1i8, 0, 1][rng.below(3)]).collect();
+    let noisy = CimMatrix::program(
+        &w,
+        k,
+        n,
+        &DeviceConfig::default(),
+        &ConverterConfig::default(),
+        &mut rng,
+    );
+    let ideal = CimMatrix::program(
+        &w,
+        k,
+        n,
+        &DeviceConfig::ideal(),
+        &ConverterConfig::ideal(),
+        &mut rng,
+    );
+    let x: Vec<f32> = (0..k).map(|i| (i as f32 * 0.7).sin()).collect();
+    let mut y = vec![0f32; n];
+    let mut rng2 = Pcg64::new(2);
+    let reads = (k * 2 * n) as f64;
+    println!(
+        "{}",
+        b.run_items("xbar_mvm_512x256_noisy (device reads/s)", reads, || {
+            noisy.mvm(&x, &mut y, &mut rng2);
+            y[0]
+        })
+        .report()
+    );
+    println!(
+        "{}",
+        b.run_items("xbar_mvm_512x256_ideal (device reads/s)", reads, || {
+            ideal.mvm(&x, &mut y, &mut rng2);
+            y[0]
+        })
+        .report()
+    );
+
+    // --- im2col on the stem geometry --------------------------------------
+    let img: Vec<f32> = (0..8 * 28 * 28 * 16).map(|i| (i % 9) as f32).collect();
+    println!(
+        "{}",
+        b.run("im2col_8x28x28x16_3x3", || {
+            ops::im2col(&img, 8, 28, 28, 16, 3, 3, 1).0.len()
+        })
+        .report()
+    );
+
+    // --- GroupNorm + ReLU (digital peripherals) ---------------------------
+    let mut feat: Vec<f32> = (0..8 * 28 * 28 * 16).map(|i| (i % 13) as f32).collect();
+    let gamma = vec![1f32; 16];
+    let beta = vec![0f32; 16];
+    println!(
+        "{}",
+        b.run("group_norm_8x784x16", || {
+            ops::group_norm(&mut feat, 8, 784, 16, 4, &gamma, &beta, 1e-5);
+            feat[0]
+        })
+        .report()
+    );
+
+    // --- dense digital matmul (XLA-backend comparison point) --------------
+    let wx: Vec<f32> = (0..144 * 16).map(|i| ((i % 3) as f32) - 1.0).collect();
+    let cols: Vec<f32> = (0..8 * 784 * 144).map(|i| (i % 5) as f32).collect();
+    println!(
+        "{}",
+        b.run_items(
+            "digital_matmul_6272x144x16 (MACs/s)",
+            (8 * 784 * 144 * 16) as f64,
+            || ops::matmul(&cols, &wx, 8 * 784, 144, 16)[0]
+        )
+        .report()
+    );
+
+    // --- CAM search --------------------------------------------------------
+    let centers: Vec<i8> = (0..10 * 32).map(|_| [-1i8, 0, 1][rng.below(3)]).collect();
+    let bank = memdyn::cam::CamBank::program(
+        &centers,
+        10,
+        32,
+        &DeviceConfig::default(),
+        &ConverterConfig::default(),
+        &mut rng,
+    );
+    let sv: Vec<f32> = (0..32).map(|i| (i as f32 * 0.3).cos()).collect();
+    println!(
+        "{}",
+        b.run("cam_search_10x32_noisy", || bank.search(&sv, &mut rng2).class)
+            .report()
+    );
+}

@@ -1,0 +1,149 @@
+//! Computational-budget accounting (Fig. 3g / 5g and the "budget drop"
+//! numbers of Fig. 3e / 5e).
+//!
+//! Ops per block come from the artifact manifest (`block_ops` — computed at
+//! export time from the model geometry, so Rust and Python agree by
+//! construction).  Given the per-sample exit layer distribution, this
+//! module produces pass-through probabilities and the dynamic-vs-static
+//! budget drop.
+
+/// Ops accounting for one model.
+#[derive(Clone, Debug)]
+pub struct BudgetModel {
+    /// Ops per exit block (per sample).
+    pub block_ops: Vec<f64>,
+    /// Ops of the semantic-memory search at each exit (CAM + norm).
+    pub exit_ops: Vec<f64>,
+}
+
+impl BudgetModel {
+    pub fn new(block_ops: Vec<f64>, exit_dims: &[usize], classes: usize) -> Self {
+        let exit_ops = exit_dims
+            .iter()
+            .map(|&d| (2 * d * classes + 3 * d) as f64) // MVM + norms
+            .collect();
+        BudgetModel {
+            block_ops,
+            exit_ops,
+        }
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.block_ops.len()
+    }
+
+    /// Static (full-depth) ops per sample, exits not engaged.
+    pub fn static_ops(&self) -> f64 {
+        self.block_ops.iter().sum()
+    }
+
+    /// Ops consumed by a sample that exits after block `exit` (0-based;
+    /// `exit == n_blocks-1` means it ran the whole backbone).
+    pub fn ops_for_exit(&self, exit: usize) -> f64 {
+        let e = exit.min(self.n_blocks() - 1);
+        self.block_ops[..=e].iter().sum::<f64>()
+            + self.exit_ops[..=e].iter().sum::<f64>()
+    }
+
+    /// Summary over a set of per-sample exit layers.
+    pub fn summarize(&self, exits: &[usize]) -> BudgetSummary {
+        let n = exits.len().max(1) as f64;
+        let blocks = self.n_blocks();
+        let mut pass_through = vec![0f64; blocks];
+        let mut exit_hist = vec![0usize; blocks];
+        let mut dyn_ops = 0f64;
+        for &e in exits {
+            let e = e.min(blocks - 1);
+            exit_hist[e] += 1;
+            for p in pass_through.iter_mut().take(e + 1) {
+                *p += 1.0;
+            }
+            dyn_ops += self.ops_for_exit(e);
+        }
+        for p in pass_through.iter_mut() {
+            *p /= n;
+        }
+        let static_ops = self.static_ops();
+        BudgetSummary {
+            pass_through,
+            exit_hist,
+            mean_dynamic_ops: dyn_ops / n,
+            static_ops,
+            budget_drop: 1.0 - (dyn_ops / n) / static_ops,
+        }
+    }
+}
+
+/// Aggregated budget statistics for a batch of inferences.
+#[derive(Clone, Debug)]
+pub struct BudgetSummary {
+    /// P(sample passes through block i) — Fig. 3g/5g right axis.
+    pub pass_through: Vec<f64>,
+    /// Number of samples exiting at each block.
+    pub exit_hist: Vec<usize>,
+    pub mean_dynamic_ops: f64,
+    pub static_ops: f64,
+    /// 1 - dynamic/static (the paper's "computational budget reduction").
+    pub budget_drop: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> BudgetModel {
+        BudgetModel::new(vec![10_000.0; 4], &[8, 8, 8, 8], 10)
+    }
+
+    #[test]
+    fn static_ops_sums_blocks() {
+        assert_eq!(model().static_ops(), 40_000.0);
+    }
+
+    #[test]
+    fn exit_ops_monotone() {
+        let m = model();
+        let mut prev = 0.0;
+        for e in 0..4 {
+            let o = m.ops_for_exit(e);
+            assert!(o > prev);
+            prev = o;
+        }
+    }
+
+    #[test]
+    fn all_exit_first_block_drops_most() {
+        let m = model();
+        let s = m.summarize(&[0, 0, 0, 0]);
+        assert!(s.budget_drop > 0.70, "drop {}", s.budget_drop);
+        assert_eq!(s.pass_through, vec![1.0, 0.0, 0.0, 0.0]);
+        assert_eq!(s.exit_hist, vec![4, 0, 0, 0]);
+    }
+
+    #[test]
+    fn no_early_exit_means_negative_drop_from_cam_overhead() {
+        let m = model();
+        let s = m.summarize(&[3, 3]);
+        // running every block + every CAM check costs slightly MORE than
+        // the static network — the honest accounting the paper relies on
+        assert!(s.budget_drop < 0.0);
+        assert_eq!(s.pass_through, vec![1.0; 4]);
+    }
+
+    #[test]
+    fn mixed_exits() {
+        let m = model();
+        let s = m.summarize(&[0, 1, 3, 3]);
+        assert_eq!(s.exit_hist, vec![1, 1, 0, 2]);
+        assert!((s.pass_through[0] - 1.0).abs() < 1e-12);
+        assert!((s.pass_through[1] - 0.75).abs() < 1e-12);
+        assert!((s.pass_through[3] - 0.5).abs() < 1e-12);
+        assert!(s.budget_drop > 0.0 && s.budget_drop < 0.5);
+    }
+
+    #[test]
+    fn exit_clamped_to_depth() {
+        let m = model();
+        assert_eq!(m.ops_for_exit(99), m.ops_for_exit(3));
+    }
+}

@@ -1,0 +1,300 @@
+//! CAM engine: the semantic memory.  Ternary semantic centers live on a
+//! crossbar partition; a search vector applied as word-line voltages yields
+//! match-line currents ∝ dot(sv, center); after the digital norm correction
+//! this is the cosine similarity driving the early-exit decision.
+//!
+//! The same differential-pair encoding as CIM is used (a center entry in
+//! {-1, 0, 1} is two devices), so all device noise modelling is shared.
+
+use crate::crossbar::ConverterConfig;
+use crate::cim::{CimCounters, CimMatrix};
+use crate::device::DeviceConfig;
+use crate::util::rng::Pcg64;
+
+/// A single exit's CAM: `n_classes` ternary centers of dimension `dim`.
+pub struct CamBank {
+    pub dim: usize,
+    pub n_classes: usize,
+    /// Centers stored transposed as a (dim, n_classes) CIM matrix so a
+    /// search is one MVM: match-line current per class.
+    matrix: CimMatrix,
+    /// Digital norm-correction factors 1/|c| per class (computed from the
+    /// *programmed* conductances, as the chip calibration would).
+    inv_norms: Vec<f32>,
+}
+
+/// Result of one associative search.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Match {
+    pub class: usize,
+    pub similarity: f32,
+    /// similarity margin to the runner-up (used by margin exit policies)
+    pub margin: f32,
+}
+
+impl CamBank {
+    /// Program centers (row-major `(n_classes, dim)`, entries -1/0/1).
+    pub fn program(
+        centers: &[i8],
+        n_classes: usize,
+        dim: usize,
+        dev: &DeviceConfig,
+        conv: &ConverterConfig,
+        rng: &mut Pcg64,
+    ) -> Self {
+        assert_eq!(centers.len(), n_classes * dim);
+        // transpose to (dim, n_classes): word-lines = vector entries
+        let mut t = vec![0i8; dim * n_classes];
+        for c in 0..n_classes {
+            for d in 0..dim {
+                t[d * n_classes + c] = centers[c * dim + d];
+            }
+        }
+        let matrix = CimMatrix::program(&t, dim, n_classes, dev, conv, rng);
+        // calibrated norms from programmed differential means
+        let ones: Vec<f32> = vec![1.0; dim];
+        let _ = ones; // norms need per-entry squares; compute from targets
+        let mut inv_norms = Vec::with_capacity(n_classes);
+        for c in 0..n_classes {
+            let mut s = 0f64;
+            for d in 0..dim {
+                let v = centers[c * dim + d] as f64;
+                s += v * v;
+            }
+            inv_norms.push(if s > 0.0 { (1.0 / s.sqrt()) as f32 } else { 0.0 });
+        }
+        CamBank {
+            dim,
+            n_classes,
+            matrix,
+            inv_norms,
+        }
+    }
+
+    /// Cosine similarities of a search vector against every center.
+    pub fn similarities(&self, sv: &[f32], rng: &mut Pcg64) -> Vec<f32> {
+        assert_eq!(sv.len(), self.dim);
+        let mut ml = vec![0f32; self.n_classes];
+        self.matrix.mvm(sv, &mut ml, rng);
+        let sv_norm: f32 = sv.iter().map(|v| v * v).sum::<f32>().sqrt();
+        let inv_sv = if sv_norm > 1e-9 { 1.0 / sv_norm } else { 0.0 };
+        for (m, inv_c) in ml.iter_mut().zip(&self.inv_norms) {
+            *m *= inv_sv * inv_c;
+        }
+        ml
+    }
+
+    /// Top-1 associative match with runner-up margin.
+    pub fn search(&self, sv: &[f32], rng: &mut Pcg64) -> Match {
+        let sims = self.similarities(sv, rng);
+        let mut best = 0usize;
+        let mut second = f32::NEG_INFINITY;
+        for (i, &s) in sims.iter().enumerate() {
+            if s > sims[best] {
+                second = sims[best];
+                best = i;
+            } else if s > second && i != best {
+                second = s;
+            }
+        }
+        if self.n_classes == 1 {
+            second = 0.0;
+        }
+        Match {
+            class: best,
+            similarity: sims[best],
+            margin: sims[best] - second,
+        }
+    }
+
+    pub fn take_counters(&self) -> CimCounters {
+        self.matrix.take_counters()
+    }
+
+    /// Stored (programmed-mean) value map for Fig. 4g — what the write
+    /// noise did to the intended ternary pattern.
+    pub fn stored_value_map(&self) -> Vec<f32> {
+        // one exact MVM per basis vector reads back the programmed means
+        let mut out = vec![0f32; self.dim * self.n_classes];
+        let mut basis = vec![0f32; self.dim];
+        for d in 0..self.dim {
+            basis[d] = 1.0;
+            let row = self.matrix.matmul_mean(&basis, 1);
+            out[d * self.n_classes..(d + 1) * self.n_classes]
+                .copy_from_slice(&row);
+            basis[d] = 0.0;
+        }
+        out
+    }
+}
+
+/// The full semantic memory: one CAM bank per exit block.
+pub struct SemanticMemory {
+    pub banks: Vec<CamBank>,
+}
+
+impl SemanticMemory {
+    pub fn program(
+        centers_per_exit: &[(Vec<i8>, usize, usize)], // (data, classes, dim)
+        dev: &DeviceConfig,
+        conv: &ConverterConfig,
+        rng: &mut Pcg64,
+    ) -> Self {
+        SemanticMemory {
+            banks: centers_per_exit
+                .iter()
+                .map(|(data, classes, dim)| {
+                    CamBank::program(data, *classes, *dim, dev, conv, rng)
+                })
+                .collect(),
+        }
+    }
+
+    pub fn search(&self, exit: usize, sv: &[f32], rng: &mut Pcg64) -> Match {
+        self.banks[exit].search(sv, rng)
+    }
+
+    pub fn take_counters(&self) -> CimCounters {
+        let mut total = CimCounters::default();
+        for b in &self.banks {
+            total.add(&b.take_counters());
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cosine(a: &[f32], b: &[i8]) -> f32 {
+        let dot: f32 = a.iter().zip(b).map(|(x, y)| x * *y as f32).sum();
+        let na: f32 = a.iter().map(|v| v * v).sum::<f32>().sqrt();
+        let nb: f32 = b.iter().map(|v| (*v as f32) * (*v as f32)).sum::<f32>().sqrt();
+        if na == 0.0 || nb == 0.0 {
+            0.0
+        } else {
+            dot / (na * nb)
+        }
+    }
+
+    fn random_centers(c: usize, d: usize, seed: u64) -> Vec<i8> {
+        let mut rng = Pcg64::new(seed);
+        let mut v: Vec<i8> = (0..c * d).map(|_| [-1i8, 0, 1][rng.below(3)]).collect();
+        // no all-zero centers
+        for cc in 0..c {
+            v[cc * d] = 1;
+        }
+        v
+    }
+
+    #[test]
+    fn ideal_search_matches_exact_cosine() {
+        let (c, d) = (10, 32);
+        let centers = random_centers(c, d, 1);
+        let mut rng = Pcg64::new(2);
+        let bank = CamBank::program(
+            &centers,
+            c,
+            d,
+            &DeviceConfig::ideal(),
+            &ConverterConfig::ideal(),
+            &mut rng,
+        );
+        let sv: Vec<f32> = (0..d).map(|i| (i as f32 * 0.37).cos()).collect();
+        let sims = bank.similarities(&sv, &mut rng);
+        for (cc, got) in sims.iter().enumerate() {
+            let want = cosine(&sv, &centers[cc * d..(cc + 1) * d]);
+            assert!((got - want).abs() < 1e-4, "class {cc}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn search_top1_is_argmax_and_margin_correct() {
+        let (c, d) = (10, 24);
+        let centers = random_centers(c, d, 3);
+        let mut rng = Pcg64::new(4);
+        let bank = CamBank::program(
+            &centers,
+            c,
+            d,
+            &DeviceConfig::ideal(),
+            &ConverterConfig::ideal(),
+            &mut rng,
+        );
+        let sv: Vec<f32> = (0..d).map(|i| ((i * 3 % 7) as f32) - 3.0).collect();
+        let sims = bank.similarities(&sv, &mut rng);
+        let m = bank.search(&sv, &mut rng);
+        let best = crate::util::stats::argmax(&sims).unwrap();
+        assert_eq!(m.class, best);
+        let mut sorted = sims.clone();
+        sorted.sort_by(|a, b| b.total_cmp(a));
+        assert!((m.margin - (sorted[0] - sorted[1])).abs() < 1e-5);
+    }
+
+    #[test]
+    fn matching_center_wins_under_moderate_noise() {
+        let (c, d) = (10, 64);
+        let centers = random_centers(c, d, 5);
+        let mut rng = Pcg64::new(6);
+        let bank = CamBank::program(
+            &centers,
+            c,
+            d,
+            &DeviceConfig::default(),
+            &ConverterConfig::default(),
+            &mut rng,
+        );
+        // query == exact stored pattern of class 4 -> must match class 4
+        let sv: Vec<f32> = centers[4 * d..5 * d].iter().map(|&v| v as f32).collect();
+        let mut hits = 0;
+        for _ in 0..50 {
+            if bank.search(&sv, &mut rng).class == 4 {
+                hits += 1;
+            }
+        }
+        assert!(hits >= 45, "only {hits}/50 correct under noise");
+    }
+
+    #[test]
+    fn semantic_memory_multi_exit() {
+        let mut rng = Pcg64::new(7);
+        let exits = vec![
+            (random_centers(10, 16, 8), 10, 16),
+            (random_centers(10, 24, 9), 10, 24),
+        ];
+        let mem = SemanticMemory::program(
+            &exits,
+            &DeviceConfig::ideal(),
+            &ConverterConfig::ideal(),
+            &mut rng,
+        );
+        assert_eq!(mem.banks.len(), 2);
+        let sv: Vec<f32> = exits[1].0[3 * 24..4 * 24].iter().map(|&v| v as f32).collect();
+        assert_eq!(mem.search(1, &sv, &mut rng).class, 3);
+        assert!(mem.take_counters().mvms > 0);
+    }
+
+    #[test]
+    fn stored_value_map_reflects_ternary_pattern() {
+        let (c, d) = (4, 8);
+        let centers = random_centers(c, d, 10);
+        let mut rng = Pcg64::new(11);
+        let bank = CamBank::program(
+            &centers,
+            c,
+            d,
+            &DeviceConfig::ideal(),
+            &ConverterConfig::ideal(),
+            &mut rng,
+        );
+        let map = bank.stored_value_map(); // (dim, classes)
+        for cc in 0..c {
+            for dd in 0..d {
+                let want = centers[cc * d + dd] as f32;
+                let got = map[dd * c + cc];
+                assert!((got - want).abs() < 1e-4);
+            }
+        }
+    }
+}

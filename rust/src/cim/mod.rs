@@ -1,0 +1,308 @@
+//! CIM engine: maps arbitrary ternary weight matrices onto crossbar tiles
+//! and exposes a (noisy) matmul — the analogue counterpart of the L1
+//! Pallas kernel.
+//!
+//! A `(K, N)` ternary matrix is split into `ceil(K/512) x ceil(N/256)`
+//! physical tiles; partial column currents are digitized per tile and
+//! accumulated digitally, exactly like the chip (and like the ADC model in
+//! `python/compile/kernels/ternary_matmul.py` — the two are cross-checked
+//! by integration tests).
+
+use crate::crossbar::{ConverterConfig, CrossbarTile, XBAR_LOGICAL_COLS, XBAR_ROWS};
+use crate::device::DeviceConfig;
+use crate::util::rng::Pcg64;
+
+/// Running usage counters for energy accounting.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CimCounters {
+    pub mvms: u64,
+    pub device_reads: u64,
+    pub dac_conversions: u64,
+    pub adc_conversions: u64,
+}
+
+impl CimCounters {
+    pub fn add(&mut self, o: &CimCounters) {
+        self.mvms += o.mvms;
+        self.device_reads += o.device_reads;
+        self.dac_conversions += o.dac_conversions;
+        self.adc_conversions += o.adc_conversions;
+    }
+}
+
+/// A ternary weight matrix programmed across crossbar tiles.
+pub struct CimMatrix {
+    pub k: usize,
+    pub n: usize,
+    /// Tile grid: `tiles[ki][ni]`.
+    tiles: Vec<Vec<CrossbarTile>>,
+    row_splits: Vec<usize>,
+    col_splits: Vec<usize>,
+    pub counters: std::cell::Cell<CimCounters>,
+}
+
+fn splits(total: usize, max: usize) -> Vec<usize> {
+    // e.g. total=700, max=512 -> [0, 512, 700]
+    let mut out = vec![0];
+    let mut at = 0;
+    while at < total {
+        at = (at + max).min(total);
+        out.push(at);
+    }
+    out
+}
+
+impl CimMatrix {
+    /// Program `weights` (row-major `(k, n)`, entries -1/0/1) onto tiles.
+    pub fn program(
+        weights: &[i8],
+        k: usize,
+        n: usize,
+        dev: &DeviceConfig,
+        conv: &ConverterConfig,
+        rng: &mut Pcg64,
+    ) -> Self {
+        let f: Vec<f32> = weights.iter().map(|&w| w as f32).collect();
+        Self::program_f32(&f, k, n, dev, conv, rng)
+    }
+
+    /// Program a full-precision matrix with entries normalized to [-1, 1]
+    /// (the Fig. 4h–i direct-mapping baseline; caller handles the scale).
+    pub fn program_f32(
+        weights: &[f32],
+        k: usize,
+        n: usize,
+        dev: &DeviceConfig,
+        conv: &ConverterConfig,
+        rng: &mut Pcg64,
+    ) -> Self {
+        assert_eq!(weights.len(), k * n);
+        let row_splits = splits(k, XBAR_ROWS);
+        let col_splits = splits(n, XBAR_LOGICAL_COLS);
+        let mut tiles = Vec::with_capacity(row_splits.len() - 1);
+        for ri in 0..row_splits.len() - 1 {
+            let (r0, r1) = (row_splits[ri], row_splits[ri + 1]);
+            let mut row_tiles = Vec::with_capacity(col_splits.len() - 1);
+            for ci in 0..col_splits.len() - 1 {
+                let (c0, c1) = (col_splits[ci], col_splits[ci + 1]);
+                let mut block = Vec::with_capacity((r1 - r0) * (c1 - c0));
+                for r in r0..r1 {
+                    block.extend_from_slice(&weights[r * n + c0..r * n + c1]);
+                }
+                row_tiles.push(CrossbarTile::program_analog(
+                    &block,
+                    r1 - r0,
+                    c1 - c0,
+                    dev.clone(),
+                    conv.clone(),
+                    rng,
+                ));
+            }
+            tiles.push(row_tiles);
+        }
+        CimMatrix {
+            k,
+            n,
+            tiles,
+            row_splits,
+            col_splits,
+            counters: Default::default(),
+        }
+    }
+
+    /// `y = x @ W` for one input vector (`x: (k,)`, `y: (n,)`), noisy.
+    pub fn mvm(&self, x: &[f32], y: &mut [f32], rng: &mut Pcg64) {
+        assert_eq!(x.len(), self.k);
+        assert_eq!(y.len(), self.n);
+        for v in y.iter_mut() {
+            *v = 0.0;
+        }
+        let mut counters = self.counters.get();
+        let mut part = vec![0f32; XBAR_LOGICAL_COLS];
+        for (ri, row_tiles) in self.tiles.iter().enumerate() {
+            let (r0, r1) = (self.row_splits[ri], self.row_splits[ri + 1]);
+            let xs = &x[r0..r1];
+            for (ci, tile) in row_tiles.iter().enumerate() {
+                let (c0, c1) = (self.col_splits[ci], self.col_splits[ci + 1]);
+                let p = &mut part[..c1 - c0];
+                tile.mvm(xs, p, rng);
+                for (acc, &v) in y[c0..c1].iter_mut().zip(p.iter()) {
+                    *acc += v;
+                }
+                counters.mvms += 1;
+                counters.device_reads += tile.device_reads() as u64;
+                counters.dac_conversions += (r1 - r0) as u64;
+                counters.adc_conversions += (c1 - c0) as u64;
+            }
+        }
+        self.counters.set(counters);
+    }
+
+    /// Batched matmul: `(m, k) @ (k, n) -> (m, n)` (noisy per row).
+    pub fn matmul(&self, x: &[f32], m: usize, rng: &mut Pcg64) -> Vec<f32> {
+        assert_eq!(x.len(), m * self.k);
+        let mut out = vec![0f32; m * self.n];
+        for i in 0..m {
+            let (xs, ys) = (
+                &x[i * self.k..(i + 1) * self.k],
+                &mut out[i * self.n..(i + 1) * self.n],
+            );
+            self.mvm(xs, ys, rng);
+        }
+        out
+    }
+
+    /// Noise-free matmul over programmed means (verification path).
+    pub fn matmul_mean(&self, x: &[f32], m: usize) -> Vec<f32> {
+        let mut out = vec![0f32; m * self.n];
+        let mut part = vec![0f32; XBAR_LOGICAL_COLS];
+        for i in 0..m {
+            let xrow = &x[i * self.k..(i + 1) * self.k];
+            for (ri, row_tiles) in self.tiles.iter().enumerate() {
+                let (r0, r1) = (self.row_splits[ri], self.row_splits[ri + 1]);
+                for (ci, tile) in row_tiles.iter().enumerate() {
+                    let (c0, c1) = (self.col_splits[ci], self.col_splits[ci + 1]);
+                    let p = &mut part[..c1 - c0];
+                    tile.mvm_mean(&xrow[r0..r1], p);
+                    for (acc, &v) in out[i * self.n + c0..i * self.n + c1]
+                        .iter_mut()
+                        .zip(p.iter())
+                    {
+                        *acc += v;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    pub fn take_counters(&self) -> CimCounters {
+        self.counters.replace(CimCounters::default())
+    }
+
+    pub fn tile_count(&self) -> usize {
+        self.tiles.iter().map(|r| r.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn random_ternary(k: usize, n: usize, seed: u64) -> Vec<i8> {
+        let mut rng = Pcg64::new(seed);
+        (0..k * n).map(|_| [-1i8, 0, 1][rng.below(3)]).collect()
+    }
+
+    fn exact(w: &[i8], k: usize, n: usize, x: &[f32], m: usize) -> Vec<f32> {
+        let mut y = vec![0f32; m * n];
+        for i in 0..m {
+            for kk in 0..k {
+                let xv = x[i * k + kk];
+                if xv == 0.0 {
+                    continue;
+                }
+                for j in 0..n {
+                    y[i * n + j] += xv * w[kk * n + j] as f32;
+                }
+            }
+        }
+        y
+    }
+
+    #[test]
+    fn ideal_multi_tile_matches_exact() {
+        // spans multiple tiles in both dimensions: k=700 > 512, n=300 > 256
+        let (k, n, m) = (700, 300, 3);
+        let w = random_ternary(k, n, 1);
+        let mut rng = Pcg64::new(2);
+        let cim = CimMatrix::program(
+            &w,
+            k,
+            n,
+            &DeviceConfig::ideal(),
+            &ConverterConfig::ideal(),
+            &mut rng,
+        );
+        assert_eq!(cim.tile_count(), 4);
+        let x: Vec<f32> = (0..m * k).map(|i| ((i % 17) as f32 - 8.0) / 8.0).collect();
+        let got = cim.matmul(&x, m, &mut rng);
+        let want = exact(&w, k, n, &x, m);
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn splits_cover_range() {
+        assert_eq!(splits(700, 512), vec![0, 512, 700]);
+        assert_eq!(splits(512, 512), vec![0, 512]);
+        assert_eq!(splits(10, 512), vec![0, 10]);
+    }
+
+    #[test]
+    fn counters_accumulate() {
+        let (k, n) = (100, 20);
+        let w = random_ternary(k, n, 3);
+        let mut rng = Pcg64::new(4);
+        let cim = CimMatrix::program(
+            &w,
+            k,
+            n,
+            &DeviceConfig::ideal(),
+            &ConverterConfig::ideal(),
+            &mut rng,
+        );
+        let x = vec![1.0f32; k];
+        let mut y = vec![0f32; n];
+        cim.mvm(&x, &mut y, &mut rng);
+        cim.mvm(&x, &mut y, &mut rng);
+        let c = cim.take_counters();
+        assert_eq!(c.mvms, 2);
+        assert_eq!(c.device_reads, 2 * (k * 2 * n) as u64);
+        assert_eq!(c.dac_conversions, 2 * k as u64);
+        assert_eq!(c.adc_conversions, 2 * n as u64);
+        assert_eq!(cim.take_counters().mvms, 0); // reset on take
+    }
+
+    #[test]
+    fn noisy_output_correlates_with_exact() {
+        let (k, n) = (256, 64);
+        let w = random_ternary(k, n, 5);
+        let mut rng = Pcg64::new(6);
+        let cim = CimMatrix::program(
+            &w,
+            k,
+            n,
+            &DeviceConfig::default(),
+            &ConverterConfig::default(),
+            &mut rng,
+        );
+        let x: Vec<f32> = (0..k).map(|i| ((i % 11) as f32) / 11.0).collect();
+        let mut y = vec![0f32; n];
+        cim.mvm(&x, &mut y, &mut rng);
+        let want = exact(&w, k, n, &x, 1);
+        let a: Vec<f64> = y.iter().map(|&v| v as f64).collect();
+        let b: Vec<f64> = want.iter().map(|&v| v as f64).collect();
+        assert!(crate::util::stats::pearson(&a, &b) > 0.9);
+    }
+
+    #[test]
+    fn mean_path_is_deterministic() {
+        let (k, n) = (64, 16);
+        let w = random_ternary(k, n, 7);
+        let mut rng = Pcg64::new(8);
+        let cim = CimMatrix::program(
+            &w,
+            k,
+            n,
+            &DeviceConfig::default(),
+            &ConverterConfig::ideal(),
+            &mut rng,
+        );
+        let x = vec![0.3f32; k];
+        let a = cim.matmul_mean(&x, 1);
+        let b = cim.matmul_mean(&x, 1);
+        assert_eq!(a, b);
+    }
+}

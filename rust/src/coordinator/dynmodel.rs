@@ -1,0 +1,631 @@
+//! The dynamic-model abstraction the coordinator schedules over.
+//!
+//! A `DynModel` is a backbone cut at its exit points: the engine owns the
+//! control flow *between* blocks (run block -> CAM lookup -> exit or
+//! continue), which is exactly the part of the paper that cannot live
+//! inside a static XLA graph.
+//!
+//! Four implementations:
+//! * [`NativeResNetModel`] / [`NativePointNetModel`] — pure-Rust forwards
+//!   over the (optionally noisy) crossbar substrate;
+//! * [`XlaResNetModel`] / [`XlaPointNetModel`] — the AOT HLO artifacts
+//!   executed through PJRT, with bucket-padded batching.
+
+use std::sync::Arc;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Result};
+
+use crate::model::ModelBundle;
+use crate::nn::pointnet::NativePointNet;
+use crate::nn::resnet::{Feature, NativeResNet};
+use crate::runtime::{Runtime, TensorIn};
+use crate::util::rng::Pcg64;
+
+pub trait DynModel {
+    type State;
+
+    fn n_blocks(&self) -> usize;
+    fn classes(&self) -> usize;
+
+    /// Build the initial state from `batch` flattened raw samples.
+    fn init(&self, input: &[f32], batch: usize) -> Result<Self::State>;
+
+    /// Run exit block `i`; returns search vectors `(batch x dim_i)`.
+    fn step(&self, i: usize, state: &mut Self::State) -> Result<Vec<f32>>;
+
+    /// Rows still in flight.
+    fn batch_of(&self, state: &Self::State) -> usize;
+
+    /// Keep only the given rows (early-exited rows leave the batch).
+    fn select(&self, state: &Self::State, keep: &[usize]) -> Self::State;
+
+    /// Run the final head on the surviving rows -> logits `(batch x classes)`.
+    fn finish(&self, state: &Self::State) -> Result<Vec<f32>>;
+}
+
+// ---------------------------------------------------------------------------
+// Native (crossbar) ResNet
+// ---------------------------------------------------------------------------
+
+pub struct NativeResNetModel {
+    pub net: NativeResNet,
+    pub classes: usize,
+    pub img: usize,
+    rng: Mutex<Pcg64>,
+}
+
+impl NativeResNetModel {
+    pub fn new(net: NativeResNet, classes: usize, img: usize, seed: u64) -> Self {
+        NativeResNetModel {
+            net,
+            classes,
+            img,
+            rng: Mutex::new(Pcg64::new(seed)),
+        }
+    }
+}
+
+/// State: stem has already run (init applies it).
+pub struct ResNetState {
+    pub feat: Feature,
+}
+
+impl DynModel for NativeResNetModel {
+    type State = ResNetState;
+
+    fn n_blocks(&self) -> usize {
+        self.net.n_blocks()
+    }
+
+    fn classes(&self) -> usize {
+        self.classes
+    }
+
+    fn init(&self, input: &[f32], batch: usize) -> Result<ResNetState> {
+        let x = crate::nn::resnet::image_feature(input, batch, self.img)?;
+        let rng = &mut *self.rng.lock().unwrap();
+        Ok(ResNetState {
+            feat: self.net.stem(&x, rng),
+        })
+    }
+
+    fn step(&self, i: usize, state: &mut ResNetState) -> Result<Vec<f32>> {
+        let rng = &mut *self.rng.lock().unwrap();
+        let (f, sv) = self.net.block(i, &state.feat, rng);
+        state.feat = f;
+        Ok(sv)
+    }
+
+    fn batch_of(&self, state: &ResNetState) -> usize {
+        state.feat.n
+    }
+
+    fn select(&self, state: &ResNetState, keep: &[usize]) -> ResNetState {
+        let f = &state.feat;
+        let row = f.h * f.w * f.c;
+        let mut data = Vec::with_capacity(keep.len() * row);
+        for &r in keep {
+            data.extend_from_slice(&f.data[r * row..(r + 1) * row]);
+        }
+        ResNetState {
+            feat: Feature {
+                data,
+                n: keep.len(),
+                h: f.h,
+                w: f.w,
+                c: f.c,
+            },
+        }
+    }
+
+    fn finish(&self, state: &ResNetState) -> Result<Vec<f32>> {
+        let rng = &mut *self.rng.lock().unwrap();
+        Ok(self.net.head(&state.feat, rng))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// XLA (AOT artifact) ResNet
+// ---------------------------------------------------------------------------
+
+pub struct XlaResNetModel {
+    stem: Vec<(usize, Arc<crate::runtime::Executable>)>,
+    blocks: Vec<Vec<(usize, Arc<crate::runtime::Executable>)>>,
+    head: Vec<(usize, Arc<crate::runtime::Executable>)>,
+    /// (h, w, c) input geometry per block, plus head input geometry.
+    block_shapes: Vec<(usize, usize, usize)>,
+    head_shape: (usize, usize, usize),
+    pub classes: usize,
+    pub img: usize,
+    exit_dims: Vec<usize>,
+}
+
+/// Smallest bucket >= batch (or the largest available).
+pub(crate) fn pick_bucket<'a>(
+    execs: &'a [(usize, Arc<crate::runtime::Executable>)],
+    batch: usize,
+) -> &'a (usize, Arc<crate::runtime::Executable>) {
+    execs
+        .iter()
+        .filter(|(b, _)| *b >= batch)
+        .min_by_key(|(b, _)| *b)
+        .unwrap_or_else(|| execs.iter().max_by_key(|(b, _)| *b).unwrap())
+}
+
+impl XlaResNetModel {
+    pub fn load(rt: &Runtime, bundle: &ModelBundle) -> Result<Self> {
+        let buckets = bundle.buckets.clone();
+        let mut stem = Vec::new();
+        let mut head = Vec::new();
+        for &b in &buckets {
+            stem.push((b, rt.load(&bundle.hlo_path(&format!("stem_b{b}"))?)?));
+            head.push((b, rt.load(&bundle.hlo_path(&format!("head_b{b}"))?)?));
+        }
+        let mut blocks = Vec::new();
+        for i in 0..bundle.blocks {
+            let mut per = Vec::new();
+            for &b in &buckets {
+                per.push((
+                    b,
+                    rt.load(&bundle.hlo_path(&format!("block_{i:02}_b{b}"))?)?,
+                ));
+            }
+            blocks.push(per);
+        }
+        let shapes_json = bundle
+            .meta
+            .get("block_input_shapes")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow!("resnet: missing block_input_shapes"))?;
+        let block_shapes: Vec<(usize, usize, usize)> = shapes_json
+            .iter()
+            .filter_map(|s| {
+                let v = s.usize_vec()?;
+                Some((v[0], v[1], v[2]))
+            })
+            .collect();
+        let hs = bundle
+            .meta
+            .get("head_input_shape")
+            .and_then(|v| v.usize_vec())
+            .ok_or_else(|| anyhow!("resnet: missing head_input_shape"))?;
+        Ok(XlaResNetModel {
+            stem,
+            blocks,
+            head,
+            block_shapes,
+            head_shape: (hs[0], hs[1], hs[2]),
+            classes: bundle.classes,
+            img: 28,
+            exit_dims: bundle.exit_dims.clone(),
+        })
+    }
+
+    /// Run an executable over a batch, padding up to the bucket and slicing
+    /// chunks if the batch exceeds the largest bucket.
+    fn run_padded(
+        execs: &[(usize, Arc<crate::runtime::Executable>)],
+        x: &[f32],
+        batch: usize,
+        row: usize,
+        shape_tail: &[usize],
+        n_outputs: usize,
+        out_rows: &[usize], // per-output row length
+    ) -> Result<Vec<Vec<f32>>> {
+        let mut outs: Vec<Vec<f32>> = vec![Vec::new(); n_outputs];
+        let mut done = 0usize;
+        while done < batch {
+            let remaining = batch - done;
+            let (bucket, exe) = pick_bucket(execs, remaining);
+            let take = remaining.min(*bucket);
+            let mut padded = vec![0f32; bucket * row];
+            padded[..take * row]
+                .copy_from_slice(&x[done * row..(done + take) * row]);
+            let mut shape = vec![*bucket];
+            shape.extend_from_slice(shape_tail);
+            let res = crate::runtime::run_checked(
+                exe,
+                &[TensorIn {
+                    data: &padded,
+                    shape: &shape,
+                }],
+                n_outputs,
+            )?;
+            for (o, (r, or)) in res.into_iter().zip(out_rows.iter().zip(outs.iter_mut()))
+            {
+                or.extend_from_slice(&o[..take * r]);
+            }
+            done += take;
+        }
+        Ok(outs)
+    }
+}
+
+impl DynModel for XlaResNetModel {
+    type State = ResNetState;
+
+    fn n_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    fn classes(&self) -> usize {
+        self.classes
+    }
+
+    fn init(&self, input: &[f32], batch: usize) -> Result<ResNetState> {
+        let row = self.img * self.img;
+        let (h, w, c) = self.block_shapes[0];
+        let out = Self::run_padded(
+            &self.stem,
+            input,
+            batch,
+            row,
+            &[self.img, self.img, 1],
+            1,
+            &[h * w * c],
+        )?;
+        Ok(ResNetState {
+            feat: Feature {
+                data: out.into_iter().next().unwrap(),
+                n: batch,
+                h,
+                w,
+                c,
+            },
+        })
+    }
+
+    fn step(&self, i: usize, state: &mut ResNetState) -> Result<Vec<f32>> {
+        let f = &state.feat;
+        let (h, w, c) = self.block_shapes[i];
+        debug_assert_eq!((f.h, f.w, f.c), (h, w, c), "block {i} input geometry");
+        // output geometry: next block's input, or head input for the last
+        let (oh, ow, oc) = if i + 1 < self.block_shapes.len() {
+            self.block_shapes[i + 1]
+        } else {
+            self.head_shape
+        };
+        let dim = self.exit_dims[i];
+        let out = Self::run_padded(
+            &self.blocks[i],
+            &f.data,
+            f.n,
+            h * w * c,
+            &[h, w, c],
+            2,
+            &[oh * ow * oc, dim],
+        )?;
+        let mut it = out.into_iter();
+        let feat = it.next().unwrap();
+        let svs = it.next().unwrap();
+        state.feat = Feature {
+            data: feat,
+            n: f.n,
+            h: oh,
+            w: ow,
+            c: oc,
+        };
+        Ok(svs)
+    }
+
+    fn batch_of(&self, state: &ResNetState) -> usize {
+        state.feat.n
+    }
+
+    fn select(&self, state: &ResNetState, keep: &[usize]) -> ResNetState {
+        let f = &state.feat;
+        let row = f.h * f.w * f.c;
+        let mut data = Vec::with_capacity(keep.len() * row);
+        for &r in keep {
+            data.extend_from_slice(&f.data[r * row..(r + 1) * row]);
+        }
+        ResNetState {
+            feat: Feature {
+                data,
+                n: keep.len(),
+                h: f.h,
+                w: f.w,
+                c: f.c,
+            },
+        }
+    }
+
+    fn finish(&self, state: &ResNetState) -> Result<Vec<f32>> {
+        let f = &state.feat;
+        let (h, w, c) = self.head_shape;
+        let out = Self::run_padded(
+            &self.head,
+            &f.data,
+            f.n,
+            h * w * c,
+            &[h, w, c],
+            1,
+            &[self.classes],
+        )?;
+        Ok(out.into_iter().next().unwrap())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Native (crossbar) PointNet++
+// ---------------------------------------------------------------------------
+
+pub struct NativePointNetModel {
+    pub net: NativePointNet,
+    pub classes: usize,
+    rng: Mutex<Pcg64>,
+}
+
+impl NativePointNetModel {
+    pub fn new(net: NativePointNet, classes: usize, seed: u64) -> Self {
+        NativePointNetModel {
+            net,
+            classes,
+            rng: Mutex::new(Pcg64::new(seed)),
+        }
+    }
+}
+
+/// Per-sample point-cloud state (clouds shrink independently through SA
+/// layers, so batch state is a vec of samples).
+#[derive(Clone)]
+pub struct PnSample {
+    pub xyz: Vec<f32>,
+    pub n: usize,
+    pub feats: Vec<f32>,
+    pub c: usize,
+}
+
+pub struct PointNetState {
+    pub samples: Vec<PnSample>,
+}
+
+impl DynModel for NativePointNetModel {
+    type State = PointNetState;
+
+    fn n_blocks(&self) -> usize {
+        self.net.n_layers()
+    }
+
+    fn classes(&self) -> usize {
+        self.classes
+    }
+
+    fn init(&self, input: &[f32], batch: usize) -> Result<PointNetState> {
+        let n = self.net.n_points;
+        if input.len() != batch * n * 3 {
+            return Err(anyhow!("pointnet init: bad input length"));
+        }
+        Ok(PointNetState {
+            samples: (0..batch)
+                .map(|b| PnSample {
+                    xyz: input[b * n * 3..(b + 1) * n * 3].to_vec(),
+                    n,
+                    feats: Vec::new(),
+                    c: 0,
+                })
+                .collect(),
+        })
+    }
+
+    fn step(&self, i: usize, state: &mut PointNetState) -> Result<Vec<f32>> {
+        let rng = &mut *self.rng.lock().unwrap();
+        let mut svs = Vec::new();
+        for s in state.samples.iter_mut() {
+            let (nx, nf, sv) =
+                self.net.sa_layer(i, &s.xyz, s.n, &s.feats, s.c, rng);
+            s.n = nx.len() / 3;
+            s.c = if s.n > 0 { nf.len() / s.n } else { 0 };
+            s.xyz = nx;
+            s.feats = nf;
+            svs.extend(sv);
+        }
+        Ok(svs)
+    }
+
+    fn batch_of(&self, state: &PointNetState) -> usize {
+        state.samples.len()
+    }
+
+    fn select(&self, state: &PointNetState, keep: &[usize]) -> PointNetState {
+        PointNetState {
+            samples: keep.iter().map(|&r| state.samples[r].clone()).collect(),
+        }
+    }
+
+    fn finish(&self, state: &PointNetState) -> Result<Vec<f32>> {
+        let rng = &mut *self.rng.lock().unwrap();
+        let mut logits = Vec::new();
+        for s in &state.samples {
+            logits.extend(self.net.head(&s.feats, s.n, s.c, rng));
+        }
+        Ok(logits)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// XLA (AOT artifact) PointNet++
+// ---------------------------------------------------------------------------
+
+pub struct XlaPointNetModel {
+    sa: Vec<Vec<(usize, Arc<crate::runtime::Executable>)>>,
+    head: Vec<(usize, Arc<crate::runtime::Executable>)>,
+    npoint: Vec<usize>,
+    channels: Vec<usize>,
+    pub n_points: usize,
+    pub classes: usize,
+}
+
+/// Batched XLA state: all clouds shrink in lockstep (fixed shapes).
+pub struct XlaPnState {
+    pub xyz: Vec<f32>,
+    pub feats: Vec<f32>,
+    pub batch: usize,
+    pub n: usize,
+    pub c: usize,
+}
+
+impl XlaPointNetModel {
+    pub fn load(rt: &Runtime, bundle: &ModelBundle) -> Result<Self> {
+        let buckets = bundle.buckets.clone();
+        let mut sa = Vec::new();
+        for i in 0..bundle.blocks {
+            let mut per = Vec::new();
+            for &b in &buckets {
+                per.push((b, rt.load(&bundle.hlo_path(&format!("sa_{i}_b{b}"))?)?));
+            }
+            sa.push(per);
+        }
+        let mut head = Vec::new();
+        for &b in &buckets {
+            head.push((b, rt.load(&bundle.hlo_path(&format!("head_b{b}"))?)?));
+        }
+        Ok(XlaPointNetModel {
+            sa,
+            head,
+            npoint: bundle.meta_usizes("npoint")?,
+            channels: bundle.meta_usizes("channels")?,
+            n_points: bundle
+                .meta
+                .get("n_points")
+                .and_then(|v| v.as_usize())
+                .unwrap_or(256),
+            classes: bundle.classes,
+        })
+    }
+}
+
+impl DynModel for XlaPointNetModel {
+    type State = XlaPnState;
+
+    fn n_blocks(&self) -> usize {
+        self.sa.len()
+    }
+
+    fn classes(&self) -> usize {
+        self.classes
+    }
+
+    fn init(&self, input: &[f32], batch: usize) -> Result<XlaPnState> {
+        if input.len() != batch * self.n_points * 3 {
+            return Err(anyhow!("pointnet init: bad input length"));
+        }
+        Ok(XlaPnState {
+            xyz: input.to_vec(),
+            feats: Vec::new(),
+            batch,
+            n: self.n_points,
+            c: 0,
+        })
+    }
+
+    fn step(&self, i: usize, state: &mut XlaPnState) -> Result<Vec<f32>> {
+        let np = self.npoint[i];
+        let cout = self.channels[i];
+        let dim = cout;
+        let execs = &self.sa[i];
+        let mut new_xyz = Vec::new();
+        let mut new_feats = Vec::new();
+        let mut svs = Vec::new();
+        let mut done = 0usize;
+        while done < state.batch {
+            let remaining = state.batch - done;
+            let (bucket, exe) = pick_bucket(execs, remaining);
+            let take = remaining.min(*bucket);
+            let xyz_row = state.n * 3;
+            let mut xyz_p = vec![0f32; bucket * xyz_row];
+            xyz_p[..take * xyz_row]
+                .copy_from_slice(&state.xyz[done * xyz_row..(done + take) * xyz_row]);
+            let xyz_shape = vec![*bucket, state.n, 3];
+            let res = if i == 0 {
+                crate::runtime::run_checked(
+                    exe,
+                    &[TensorIn {
+                        data: &xyz_p,
+                        shape: &xyz_shape,
+                    }],
+                    3,
+                )?
+            } else {
+                let f_row = state.n * state.c;
+                let mut f_p = vec![0f32; bucket * f_row];
+                f_p[..take * f_row].copy_from_slice(
+                    &state.feats[done * f_row..(done + take) * f_row],
+                );
+                crate::runtime::run_checked(
+                    exe,
+                    &[
+                        TensorIn {
+                            data: &xyz_p,
+                            shape: &xyz_shape,
+                        },
+                        TensorIn {
+                            data: &f_p,
+                            shape: &[*bucket, state.n, state.c],
+                        },
+                    ],
+                    3,
+                )?
+            };
+            new_xyz.extend_from_slice(&res[0][..take * np * 3]);
+            new_feats.extend_from_slice(&res[1][..take * np * cout]);
+            svs.extend_from_slice(&res[2][..take * dim]);
+            done += take;
+        }
+        state.xyz = new_xyz;
+        state.feats = new_feats;
+        state.n = np;
+        state.c = cout;
+        Ok(svs)
+    }
+
+    fn batch_of(&self, state: &XlaPnState) -> usize {
+        state.batch
+    }
+
+    fn select(&self, state: &XlaPnState, keep: &[usize]) -> XlaPnState {
+        let xr = state.n * 3;
+        let fr = state.n * state.c;
+        let mut xyz = Vec::with_capacity(keep.len() * xr);
+        let mut feats = Vec::with_capacity(keep.len() * fr);
+        for &r in keep {
+            xyz.extend_from_slice(&state.xyz[r * xr..(r + 1) * xr]);
+            if fr > 0 {
+                feats.extend_from_slice(&state.feats[r * fr..(r + 1) * fr]);
+            }
+        }
+        XlaPnState {
+            xyz,
+            feats,
+            batch: keep.len(),
+            n: state.n,
+            c: state.c,
+        }
+    }
+
+    fn finish(&self, state: &XlaPnState) -> Result<Vec<f32>> {
+        let row = state.n * state.c;
+        let mut logits = Vec::new();
+        let mut done = 0usize;
+        while done < state.batch {
+            let remaining = state.batch - done;
+            let (bucket, exe) = pick_bucket(&self.head, remaining);
+            let take = remaining.min(*bucket);
+            let mut p = vec![0f32; bucket * row];
+            p[..take * row]
+                .copy_from_slice(&state.feats[done * row..(done + take) * row]);
+            let res = crate::runtime::run_checked(
+                exe,
+                &[TensorIn {
+                    data: &p,
+                    shape: &[*bucket, state.n, state.c],
+                }],
+                1,
+            )?;
+            logits.extend_from_slice(&res[0][..take * self.classes]);
+            done += take;
+        }
+        Ok(logits)
+    }
+}

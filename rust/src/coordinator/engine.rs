@@ -1,0 +1,298 @@
+//! The early-exit inference engine: the paper's dynamic network, with the
+//! control flow (block -> GAP search vector -> CAM match -> exit test)
+//! living in Rust between the per-block compute artifacts.
+
+use anyhow::Result;
+
+use super::dynmodel::DynModel;
+use super::memory::ExitMemory;
+use super::policy::ExitPolicy;
+use crate::opt::trace::ExitTrace;
+use crate::util::stats::argmax;
+
+/// One sample's inference outcome.
+#[derive(Clone, Copy, Debug)]
+pub struct Outcome {
+    pub class: usize,
+    /// Block index the sample exited after (n_blocks-1 if it reached the head).
+    pub exit: usize,
+    pub exited_early: bool,
+    /// CAM similarity at the exit (or best seen, for head exits).
+    pub similarity: f32,
+}
+
+pub struct Engine<M: DynModel> {
+    pub model: M,
+    pub memory: ExitMemory,
+    pub thresholds: Vec<f32>,
+    pub policy: ExitPolicy,
+}
+
+impl<M: DynModel> Engine<M> {
+    pub fn new(model: M, memory: ExitMemory, thresholds: Vec<f32>) -> Self {
+        assert_eq!(thresholds.len(), model.n_blocks());
+        assert_eq!(memory.n_exits(), model.n_blocks());
+        Engine {
+            model,
+            memory,
+            thresholds,
+            policy: ExitPolicy::default(),
+        }
+    }
+
+    pub fn with_policy(mut self, policy: ExitPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Infer a batch with per-sample early exit.  `input` is `batch`
+    /// flattened samples.
+    pub fn infer_batch(&self, input: &[f32], batch: usize) -> Result<Vec<Outcome>> {
+        let blocks = self.model.n_blocks();
+        let mut state = self.model.init(input, batch)?;
+        // alive[i] = original position of row i
+        let mut alive: Vec<usize> = (0..batch).collect();
+        let mut outcomes: Vec<Option<Outcome>> = vec![None; batch];
+        for e in 0..blocks {
+            if alive.is_empty() {
+                break;
+            }
+            let svs = self.model.step(e, &mut state)?;
+            let dim = svs.len() / alive.len();
+            let mut keep: Vec<usize> = Vec::with_capacity(alive.len());
+            for (row, &orig) in alive.iter().enumerate() {
+                let sv = &svs[row * dim..(row + 1) * dim];
+                let m = self.memory.search(e, sv);
+                if self.policy.should_exit(&m, self.thresholds[e]) {
+                    outcomes[orig] = Some(Outcome {
+                        class: m.class,
+                        exit: e,
+                        exited_early: true,
+                        similarity: m.similarity,
+                    });
+                } else {
+                    keep.push(row);
+                }
+            }
+            if keep.len() != alive.len() {
+                state = self.model.select(&state, &keep);
+                alive = keep.into_iter().map(|r| alive[r]).collect();
+            }
+        }
+        if !alive.is_empty() {
+            let logits = self.model.finish(&state)?;
+            let classes = self.model.classes();
+            for (row, &orig) in alive.iter().enumerate() {
+                let lrow = &logits[row * classes..(row + 1) * classes];
+                outcomes[orig] = Some(Outcome {
+                    class: argmax(lrow).unwrap_or(0),
+                    exit: blocks - 1,
+                    exited_early: false,
+                    similarity: f32::NAN,
+                });
+            }
+        }
+        Ok(outcomes.into_iter().map(|o| o.expect("all resolved")).collect())
+    }
+
+    /// Run the full backbone recording every exit's (sim, pred) — the input
+    /// to threshold optimization (TPE / grid) and the ablation figures.
+    pub fn record_trace(
+        &self,
+        xs: &[f32],
+        sample_len: usize,
+        labels: &[i32],
+        batch: usize,
+    ) -> Result<ExitTrace> {
+        let blocks = self.model.n_blocks();
+        let n = labels.len();
+        let mut trace = ExitTrace::new(blocks);
+        let mut at = 0usize;
+        while at < n {
+            let take = batch.min(n - at);
+            let input = &xs[at * sample_len..(at + take) * sample_len];
+            let mut state = self.model.init(input, take)?;
+            // (take x blocks) sims/preds
+            let mut sims = vec![0f32; take * blocks];
+            let mut preds = vec![0u16; take * blocks];
+            for e in 0..blocks {
+                let svs = self.model.step(e, &mut state)?;
+                let dim = svs.len() / take;
+                for row in 0..take {
+                    let m = self.memory.search(e, &svs[row * dim..(row + 1) * dim]);
+                    sims[row * blocks + e] = m.similarity;
+                    preds[row * blocks + e] = m.class as u16;
+                }
+            }
+            let logits = self.model.finish(&state)?;
+            let classes = self.model.classes();
+            for row in 0..take {
+                let lrow = &logits[row * classes..(row + 1) * classes];
+                trace.push(
+                    &sims[row * blocks..(row + 1) * blocks],
+                    &preds[row * blocks..(row + 1) * blocks],
+                    argmax(lrow).unwrap_or(0) as u16,
+                    labels[at + row] as u16,
+                );
+            }
+            at += take;
+        }
+        Ok(trace)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::dynmodel::DynModel;
+    use anyhow::Result;
+
+    /// Toy model: "features" are just the raw 4-float sample; every block
+    /// emits the sample itself as the search vector; head classifies by
+    /// argmax of the first `classes` entries.
+    struct Toy {
+        blocks: usize,
+        classes: usize,
+    }
+
+    struct ToyState {
+        rows: Vec<Vec<f32>>,
+    }
+
+    impl DynModel for Toy {
+        type State = ToyState;
+
+        fn n_blocks(&self) -> usize {
+            self.blocks
+        }
+
+        fn classes(&self) -> usize {
+            self.classes
+        }
+
+        fn init(&self, input: &[f32], batch: usize) -> Result<ToyState> {
+            let w = input.len() / batch;
+            Ok(ToyState {
+                rows: (0..batch)
+                    .map(|i| input[i * w..(i + 1) * w].to_vec())
+                    .collect(),
+            })
+        }
+
+        fn step(&self, _i: usize, state: &mut ToyState) -> Result<Vec<f32>> {
+            Ok(state.rows.concat())
+        }
+
+        fn batch_of(&self, state: &ToyState) -> usize {
+            state.rows.len()
+        }
+
+        fn select(&self, state: &ToyState, keep: &[usize]) -> ToyState {
+            ToyState {
+                rows: keep.iter().map(|&r| state.rows[r].clone()).collect(),
+            }
+        }
+
+        fn finish(&self, state: &ToyState) -> Result<Vec<f32>> {
+            Ok(state
+                .rows
+                .iter()
+                .flat_map(|r| r[..self.classes].to_vec())
+                .collect())
+        }
+    }
+
+    fn engine(thresholds: Vec<f32>) -> Engine<Toy> {
+        // 2 classes, centers = unit axes in 4-D (only first 2 dims used)
+        let bank = (vec![1.0f32, 0.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0], 2, 4);
+        let banks = vec![bank.clone(), bank.clone(), bank];
+        Engine::new(
+            Toy {
+                blocks: 3,
+                classes: 2,
+            },
+            ExitMemory::exact(banks),
+            thresholds,
+        )
+    }
+
+    #[test]
+    fn confident_samples_exit_early() {
+        let e = engine(vec![0.95, 0.95, 0.95]);
+        // sample 0: pure class-0 direction (sim 1.0); sample 1: ambiguous
+        let input = vec![1.0, 0.0, 0.0, 0.0, 0.6, 0.55, 0.4, 0.3];
+        let out = e.infer_batch(&input, 2).unwrap();
+        assert!(out[0].exited_early);
+        assert_eq!(out[0].exit, 0);
+        assert_eq!(out[0].class, 0);
+        assert!(!out[1].exited_early);
+        assert_eq!(out[1].exit, 2);
+        assert_eq!(out[1].class, 0); // head argmax of [0.6, 0.55]
+    }
+
+    #[test]
+    fn order_preserved_under_mixed_exits() {
+        let e = engine(vec![0.99, 0.99, 0.99]);
+        // alternate confident class-1 / ambiguous samples
+        let mut input = Vec::new();
+        for i in 0..6 {
+            if i % 2 == 0 {
+                input.extend([0.0, 1.0, 0.0, 0.0]); // exits early as class 1
+            } else {
+                input.extend([0.5, 0.4, 0.5, 0.5]); // runs to head, class 0
+            }
+        }
+        let out = e.infer_batch(&input, 6).unwrap();
+        for (i, o) in out.iter().enumerate() {
+            if i % 2 == 0 {
+                assert!(o.exited_early, "sample {i}");
+                assert_eq!(o.class, 1);
+            } else {
+                assert!(!o.exited_early, "sample {i}");
+                assert_eq!(o.class, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn infinite_threshold_never_exits() {
+        let e = engine(vec![2.0, 2.0, 2.0]);
+        let input = vec![1.0, 0.0, 0.0, 0.0];
+        let out = e.infer_batch(&input, 1).unwrap();
+        assert!(!out[0].exited_early);
+        assert_eq!(out[0].exit, 2);
+    }
+
+    #[test]
+    fn trace_records_every_exit() {
+        let e = engine(vec![0.9, 0.9, 0.9]);
+        let xs = vec![1.0, 0.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0];
+        let t = e.record_trace(&xs, 4, &[0, 1], 2).unwrap();
+        assert_eq!(t.n_samples(), 2);
+        assert_eq!(t.n_exits, 3);
+        // both samples are perfectly classifiable at every exit
+        assert_eq!(t.per_exit_accuracy(), vec![1.0, 1.0, 1.0]);
+        assert_eq!(t.full_depth_accuracy(), 1.0);
+        // trace evaluation agrees with live inference
+        let ev = t.evaluate(&[0.9, 0.9, 0.9]);
+        assert_eq!(ev.exits, vec![0, 0]);
+        assert!((ev.accuracy - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn batch_consistency_single_vs_batched() {
+        let e = engine(vec![0.95, 0.9, 0.85]);
+        let samples: Vec<Vec<f32>> = vec![
+            vec![1.0, 0.0, 0.0, 0.0],
+            vec![0.3, 0.8, 0.1, 0.0],
+            vec![0.5, 0.5, 0.5, 0.5],
+        ];
+        let flat: Vec<f32> = samples.concat();
+        let batched = e.infer_batch(&flat, 3).unwrap();
+        for (i, s) in samples.iter().enumerate() {
+            let single = e.infer_batch(s, 1).unwrap();
+            assert_eq!(single[0].class, batched[i].class, "sample {i}");
+            assert_eq!(single[0].exit, batched[i].exit, "sample {i}");
+        }
+    }
+}

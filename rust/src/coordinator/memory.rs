@@ -1,0 +1,215 @@
+//! The engine's semantic memory handle: exact digital cosine search (the
+//! software ablation rows) or the analogue CAM simulation (Mem rows).
+
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Result};
+
+use crate::cam::{Match, SemanticMemory};
+use crate::crossbar::ConverterConfig;
+use crate::device::DeviceConfig;
+use crate::model::ModelBundle;
+use crate::nn::weights::NoiseSpec;
+use crate::util::rng::Pcg64;
+
+/// Per-exit feature standardization (digital pre-processing on the ZYNQ
+/// side): raw GAP vectors are z-scored with training-set statistics before
+/// the CAM compare — without it, nearest-center cosine on the non-negative
+/// post-ReLU GAP space barely discriminates.
+pub struct ExitStats {
+    pub mu: Vec<f32>,
+    pub sd: Vec<f32>,
+}
+
+impl ExitStats {
+    pub fn apply(&self, sv: &[f32]) -> Vec<f32> {
+        sv.iter()
+            .zip(self.mu.iter().zip(&self.sd))
+            .map(|(&v, (&m, &s))| (v - m) / s)
+            .collect()
+    }
+
+    pub fn identity(dim: usize) -> Self {
+        ExitStats {
+            mu: vec![0.0; dim],
+            sd: vec![1.0; dim],
+        }
+    }
+}
+
+/// Per-exit center sets searchable by the engine.
+pub enum ExitMemory {
+    /// Exact cosine over f32 centers (FP or dequantized ternary).
+    Exact {
+        /// (centers row-major, classes, dim) per exit
+        banks: Vec<(Vec<f32>, usize, usize)>,
+        stats: Vec<ExitStats>,
+    },
+    /// Crossbar CAM simulation.
+    Analog {
+        mem: SemanticMemory,
+        stats: Vec<ExitStats>,
+        rng: Mutex<Pcg64>,
+    },
+}
+
+/// Which center tree to search.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CenterSource {
+    TernaryQ,
+    FullPrecision,
+}
+
+impl ExitMemory {
+    pub fn build(
+        bundle: &ModelBundle,
+        source: CenterSource,
+        spec: &NoiseSpec,
+        seed: u64,
+    ) -> Result<Self> {
+        let stats: Vec<ExitStats> = (0..bundle.blocks)
+            .map(|e| bundle.exit_stats(e, source == CenterSource::FullPrecision))
+            .collect::<Result<_>>()?;
+        match spec {
+            NoiseSpec::Digital => {
+                let mut banks = Vec::with_capacity(bundle.blocks);
+                for e in 0..bundle.blocks {
+                    banks.push(match source {
+                        CenterSource::TernaryQ => {
+                            let (c, classes, dim) = bundle.centers_q(e)?;
+                            (c.iter().map(|&v| v as f32).collect(), classes, dim)
+                        }
+                        CenterSource::FullPrecision => bundle.centers_fp(e)?,
+                    });
+                }
+                Ok(ExitMemory::Exact { banks, stats })
+            }
+            NoiseSpec::Analog { dev, conv } => {
+                if source != CenterSource::TernaryQ {
+                    return Err(anyhow!(
+                        "analogue CAM stores ternary centers; use CenterSource::TernaryQ \
+                         (FP-mapped CAM is exercised via cam::CamBank directly in fig 4g)"
+                    ));
+                }
+                let centers = bundle.all_centers_q()?;
+                let mut rng = Pcg64::new(seed);
+                let mem = SemanticMemory::program(&centers, dev, conv, &mut rng);
+                Ok(ExitMemory::Analog {
+                    mem,
+                    stats,
+                    rng: Mutex::new(Pcg64::new(seed ^ 0x5eed)),
+                })
+            }
+        }
+    }
+
+    /// Build an exact memory from explicit banks (tests, custom centers).
+    /// No standardization (identity stats).
+    pub fn exact(banks: Vec<(Vec<f32>, usize, usize)>) -> Self {
+        let stats = banks
+            .iter()
+            .map(|(_, _, dim)| ExitStats::identity(*dim))
+            .collect();
+        ExitMemory::Exact { banks, stats }
+    }
+
+    pub fn n_exits(&self) -> usize {
+        match self {
+            ExitMemory::Exact { banks, .. } => banks.len(),
+            ExitMemory::Analog { mem, .. } => mem.banks.len(),
+        }
+    }
+
+    /// Top-1 associative search at one exit (z-scores the raw GAP vector
+    /// with the training statistics first).
+    pub fn search(&self, exit: usize, sv_raw: &[f32]) -> Match {
+        match self {
+            ExitMemory::Exact { banks, stats } => {
+                let sv = stats[exit].apply(sv_raw);
+                let sv = &sv[..];
+                let (centers, classes, dim) = &banks[exit];
+                debug_assert_eq!(sv.len(), *dim);
+                let svn: f32 = sv.iter().map(|v| v * v).sum::<f32>().sqrt();
+                let mut best = Match {
+                    class: 0,
+                    similarity: f32::NEG_INFINITY,
+                    margin: 0.0,
+                };
+                let mut second = f32::NEG_INFINITY;
+                for c in 0..*classes {
+                    let row = &centers[c * dim..(c + 1) * dim];
+                    let dot: f32 = row.iter().zip(sv).map(|(a, b)| a * b).sum();
+                    let cn: f32 = row.iter().map(|v| v * v).sum::<f32>().sqrt();
+                    let sim = if svn > 1e-9 && cn > 1e-9 {
+                        dot / (svn * cn)
+                    } else {
+                        0.0
+                    };
+                    if sim > best.similarity {
+                        second = best.similarity;
+                        best = Match {
+                            class: c,
+                            similarity: sim,
+                            margin: 0.0,
+                        };
+                    } else if sim > second {
+                        second = sim;
+                    }
+                }
+                best.margin = if second.is_finite() {
+                    best.similarity - second
+                } else {
+                    0.0
+                };
+                best
+            }
+            ExitMemory::Analog { mem, stats, rng } => {
+                let sv = stats[exit].apply(sv_raw);
+                let rng = &mut *rng.lock().unwrap();
+                mem.search(exit, &sv, rng)
+            }
+        }
+    }
+
+    /// Analogue usage counters since last call (zeros for exact memory).
+    pub fn take_counters(&self) -> crate::cim::CimCounters {
+        match self {
+            ExitMemory::Exact { .. } => Default::default(),
+            ExitMemory::Analog { mem, .. } => mem.take_counters(),
+        }
+    }
+
+    pub fn make_spec(dev: DeviceConfig, conv: ConverterConfig) -> NoiseSpec {
+        NoiseSpec::Analog { dev, conv }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_search_finds_matching_center() {
+        let banks = vec![(
+            vec![
+                1.0f32, 0.0, 0.0, 0.0, // class 0
+                0.0, 1.0, 0.0, 0.0, // class 1
+                0.0, 0.0, 1.0, 1.0, // class 2
+            ],
+            3,
+            4,
+        )];
+        let m = ExitMemory::exact(banks);
+        let hit = m.search(0, &[0.1, 0.9, 0.05, 0.0]);
+        assert_eq!(hit.class, 1);
+        assert!(hit.similarity > 0.9);
+        assert!(hit.margin > 0.0);
+    }
+
+    #[test]
+    fn exact_zero_vector_is_safe() {
+        let m = ExitMemory::exact(vec![(vec![1.0, 0.0, 0.0, 1.0], 2, 2)]);
+        let hit = m.search(0, &[0.0, 0.0]);
+        assert!(hit.similarity.is_finite());
+    }
+}

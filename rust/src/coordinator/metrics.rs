@@ -1,0 +1,131 @@
+//! Serving metrics: latency percentiles, throughput, exit distribution,
+//! batch-size statistics.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::{quantile, Accumulator};
+
+#[derive(Default)]
+pub struct Metrics {
+    pub latencies_us: Vec<f64>,
+    pub batch_sizes: Accumulator,
+    pub exit_hist: Vec<u64>,
+    pub requests: u64,
+    pub early_exits: u64,
+    started: Option<Instant>,
+    pub finished_at: Option<Instant>,
+}
+
+impl Metrics {
+    pub fn new(n_exits: usize) -> Self {
+        Metrics {
+            exit_hist: vec![0; n_exits],
+            batch_sizes: Accumulator::new(),
+            ..Default::default()
+        }
+    }
+
+    pub fn start(&mut self) {
+        self.started = Some(Instant::now());
+    }
+
+    pub fn record(&mut self, latency: Duration, exit: usize, early: bool) {
+        if self.started.is_none() {
+            self.start();
+        }
+        self.latencies_us.push(latency.as_secs_f64() * 1e6);
+        self.requests += 1;
+        if early {
+            self.early_exits += 1;
+        }
+        if exit < self.exit_hist.len() {
+            self.exit_hist[exit] += 1;
+        }
+        self.finished_at = Some(Instant::now());
+    }
+
+    pub fn record_batch(&mut self, size: usize) {
+        self.batch_sizes.add(size as f64);
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        let elapsed = match (self.started, self.finished_at) {
+            (Some(s), Some(f)) => f.duration_since(s).as_secs_f64(),
+            _ => 0.0,
+        };
+        Snapshot {
+            requests: self.requests,
+            early_exit_frac: if self.requests > 0 {
+                self.early_exits as f64 / self.requests as f64
+            } else {
+                0.0
+            },
+            p50_us: quantile(&self.latencies_us, 0.5),
+            p95_us: quantile(&self.latencies_us, 0.95),
+            p99_us: quantile(&self.latencies_us, 0.99),
+            mean_us: crate::util::stats::mean(&self.latencies_us),
+            throughput_rps: if elapsed > 0.0 {
+                self.requests as f64 / elapsed
+            } else {
+                0.0
+            },
+            mean_batch: self.batch_sizes.mean(),
+            exit_hist: self.exit_hist.clone(),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Snapshot {
+    pub requests: u64,
+    pub early_exit_frac: f64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+    pub mean_us: f64,
+    pub throughput_rps: f64,
+    pub mean_batch: f64,
+    pub exit_hist: Vec<u64>,
+}
+
+impl Snapshot {
+    pub fn report(&self) -> String {
+        format!(
+            "requests={} early_exit={:.1}% p50={:.0}us p95={:.0}us p99={:.0}us \
+             mean={:.0}us throughput={:.1} req/s mean_batch={:.2}\n  exits: {:?}",
+            self.requests,
+            self.early_exit_frac * 100.0,
+            self.p50_us,
+            self.p95_us,
+            self.p99_us,
+            self.mean_us,
+            self.throughput_rps,
+            self.mean_batch,
+            self.exit_hist
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_math() {
+        let mut m = Metrics::new(3);
+        m.start();
+        m.record(Duration::from_micros(100), 0, true);
+        m.record(Duration::from_micros(200), 2, false);
+        m.record(Duration::from_micros(300), 0, true);
+        m.record_batch(2);
+        m.record_batch(4);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 3);
+        assert!((s.early_exit_frac - 2.0 / 3.0).abs() < 1e-9);
+        assert!((s.p50_us - 200.0).abs() < 1.0);
+        assert_eq!(s.exit_hist, vec![2, 0, 1]);
+        assert!((s.mean_batch - 3.0).abs() < 1e-9);
+        assert!(s.throughput_rps > 0.0);
+        assert!(!s.report().is_empty());
+    }
+}

@@ -1,0 +1,26 @@
+//! Layer-3 coordinator: the paper's dynamic-network contribution.
+//!
+//! * [`dynmodel`] — the backbone-cut-at-exits abstraction + its four
+//!   implementations (native/XLA x ResNet/PointNet++);
+//! * [`memory`] — the semantic memory handle (exact or analogue CAM);
+//! * [`engine`] — block -> search-vector -> CAM -> exit-or-continue control
+//!   flow, with per-sample early exit inside a batch;
+//! * [`policy`] — exit decision rules;
+//! * [`server`] — threaded dynamic-batching front-end;
+//! * [`thresholds`] — tuned-threshold persistence;
+//! * [`metrics`] — latency/throughput/exit accounting.
+
+pub mod dynmodel;
+pub mod engine;
+pub mod memory;
+pub mod metrics;
+pub mod policy;
+pub mod server;
+pub mod thresholds;
+
+pub use dynmodel::DynModel;
+pub use engine::{Engine, Outcome};
+pub use memory::{CenterSource, ExitMemory};
+pub use policy::ExitPolicy;
+pub use server::{Client, Server, ServerConfig};
+pub use thresholds::ThresholdConfig;

@@ -1,0 +1,64 @@
+//! Exit policies: when does a CAM match justify leaving the network?
+//!
+//! The paper uses a per-layer similarity threshold.  We additionally
+//! implement a margin variant (top-1 minus top-2 similarity) as an
+//! extension ablation — margin policies are standard in the early-exit
+//! literature and exercise the CAM's runner-up read-out.
+
+use crate::cam::Match;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ExitPolicy {
+    /// Exit when top-1 similarity >= threshold (the paper's rule).
+    Similarity,
+    /// Exit when similarity >= threshold AND margin to runner-up >= `min_margin`.
+    SimilarityWithMargin { min_margin: f32 },
+}
+
+impl Default for ExitPolicy {
+    fn default() -> Self {
+        ExitPolicy::Similarity
+    }
+}
+
+impl ExitPolicy {
+    #[inline]
+    pub fn should_exit(&self, m: &Match, threshold: f32) -> bool {
+        match self {
+            ExitPolicy::Similarity => m.similarity >= threshold,
+            ExitPolicy::SimilarityWithMargin { min_margin } => {
+                m.similarity >= threshold && m.margin >= *min_margin
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m(sim: f32, margin: f32) -> Match {
+        Match {
+            class: 0,
+            similarity: sim,
+            margin,
+        }
+    }
+
+    #[test]
+    fn similarity_policy() {
+        let p = ExitPolicy::Similarity;
+        assert!(p.should_exit(&m(0.9, 0.0), 0.85));
+        assert!(!p.should_exit(&m(0.8, 0.5), 0.85));
+        // boundary is inclusive
+        assert!(p.should_exit(&m(0.85, 0.0), 0.85));
+    }
+
+    #[test]
+    fn margin_policy_requires_both() {
+        let p = ExitPolicy::SimilarityWithMargin { min_margin: 0.1 };
+        assert!(p.should_exit(&m(0.9, 0.2), 0.85));
+        assert!(!p.should_exit(&m(0.9, 0.05), 0.85)); // close runner-up
+        assert!(!p.should_exit(&m(0.8, 0.5), 0.85));
+    }
+}

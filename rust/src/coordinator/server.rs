@@ -1,0 +1,304 @@
+//! Threaded serving front-end: a dynamic batcher feeding the early-exit
+//! engine (std threads + mpsc — the vendored crate set has no tokio; one
+//! worker matches the single analogue macro / single-core testbed anyway).
+//!
+//! Batching policy: collect up to `max_batch` requests, waiting at most
+//! `max_wait` after the first arrival (classic dynamic batching: the
+//! latency/throughput knob of the serving benches).
+
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use super::dynmodel::DynModel;
+use super::engine::{Engine, Outcome};
+use super::metrics::{Metrics, Snapshot};
+
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    pub queue_depth: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+            queue_depth: 1024,
+        }
+    }
+}
+
+pub struct Request {
+    pub input: Vec<f32>,
+    pub submitted: Instant,
+    pub resp: SyncSender<Response>,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct Response {
+    pub outcome: Outcome,
+    pub latency: Duration,
+}
+
+/// Collect one batch from the queue: blocking on the first request, then
+/// draining until `max_batch` or `max_wait` elapses.  Returns None when the
+/// channel is closed and drained.
+pub fn collect_batch(
+    rx: &Receiver<Request>,
+    max_batch: usize,
+    max_wait: Duration,
+) -> Option<Vec<Request>> {
+    let first = rx.recv().ok()?;
+    let deadline = Instant::now() + max_wait;
+    let mut batch = vec![first];
+    while batch.len() < max_batch {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(r) => batch.push(r),
+            Err(RecvTimeoutError::Timeout) => break,
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    Some(batch)
+}
+
+pub struct Server {
+    tx: SyncSender<Request>,
+    handle: Option<JoinHandle<Metrics>>,
+}
+
+pub struct Client {
+    tx: SyncSender<Request>,
+}
+
+impl Server {
+    /// Spawn the worker thread owning the engine.
+    ///
+    /// The engine is built *inside* the worker via `factory`: PJRT handles
+    /// (the `xla` crate's client/executables) are not `Send`, so the XLA
+    /// backend must be constructed on the thread that will run it.  Native
+    /// (crossbar) engines use the same path for uniformity.
+    pub fn start<M, F>(factory: F, cfg: ServerConfig) -> Server
+    where
+        M: DynModel + 'static,
+        F: FnOnce() -> anyhow::Result<Engine<M>> + Send + 'static,
+    {
+        let (tx, rx) = sync_channel::<Request>(cfg.queue_depth);
+        let handle = std::thread::spawn(move || {
+            let engine = match factory() {
+                Ok(e) => e,
+                Err(e) => {
+                    log::error!("engine construction failed: {e}");
+                    // drain and drop all requests
+                    while rx.recv().is_ok() {}
+                    return Metrics::new(0);
+                }
+            };
+            let mut metrics = Metrics::new(engine.model.n_blocks());
+            metrics.start();
+            while let Some(batch) = collect_batch(&rx, cfg.max_batch, cfg.max_wait) {
+                metrics.record_batch(batch.len());
+                let sample_len = batch[0].input.len();
+                let mut flat = Vec::with_capacity(batch.len() * sample_len);
+                for r in &batch {
+                    flat.extend_from_slice(&r.input);
+                }
+                match engine.infer_batch(&flat, batch.len()) {
+                    Ok(outcomes) => {
+                        for (req, out) in batch.into_iter().zip(outcomes) {
+                            let latency = req.submitted.elapsed();
+                            metrics.record(latency, out.exit, out.exited_early);
+                            let _ = req.resp.send(Response {
+                                outcome: out,
+                                latency,
+                            });
+                        }
+                    }
+                    Err(e) => {
+                        log::error!("batch failed: {e}");
+                        // drop the responders: clients see a closed channel
+                    }
+                }
+            }
+            metrics
+        });
+        Server {
+            tx,
+            handle: Some(handle),
+        }
+    }
+
+    pub fn client(&self) -> Client {
+        Client {
+            tx: self.tx.clone(),
+        }
+    }
+
+    /// Close the queue and join the worker, returning final metrics.
+    ///
+    /// All [`Client`] handles must be dropped first — each holds a sender
+    /// clone that keeps the worker's request loop alive.
+    pub fn shutdown(mut self) -> Result<Snapshot> {
+        drop(self.tx);
+        let metrics = self
+            .handle
+            .take()
+            .expect("shutdown once")
+            .join()
+            .map_err(|_| anyhow!("worker panicked"))?;
+        Ok(metrics.snapshot())
+    }
+}
+
+impl Client {
+    /// Submit one sample; returns the response receiver.
+    pub fn submit(&self, input: Vec<f32>) -> Result<Receiver<Response>> {
+        let (resp_tx, resp_rx) = sync_channel(1);
+        self.tx
+            .send(Request {
+                input,
+                submitted: Instant::now(),
+                resp: resp_tx,
+            })
+            .map_err(|_| anyhow!("server is down"))?;
+        Ok(resp_rx)
+    }
+
+    /// Submit and block for the result.
+    pub fn infer(&self, input: Vec<f32>) -> Result<Response> {
+        self.submit(input)?
+            .recv()
+            .map_err(|_| anyhow!("request dropped"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::memory::ExitMemory;
+    use std::sync::mpsc::sync_channel as sc;
+
+    // Reuse the Toy model from engine tests via a local copy.
+    struct Toy;
+
+    impl DynModel for Toy {
+        type State = Vec<Vec<f32>>;
+
+        fn n_blocks(&self) -> usize {
+            2
+        }
+
+        fn classes(&self) -> usize {
+            2
+        }
+
+        fn init(&self, input: &[f32], batch: usize) -> anyhow::Result<Self::State> {
+            let w = input.len() / batch;
+            Ok((0..batch).map(|i| input[i * w..(i + 1) * w].to_vec()).collect())
+        }
+
+        fn step(&self, _i: usize, s: &mut Self::State) -> anyhow::Result<Vec<f32>> {
+            Ok(s.concat())
+        }
+
+        fn batch_of(&self, s: &Self::State) -> usize {
+            s.len()
+        }
+
+        fn select(&self, s: &Self::State, keep: &[usize]) -> Self::State {
+            keep.iter().map(|&r| s[r].clone()).collect()
+        }
+
+        fn finish(&self, s: &Self::State) -> anyhow::Result<Vec<f32>> {
+            Ok(s.iter().flat_map(|r| r[..2].to_vec()).collect())
+        }
+    }
+
+    fn server(max_batch: usize, wait_ms: u64) -> Server {
+        let bank = (vec![1.0f32, 0.0, 0.0, 1.0], 2, 2);
+        let engine = Engine::new(
+            Toy,
+            ExitMemory::exact(vec![bank.clone(), bank]),
+            vec![0.95, 0.95],
+        );
+        Server::start(
+            move || Ok(engine),
+            ServerConfig {
+                max_batch,
+                max_wait: Duration::from_millis(wait_ms),
+                queue_depth: 64,
+            },
+        )
+    }
+
+    #[test]
+    fn serves_and_classifies() {
+        let srv = server(4, 1);
+        let client = srv.client();
+        let r0 = client.infer(vec![1.0, 0.0]).unwrap();
+        assert_eq!(r0.outcome.class, 0);
+        assert!(r0.outcome.exited_early);
+        let r1 = client.infer(vec![0.1, 0.9]).unwrap();
+        assert_eq!(r1.outcome.class, 1);
+        drop(client);
+        let snap = srv.shutdown().unwrap();
+        assert_eq!(snap.requests, 2);
+        assert!(snap.p50_us > 0.0);
+    }
+
+    #[test]
+    fn batches_under_load() {
+        let srv = server(8, 20);
+        let client = srv.client();
+        let waiters: Vec<_> = (0..16)
+            .map(|i| {
+                let v = if i % 2 == 0 {
+                    vec![1.0, 0.0]
+                } else {
+                    vec![0.0, 1.0]
+                };
+                client.submit(v).unwrap()
+            })
+            .collect();
+        for (i, w) in waiters.into_iter().enumerate() {
+            let r = w.recv().unwrap();
+            assert_eq!(r.outcome.class, i % 2);
+        }
+        drop(client);
+        let snap = srv.shutdown().unwrap();
+        assert_eq!(snap.requests, 16);
+        // queueing 16 requests with a 20ms window must produce real batches
+        assert!(snap.mean_batch > 1.5, "mean batch {}", snap.mean_batch);
+    }
+
+    #[test]
+    fn collect_batch_respects_deadline() {
+        let (tx, rx) = sc::<Request>(8);
+        let (rtx, _rrx) = sc(1);
+        tx.send(Request {
+            input: vec![0.0],
+            submitted: Instant::now(),
+            resp: rtx,
+        })
+        .unwrap();
+        let t0 = Instant::now();
+        let b = collect_batch(&rx, 8, Duration::from_millis(10)).unwrap();
+        assert_eq!(b.len(), 1);
+        assert!(t0.elapsed() < Duration::from_millis(500));
+    }
+
+    #[test]
+    fn closed_channel_returns_none() {
+        let (tx, rx) = sc::<Request>(1);
+        drop(tx);
+        assert!(collect_batch(&rx, 4, Duration::from_millis(1)).is_none());
+    }
+}

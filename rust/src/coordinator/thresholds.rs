@@ -1,0 +1,93 @@
+//! Threshold persistence: `artifacts/<model>/thresholds.json`, written by
+//! `memdyn tune` (TPE) and read by every serving/figure entrypoint.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::util::json::{arr_f64, obj, Json};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ThresholdConfig {
+    pub values: Vec<f32>,
+    /// Bookkeeping from the tuning run (optional).
+    pub accuracy: Option<f64>,
+    pub budget_drop: Option<f64>,
+}
+
+impl ThresholdConfig {
+    pub fn uniform(n: usize, v: f32) -> Self {
+        ThresholdConfig {
+            values: vec![v; n],
+            accuracy: None,
+            budget_drop: None,
+        }
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{path:?}: {e}"))?;
+        let values = j
+            .get("thresholds")
+            .and_then(|v| v.f64_vec())
+            .ok_or_else(|| anyhow!("{path:?}: missing 'thresholds'"))?
+            .into_iter()
+            .map(|v| v as f32)
+            .collect();
+        Ok(ThresholdConfig {
+            values,
+            accuracy: j.get("accuracy").and_then(|v| v.as_f64()),
+            budget_drop: j.get("budget_drop").and_then(|v| v.as_f64()),
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut pairs = vec![(
+            "thresholds",
+            arr_f64(&self.values.iter().map(|&v| v as f64).collect::<Vec<_>>()),
+        )];
+        if let Some(a) = self.accuracy {
+            pairs.push(("accuracy", Json::Num(a)));
+        }
+        if let Some(b) = self.budget_drop {
+            pairs.push(("budget_drop", Json::Num(b)));
+        }
+        std::fs::write(path, obj(pairs).to_string())?;
+        Ok(())
+    }
+
+    /// Load tuned thresholds if present, else a uniform default.
+    pub fn load_or_default(path: &Path, n: usize, default: f32) -> Self {
+        match Self::load(path) {
+            Ok(t) if t.values.len() == n => t,
+            _ => Self::uniform(n, default),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("memdyn_thr_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("thresholds.json");
+        let t = ThresholdConfig {
+            values: vec![0.9, 0.85, 1.05],
+            accuracy: Some(0.96),
+            budget_drop: Some(0.48),
+        };
+        t.save(&p).unwrap();
+        let back = ThresholdConfig::load(&p).unwrap();
+        assert_eq!(back.values, t.values);
+        assert_eq!(back.accuracy, Some(0.96));
+    }
+
+    #[test]
+    fn default_on_missing_or_mismatched() {
+        let t = ThresholdConfig::load_or_default(Path::new("/nonexistent.json"), 3, 0.9);
+        assert_eq!(t.values, vec![0.9, 0.9, 0.9]);
+    }
+}

@@ -1,0 +1,447 @@
+//! 512x512 memristor crossbar: differential-pair ternary encoding, DAC /
+//! TIA / ADC converter models, and the analogue MVM (Ohm multiply,
+//! Kirchhoff accumulate).
+//!
+//! A ternary weight occupies a *differential pair* of devices on two
+//! bit-lines (paper §Methods "DNN-based ResNet"):
+//!
+//! | weight | G+   | G-   |
+//! |--------|------|------|
+//! |   +1   | LRS  | HRS  |
+//! |    0   | HRS  | HRS  |
+//! |   -1   | HRS  | LRS  |
+//!
+//! so a 512x512 physical array holds a 512x256 ternary weight tile.  Inputs
+//! are DAC-quantized word-line voltages; each output is the TIA-converted,
+//! ADC-quantized difference of the pair's bit-line currents.
+
+use crate::device::{DeviceConfig, MemristorArray};
+use crate::util::rng::Pcg64;
+
+/// Physical tile geometry of the modelled macro.
+pub const XBAR_ROWS: usize = 512;
+pub const XBAR_COLS: usize = 512;
+/// Logical ternary columns per physical tile (differential pairs).
+pub const XBAR_LOGICAL_COLS: usize = XBAR_COLS / 2;
+
+/// Converter models (DAC80508 8-bit input, ADS8324 14-bit output in the
+/// paper's platform).
+#[derive(Clone, Debug)]
+pub struct ConverterConfig {
+    pub dac_bits: u32,
+    pub adc_bits: u32,
+    /// Input full-scale: |v| <= v_fs after the digital pre-scaler.
+    pub v_fs: f64,
+    /// Enable/disable quantization entirely (ideal converters).
+    pub enabled: bool,
+}
+
+impl Default for ConverterConfig {
+    fn default() -> Self {
+        ConverterConfig {
+            dac_bits: 8,
+            adc_bits: 14,
+            v_fs: 1.0,
+            enabled: true,
+        }
+    }
+}
+
+impl ConverterConfig {
+    pub fn ideal() -> Self {
+        ConverterConfig {
+            enabled: false,
+            ..Default::default()
+        }
+    }
+
+    /// DAC: mid-tread uniform quantization of a signed voltage.  Negative
+    /// activations are realized as a second read phase with inverted
+    /// polarity on chip; numerically that is a signed voltage.
+    #[inline]
+    pub fn dac(&self, v: f64) -> f64 {
+        if !self.enabled {
+            return v;
+        }
+        let step = 2.0 * self.v_fs / (1u64 << self.dac_bits) as f64;
+        (v / step).round() * step
+    }
+
+    /// ADC over a full-scale current `i_fs` (worst-case column current).
+    #[inline]
+    pub fn adc(&self, i: f64, i_fs: f64) -> f64 {
+        if !self.enabled {
+            return i;
+        }
+        let step = 2.0 * i_fs / (1u64 << self.adc_bits) as f64;
+        (i / step).round().clamp(
+            -((1u64 << (self.adc_bits - 1)) as f64),
+            (1u64 << (self.adc_bits - 1)) as f64,
+        ) * step
+    }
+}
+
+/// `y = x^T G` over a row-major `(rows, cols)` matrix, 4-wide unrolled over
+/// rows so each pass touches the output row once per 4 inputs.
+#[inline]
+fn accumulate_rows(g: &[f32], x: &[f32], y: &mut [f32], cols: usize) {
+    for yj in y.iter_mut() {
+        *yj = 0.0;
+    }
+    let k = x.len();
+    let mut kk = 0;
+    while kk + 4 <= k {
+        let (x0, x1, x2, x3) = (x[kk], x[kk + 1], x[kk + 2], x[kk + 3]);
+        if x0 != 0.0 || x1 != 0.0 || x2 != 0.0 || x3 != 0.0 {
+            let g0 = &g[kk * cols..(kk + 1) * cols];
+            let g1 = &g[(kk + 1) * cols..(kk + 2) * cols];
+            let g2 = &g[(kk + 2) * cols..(kk + 3) * cols];
+            let g3 = &g[(kk + 3) * cols..(kk + 4) * cols];
+            for j in 0..cols {
+                y[j] += x0 * g0[j] + x1 * g1[j] + x2 * g2[j] + x3 * g3[j];
+            }
+        }
+        kk += 4;
+    }
+    while kk < k {
+        let xv = x[kk];
+        if xv != 0.0 {
+            let row = &g[kk * cols..(kk + 1) * cols];
+            for (yj, &gv) in y.iter_mut().zip(row) {
+                *yj += xv * gv;
+            }
+        }
+        kk += 1;
+    }
+}
+
+/// One physical crossbar tile programmed with a ternary weight block.
+///
+/// `weights[k][j]` (row-major `rows x logical_cols`) with values in
+/// {-1, 0, 1}.  The MVM hot path pre-reads the programmed differential
+/// means into a dense `geff` matrix; per-read noise is added on top.
+pub struct CrossbarTile {
+    pub rows: usize,
+    pub logical_cols: usize,
+    pub array: MemristorArray,
+    pub conv: ConverterConfig,
+    /// Effective differential conductance means (rows x logical_cols).
+    geff: Vec<f32>,
+    /// Sum of read-noise variances per logical column (for the fast
+    /// column-level noise approximation).
+    col_var: Vec<f32>,
+}
+
+impl CrossbarTile {
+    /// Program a `rows x cols` ternary block (entries must be -1/0/1).
+    pub fn program(
+        weights: &[i8],
+        rows: usize,
+        cols: usize,
+        dev: DeviceConfig,
+        conv: ConverterConfig,
+        rng: &mut Pcg64,
+    ) -> Self {
+        let f: Vec<f32> = weights
+            .iter()
+            .map(|&w| {
+                assert!(
+                    (-1..=1).contains(&w),
+                    "non-ternary weight {w}"
+                );
+                w as f32
+            })
+            .collect();
+        Self::program_analog(&f, rows, cols, dev, conv, rng)
+    }
+
+    /// Program a *full-precision* block (entries normalized to [-1, 1]):
+    /// `G+ = max(w, 0)`, `G- = max(-w, 0)` (HRS floor applies).  This is the
+    /// "directly mapping full-precision weights to memristors" baseline of
+    /// Fig. 4h–i; the ternary `program()` is the special case w ∈ {-1,0,1}.
+    pub fn program_analog(
+        weights: &[f32],
+        rows: usize,
+        cols: usize,
+        dev: DeviceConfig,
+        conv: ConverterConfig,
+        rng: &mut Pcg64,
+    ) -> Self {
+        assert!(rows <= XBAR_ROWS, "tile rows {rows} > {XBAR_ROWS}");
+        assert!(
+            cols <= XBAR_LOGICAL_COLS,
+            "tile cols {cols} > {XBAR_LOGICAL_COLS}"
+        );
+        assert_eq!(weights.len(), rows * cols);
+        let mut array = MemristorArray::new(rows, 2 * cols, dev);
+        let g_hrs = array.cfg.g_hrs;
+        for r in 0..rows {
+            for c in 0..cols {
+                let w = weights[r * cols + c] as f64;
+                assert!(w.abs() <= 1.0 + 1e-6, "weight {w} outside [-1, 1]");
+                let gp = w.max(0.0).max(g_hrs);
+                let gm = (-w).max(0.0).max(g_hrs);
+                array.program(r, 2 * c, gp, rng);
+                array.program(r, 2 * c + 1, gm, rng);
+            }
+        }
+        let mut tile = CrossbarTile {
+            rows,
+            logical_cols: cols,
+            array,
+            conv,
+            geff: Vec::new(),
+            col_var: Vec::new(),
+        };
+        tile.refresh_cache();
+        tile
+    }
+
+    /// Re-derive the dense differential-mean matrix after (re)programming.
+    fn refresh_cache(&mut self) {
+        let (rows, cols) = (self.rows, self.logical_cols);
+        let mut geff = vec![0f32; rows * cols];
+        let mut col_var = vec![0f32; cols];
+        for r in 0..rows {
+            for c in 0..cols {
+                let gp = self.array.read_mean(r, 2 * c);
+                let gm = self.array.read_mean(r, 2 * c + 1);
+                geff[r * cols + c] = (gp - gm) as f32;
+                let sp = self.array.cfg.read_sigma(gp);
+                let sm = self.array.cfg.read_sigma(gm);
+                col_var[c] += (sp * sp + sm * sm) as f32;
+            }
+        }
+        self.geff = geff;
+        self.col_var = col_var;
+    }
+
+    /// Worst-case column current (ADC full-scale): every device LRS, every
+    /// input at v_fs.
+    #[inline]
+    pub fn full_scale_current(&self) -> f64 {
+        self.rows as f64 * self.conv.v_fs
+    }
+
+    /// Analogue MVM: `y[j] = ADC( Σ_k DAC(x[k]) · (G+ - G-)[k][j] + noise )`.
+    ///
+    /// Per-read device noise is applied at column level: the sum of
+    /// independent per-device read-noise contributions is Gaussian with
+    /// variance `Σ_k σ_r(G)² · v_k²`; we use the cached per-column variance
+    /// scaled by the mean-square input (exact for |v|=const, excellent
+    /// approximation otherwise, and O(N) instead of O(N·K) in the hot loop).
+    pub fn mvm(&self, x: &[f32], y: &mut [f32], rng: &mut Pcg64) {
+        assert_eq!(x.len(), self.rows);
+        assert_eq!(y.len(), self.logical_cols);
+        let cols = self.logical_cols;
+        // Digital pre-scaler: activations routinely exceed the DAC's
+        // full-scale voltage, so the digital core normalizes the vector to
+        // |v| <= v_fs before conversion and rescales the ADC read-out
+        // (standard analogue-accelerator practice; without it the ADC
+        // clips and deep blocks saturate).
+        let xmax = x.iter().fold(0f32, |m, &v| m.max(v.abs())) as f64;
+        let prescale = if self.conv.enabled && xmax > self.conv.v_fs {
+            xmax / self.conv.v_fs
+        } else {
+            1.0
+        };
+        let inv_pre = 1.0 / prescale;
+        // DAC stage
+        let mut v = [0f32; XBAR_ROWS];
+        let v = &mut v[..self.rows];
+        let mut v_ms = 0f64; // mean square of applied voltages
+        for (vi, &xi) in v.iter_mut().zip(x) {
+            let q = self.conv.dac(xi as f64 * inv_pre);
+            *vi = q as f32;
+            v_ms += q * q;
+        }
+        v_ms /= self.rows as f64;
+        // Ohm + Kirchhoff (dense f32 inner loops, column-major walk);
+        // 4-wide unroll over word-lines (perf: §Perf change #3)
+        accumulate_rows(&self.geff, v, y, cols);
+        // column-level read noise + TIA/ADC
+        let i_fs = self.full_scale_current();
+        let noisy = self.array.cfg.read_noise_a > 0.0
+            || self.array.cfg.read_noise_b > 0.0;
+        for (j, yj) in y.iter_mut().enumerate() {
+            let mut i = *yj as f64;
+            if noisy {
+                let sigma = (self.col_var[j] as f64 * v_ms).sqrt();
+                i += rng.normal() * sigma;
+            }
+            *yj = (self.conv.adc(i, i_fs) * prescale) as f32;
+        }
+    }
+
+    /// Noise-free reference MVM over the *programmed means* (what averaging
+    /// many reads converges to) — used by tests and the CAM verify path.
+    pub fn mvm_mean(&self, x: &[f32], y: &mut [f32]) {
+        accumulate_rows(&self.geff, x, y, self.logical_cols);
+    }
+
+    /// Number of device reads one MVM performs (for energy accounting).
+    #[inline]
+    pub fn device_reads(&self) -> usize {
+        self.rows * 2 * self.logical_cols
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ternary_block(rows: usize, cols: usize, seed: u64) -> Vec<i8> {
+        let mut rng = Pcg64::new(seed);
+        (0..rows * cols)
+            .map(|_| [-1i8, 0, 1][rng.below(3)])
+            .collect()
+    }
+
+    fn exact_mvm(w: &[i8], rows: usize, cols: usize, x: &[f32]) -> Vec<f32> {
+        let mut y = vec![0f32; cols];
+        for k in 0..rows {
+            for j in 0..cols {
+                y[j] += x[k] * w[k * cols + j] as f32;
+            }
+        }
+        y
+    }
+
+    #[test]
+    fn ideal_tile_matches_exact_matmul() {
+        let (rows, cols) = (64, 24);
+        let w = ternary_block(rows, cols, 1);
+        let mut rng = Pcg64::new(2);
+        let tile = CrossbarTile::program(
+            &w,
+            rows,
+            cols,
+            DeviceConfig::ideal(),
+            ConverterConfig::ideal(),
+            &mut rng,
+        );
+        let x: Vec<f32> = (0..rows).map(|i| (i as f32 * 0.13).sin()).collect();
+        let mut y = vec![0f32; cols];
+        tile.mvm(&x, &mut y, &mut rng);
+        let want = exact_mvm(&w, rows, cols, &x);
+        for (a, b) in y.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn converters_bound_quantization_error() {
+        let (rows, cols) = (128, 16);
+        let w = ternary_block(rows, cols, 3);
+        let mut rng = Pcg64::new(4);
+        let conv = ConverterConfig::default();
+        let tile = CrossbarTile::program(
+            &w,
+            rows,
+            cols,
+            DeviceConfig::ideal(),
+            conv.clone(),
+            &mut rng,
+        );
+        let x: Vec<f32> = (0..rows).map(|i| ((i * 7 % 13) as f32 / 13.0) - 0.5).collect();
+        let mut y = vec![0f32; cols];
+        tile.mvm(&x, &mut y, &mut rng);
+        let want = exact_mvm(&w, rows, cols, &x);
+        // DAC error ≤ half LSB per input; worst-case propagation ≤ rows·lsb/2
+        let dac_lsb = 2.0 / 256.0;
+        let adc_lsb = 2.0 * tile.full_scale_current() / (1 << 14) as f64;
+        let bound = rows as f64 * dac_lsb / 2.0 + adc_lsb / 2.0 + 1e-6;
+        for (a, b) in y.iter().zip(&want) {
+            assert!(
+                ((a - b).abs() as f64) <= bound,
+                "err {} > bound {bound}",
+                (a - b).abs()
+            );
+        }
+    }
+
+    #[test]
+    fn write_noise_biases_but_preserves_signal() {
+        let (rows, cols) = (256, 32);
+        let w = ternary_block(rows, cols, 5);
+        let mut rng = Pcg64::new(6);
+        let tile = CrossbarTile::program(
+            &w,
+            rows,
+            cols,
+            DeviceConfig::default().with_write_noise(0.15),
+            ConverterConfig::ideal(),
+            &mut rng,
+        );
+        let x = vec![1.0f32; rows];
+        let mut y = vec![0f32; cols];
+        tile.mvm_mean(&x, &mut y);
+        let want = exact_mvm(&w, rows, cols, &x);
+        // correlation between noisy and exact outputs stays high (Fig. 4f)
+        let a: Vec<f64> = y.iter().map(|&v| v as f64).collect();
+        let b: Vec<f64> = want.iter().map(|&v| v as f64).collect();
+        assert!(crate::util::stats::pearson(&a, &b) > 0.95);
+    }
+
+    #[test]
+    fn read_noise_averages_out() {
+        let (rows, cols) = (64, 8);
+        let w = ternary_block(rows, cols, 7);
+        let mut rng = Pcg64::new(8);
+        let tile = CrossbarTile::program(
+            &w,
+            rows,
+            cols,
+            DeviceConfig {
+                write_noise: 0.0,
+                ..Default::default()
+            },
+            ConverterConfig::ideal(),
+            &mut rng,
+        );
+        let x = vec![0.5f32; rows];
+        let mut mean = vec![0f64; cols];
+        let n = 500;
+        let mut y = vec![0f32; cols];
+        for _ in 0..n {
+            tile.mvm(&x, &mut y, &mut rng);
+            for (m, &v) in mean.iter_mut().zip(&y) {
+                *m += v as f64 / n as f64;
+            }
+        }
+        let mut want = vec![0f32; cols];
+        tile.mvm_mean(&x, &mut want);
+        for (m, w) in mean.iter().zip(&want) {
+            assert!((m - *w as f64).abs() < 0.05, "{m} vs {w}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "non-ternary")]
+    fn rejects_non_ternary_weights() {
+        let mut rng = Pcg64::new(0);
+        CrossbarTile::program(
+            &[2i8],
+            1,
+            1,
+            DeviceConfig::ideal(),
+            ConverterConfig::ideal(),
+            &mut rng,
+        );
+    }
+
+    #[test]
+    fn device_read_count() {
+        let w = ternary_block(16, 4, 9);
+        let mut rng = Pcg64::new(1);
+        let tile = CrossbarTile::program(
+            &w,
+            16,
+            4,
+            DeviceConfig::ideal(),
+            ConverterConfig::ideal(),
+            &mut rng,
+        );
+        assert_eq!(tile.device_reads(), 16 * 8);
+    }
+}

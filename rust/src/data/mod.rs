@@ -1,0 +1,137 @@
+//! Workload generation for the serving benches + small in-Rust synthetic
+//! data for tests that must not depend on `make artifacts`.
+
+use crate::util::rng::Pcg64;
+
+/// A request stream event: arrival offset (µs since stream start) + sample
+/// index into a dataset split.
+#[derive(Clone, Copy, Debug)]
+pub struct Arrival {
+    pub at_us: u64,
+    pub sample: usize,
+}
+
+/// Poisson arrival process at `rate_per_s` over `n` requests, drawing
+/// sample indices uniformly from `n_samples`.
+pub fn poisson_stream(
+    rate_per_s: f64,
+    n: usize,
+    n_samples: usize,
+    seed: u64,
+) -> Vec<Arrival> {
+    let mut rng = Pcg64::new(seed);
+    let mut t = 0f64;
+    (0..n)
+        .map(|_| {
+            // exponential inter-arrival
+            t += -rng.uniform().max(1e-12).ln() / rate_per_s;
+            Arrival {
+                at_us: (t * 1e6) as u64,
+                sample: rng.below(n_samples.max(1)),
+            }
+        })
+        .collect()
+}
+
+/// Bursty stream: `burst` back-to-back requests every `period_us`.
+pub fn bursty_stream(
+    burst: usize,
+    period_us: u64,
+    n: usize,
+    n_samples: usize,
+    seed: u64,
+) -> Vec<Arrival> {
+    let mut rng = Pcg64::new(seed);
+    (0..n)
+        .map(|i| Arrival {
+            at_us: (i / burst) as u64 * period_us,
+            sample: rng.below(n_samples.max(1)),
+        })
+        .collect()
+}
+
+/// Tiny in-Rust image set (blurred class-dependent blobs): lets unit tests
+/// exercise full pipelines without artifacts on disk.
+pub fn toy_images(n: usize, hw: usize, classes: usize, seed: u64) -> (Vec<f32>, Vec<i32>) {
+    let mut rng = Pcg64::new(seed);
+    let mut xs = vec![0f32; n * hw * hw];
+    let mut ys = vec![0i32; n];
+    for s in 0..n {
+        let c = rng.below(classes);
+        ys[s] = c as i32;
+        // class-dependent blob position on a ring
+        let ang = c as f64 / classes as f64 * std::f64::consts::TAU;
+        let cx = hw as f64 / 2.0 + ang.cos() * hw as f64 / 4.0;
+        let cy = hw as f64 / 2.0 + ang.sin() * hw as f64 / 4.0;
+        for y in 0..hw {
+            for x in 0..hw {
+                let d2 = (x as f64 - cx).powi(2) + (y as f64 - cy).powi(2);
+                let v = (-d2 / 8.0).exp() + rng.normal() * 0.02;
+                xs[s * hw * hw + y * hw + x] = v.clamp(0.0, 1.0) as f32;
+            }
+        }
+    }
+    (xs, ys)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_monotone_and_rate_plausible() {
+        let s = poisson_stream(1000.0, 500, 100, 1);
+        assert_eq!(s.len(), 500);
+        for w in s.windows(2) {
+            assert!(w[1].at_us >= w[0].at_us);
+        }
+        // 500 arrivals at 1000/s ≈ 0.5 s span (loose bounds)
+        let span_s = s.last().unwrap().at_us as f64 / 1e6;
+        assert!(span_s > 0.25 && span_s < 1.0, "span {span_s}");
+        assert!(s.iter().all(|a| a.sample < 100));
+    }
+
+    #[test]
+    fn bursts_share_arrival_time() {
+        let s = bursty_stream(4, 1000, 12, 10, 2);
+        assert_eq!(s[0].at_us, s[3].at_us);
+        assert_eq!(s[4].at_us, 1000);
+        assert_eq!(s[8].at_us, 2000);
+    }
+
+    #[test]
+    fn toy_images_separable_by_centroid() {
+        let (xs, ys) = toy_images(200, 16, 4, 3);
+        // nearest-centroid classification beats chance comfortably
+        let mut cents = vec![vec![0f64; 256]; 4];
+        let mut counts = [0usize; 4];
+        for s in 0..100 {
+            let c = ys[s] as usize;
+            counts[c] += 1;
+            for k in 0..256 {
+                cents[c][k] += xs[s * 256 + k] as f64;
+            }
+        }
+        for c in 0..4 {
+            for v in cents[c].iter_mut() {
+                *v /= counts[c].max(1) as f64;
+            }
+        }
+        let mut correct = 0;
+        for s in 100..200 {
+            let mut best = (f64::INFINITY, 0usize);
+            for (c, cent) in cents.iter().enumerate() {
+                let d: f64 = (0..256)
+                    .map(|k| (xs[s * 256 + k] as f64 - cent[k]).powi(2))
+                    .sum();
+                if d < best.0 {
+                    best = (d, c);
+                }
+            }
+            if best.1 == ys[s] as usize {
+                correct += 1;
+            }
+        }
+        assert!(correct > 80, "only {correct}/100");
+    }
+}

@@ -1,0 +1,371 @@
+//! Stochastic memristor device model (TaN/TaOx/Ta/TiN, 40 nm BEOL).
+//!
+//! Models the two noise sources the paper characterizes in Fig. 4:
+//!
+//! * **write noise** — programming stochasticity: the *mean* conductance a
+//!   device settles at after programming is spread around the target in a
+//!   quasi-normal distribution (~15% of target, Fig. 4e).  Sampled once at
+//!   `program()` time.
+//! * **read noise** — temporal conductance fluctuation: every read returns
+//!   the programmed mean plus a Gaussian whose σ grows affinely with the
+//!   mean conductance (the linear trend of Fig. 4d).
+//!
+//! Conductances are normalized: 1.0 == LRS (low-resistance, "on"),
+//! `g_hrs` ≈ 0.01 == HRS.  Physical currents/energies are recovered in the
+//! `energy` module.
+
+use crate::util::rng::Pcg64;
+
+/// Device/noise parameters of the modelled macro.
+#[derive(Clone, Debug)]
+pub struct DeviceConfig {
+    /// Normalized HRS conductance (LRS == 1.0).
+    pub g_hrs: f64,
+    /// Write-noise fraction: σ of programmed mean, relative to target.
+    pub write_noise: f64,
+    /// Read-noise affine law σ_r(g) = a + b·g  (Fig. 4d fit).
+    pub read_noise_a: f64,
+    pub read_noise_b: f64,
+    /// Program-and-verify: re-program until within `tol` (relative) of the
+    /// target, up to `pulses` attempts.  `None` = single-shot programming
+    /// (the raw Fig. 4 characterization).  Write-verify is standard on
+    /// memristor platforms and is how deployment-grade effective write
+    /// noise is reached.
+    pub verify: Option<(f64, usize)>,
+}
+
+impl Default for DeviceConfig {
+    fn default() -> Self {
+        DeviceConfig {
+            g_hrs: 0.01,
+            write_noise: 0.15,
+            read_noise_a: 0.002,
+            read_noise_b: 0.02,
+            verify: None,
+        }
+    }
+}
+
+impl DeviceConfig {
+    pub fn with_write_noise(mut self, w: f64) -> Self {
+        self.write_noise = w;
+        self
+    }
+
+    pub fn with_read_noise_scale(mut self, scale: f64) -> Self {
+        self.read_noise_a *= scale;
+        self.read_noise_b *= scale;
+        self
+    }
+
+    /// Noise-free configuration (ideal digital behaviour).
+    pub fn ideal() -> Self {
+        DeviceConfig {
+            g_hrs: 0.0,
+            write_noise: 0.0,
+            read_noise_a: 0.0,
+            read_noise_b: 0.0,
+            verify: None,
+        }
+    }
+
+    /// Enable program-and-verify (deployment-style programming).
+    pub fn with_verify(mut self, tol: f64, pulses: usize) -> Self {
+        self.verify = Some((tol, pulses));
+        self
+    }
+
+    #[inline]
+    pub fn read_sigma(&self, g_mean: f64) -> f64 {
+        self.read_noise_a + self.read_noise_b * g_mean
+    }
+}
+
+/// One programmed memristor: target state and the (noisy) settled mean.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Device {
+    pub target: f32,
+    pub mean: f32,
+}
+
+/// A rows x cols array of devices with shared config.
+///
+/// Storage is row-major `Vec<Device>`; reads go through `read()` (one
+/// stochastic sample) or `read_mean()` (the programmed value, i.e. what an
+/// averaging read-verify loop would converge to).
+pub struct MemristorArray {
+    pub rows: usize,
+    pub cols: usize,
+    pub cfg: DeviceConfig,
+    devices: Vec<Device>,
+}
+
+impl MemristorArray {
+    /// Allocate an erased (all-HRS) array.
+    pub fn new(rows: usize, cols: usize, cfg: DeviceConfig) -> Self {
+        let hrs = cfg.g_hrs as f32;
+        MemristorArray {
+            rows,
+            cols,
+            cfg,
+            devices: vec![
+                Device {
+                    target: hrs,
+                    mean: hrs
+                };
+                rows * cols
+            ],
+        }
+    }
+
+    #[inline]
+    fn idx(&self, r: usize, c: usize) -> usize {
+        debug_assert!(r < self.rows && c < self.cols);
+        r * self.cols + c
+    }
+
+    /// Program one device to a normalized target conductance.  The settled
+    /// mean is drawn once: `N(target, write_noise * target)`, truncated at 0
+    /// (conductance is physical).
+    pub fn program(&mut self, r: usize, c: usize, target: f64, rng: &mut Pcg64) {
+        if let Some((tol, pulses)) = self.cfg.verify {
+            self.program_once(r, c, target, rng);
+            for _ in 1..pulses {
+                let err = (self.read_mean(r, c) - target).abs();
+                if target == 0.0 || err <= tol * target.max(self.cfg.g_hrs) {
+                    break;
+                }
+                self.program_once(r, c, target, rng);
+            }
+        } else {
+            self.program_once(r, c, target, rng);
+        }
+    }
+
+    fn program_once(&mut self, r: usize, c: usize, target: f64, rng: &mut Pcg64) {
+        // Programming spread is ~write_noise of FULL SCALE for any SET
+        // state: intermediate (analogue) conductances are not easier to hit
+        // than the LRS extreme — they are harder, which is exactly why the
+        // paper's full-precision direct mapping collapses under write noise
+        // (Fig. 4h) while ternary's binary extremes survive.  The erased
+        // HRS state is comparatively stable (spread scales with its tiny
+        // conductance).
+        let sigma = if target > 2.0 * self.cfg.g_hrs {
+            self.cfg.write_noise
+        } else {
+            self.cfg.write_noise * target
+        };
+        let mean = if sigma > 0.0 {
+            rng.normal_trunc_lo(target, sigma, 0.0)
+        } else {
+            target
+        };
+        let i = self.idx(r, c);
+        self.devices[i] = Device {
+            target: target as f32,
+            mean: mean as f32,
+        };
+    }
+
+    /// One stochastic read: programmed mean + read noise (never negative).
+    #[inline]
+    pub fn read(&self, r: usize, c: usize, rng: &mut Pcg64) -> f64 {
+        let d = self.devices[self.idx(r, c)];
+        let sigma = self.cfg.read_sigma(d.mean as f64);
+        if sigma > 0.0 {
+            (d.mean as f64 + rng.normal() * sigma).max(0.0)
+        } else {
+            d.mean as f64
+        }
+    }
+
+    #[inline]
+    pub fn read_mean(&self, r: usize, c: usize) -> f64 {
+        self.devices[self.idx(r, c)].mean as f64
+    }
+
+    #[inline]
+    pub fn target(&self, r: usize, c: usize) -> f64 {
+        self.devices[self.idx(r, c)].target as f64
+    }
+
+    /// Row-major slice of programmed means (hot-path MVM uses this).
+    pub fn means(&self) -> Vec<f32> {
+        self.devices.iter().map(|d| d.mean).collect()
+    }
+
+    /// Program-and-verify: re-program until the settled mean is within
+    /// `tol` (relative) of target or `max_iters` exhausted.  Returns the
+    /// number of programming pulses used.  (The paper programs without
+    /// verify — this models the standard mitigation and is used by the
+    /// ablation benches.)
+    pub fn program_verify(
+        &mut self,
+        r: usize,
+        c: usize,
+        target: f64,
+        tol: f64,
+        max_iters: usize,
+        rng: &mut Pcg64,
+    ) -> usize {
+        for i in 1..=max_iters {
+            self.program(r, c, target, rng);
+            let err = (self.read_mean(r, c) - target).abs();
+            if target == 0.0 || err <= tol * target.max(self.cfg.g_hrs) {
+                return i;
+            }
+        }
+        max_iters
+    }
+}
+
+/// Fig. 4a–e characterization data for an array programmed to one target.
+pub struct Characterization {
+    /// Per-device programmed means.
+    pub means: Vec<f64>,
+    /// Per-device std over `n_reads` stochastic reads.
+    pub stds: Vec<f64>,
+    /// A few full read traces (device index, samples).
+    pub traces: Vec<(usize, Vec<f64>)>,
+}
+
+/// Program `n_devices` to `target` and sample `n_reads` reads each —
+/// regenerates the statistics behind Fig. 4a–e.
+pub fn characterize(
+    cfg: &DeviceConfig,
+    n_devices: usize,
+    n_reads: usize,
+    target: f64,
+    n_traces: usize,
+    seed: u64,
+) -> Characterization {
+    let mut rng = Pcg64::new(seed);
+    // a 1 x n strip is statistically identical to any 2D arrangement
+    let mut arr = MemristorArray::new(1, n_devices, cfg.clone());
+    for c in 0..n_devices {
+        arr.program(0, c, target, &mut rng);
+    }
+    let mut means = Vec::with_capacity(n_devices);
+    let mut stds = Vec::with_capacity(n_devices);
+    let mut traces = Vec::new();
+    for c in 0..n_devices {
+        let keep_trace = c < n_traces;
+        let mut trace = Vec::new();
+        let (mut s, mut s2) = (0.0f64, 0.0f64);
+        for _ in 0..n_reads {
+            let v = arr.read(0, c, &mut rng);
+            s += v;
+            s2 += v * v;
+            if keep_trace {
+                trace.push(v);
+            }
+        }
+        let m = s / n_reads as f64;
+        means.push(m);
+        stds.push((s2 / n_reads as f64 - m * m).max(0.0).sqrt());
+        if keep_trace {
+            traces.push((c, trace));
+        }
+    }
+    Characterization {
+        means,
+        stds,
+        traces,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    #[test]
+    fn ideal_devices_are_exact() {
+        let mut rng = Pcg64::new(0);
+        let mut arr = MemristorArray::new(4, 4, DeviceConfig::ideal());
+        arr.program(1, 2, 0.7, &mut rng);
+        // means are stored as f32: compare to f32 precision
+        assert!((arr.read_mean(1, 2) - 0.7).abs() < 1e-6);
+        assert_eq!(arr.read(1, 2, &mut rng), arr.read_mean(1, 2));
+    }
+
+    #[test]
+    fn write_noise_spreads_means() {
+        let cfg = DeviceConfig::default();
+        let ch = characterize(&cfg, 2000, 1, 1.0, 0, 42);
+        let m = stats::mean(&ch.means);
+        let s = stats::std(&ch.means);
+        assert!((m - 1.0).abs() < 0.02, "mean {m}");
+        // 15% write noise (truncation at 0 barely matters at 15%)
+        assert!((s - 0.15).abs() < 0.02, "std {s}");
+    }
+
+    #[test]
+    fn read_noise_tracks_affine_law() {
+        let cfg = DeviceConfig {
+            write_noise: 0.0,
+            ..Default::default()
+        };
+        let ch = characterize(&cfg, 50, 4000, 1.0, 0, 7);
+        let expect = cfg.read_sigma(1.0);
+        let got = stats::mean(&ch.stds);
+        assert!(
+            (got - expect).abs() / expect < 0.1,
+            "σ_read {got} vs {expect}"
+        );
+    }
+
+    #[test]
+    fn mean_std_correlation_positive() {
+        // Fig. 4d: devices with larger mean conductance fluctuate more.
+        let cfg = DeviceConfig::default();
+        let mut rng = Pcg64::new(9);
+        let mut arr = MemristorArray::new(1, 400, cfg);
+        // random mix of HRS and LRS targets -> spread of means
+        let mut means = Vec::new();
+        let mut stds = Vec::new();
+        for c in 0..400 {
+            let t = if rng.uniform() < 0.5 { 0.01 } else { 1.0 };
+            arr.program(0, c, t, &mut rng);
+            let mut xs = Vec::with_capacity(200);
+            for _ in 0..200 {
+                xs.push(arr.read(0, c, &mut rng));
+            }
+            means.push(stats::mean(&xs));
+            stds.push(stats::std(&xs));
+        }
+        assert!(stats::pearson(&means, &stds) > 0.8);
+    }
+
+    #[test]
+    fn reads_are_nonnegative() {
+        let cfg = DeviceConfig {
+            read_noise_a: 0.5, // exaggerated noise
+            ..Default::default()
+        };
+        let mut rng = Pcg64::new(3);
+        let mut arr = MemristorArray::new(1, 1, cfg);
+        arr.program(0, 0, 0.01, &mut rng);
+        for _ in 0..1000 {
+            assert!(arr.read(0, 0, &mut rng) >= 0.0);
+        }
+    }
+
+    #[test]
+    fn program_verify_converges() {
+        let mut rng = Pcg64::new(4);
+        let mut arr = MemristorArray::new(1, 1, DeviceConfig::default());
+        let pulses = arr.program_verify(0, 0, 1.0, 0.05, 50, &mut rng);
+        assert!(pulses <= 50);
+        assert!((arr.read_mean(0, 0) - 1.0).abs() <= 0.05 + 1e-9);
+    }
+
+    #[test]
+    fn characterization_shapes() {
+        let ch = characterize(&DeviceConfig::default(), 100, 50, 1.0, 5, 1);
+        assert_eq!(ch.means.len(), 100);
+        assert_eq!(ch.stds.len(), 100);
+        assert_eq!(ch.traces.len(), 5);
+        assert_eq!(ch.traces[0].1.len(), 50);
+    }
+}

@@ -1,0 +1,288 @@
+//! Shared machinery for the figure harness: ablation-variant construction,
+//! trace building, and tuned-threshold retrieval.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::budget::BudgetModel;
+use crate::coordinator::dynmodel::{NativePointNetModel, NativeResNetModel};
+use crate::coordinator::{CenterSource, Engine, ExitMemory, ThresholdConfig};
+use crate::crossbar::ConverterConfig;
+use crate::device::DeviceConfig;
+use crate::model::{DatasetBundle, ModelBundle};
+use crate::nn::pointnet::NativePointNet;
+use crate::nn::resnet::WeightSource;
+use crate::nn::{NativeResNet, NoiseSpec};
+use crate::opt::{self, ExitTrace, Objective};
+use crate::util::rng::Pcg64;
+
+/// The ablation variants of Fig. 3e / 5e.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Variant {
+    /// Static full-precision software (SFP).
+    Sfp,
+    /// Static ternary-quantized software (Qun).
+    Qun,
+    /// Early-exit full-precision (EE).
+    Ee,
+    /// Early-exit ternary (EE.Qun).
+    EeQun,
+    /// Early-exit ternary + device noise, ideal converters (EE.Qun+Noise).
+    EeQunNoise,
+    /// Full macro simulation: noise + DAC/ADC quantization (Mem).
+    Mem,
+}
+
+impl Variant {
+    pub fn all() -> [Variant; 6] {
+        [
+            Variant::Sfp,
+            Variant::Qun,
+            Variant::Ee,
+            Variant::EeQun,
+            Variant::EeQunNoise,
+            Variant::Mem,
+        ]
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Variant::Sfp => "SFP",
+            Variant::Qun => "Qun",
+            Variant::Ee => "EE",
+            Variant::EeQun => "EE.Qun",
+            Variant::EeQunNoise => "EE.Qun+Noise",
+            Variant::Mem => "Mem",
+        }
+    }
+
+    pub fn weight_source(&self) -> WeightSource {
+        match self {
+            Variant::Sfp | Variant::Ee => WeightSource::FullPrecision,
+            _ => WeightSource::Ternary,
+        }
+    }
+
+    pub fn center_source(&self) -> CenterSource {
+        match self {
+            Variant::Sfp | Variant::Ee => CenterSource::FullPrecision,
+            _ => CenterSource::TernaryQ,
+        }
+    }
+
+    pub fn noise_spec(&self) -> NoiseSpec {
+        match self {
+            Variant::Sfp | Variant::Qun | Variant::Ee | Variant::EeQun => {
+                NoiseSpec::Digital
+            }
+            // deployment-style programming: the raw 15% single-shot spread
+            // is characterized in Fig. 4; inference arrays are programmed
+            // with write-verify (tol 4%, <=16 pulses), as on real platforms
+            Variant::EeQunNoise => NoiseSpec::Analog {
+                dev: DeviceConfig::default().with_verify(0.04, 16),
+                conv: ConverterConfig::ideal(),
+            },
+            Variant::Mem => NoiseSpec::Analog {
+                dev: DeviceConfig::default().with_verify(0.04, 16),
+                conv: ConverterConfig::default(),
+            },
+        }
+    }
+
+    pub fn is_dynamic(&self) -> bool {
+        !matches!(self, Variant::Sfp | Variant::Qun)
+    }
+}
+
+pub struct Setup {
+    pub artifacts: PathBuf,
+    pub samples: usize,
+}
+
+impl Setup {
+    pub fn new(artifacts: &Path, samples: usize) -> Self {
+        Setup {
+            artifacts: artifacts.to_path_buf(),
+            samples,
+        }
+    }
+
+    pub fn resnet(&self) -> Result<(ModelBundle, DatasetBundle)> {
+        Ok((
+            ModelBundle::load(&self.artifacts, "resnet")?,
+            DatasetBundle::load(&self.artifacts, "mnist")?,
+        ))
+    }
+
+    pub fn pointnet(&self) -> Result<(ModelBundle, DatasetBundle)> {
+        Ok((
+            ModelBundle::load(&self.artifacts, "pointnet")?,
+            DatasetBundle::load(&self.artifacts, "modelnet")?,
+        ))
+    }
+}
+
+/// Build a native engine for one model/variant.
+pub fn resnet_engine(
+    bundle: &ModelBundle,
+    v: Variant,
+    seed: u64,
+) -> Result<Engine<NativeResNetModel>> {
+    let spec = v.noise_spec();
+    let mut rng = Pcg64::new(seed);
+    let net = NativeResNet::build(bundle, v.weight_source(), &spec, &mut rng)?;
+    let model = NativeResNetModel::new(net, bundle.classes, 28, seed ^ 0xbeef);
+    // the analogue CAM stores ternary centers; FP variants use exact search
+    let mem_spec = if v.center_source() == CenterSource::FullPrecision {
+        NoiseSpec::Digital
+    } else {
+        spec
+    };
+    let memory = ExitMemory::build(bundle, v.center_source(), &mem_spec, seed ^ 0xcafe)?;
+    Ok(Engine::new(
+        model,
+        memory,
+        vec![2.0; bundle.blocks], // placeholder; callers set thresholds
+    ))
+}
+
+pub fn pointnet_engine(
+    bundle: &ModelBundle,
+    v: Variant,
+    seed: u64,
+) -> Result<Engine<NativePointNetModel>> {
+    let spec = v.noise_spec();
+    let mut rng = Pcg64::new(seed);
+    let net = NativePointNet::build(bundle, v.weight_source(), &spec, &mut rng)?;
+    let model = NativePointNetModel::new(net, bundle.classes, seed ^ 0xbeef);
+    let mem_spec = if v.center_source() == CenterSource::FullPrecision {
+        NoiseSpec::Digital
+    } else {
+        spec
+    };
+    let memory = ExitMemory::build(bundle, v.center_source(), &mem_spec, seed ^ 0xcafe)?;
+    Ok(Engine::new(model, memory, vec![2.0; bundle.blocks]))
+}
+
+/// Record a test-split trace with a native engine.
+pub fn trace_test<M: crate::coordinator::DynModel>(
+    engine: &Engine<M>,
+    data: &DatasetBundle,
+    n: usize,
+    batch: usize,
+) -> Result<ExitTrace> {
+    let n = n.min(data.n_test());
+    engine.record_trace(
+        &data.x_test[..n * data.sample_len],
+        data.sample_len,
+        &data.y_test[..n],
+        batch,
+    )
+}
+
+/// Record a train-split trace (threshold calibration data).
+pub fn trace_train<M: crate::coordinator::DynModel>(
+    engine: &Engine<M>,
+    data: &DatasetBundle,
+    n: usize,
+    batch: usize,
+) -> Result<ExitTrace> {
+    let n = n.min(data.n_train());
+    engine.record_trace(
+        &data.x_train[..n * data.sample_len],
+        data.sample_len,
+        &data.y_train[..n],
+        batch,
+    )
+}
+
+/// Tuned thresholds: load `<model>/thresholds.json` if present, else run a
+/// quick TPE on the calibration trace and persist the result.
+pub fn tuned_thresholds(
+    bundle: &ModelBundle,
+    calib: &ExitTrace,
+    budget: &BudgetModel,
+    iters: usize,
+) -> Result<ThresholdConfig> {
+    let path = bundle.dir.join("thresholds.json");
+    if let Ok(t) = ThresholdConfig::load(&path) {
+        if t.values.len() == bundle.blocks {
+            return Ok(t);
+        }
+    }
+    let objective = Objective::default();
+    let cfg = opt::tpe::TpeConfig {
+        n_iters: iters,
+        ..Default::default()
+    };
+    let result = opt::tpe::optimize(calib, budget, &objective, &cfg);
+    let t = ThresholdConfig {
+        values: result.best.thresholds.clone(),
+        accuracy: Some(result.best.accuracy),
+        budget_drop: Some(result.best.budget_drop),
+    };
+    let _ = t.save(&path);
+    Ok(t)
+}
+
+/// Confusion matrix from predictions.
+pub fn confusion(preds: &[u16], labels: &[u16], classes: usize) -> Vec<Vec<usize>> {
+    let mut m = vec![vec![0usize; classes]; classes];
+    for (&p, &l) in preds.iter().zip(labels) {
+        if (l as usize) < classes && (p as usize) < classes {
+            m[l as usize][p as usize] += 1;
+        }
+    }
+    m
+}
+
+/// Render a confusion matrix as rows of normalized percentages.
+pub fn render_confusion(m: &[Vec<usize>]) -> String {
+    let mut out = String::new();
+    out.push_str("true\\pred");
+    for c in 0..m.len() {
+        out.push_str(&format!("{c:>6}"));
+    }
+    out.push('\n');
+    for (l, row) in m.iter().enumerate() {
+        let total: usize = row.iter().sum();
+        out.push_str(&format!("{l:>9}"));
+        for &v in row {
+            let pct = if total > 0 {
+                100.0 * v as f64 / total as f64
+            } else {
+                0.0
+            };
+            out.push_str(&format!("{pct:>6.1}"));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn variant_table() {
+        assert_eq!(Variant::all().len(), 6);
+        assert_eq!(Variant::Sfp.weight_source(), WeightSource::FullPrecision);
+        assert_eq!(Variant::Mem.weight_source(), WeightSource::Ternary);
+        assert!(!Variant::Qun.is_dynamic());
+        assert!(Variant::EeQun.is_dynamic());
+        assert!(matches!(Variant::Qun.noise_spec(), NoiseSpec::Digital));
+        assert!(Variant::Mem.noise_spec().is_analog());
+    }
+
+    #[test]
+    fn confusion_math() {
+        let m = confusion(&[0, 1, 1, 0], &[0, 1, 0, 0], 2);
+        assert_eq!(m[0][0], 2);
+        assert_eq!(m[0][1], 1);
+        assert_eq!(m[1][1], 1);
+        let txt = render_confusion(&m);
+        assert!(txt.contains("66.7"));
+    }
+}

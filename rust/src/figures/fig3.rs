@@ -1,0 +1,249 @@
+//! Fig. 3 — dynamic ResNet on (synthetic) MNIST:
+//! 3b–d t-SNE + class distances, 3e ablation, 3f confusion, 3g OPs/layer +
+//! pass-through, 3h energy breakdown.
+
+use anyhow::Result;
+
+use super::common::{self, Setup, Variant};
+use crate::budget::BudgetModel;
+use crate::energy::EnergyModel;
+use crate::tsne;
+
+pub fn fig3bcd(setup: &Setup) -> Result<String> {
+    let (bundle, data) = setup.resnet()?;
+    let mut out = String::from("== Fig 3b-d: search-vector embeddings (t-SNE) ==\n");
+    let engine = common::resnet_engine(&bundle, Variant::EeQun, 5)?;
+    let n = setup.samples.min(100).min(data.n_test());
+    let trace_needed = [1usize, 4, 8]; // blocks 2, 5, 9 in 1-based counting
+    // collect per-block svs by re-running the model
+    use crate::coordinator::DynModel;
+    let mut svs_per_block: Vec<Vec<f32>> = vec![Vec::new(); bundle.blocks];
+    for s in 0..n {
+        let input = data.test_sample(s);
+        let mut state = engine.model.init(input, 1)?;
+        for e in 0..bundle.blocks {
+            let sv = engine.model.step(e, &mut state)?;
+            svs_per_block[e].extend(sv);
+        }
+    }
+    for &b in &trace_needed {
+        let dim = bundle.exit_dims[b];
+        let (centers, classes, cdim) = bundle.centers_q(b)?;
+        assert_eq!(dim, cdim);
+        // embed samples + centers together
+        let mut x: Vec<f64> = svs_per_block[b].iter().map(|&v| v as f64).collect();
+        x.extend(centers.iter().map(|&v| v as f64));
+        let total = n + classes;
+        let emb = tsne::tsne(&x, total, dim, &tsne::TsneConfig::default());
+        let mut labels: Vec<usize> =
+            data.y_test[..n].iter().map(|&v| v as usize).collect();
+        labels.extend(0..classes);
+        let flat: Vec<f64> = emb.iter().flat_map(|p| [p[0], p[1]]).collect();
+        let (intra, inter) = tsne::class_distances(&flat, total, 2, &labels);
+        let (ri, re) = tsne::class_distances(&x, total, dim, &labels);
+        out.push_str(&format!(
+            "block {:>2}: embedding intra={:.2} inter={:.2} (ratio {:.2}) | \
+             raw-sv intra={:.3} inter={:.3} (ratio {:.2})\n",
+            b + 1,
+            intra,
+            inter,
+            inter / intra.max(1e-9),
+            ri,
+            re,
+            re / ri.max(1e-9)
+        ));
+        // a few embedded points for plotting
+        for s in 0..4.min(n) {
+            out.push_str(&format!(
+                "  sample{} label={} at ({:+.2}, {:+.2})\n",
+                s, labels[s], emb[s][0], emb[s][1]
+            ));
+        }
+    }
+    out.push_str(
+        "expectation: inter/intra ratio grows with depth (deeper exits separate classes better)\n",
+    );
+    Ok(out)
+}
+
+pub struct AblationRow {
+    pub label: &'static str,
+    pub accuracy: f64,
+    pub budget_drop: f64,
+}
+
+/// Fig. 3e ablation rows (also reused by the bench harness).
+pub fn ablation(setup: &Setup) -> Result<Vec<AblationRow>> {
+    let (bundle, data) = setup.resnet()?;
+    let budget = BudgetModel::new(
+        bundle.block_ops.clone(),
+        &bundle.exit_dims,
+        bundle.classes,
+    );
+    let n = setup.samples.min(data.n_test());
+    let mut rows = Vec::new();
+    // calibrate thresholds once, on the ternary-digital variant
+    let calib_engine = common::resnet_engine(&bundle, Variant::EeQun, 11)?;
+    let calib = common::trace_train(&calib_engine, &data, 500, 25)?;
+    let thr = common::tuned_thresholds(&bundle, &calib, &budget, 300)?;
+
+    for v in Variant::all() {
+        let engine = common::resnet_engine(&bundle, v, 21)?;
+        let trace = common::trace_test(&engine, &data, n, 25)?;
+        if v.is_dynamic() {
+            let ev = trace.evaluate(&thr.values);
+            let b = budget.summarize(&ev.exits);
+            rows.push(AblationRow {
+                label: v.label(),
+                accuracy: ev.accuracy,
+                budget_drop: b.budget_drop,
+            });
+        } else {
+            rows.push(AblationRow {
+                label: v.label(),
+                accuracy: trace.full_depth_accuracy(),
+                budget_drop: 0.0,
+            });
+        }
+    }
+    Ok(rows)
+}
+
+pub fn fig3e(setup: &Setup) -> Result<String> {
+    let rows = ablation(setup)?;
+    let mut out = String::from(
+        "== Fig 3e: ResNet/MNIST ablation ==\n\
+         paper:  SFP 98.0 | Qun 96.5 | EE 97.5 | EE.Qun 96.0 | +Noise 96.1 | Mem 96.0; budget drop 48.1%\n",
+    );
+    for r in &rows {
+        out.push_str(&format!(
+            "{:<14} accuracy {:>6.2}%   budget drop {:>6.2}%\n",
+            r.label,
+            r.accuracy * 100.0,
+            r.budget_drop * 100.0
+        ));
+    }
+    Ok(out)
+}
+
+pub fn fig3f(setup: &Setup) -> Result<String> {
+    let (bundle, data) = setup.resnet()?;
+    let budget = BudgetModel::new(
+        bundle.block_ops.clone(),
+        &bundle.exit_dims,
+        bundle.classes,
+    );
+    let n = setup.samples.min(data.n_test());
+    let calib_engine = common::resnet_engine(&bundle, Variant::EeQun, 11)?;
+    let calib = common::trace_train(&calib_engine, &data, 500, 25)?;
+    let thr = common::tuned_thresholds(&bundle, &calib, &budget, 300)?;
+    let engine = common::resnet_engine(&bundle, Variant::Mem, 33)?;
+    let trace = common::trace_test(&engine, &data, n, 25)?;
+    let ev = trace.evaluate(&thr.values);
+    let labels: Vec<u16> = data.y_test[..n].iter().map(|&v| v as u16).collect();
+    let m = common::confusion(&ev.preds, &labels, bundle.classes);
+    Ok(format!(
+        "== Fig 3f: confusion matrix (Mem, % per true class) ==\naccuracy {:.2}%\n{}",
+        ev.accuracy * 100.0,
+        common::render_confusion(&m)
+    ))
+}
+
+pub fn fig3g(setup: &Setup) -> Result<String> {
+    let (bundle, data) = setup.resnet()?;
+    let budget = BudgetModel::new(
+        bundle.block_ops.clone(),
+        &bundle.exit_dims,
+        bundle.classes,
+    );
+    let n = setup.samples.min(data.n_test());
+    let calib_engine = common::resnet_engine(&bundle, Variant::EeQun, 11)?;
+    let calib = common::trace_train(&calib_engine, &data, 500, 25)?;
+    let thr = common::tuned_thresholds(&bundle, &calib, &budget, 300)?;
+    let engine = common::resnet_engine(&bundle, Variant::Mem, 33)?;
+    let trace = common::trace_test(&engine, &data, n, 25)?;
+    let ev = trace.evaluate(&thr.values);
+    let s = budget.summarize(&ev.exits);
+    let mut out = String::from(
+        "== Fig 3g: OPs per block + pass-through probability ==\n\
+         block |      OPs/sample | exit count | P(pass through)\n",
+    );
+    for i in 0..bundle.blocks {
+        out.push_str(&format!(
+            "{:>5} | {:>15.3e} | {:>10} | {:>6.3}\n",
+            i + 1,
+            budget.block_ops[i],
+            s.exit_hist[i],
+            s.pass_through[i]
+        ));
+    }
+    out.push_str(&format!(
+        "mean dynamic OPs {:.3e} vs static {:.3e} -> budget drop {:.1}%\n",
+        s.mean_dynamic_ops,
+        s.static_ops,
+        s.budget_drop * 100.0
+    ));
+    Ok(out)
+}
+
+pub fn fig3h(setup: &Setup) -> Result<String> {
+    let (bundle, data) = setup.resnet()?;
+    let budget = BudgetModel::new(
+        bundle.block_ops.clone(),
+        &bundle.exit_dims,
+        bundle.classes,
+    );
+    let energy = EnergyModel::default();
+    let n = setup.samples.min(100).min(data.n_test());
+    let calib_engine = common::resnet_engine(&bundle, Variant::EeQun, 11)?;
+    let calib = common::trace_train(&calib_engine, &data, 500, 25)?;
+    let thr = common::tuned_thresholds(&bundle, &calib, &budget, 300)?;
+
+    // run the *real* crossbar simulation so counters are measured, not modelled
+    let engine = common::resnet_engine(&bundle, Variant::Mem, 33)?;
+    engine.model.net.take_counters(); // reset
+    engine.memory.take_counters();
+    let mut engine = engine;
+    engine.thresholds = thr.values.clone();
+    let input = &data.x_test[..n * data.sample_len];
+    let out_infer = engine.infer_batch(input, n)?;
+    let cim = engine.model.net.take_counters();
+    let cam = engine.memory.take_counters();
+
+    let exits: Vec<usize> = out_infer.iter().map(|o| o.exit).collect();
+    let b = budget.summarize(&exits);
+    let digital_ops = b.mean_dynamic_ops * n as f64 * 0.08; // act+norm+pool ops
+    let sort_ops = out_infer
+        .iter()
+        .map(|o| (o.exit + 1) * bundle.classes)
+        .sum::<usize>() as f64;
+    let hybrid = energy.hybrid(&cim, &cam, digital_ops, sort_ops);
+    let gpu_static = energy.gpu(b.static_ops * n as f64, n as f64);
+    let gpu_dynamic = energy.gpu(b.mean_dynamic_ops * n as f64, n as f64);
+
+    let mut out = format!(
+        "== Fig 3h: energy breakdown, {n} inferences (pJ) ==\n\
+         paper: GPU static 1.83e7, GPU dynamic 9.19e6, hybrid total 2.06e6 (-77.6%)\n\
+         GPU static  : {gpu_static:>12.3e}\n\
+         GPU dynamic : {gpu_dynamic:>12.3e}\n"
+    );
+    out.push_str(&format!(
+        "hybrid breakdown:\n  CIM memristor {:.3e}\n  CIM DAC/ADC  {:.3e}\n  \
+         CAM memristor {:.3e}\n  CAM DAC/ADC  {:.3e}\n  digital      {:.3e}\n  \
+         sorting      {:.3e}\n  TOTAL        {:.3e}\n",
+        hybrid.cim_memristor_pj,
+        hybrid.cim_converters_pj,
+        hybrid.cam_memristor_pj,
+        hybrid.cam_converters_pj,
+        hybrid.digital_pj,
+        hybrid.sort_pj,
+        hybrid.total()
+    ));
+    out.push_str(&format!(
+        "reduction vs GPU static: {:.1}% (paper 88.7% incl. dynamic gain; 77.6% vs dynamic)\n\
+         reduction vs GPU dynamic: {:.1}%\n",
+        (1.0 - hybrid.total() / gpu_static) * 100.0,
+        (1.0 - hybrid.total() / gpu_dynamic) * 100.0
+    ));
+    Ok(out)
+}

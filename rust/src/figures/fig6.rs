@@ -1,0 +1,164 @@
+//! Fig. 6 — the budget/accuracy trade-off machinery:
+//! 6a grid search frontier, 6b–g objective surface + TPE internals,
+//! 6h–k TPE convergence and per-layer threshold traces.
+
+use anyhow::Result;
+
+use super::common::{self, Setup, Variant};
+use crate::budget::BudgetModel;
+use crate::opt::{self, Objective};
+
+fn resnet_trace_and_budget(
+    setup: &Setup,
+) -> Result<(crate::opt::ExitTrace, BudgetModel)> {
+    let (bundle, data) = setup.resnet()?;
+    let budget = BudgetModel::new(
+        bundle.block_ops.clone(),
+        &bundle.exit_dims,
+        bundle.classes,
+    );
+    let engine = common::resnet_engine(&bundle, Variant::EeQun, 11)?;
+    let trace = common::trace_train(&engine, &data, 600, 25)?;
+    Ok((trace, budget))
+}
+
+pub fn fig6a(setup: &Setup) -> Result<String> {
+    let (trace, budget) = resnet_trace_and_budget(setup)?;
+    let obs = opt::grid::shared_threshold_sweep(
+        &trace,
+        &budget,
+        &Objective::default(),
+        0.3,
+        1.05,
+        16,
+    );
+    let mut out = String::from(
+        "== Fig 6a: grid search over a shared threshold ==\n\
+         threshold | accuracy | budget drop |  score\n",
+    );
+    for o in &obs {
+        out.push_str(&format!(
+            "{:>9.3} | {:>7.2}% | {:>10.2}% | {:>6.4}\n",
+            o.thresholds[0],
+            o.accuracy * 100.0,
+            o.budget_drop * 100.0,
+            o.score
+        ));
+    }
+    out.push_str("expectation: monotone trade-off frontier (lower thr -> more budget, less accuracy)\n");
+    Ok(out)
+}
+
+pub fn fig6bg(setup: &Setup) -> Result<String> {
+    let (trace, budget) = resnet_trace_and_budget(setup)?;
+    let o = Objective::default();
+    let mut out = String::from(
+        "== Fig 6b-c: objective score = Acc x (DCB/B)^w over the (acc, budget) plane ==\n\
+         acc\\DCB |   0.10   0.30   0.50   0.70\n",
+    );
+    for acc in [0.35, 0.55, 0.75, 0.95] {
+        out.push_str(&format!("{acc:>8.2} |"));
+        for dcb in [0.1, 0.3, 0.5, 0.7] {
+            out.push_str(&format!(" {:>6.3}", o.score(acc, dcb)));
+        }
+        out.push('\n');
+    }
+    // Fig 6d-g: run a short TPE and show the good/bad split evolving
+    let cfg = opt::tpe::TpeConfig {
+        n_iters: 60,
+        n_init: 20,
+        ..Default::default()
+    };
+    let r = opt::tpe::optimize(&trace, &budget, &o, &cfg);
+    let mut scores: Vec<f64> = r.history.iter().map(|h| h.score).collect();
+    scores.sort_by(|a, b| b.total_cmp(a));
+    let split = scores[(0.2 * scores.len() as f64).ceil() as usize - 1];
+    out.push_str(&format!(
+        "\n== Fig 6d-g: TPE internals after {} evaluations ==\n\
+         score* (gamma=0.2 split): {split:.4}\n\
+         good samples (l(x)): {}\nbad samples (g(x)): {}\n\
+         next candidates are drawn from l(x) and ranked by EI ~ l/g\n",
+        r.history.len(),
+        r.history.iter().filter(|h| h.score >= split).count(),
+        r.history.iter().filter(|h| h.score < split).count()
+    ));
+    Ok(out)
+}
+
+pub fn fig6hk(setup: &Setup) -> Result<String> {
+    let (trace, budget) = resnet_trace_and_budget(setup)?;
+    let o = Objective::default();
+    let cfg = opt::tpe::TpeConfig {
+        n_iters: 1000,
+        ..Default::default()
+    };
+    let r = opt::tpe::optimize(&trace, &budget, &o, &cfg);
+    let mut out = String::from(
+        "== Fig 6h: TPE iteration history (accuracy / budget drop / score, windowed means) ==\n\
+         iters      |   acc%  | budget% |  score\n",
+    );
+    for w in 0..10 {
+        let lo = w * 100;
+        let hi = (lo + 100).min(r.history.len());
+        let n = (hi - lo) as f64;
+        let acc: f64 = r.history[lo..hi].iter().map(|h| h.accuracy).sum::<f64>() / n;
+        let bud: f64 =
+            r.history[lo..hi].iter().map(|h| h.budget_drop).sum::<f64>() / n;
+        let sc: f64 = r.history[lo..hi].iter().map(|h| h.score).sum::<f64>() / n;
+        out.push_str(&format!(
+            "{:>4}..{:<4} | {:>6.2} | {:>6.2} | {:>6.4}\n",
+            lo,
+            hi,
+            acc * 100.0,
+            bud * 100.0,
+            sc
+        ));
+    }
+    // Fig 6i-j: thresholds of layers 4 and 5 over iterations
+    for dim in [3usize, 4] {
+        out.push_str(&format!(
+            "== Fig 6{}: threshold {} trace (windowed mean of evaluated candidates) ==\n",
+            if dim == 3 { 'i' } else { 'j' },
+            dim + 1
+        ));
+        for w in 0..10 {
+            let lo = w * 100;
+            let hi = (lo + 100).min(r.history.len());
+            let m: f64 = r.history[lo..hi]
+                .iter()
+                .map(|h| h.thresholds[dim] as f64)
+                .sum::<f64>()
+                / (hi - lo) as f64;
+            out.push_str(&format!("  iter {lo:>4}..{hi:<4}: {m:.3}\n"));
+        }
+    }
+    out.push_str(&format!(
+        "== Fig 6k: best score {:.4} (acc {:.2}%, budget drop {:.2}%) at thresholds {:?}\n\
+         paper: converges by ~400 iterations\n",
+        r.best.score,
+        r.best.accuracy * 100.0,
+        r.best.budget_drop * 100.0,
+        r.best
+            .thresholds
+            .iter()
+            .map(|t| (t * 1000.0).round() / 1000.0)
+            .collect::<Vec<_>>()
+    ));
+    // comparison baselines
+    let rnd = opt::random::search(&trace, &budget, &o, 0.3, 1.05, 1000, 97);
+    let cd = opt::grid::coordinate_descent(
+        &trace,
+        &budget,
+        &o,
+        &vec![0.9; trace.n_exits],
+        0.3,
+        1.05,
+        16,
+        3,
+    );
+    out.push_str(&format!(
+        "baselines: random-search best {:.4}, coordinate-descent best {:.4}\n",
+        rnd.best.score, cd.score
+    ));
+    Ok(out)
+}

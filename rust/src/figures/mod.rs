@@ -1,0 +1,69 @@
+//! Figure harness: every table and figure of the paper's evaluation,
+//! regenerated as text/CSV from the simulator + artifacts.
+//! Dispatch via `memdyn fig <id>` (see main.rs).
+
+pub mod common;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+
+use anyhow::{anyhow, Result};
+
+use common::Setup;
+
+/// All known figure ids in run order.
+pub const ALL: &[&str] = &[
+    "3bcd", "3e", "3f", "3g", "3h", "4a", "4bcde", "4f", "4g", "4h", "4i",
+    "5bcd", "5e", "5f", "5g", "5h", "6a", "6bg", "6hk", "tables",
+];
+
+pub fn run(id: &str, setup: &Setup) -> Result<String> {
+    match id {
+        "3bcd" => fig3::fig3bcd(setup),
+        "3e" => fig3::fig3e(setup),
+        "3f" => fig3::fig3f(setup),
+        "3g" => fig3::fig3g(setup),
+        "3h" => fig3::fig3h(setup),
+        "4a" => fig4::fig4a(setup),
+        "4bcde" => fig4::fig4bcde(setup),
+        "4f" => fig4::fig4f(setup),
+        "4g" => fig4::fig4g(setup),
+        "4h" => fig4::fig4h(setup),
+        "4i" => fig4::fig4i(setup),
+        "5bcd" => fig5::fig5bcd(setup),
+        "5e" => fig5::fig5e(setup),
+        "5f" => fig5::fig5f(setup),
+        "5g" => fig5::fig5g(setup),
+        "5h" => fig5::fig5h(setup),
+        "6a" => fig6::fig6a(setup),
+        "6bg" => fig6::fig6bg(setup),
+        "6hk" => fig6::fig6hk(setup),
+        "tables" => tables(setup),
+        other => Err(anyhow!(
+            "unknown figure '{other}' (known: {})",
+            ALL.join(", ")
+        )),
+    }
+}
+
+/// Supplementary-table analogue: per-op energy of the modelled macro.
+pub fn tables(_setup: &Setup) -> Result<String> {
+    let e = crate::energy::EnergyModel::default();
+    Ok(format!(
+        "== Supplementary Tables 2/3 analogue: per-op energies (pJ) ==\n\
+         memristor device read : {:.2e}\n\
+         DAC conversion (8b)   : {:.2e}\n\
+         ADC conversion (14b)  : {:.2e}\n\
+         digital op            : {:.2e}\n\
+         sort/compare op       : {:.2e}\n\
+         GPU effective op      : {:.2e} (+{:.2e}/inference overhead)\n",
+        e.dev_read_pj,
+        e.dac_pj,
+        e.adc_pj,
+        e.digital_op_pj,
+        e.sort_op_pj,
+        e.gpu_op_pj,
+        e.gpu_overhead_pj
+    ))
+}

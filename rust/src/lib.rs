@@ -1,0 +1,33 @@
+//! # memdyn
+//!
+//! Reproduction of *"Dynamic neural network with memristive CIM and CAM for
+//! 2D and 3D vision"* (Zhang et al., 2024) as a three-layer Rust + JAX +
+//! Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the coordinator: early-exit inference
+//!   engine, depth-aware dynamic batching, threshold tuning (TPE), energy /
+//!   budget accounting, and the full analogue substrate (memristor device
+//!   model, crossbar CIM, associative CAM).
+//! * **Layer 2 (python/compile)** — JAX ResNet-11 and PointNet++ lowered
+//!   per exit block to HLO text at build time.
+//! * **Layer 1 (python/compile/kernels)** — Pallas CIM/CAM kernels inside
+//!   those artifacts.
+//!
+//! Python never runs at inference time: `runtime` loads the AOT artifacts
+//! via the PJRT C API, and the analogue (`Crossbar`) backend is pure Rust.
+
+pub mod budget;
+pub mod cam;
+pub mod figures;
+pub mod coordinator;
+pub mod runtime;
+pub mod data;
+pub mod energy;
+pub mod opt;
+pub mod tsne;
+pub mod model;
+pub mod nn;
+pub mod cim;
+pub mod crossbar;
+pub mod device;
+pub mod util;

@@ -1,0 +1,261 @@
+//! memdyn CLI — leader entrypoint.
+//!
+//! ```text
+//! memdyn fig <id|all> [--artifacts DIR] [--samples N]   regenerate figures
+//! memdyn tune [--model resnet|pointnet] [--iters N]     TPE threshold tuning
+//! memdyn infer --model resnet --index I [--backend xla|native]
+//! memdyn serve [--model resnet] [--requests N] [--rate R] [--max-batch B]
+//! memdyn characterize                                   device statistics
+//! ```
+
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use memdyn::budget::BudgetModel;
+use memdyn::coordinator::dynmodel::XlaResNetModel;
+use memdyn::coordinator::{
+    CenterSource, Engine, ExitMemory, Server, ServerConfig, ThresholdConfig,
+};
+use memdyn::data;
+use memdyn::figures::{self, common as figcommon};
+use memdyn::model::{artifacts_dir, DatasetBundle, ModelBundle};
+use memdyn::nn::NoiseSpec;
+use memdyn::opt::{self, Objective};
+use memdyn::runtime::Runtime;
+use memdyn::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let result = match cmd {
+        "fig" => cmd_fig(&args),
+        "tune" => cmd_tune(&args),
+        "infer" => cmd_infer(&args),
+        "serve" => cmd_serve(&args),
+        "characterize" => cmd_characterize(&args),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "memdyn — semantic-memory dynamic NN with memristive CIM + CAM\n\n\
+         USAGE:\n  memdyn fig <id|all> [--artifacts DIR] [--samples N]\n  \
+         memdyn tune [--model resnet|pointnet] [--iters N] [--artifacts DIR]\n  \
+         memdyn infer --index I [--model resnet] [--backend xla|native]\n  \
+         memdyn serve [--requests N] [--rate R] [--max-batch B] [--wait-ms W]\n  \
+         memdyn characterize\n\nFIGURES: {}",
+        figures::ALL.join(", ")
+    );
+}
+
+fn cmd_fig(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args.get("artifacts"));
+    let samples = args.get_usize("samples", 200);
+    let setup = figcommon::Setup::new(&dir, samples);
+    let id = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow!("usage: memdyn fig <id|all>"))?;
+    if id == "all" {
+        for f in figures::ALL {
+            let t0 = std::time::Instant::now();
+            match figures::run(f, &setup) {
+                Ok(text) => {
+                    println!("{text}");
+                    println!("[fig {f} took {:.1}s]\n", t0.elapsed().as_secs_f64());
+                }
+                Err(e) => println!("[fig {f} FAILED: {e:#}]\n"),
+            }
+        }
+    } else {
+        println!("{}", figures::run(id, &setup)?);
+    }
+    Ok(())
+}
+
+fn cmd_tune(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args.get("artifacts"));
+    let model = args.get_or("model", "resnet");
+    let iters = args.get_usize("iters", 400);
+    let (bundle, dataset) = match model {
+        "resnet" => (
+            ModelBundle::load(&dir, "resnet")?,
+            DatasetBundle::load(&dir, "mnist")?,
+        ),
+        "pointnet" => (
+            ModelBundle::load(&dir, "pointnet")?,
+            DatasetBundle::load(&dir, "modelnet")?,
+        ),
+        other => return Err(anyhow!("unknown model {other}")),
+    };
+    let budget = BudgetModel::new(
+        bundle.block_ops.clone(),
+        &bundle.exit_dims,
+        bundle.classes,
+    );
+    println!("[tune] recording calibration trace ({model})...");
+    let trace = if model == "resnet" {
+        let engine =
+            figcommon::resnet_engine(&bundle, figcommon::Variant::EeQun, 11)?;
+        figcommon::trace_train(&engine, &dataset, 600, 25)?
+    } else {
+        let engine =
+            figcommon::pointnet_engine(&bundle, figcommon::Variant::EeQun, 71)?;
+        figcommon::trace_train(&engine, &dataset, 200, 10)?
+    };
+    println!("[tune] running TPE for {iters} iterations...");
+    let cfg = opt::tpe::TpeConfig {
+        n_iters: iters,
+        ..Default::default()
+    };
+    let r = opt::tpe::optimize(&trace, &budget, &Objective::default(), &cfg);
+    let t = ThresholdConfig {
+        values: r.best.thresholds.clone(),
+        accuracy: Some(r.best.accuracy),
+        budget_drop: Some(r.best.budget_drop),
+    };
+    let path = bundle.dir.join("thresholds.json");
+    t.save(&path)?;
+    println!(
+        "[tune] best score {:.4}: accuracy {:.2}%, budget drop {:.2}%\n\
+         [tune] thresholds {:?}\n[tune] saved to {path:?}",
+        r.best.score,
+        r.best.accuracy * 100.0,
+        r.best.budget_drop * 100.0,
+        t.values
+    );
+    Ok(())
+}
+
+fn cmd_infer(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args.get("artifacts"));
+    let index = args.get_usize("index", 0);
+    let backend = args.get_or("backend", "xla");
+    let bundle = ModelBundle::load(&dir, "resnet")?;
+    let dataset = DatasetBundle::load(&dir, "mnist")?;
+    let thr = ThresholdConfig::load_or_default(
+        &bundle.dir.join("thresholds.json"),
+        bundle.blocks,
+        0.9,
+    );
+    let input = dataset.test_sample(index).to_vec();
+    let label = dataset.y_test[index];
+    let outcome = match backend {
+        "xla" => {
+            let rt = Runtime::cpu()?;
+            let model = XlaResNetModel::load(&rt, &bundle)?;
+            let memory = ExitMemory::build(
+                &bundle,
+                CenterSource::TernaryQ,
+                &NoiseSpec::Digital,
+                7,
+            )?;
+            let engine = Engine::new(model, memory, thr.values);
+            engine.infer_batch(&input, 1)?[0]
+        }
+        "native" => {
+            let mut engine =
+                figcommon::resnet_engine(&bundle, figcommon::Variant::Mem, 9)?;
+            engine.thresholds = thr.values;
+            engine.infer_batch(&input, 1)?[0]
+        }
+        other => return Err(anyhow!("unknown backend {other}")),
+    };
+    println!(
+        "sample {index}: predicted {} (true {label}) — exit block {}{} sim {:.3}",
+        outcome.class,
+        outcome.exit + 1,
+        if outcome.exited_early {
+            " (early)"
+        } else {
+            " (head)"
+        },
+        outcome.similarity
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args.get("artifacts"));
+    let n_requests = args.get_usize("requests", 200);
+    let rate = args.get_f64("rate", 500.0);
+    let max_batch = args.get_usize("max-batch", 8);
+    let wait_ms = args.get_usize("wait-ms", 2);
+    let bundle = ModelBundle::load(&dir, "resnet")?;
+    let dataset = DatasetBundle::load(&dir, "mnist")?;
+    let thr = ThresholdConfig::load_or_default(
+        &bundle.dir.join("thresholds.json"),
+        bundle.blocks,
+        0.9,
+    );
+    let dir2 = dir.clone();
+    let thr_values = thr.values.clone();
+    let server = Server::start(
+        move || {
+            let bundle = ModelBundle::load(&dir2, "resnet")?;
+            let rt = Runtime::cpu()?;
+            let model = XlaResNetModel::load(&rt, &bundle)?;
+            let memory = ExitMemory::build(
+                &bundle,
+                CenterSource::TernaryQ,
+                &NoiseSpec::Digital,
+                7,
+            )?;
+            Ok(Engine::new(model, memory, thr_values))
+        },
+        ServerConfig {
+            max_batch,
+            max_wait: Duration::from_millis(wait_ms as u64),
+            queue_depth: 4096,
+        },
+    );
+    let client = server.client();
+    let stream = data::poisson_stream(rate, n_requests, dataset.n_test(), 5);
+    println!(
+        "[serve] {n_requests} requests, poisson {rate}/s, max_batch {max_batch}, wait {wait_ms}ms"
+    );
+    let t0 = std::time::Instant::now();
+    let mut pending = Vec::with_capacity(n_requests);
+    let mut labels = Vec::with_capacity(n_requests);
+    for a in &stream {
+        let due = Duration::from_micros(a.at_us);
+        if let Some(sleep) = due.checked_sub(t0.elapsed()) {
+            std::thread::sleep(sleep);
+        }
+        pending.push(client.submit(dataset.test_sample(a.sample).to_vec())?);
+        labels.push(dataset.y_test[a.sample]);
+    }
+    let mut correct = 0usize;
+    for (rx, label) in pending.into_iter().zip(labels) {
+        let r = rx.recv().map_err(|_| anyhow!("request dropped"))?;
+        if r.outcome.class == label as usize {
+            correct += 1;
+        }
+    }
+    drop(client);
+    let snap = server.shutdown()?;
+    println!(
+        "[serve] accuracy {:.2}%",
+        100.0 * correct as f64 / n_requests as f64
+    );
+    println!("[serve] {}", snap.report());
+    Ok(())
+}
+
+fn cmd_characterize(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args.get("artifacts"));
+    let setup = figcommon::Setup::new(&dir, 100);
+    println!("{}", figures::fig4::fig4a(&setup)?);
+    println!("{}", figures::fig4::fig4bcde(&setup)?);
+    println!("{}", figures::fig4::fig4f(&setup)?);
+    Ok(())
+}

@@ -1,0 +1,222 @@
+//! Artifact bundle loading: everything `make artifacts` exported — model
+//! metadata (index.json), ternary + FP weights, semantic centers, per-block
+//! HLO file names, and dataset binaries.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::bin_io::Bundle;
+use crate::util::json::Json;
+
+/// A loaded model: weights + centers + artifact layout.
+pub struct ModelBundle {
+    pub name: String,
+    pub dir: PathBuf,
+    pub meta: Json,
+    pub weights: Bundle,
+    pub blocks: usize,
+    pub classes: usize,
+    pub exit_dims: Vec<usize>,
+    pub block_ops: Vec<f64>,
+    pub buckets: Vec<usize>,
+}
+
+impl ModelBundle {
+    pub fn load(artifacts: &Path, name: &str) -> Result<Self> {
+        let index_text = std::fs::read_to_string(artifacts.join("index.json"))
+            .with_context(|| format!("reading {:?}", artifacts.join("index.json")))?;
+        let index = Json::parse(&index_text).map_err(|e| anyhow!("index.json: {e}"))?;
+        let meta = index
+            .path(&["models", name])
+            .ok_or_else(|| anyhow!("model '{name}' not in index.json"))?
+            .clone();
+        let dir = artifacts.join(name);
+        let weights = Bundle::load(&dir.join("weights"))
+            .with_context(|| format!("loading {name} weights bundle"))?;
+        let blocks = meta
+            .get("blocks")
+            .and_then(|b| b.as_usize())
+            .ok_or_else(|| anyhow!("{name}: missing blocks"))?;
+        let classes = meta.get("classes").and_then(|c| c.as_usize()).unwrap_or(10);
+        let exit_dims = meta
+            .get("exit_dims")
+            .and_then(|d| d.usize_vec())
+            .ok_or_else(|| anyhow!("{name}: missing exit_dims"))?;
+        let block_ops = meta
+            .get("block_ops")
+            .and_then(|d| d.f64_vec())
+            .ok_or_else(|| anyhow!("{name}: missing block_ops"))?;
+        let buckets = meta
+            .get("buckets")
+            .and_then(|d| d.usize_vec())
+            .unwrap_or_else(|| vec![1]);
+        Ok(ModelBundle {
+            name: name.to_string(),
+            dir,
+            meta,
+            weights,
+            blocks,
+            classes,
+            exit_dims,
+            block_ops,
+            buckets,
+        })
+    }
+
+    /// Ternary semantic centers of one exit: `(data, classes, dim)`.
+    pub fn centers_q(&self, exit: usize) -> Result<(Vec<i8>, usize, usize)> {
+        let (shape, data) = self
+            .weights
+            .i8(&format!("centers_q.{exit}"))
+            .map_err(|e| anyhow!("{e}"))?;
+        Ok((data.to_vec(), shape[0], shape[1]))
+    }
+
+    /// Full-precision semantic centers of one exit (row-major, classes x dim).
+    pub fn centers_fp(&self, exit: usize) -> Result<(Vec<f32>, usize, usize)> {
+        let (shape, data) = self
+            .weights
+            .f32(&format!("centers_fp.{exit}"))
+            .map_err(|e| anyhow!("{e}"))?;
+        Ok((data, shape[0], shape[1]))
+    }
+
+    /// All ternary centers, ordered by exit — CAM programming input.
+    pub fn all_centers_q(&self) -> Result<Vec<(Vec<i8>, usize, usize)>> {
+        (0..self.blocks).map(|e| self.centers_q(e)).collect()
+    }
+
+    /// Ternary weight tensor by param path (e.g. "blocks.0.w1").
+    pub fn q_i8(&self, path: &str) -> Result<(Vec<usize>, Vec<i8>)> {
+        let (shape, data) = self
+            .weights
+            .i8(&format!("q.{path}"))
+            .map_err(|e| anyhow!("{e}"))?;
+        Ok((shape.to_vec(), data.to_vec()))
+    }
+
+    /// f32 tensor from the quantized tree (norm scales/biases).
+    pub fn q_f32(&self, path: &str) -> Result<(Vec<usize>, Vec<f32>)> {
+        let (shape, data) = self
+            .weights
+            .f32(&format!("q.{path}"))
+            .map_err(|e| anyhow!("{e}"))?;
+        Ok((shape.to_vec(), data))
+    }
+
+    /// f32 tensor from the full-precision tree.
+    pub fn fp_f32(&self, path: &str) -> Result<(Vec<usize>, Vec<f32>)> {
+        let (shape, data) = self
+            .weights
+            .f32(&format!("fp.{path}"))
+            .map_err(|e| anyhow!("{e}"))?;
+        Ok((shape.to_vec(), data))
+    }
+
+    /// Per-exit feature standardization stats (`fp` selects the FP tree).
+    pub fn exit_stats(
+        &self,
+        exit: usize,
+        fp: bool,
+    ) -> Result<crate::coordinator::memory::ExitStats> {
+        let tree = if fp { "fp" } else { "q" };
+        let (_, mu) = self
+            .weights
+            .f32(&format!("stats_{tree}_mu.{exit}"))
+            .map_err(|e| anyhow!("{e}"))?;
+        let (_, sd) = self
+            .weights
+            .f32(&format!("stats_{tree}_sd.{exit}"))
+            .map_err(|e| anyhow!("{e}"))?;
+        Ok(crate::coordinator::memory::ExitStats { mu, sd })
+    }
+
+    /// HLO artifact path for a block key (e.g. "block_03_b8", "stem_b1").
+    pub fn hlo_path(&self, key: &str) -> Result<PathBuf> {
+        let f = self
+            .meta
+            .path(&["files", key])
+            .and_then(|f| f.as_str())
+            .ok_or_else(|| anyhow!("{}: no artifact '{key}'", self.name))?;
+        Ok(self.dir.join(f))
+    }
+
+    /// usize list from meta (e.g. "channels", "strides", "npoint").
+    pub fn meta_usizes(&self, key: &str) -> Result<Vec<usize>> {
+        self.meta
+            .get(key)
+            .and_then(|v| v.usize_vec())
+            .ok_or_else(|| anyhow!("{}: missing meta '{key}'", self.name))
+    }
+
+    pub fn meta_f64s(&self, key: &str) -> Result<Vec<f64>> {
+        self.meta
+            .get(key)
+            .and_then(|v| v.f64_vec())
+            .ok_or_else(|| anyhow!("{}: missing meta '{key}'", self.name))
+    }
+}
+
+/// Dataset split loaded from `artifacts/data/<name>`.
+pub struct DatasetBundle {
+    pub x_train: Vec<f32>,
+    pub y_train: Vec<i32>,
+    pub x_test: Vec<f32>,
+    pub y_test: Vec<i32>,
+    /// Per-sample feature count (28*28*1 for images, 256*3 for clouds).
+    pub sample_len: usize,
+    pub classes: usize,
+}
+
+impl DatasetBundle {
+    pub fn load(artifacts: &Path, name: &str) -> Result<Self> {
+        let b = Bundle::load(&artifacts.join("data").join(name))
+            .with_context(|| format!("loading dataset {name}"))?;
+        let (sx, x_train) = b.f32("x_train").map_err(|e| anyhow!("{e}"))?;
+        let sample_len: usize = sx[1..].iter().product();
+        let (_, x_test) = b.f32("x_test").map_err(|e| anyhow!("{e}"))?;
+        let (_, y_train) = b.i32("y_train").map_err(|e| anyhow!("{e}"))?;
+        let (_, y_test) = b.i32("y_test").map_err(|e| anyhow!("{e}"))?;
+        let classes = b
+            .meta
+            .get("classes")
+            .and_then(|c| c.as_usize())
+            .unwrap_or(10);
+        Ok(DatasetBundle {
+            x_train,
+            y_train: y_train.to_vec(),
+            x_test,
+            y_test: y_test.to_vec(),
+            sample_len,
+            classes,
+        })
+    }
+
+    pub fn n_train(&self) -> usize {
+        self.y_train.len()
+    }
+
+    pub fn n_test(&self) -> usize {
+        self.y_test.len()
+    }
+
+    pub fn test_sample(&self, i: usize) -> &[f32] {
+        &self.x_test[i * self.sample_len..(i + 1) * self.sample_len]
+    }
+
+    pub fn train_sample(&self, i: usize) -> &[f32] {
+        &self.x_train[i * self.sample_len..(i + 1) * self.sample_len]
+    }
+}
+
+/// Resolve the artifacts directory: `--artifacts` flag, env, or ./artifacts.
+pub fn artifacts_dir(flag: Option<&str>) -> PathBuf {
+    if let Some(f) = flag {
+        return PathBuf::from(f);
+    }
+    if let Ok(env) = std::env::var("MEMDYN_ARTIFACTS") {
+        return PathBuf::from(env);
+    }
+    PathBuf::from("artifacts")
+}

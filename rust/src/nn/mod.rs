@@ -1,0 +1,11 @@
+//! Native (Rust) neural-network stack: digital tensor ops, the
+//! weight-substrate abstraction, and the two backbones' native forwards.
+//! This is the analogue-backend twin of the JAX models in python/compile.
+
+pub mod ops;
+pub mod pointnet;
+pub mod resnet;
+pub mod weights;
+
+pub use resnet::{Feature, NativeResNet, WeightSource};
+pub use weights::{NoiseSpec, WeightMatrix};

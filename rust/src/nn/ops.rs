@@ -1,0 +1,289 @@
+//! Digital-domain tensor ops (the ZYNQ-core peripherals of the paper):
+//! im2col, GroupNorm/LayerNorm, ReLU, GAP, softmax.  All NHWC, row-major
+//! `Vec<f32>`.  These run per-sample on the request path, so the layouts
+//! are chosen for cache-friendly linear walks.
+
+/// SAME-padded im2col: NHWC `(n, h, w, c)` -> `(n*ho*wo, kh*kw*c)` patches
+/// with (kh, kw, c)-major tap ordering (matches HWIO weights and the JAX
+/// `im2col` in python/compile/kernels/conv.py).
+#[allow(clippy::too_many_arguments)]
+pub fn im2col(
+    x: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+) -> (Vec<f32>, usize, usize) {
+    let ho = h.div_ceil(stride);
+    let wo = w.div_ceil(stride);
+    // SAME padding offsets (match XLA convention for odd kernels)
+    let pad_h = ((ho - 1) * stride + kh).saturating_sub(h) / 2;
+    let pad_w = ((wo - 1) * stride + kw).saturating_sub(w) / 2;
+    let k = kh * kw * c;
+    let mut out = vec![0f32; n * ho * wo * k];
+    for ni in 0..n {
+        let img = &x[ni * h * w * c..(ni + 1) * h * w * c];
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let base = ((ni * ho + oy) * wo + ox) * k;
+                let iy0 = (oy * stride) as isize - pad_h as isize;
+                let ix0 = (ox * stride) as isize - pad_w as isize;
+                for ky in 0..kh {
+                    let iy = iy0 + ky as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue; // zero padding
+                    }
+                    for kx in 0..kw {
+                        let ix = ix0 + kx as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        let src = ((iy as usize * w) + ix as usize) * c;
+                        let dst = base + (ky * kw + kx) * c;
+                        out[dst..dst + c].copy_from_slice(&img[src..src + c]);
+                    }
+                }
+            }
+        }
+    }
+    (out, ho, wo)
+}
+
+/// GroupNorm over the channel axis of an NHWC tensor (per sample).
+pub fn group_norm(
+    x: &mut [f32],
+    n: usize,
+    hw: usize,
+    c: usize,
+    groups: usize,
+    gamma: &[f32],
+    beta: &[f32],
+    eps: f32,
+) {
+    assert_eq!(c % groups, 0);
+    let gs = c / groups;
+    // single pass per group: accumulate sum + sum-of-squares, then one
+    // normalization sweep (perf: §Perf change #1, ~2x over the two-pass
+    // mean/var formulation)
+    for ni in 0..n {
+        let s = &mut x[ni * hw * c..(ni + 1) * hw * c];
+        for g in 0..groups {
+            let (c0, c1) = (g * gs, (g + 1) * gs);
+            let mut sum = 0f64;
+            let mut sum2 = 0f64;
+            for p in 0..hw {
+                for v in &s[p * c + c0..p * c + c1] {
+                    let v = *v as f64;
+                    sum += v;
+                    sum2 += v * v;
+                }
+            }
+            let cnt = (hw * gs) as f64;
+            let mean = sum / cnt;
+            let var = (sum2 / cnt - mean * mean).max(0.0);
+            let inv = (1.0 / (var + eps as f64).sqrt()) as f32;
+            let mean = mean as f32;
+            for p in 0..hw {
+                let row = &mut s[p * c + c0..p * c + c1];
+                for (ch, v) in row.iter_mut().enumerate() {
+                    *v = (*v - mean) * inv * gamma[c0 + ch] + beta[c0 + ch];
+                }
+            }
+        }
+    }
+}
+
+/// LayerNorm over the last axis of a `(rows, c)` matrix.
+pub fn layer_norm(x: &mut [f32], rows: usize, c: usize, gamma: &[f32], beta: &[f32], eps: f32) {
+    for r in 0..rows {
+        let s = &mut x[r * c..(r + 1) * c];
+        let mean = s.iter().map(|&v| v as f64).sum::<f64>() / c as f64;
+        let var = s
+            .iter()
+            .map(|&v| {
+                let d = v as f64 - mean;
+                d * d
+            })
+            .sum::<f64>()
+            / c as f64;
+        let inv = 1.0 / (var + eps as f64).sqrt();
+        for (ch, v) in s.iter_mut().enumerate() {
+            *v = (((*v as f64 - mean) * inv) as f32) * gamma[ch] + beta[ch];
+        }
+    }
+}
+
+#[inline]
+pub fn relu(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// Global average pool NHWC `(n, hw, c)` -> `(n, c)`.
+pub fn gap(x: &[f32], n: usize, hw: usize, c: usize) -> Vec<f32> {
+    let mut out = vec![0f32; n * c];
+    for ni in 0..n {
+        for p in 0..hw {
+            let row = &x[(ni * hw + p) * c..(ni * hw + p + 1) * c];
+            for (o, &v) in out[ni * c..(ni + 1) * c].iter_mut().zip(row) {
+                *o += v;
+            }
+        }
+        for o in out[ni * c..(ni + 1) * c].iter_mut() {
+            *o /= hw as f32;
+        }
+    }
+    out
+}
+
+/// Numerically stable softmax in place over the last axis.
+pub fn softmax(x: &mut [f32], rows: usize, c: usize) {
+    for r in 0..rows {
+        let s = &mut x[r * c..(r + 1) * c];
+        let m = s.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut z = 0f32;
+        for v in s.iter_mut() {
+            *v = (*v - m).exp();
+            z += *v;
+        }
+        for v in s.iter_mut() {
+            *v /= z;
+        }
+    }
+}
+
+/// Plain f32 matmul `(m, k) x (k, n)` — the digital reference path.
+pub fn matmul(x: &[f32], w: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(x.len(), m * k);
+    assert_eq!(w.len(), k * n);
+    // 4-wide unroll over the contraction axis: one pass over the output row
+    // accumulates four weight rows, quartering y-row load/store traffic
+    // (perf: §Perf change #2).
+    let mut y = vec![0f32; m * n];
+    for i in 0..m {
+        let yr = &mut y[i * n..(i + 1) * n];
+        let xr = &x[i * k..(i + 1) * k];
+        let mut kk = 0;
+        while kk + 4 <= k {
+            let (x0, x1, x2, x3) = (xr[kk], xr[kk + 1], xr[kk + 2], xr[kk + 3]);
+            if x0 != 0.0 || x1 != 0.0 || x2 != 0.0 || x3 != 0.0 {
+                let w0 = &w[kk * n..(kk + 1) * n];
+                let w1 = &w[(kk + 1) * n..(kk + 2) * n];
+                let w2 = &w[(kk + 2) * n..(kk + 3) * n];
+                let w3 = &w[(kk + 3) * n..(kk + 4) * n];
+                for j in 0..n {
+                    yr[j] += x0 * w0[j] + x1 * w1[j] + x2 * w2[j] + x3 * w3[j];
+                }
+            }
+            kk += 4;
+        }
+        while kk < k {
+            let xv = xr[kk];
+            if xv != 0.0 {
+                let wr = &w[kk * n..(kk + 1) * n];
+                for (yj, &wj) in yr.iter_mut().zip(wr) {
+                    *yj += xv * wj;
+                }
+            }
+            kk += 1;
+        }
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn im2col_identity_kernel() {
+        // 1x1 kernel: patches == pixels
+        let x: Vec<f32> = (0..2 * 3 * 3 * 2).map(|v| v as f32).collect();
+        let (cols, ho, wo) = im2col(&x, 2, 3, 3, 2, 1, 1, 1);
+        assert_eq!((ho, wo), (3, 3));
+        assert_eq!(cols, x);
+    }
+
+    #[test]
+    fn im2col_center_tap_matches_pixel() {
+        let x: Vec<f32> = (0..4 * 4 * 3).map(|v| v as f32).collect();
+        let (cols, ho, wo) = im2col(&x, 1, 4, 4, 3, 3, 3, 1);
+        assert_eq!((ho, wo), (4, 4));
+        // patch at (1,1), center tap (ky=1, kx=1) -> pixel (1,1)
+        let k = 27;
+        let patch = &cols[(1 * 4 + 1) * k..(1 * 4 + 1) * k + k];
+        let center = &patch[(1 * 3 + 1) * 3..(1 * 3 + 1) * 3 + 3];
+        let want = &x[(1 * 4 + 1) * 3..(1 * 4 + 1) * 3 + 3];
+        assert_eq!(center, want);
+    }
+
+    #[test]
+    fn im2col_stride2_shape() {
+        let x = vec![1f32; 28 * 28 * 16];
+        let (cols, ho, wo) = im2col(&x, 1, 28, 28, 16, 3, 3, 2);
+        assert_eq!((ho, wo), (14, 14));
+        assert_eq!(cols.len(), 14 * 14 * 9 * 16);
+    }
+
+    #[test]
+    fn group_norm_zero_mean_unit_var() {
+        let mut x: Vec<f32> = (0..8 * 8).map(|v| (v as f32) * 0.7 + 3.0).collect();
+        let gamma = vec![1f32; 8];
+        let beta = vec![0f32; 8];
+        group_norm(&mut x, 1, 8, 8, 2, &gamma, &beta, 1e-5);
+        // each group: mean ~0, var ~1
+        for g in 0..2 {
+            let mut vals = Vec::new();
+            for p in 0..8 {
+                for ch in g * 4..(g + 1) * 4 {
+                    vals.push(x[p * 8 + ch] as f64);
+                }
+            }
+            assert!(crate::util::stats::mean(&vals).abs() < 1e-4);
+            assert!((crate::util::stats::std(&vals) - 1.0).abs() < 1e-2);
+        }
+    }
+
+    #[test]
+    fn layer_norm_rows_independent() {
+        let mut x = vec![1.0f32, 2.0, 3.0, 10.0, 20.0, 30.0];
+        let g = vec![1f32; 3];
+        let b = vec![0f32; 3];
+        layer_norm(&mut x, 2, 3, &g, &b, 1e-5);
+        // both rows normalize to the same pattern (scale invariance)
+        for i in 0..3 {
+            assert!((x[i] - x[3 + i]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn gap_averages() {
+        let x = vec![1.0f32, 2.0, 3.0, 4.0]; // (1, 2, 2): hw=2, c=2
+        let g = gap(&x, 1, 2, 2);
+        assert_eq!(g, vec![2.0, 3.0]);
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let mut x = vec![1.0f32, 2.0, 3.0, -1.0, 0.0, 1.0];
+        softmax(&mut x, 2, 3);
+        for r in 0..2 {
+            let s: f32 = x[r * 3..(r + 1) * 3].iter().sum();
+            assert!((s - 1.0).abs() < 1e-6);
+        }
+        assert!(x[2] > x[1] && x[1] > x[0]);
+    }
+
+    #[test]
+    fn matmul_small() {
+        let x = vec![1.0f32, 2.0, 3.0, 4.0]; // (2,2)
+        let w = vec![1.0f32, 0.0, 0.0, 1.0]; // identity
+        assert_eq!(matmul(&x, &w, 2, 2, 2), x);
+    }
+}

@@ -1,0 +1,355 @@
+//! Native PointNet++ forward — crossbar twin of the JAX model (same FPS /
+//! ball-query / grouping semantics, LayerNorm MLPs, per-SA-layer GAP search
+//! vectors).  Single-cloud API; batching is a loop (clouds are independent
+//! and the analogue macro serializes MVMs anyway).
+
+use anyhow::Result;
+
+use super::ops;
+use super::resnet::WeightSource;
+use super::weights::{NoiseSpec, WeightMatrix};
+use crate::model::ModelBundle;
+use crate::util::rng::Pcg64;
+
+struct SaLayer {
+    w1: WeightMatrix,
+    g1: Vec<f32>,
+    b1: Vec<f32>,
+    w2: WeightMatrix,
+    g2: Vec<f32>,
+    b2: Vec<f32>,
+    npoint: usize,
+    radius: f32,
+    k: usize,
+}
+
+pub struct NativePointNet {
+    sa: Vec<SaLayer>,
+    head_w1: WeightMatrix,
+    head_b1: Vec<f32>,
+    head_w2: WeightMatrix,
+    head_b2: Vec<f32>,
+    pub n_points: usize,
+    pub channels: Vec<usize>,
+}
+
+const EPS: f32 = 1e-5;
+
+/// Farthest-point sampling; matches `model.farthest_point_sample` (starts
+/// at index 0, first-max tie-breaking like `jnp.argmax`).
+pub fn farthest_point_sample(xyz: &[f32], n: usize, npoint: usize) -> Vec<usize> {
+    let mut idxs = vec![0usize; npoint];
+    let mut dists = vec![f32::MAX; n];
+    for i in 1..npoint {
+        let last = idxs[i - 1];
+        let (lx, ly, lz) = (xyz[last * 3], xyz[last * 3 + 1], xyz[last * 3 + 2]);
+        let mut best = 0usize;
+        let mut best_d = f32::NEG_INFINITY;
+        for (p, d) in dists.iter_mut().enumerate() {
+            let dx = xyz[p * 3] - lx;
+            let dy = xyz[p * 3 + 1] - ly;
+            let dz = xyz[p * 3 + 2] - lz;
+            let nd = dx * dx + dy * dy + dz * dz;
+            if nd < *d {
+                *d = nd;
+            }
+            if *d > best_d {
+                best_d = *d;
+                best = p;
+            }
+        }
+        idxs[i] = best;
+    }
+    idxs
+}
+
+/// Ball query; matches `model.ball_query` (stable argsort of the biased
+/// distance, out-of-radius neighbours replaced by the nearest point).
+pub fn ball_query(
+    xyz: &[f32],
+    n: usize,
+    centers: &[usize],
+    radius: f32,
+    k: usize,
+) -> Vec<usize> {
+    let r2 = radius * radius;
+    let mut out = vec![0usize; centers.len() * k];
+    let mut biased: Vec<(f32, usize)> = Vec::with_capacity(n);
+    for (qi, &ci) in centers.iter().enumerate() {
+        let (cx, cy, cz) = (xyz[ci * 3], xyz[ci * 3 + 1], xyz[ci * 3 + 2]);
+        biased.clear();
+        for p in 0..n {
+            let dx = xyz[p * 3] - cx;
+            let dy = xyz[p * 3 + 1] - cy;
+            let dz = xyz[p * 3 + 2] - cz;
+            let d2 = dx * dx + dy * dy + dz * dz;
+            let b = if d2 <= r2 { d2 } else { d2 + 1e6 };
+            biased.push((b, p));
+        }
+        // stable sort by distance == jnp.argsort default
+        biased.sort_by(|a, b| a.0.total_cmp(&b.0));
+        let nearest = biased[0].1;
+        for j in 0..k {
+            let (d, p) = biased[j.min(n - 1)];
+            out[qi * k + j] = if d <= 1e5 { p } else { nearest };
+        }
+    }
+    out
+}
+
+impl NativePointNet {
+    pub fn build(
+        bundle: &ModelBundle,
+        source: WeightSource,
+        spec: &NoiseSpec,
+        rng: &mut Pcg64,
+    ) -> Result<Self> {
+        let npoint = bundle.meta_usizes("npoint")?;
+        let radius = bundle.meta_f64s("radius")?;
+        let kk = bundle.meta_usizes("k")?;
+        let channels = bundle.meta_usizes("channels")?;
+        let n_points = bundle
+            .meta
+            .get("n_points")
+            .and_then(|v| v.as_usize())
+            .unwrap_or(256);
+
+        let load_w = |path: &str, rng: &mut Pcg64| -> Result<WeightMatrix> {
+            match source {
+                WeightSource::Ternary => {
+                    let (shape, w) = bundle.q_i8(path)?;
+                    let n = *shape.last().unwrap();
+                    let k: usize = shape.iter().product::<usize>() / n;
+                    Ok(WeightMatrix::from_ternary(&w, k, n, spec, rng))
+                }
+                WeightSource::FullPrecision => {
+                    let (shape, w) = bundle.fp_f32(path)?;
+                    let n = *shape.last().unwrap();
+                    let k: usize = shape.iter().product::<usize>() / n;
+                    Ok(WeightMatrix::from_f32(&w, k, n, spec, rng))
+                }
+            }
+        };
+        let load_n = |path: &str| -> Result<Vec<f32>> {
+            Ok(match source {
+                WeightSource::Ternary => bundle.q_f32(path)?.1,
+                WeightSource::FullPrecision => bundle.fp_f32(path)?.1,
+            })
+        };
+
+        let mut sa = Vec::with_capacity(bundle.blocks);
+        for i in 0..bundle.blocks {
+            sa.push(SaLayer {
+                w1: load_w(&format!("sa.{i}.w1"), rng)?,
+                g1: load_n(&format!("sa.{i}.g1"))?,
+                b1: load_n(&format!("sa.{i}.b1"))?,
+                w2: load_w(&format!("sa.{i}.w2"), rng)?,
+                g2: load_n(&format!("sa.{i}.g2"))?,
+                b2: load_n(&format!("sa.{i}.b2"))?,
+                npoint: npoint[i],
+                radius: radius[i] as f32,
+                k: kk[i],
+            });
+        }
+        Ok(NativePointNet {
+            sa,
+            head_w1: load_w("head.w1", rng)?,
+            head_b1: load_n("head.b1")?,
+            head_w2: load_w("head.w2", rng)?,
+            head_b2: load_n("head.b2")?,
+            n_points,
+            channels,
+        })
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.sa.len()
+    }
+
+    /// One SA layer on a single cloud.
+    ///
+    /// `xyz: (n, 3)`, `feats: (n, c)` (empty for layer 0).  Returns
+    /// `(new_xyz (np, 3), new_feats (np, c'), search_vector (c',))`.
+    pub fn sa_layer(
+        &self,
+        i: usize,
+        xyz: &[f32],
+        n: usize,
+        feats: &[f32],
+        c: usize,
+        rng: &mut Pcg64,
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let l = &self.sa[i];
+        let fps = farthest_point_sample(xyz, n, l.npoint);
+        let nbr = ball_query(xyz, n, &fps, l.radius, l.k);
+        let din = 3 + c;
+        // grouped (npoint * k, din): relative xyz ++ neighbour features
+        let mut flat = vec![0f32; l.npoint * l.k * din];
+        for (qi, &ci) in fps.iter().enumerate() {
+            let (cx, cy, cz) = (xyz[ci * 3], xyz[ci * 3 + 1], xyz[ci * 3 + 2]);
+            for j in 0..l.k {
+                let p = nbr[qi * l.k + j];
+                let dst = (qi * l.k + j) * din;
+                flat[dst] = xyz[p * 3] - cx;
+                flat[dst + 1] = xyz[p * 3 + 1] - cy;
+                flat[dst + 2] = xyz[p * 3 + 2] - cz;
+                if c > 0 {
+                    flat[dst + 3..dst + din].copy_from_slice(&feats[p * c..(p + 1) * c]);
+                }
+            }
+        }
+        let rows = l.npoint * l.k;
+        let mut h = l.w1.matmul(&flat, rows, rng);
+        let mid = l.w1.n();
+        ops::layer_norm(&mut h, rows, mid, &l.g1, &l.b1, EPS);
+        ops::relu(&mut h);
+        let mut h2 = l.w2.matmul(&h, rows, rng);
+        let cout = l.w2.n();
+        ops::layer_norm(&mut h2, rows, cout, &l.g2, &l.b2, EPS);
+        ops::relu(&mut h2);
+        // max over the k neighbours
+        let mut new_feats = vec![f32::NEG_INFINITY; l.npoint * cout];
+        for q in 0..l.npoint {
+            for j in 0..l.k {
+                let src = &h2[(q * l.k + j) * cout..(q * l.k + j + 1) * cout];
+                let dst = &mut new_feats[q * cout..(q + 1) * cout];
+                for (d, &s) in dst.iter_mut().zip(src) {
+                    if s > *d {
+                        *d = s;
+                    }
+                }
+            }
+        }
+        // GAP over representative points -> search vector
+        let mut sv = vec![0f32; cout];
+        for q in 0..l.npoint {
+            for (s, &v) in sv.iter_mut().zip(&new_feats[q * cout..(q + 1) * cout]) {
+                *s += v;
+            }
+        }
+        for s in sv.iter_mut() {
+            *s /= l.npoint as f32;
+        }
+        let new_xyz: Vec<f32> = fps
+            .iter()
+            .flat_map(|&p| xyz[p * 3..p * 3 + 3].to_vec())
+            .collect();
+        (new_xyz, new_feats, sv)
+    }
+
+    /// Head over the final representative features `(np, c)` -> logits.
+    pub fn head(&self, feats: &[f32], np: usize, c: usize, rng: &mut Pcg64) -> Vec<f32> {
+        // global max pool
+        let mut g = vec![f32::NEG_INFINITY; c];
+        for q in 0..np {
+            for (d, &s) in g.iter_mut().zip(&feats[q * c..(q + 1) * c]) {
+                if s > *d {
+                    *d = s;
+                }
+            }
+        }
+        let mut h = self.head_w1.matmul(&g, 1, rng);
+        for (v, b) in h.iter_mut().zip(&self.head_b1) {
+            *v += *b;
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+        let mut logits = self.head_w2.matmul(&h, 1, rng);
+        for (v, b) in logits.iter_mut().zip(&self.head_b2) {
+            *v += *b;
+        }
+        logits
+    }
+
+    /// Full forward on one cloud `(n_points, 3)`: `(logits, per-SA svs)`.
+    pub fn forward(&self, cloud: &[f32], rng: &mut Pcg64) -> (Vec<f32>, Vec<Vec<f32>>) {
+        let mut xyz = cloud.to_vec();
+        let mut n = self.n_points;
+        let mut feats: Vec<f32> = Vec::new();
+        let mut c = 0usize;
+        let mut svs = Vec::with_capacity(self.sa.len());
+        for i in 0..self.sa.len() {
+            let (nx, nf, sv) = self.sa_layer(i, &xyz, n, &feats, c, rng);
+            n = self.sa[i].npoint;
+            c = self.sa[i].w2.n();
+            xyz = nx;
+            feats = nf;
+            svs.push(sv);
+        }
+        (self.head(&feats, n, c, rng), svs)
+    }
+
+    pub fn take_counters(&self) -> crate::cim::CimCounters {
+        let mut total = crate::cim::CimCounters::default();
+        for l in &self.sa {
+            total.add(&l.w1.take_counters());
+            total.add(&l.w2.take_counters());
+        }
+        total.add(&self.head_w1.take_counters());
+        total.add(&self.head_w2.take_counters());
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fps_picks_extremes_on_line() {
+        // points on a line: FPS from index 0 must pick the far end next
+        let n = 16;
+        let xyz: Vec<f32> = (0..n)
+            .flat_map(|i| vec![i as f32 / (n - 1) as f32, 0.0, 0.0])
+            .collect();
+        let idx = farthest_point_sample(&xyz, n, 4);
+        assert_eq!(idx[0], 0);
+        assert_eq!(idx[1], n - 1);
+        // third pick: middle
+        assert!((idx[2] as i64 - (n as i64 / 2)).abs() <= 1);
+    }
+
+    #[test]
+    fn fps_indices_distinct() {
+        let mut rng = Pcg64::new(1);
+        let n = 64;
+        let xyz: Vec<f32> = (0..n * 3)
+            .map(|_| rng.uniform_in(-1.0, 1.0) as f32)
+            .collect();
+        let idx = farthest_point_sample(&xyz, n, 16);
+        let set: std::collections::HashSet<_> = idx.iter().collect();
+        assert_eq!(set.len(), 16);
+    }
+
+    #[test]
+    fn ball_query_respects_radius_or_duplicates_nearest() {
+        let mut rng = Pcg64::new(2);
+        let n = 64;
+        let xyz: Vec<f32> = (0..n * 3)
+            .map(|_| rng.uniform_in(-1.0, 1.0) as f32)
+            .collect();
+        let centers = vec![0usize, 5, 10];
+        let k = 8;
+        let r = 0.5f32;
+        let nbr = ball_query(&xyz, n, &centers, r, k);
+        for (qi, &ci) in centers.iter().enumerate() {
+            for j in 0..k {
+                let p = nbr[qi * k + j];
+                let d2: f32 = (0..3)
+                    .map(|a| (xyz[p * 3 + a] - xyz[ci * 3 + a]).powi(2))
+                    .sum();
+                assert!(d2 <= r * r + 1e-5, "neighbour outside radius");
+            }
+        }
+    }
+
+    #[test]
+    fn ball_query_first_neighbour_is_self() {
+        // the center itself is at distance 0 -> always the first neighbour
+        let xyz = vec![0.0f32, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 1.0, 0.0];
+        let nbr = ball_query(&xyz, 3, &[1], 0.5, 2);
+        assert_eq!(nbr[0], 1);
+        assert_eq!(nbr[1], 1); // nothing else within radius -> duplicated
+    }
+}

@@ -1,0 +1,284 @@
+//! Native ResNet-11 forward — the crossbar-backend twin of the JAX model in
+//! `python/compile/model.py` (same GroupNorm, same exit structure).  With
+//! `NoiseSpec::Digital` this reproduces the exported HLO's numerics (cross-
+//! checked by integration tests); with `NoiseSpec::Analog` every matmul runs
+//! on the simulated memristor macro.
+
+use anyhow::{anyhow, Result};
+
+use super::ops;
+use super::weights::{NoiseSpec, WeightMatrix};
+use crate::model::ModelBundle;
+use crate::util::rng::Pcg64;
+
+/// Which weight tree to physically map.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WeightSource {
+    /// Ternary-quantized weights (the co-design).
+    Ternary,
+    /// Full-precision weights mapped directly (Fig. 4h–i baseline).
+    FullPrecision,
+}
+
+struct Norm {
+    gamma: Vec<f32>,
+    beta: Vec<f32>,
+}
+
+struct Block {
+    w1: WeightMatrix,
+    n1: Norm,
+    w2: WeightMatrix,
+    n2: Norm,
+    proj: Option<WeightMatrix>,
+    stride: usize,
+    cin: usize,
+    cout: usize,
+}
+
+/// Feature-map tensor: NHWC with explicit geometry.
+#[derive(Clone, Debug)]
+pub struct Feature {
+    pub data: Vec<f32>,
+    pub n: usize,
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+}
+
+pub struct NativeResNet {
+    stem_w: WeightMatrix,
+    stem_n: Norm,
+    blocks: Vec<Block>,
+    head_w: WeightMatrix,
+    head_b: Vec<f32>,
+    pub gn_groups: usize,
+    pub channels: Vec<usize>,
+    pub strides: Vec<usize>,
+}
+
+const EPS: f32 = 1e-5;
+
+impl NativeResNet {
+    pub fn build(
+        bundle: &ModelBundle,
+        source: WeightSource,
+        spec: &NoiseSpec,
+        rng: &mut Pcg64,
+    ) -> Result<Self> {
+        let channels = bundle.meta_usizes("channels")?;
+        let strides = bundle.meta_usizes("strides")?;
+        let gn_groups = bundle
+            .meta
+            .get("gn_groups")
+            .and_then(|g| g.as_usize())
+            .unwrap_or(4);
+
+        let load_w = |path: &str, rng: &mut Pcg64| -> Result<WeightMatrix> {
+            match source {
+                WeightSource::Ternary => {
+                    let (shape, w) = bundle.q_i8(path)?;
+                    let n = *shape.last().unwrap();
+                    let k: usize = shape.iter().product::<usize>() / n;
+                    Ok(WeightMatrix::from_ternary(&w, k, n, spec, rng))
+                }
+                WeightSource::FullPrecision => {
+                    let (shape, w) = bundle.fp_f32(path)?;
+                    let n = *shape.last().unwrap();
+                    let k: usize = shape.iter().product::<usize>() / n;
+                    Ok(WeightMatrix::from_f32(&w, k, n, spec, rng))
+                }
+            }
+        };
+        // norm params always come from the matching tree
+        let load_n = |path: &str| -> Result<Vec<f32>> {
+            Ok(match source {
+                WeightSource::Ternary => bundle.q_f32(path)?.1,
+                WeightSource::FullPrecision => bundle.fp_f32(path)?.1,
+            })
+        };
+
+        let stem_w = load_w("stem.w", rng)?;
+        let stem_n = Norm {
+            gamma: load_n("stem.g")?,
+            beta: load_n("stem.b")?,
+        };
+        let mut blocks = Vec::with_capacity(bundle.blocks);
+        let mut cin = channels[0];
+        for (i, (&cout, &stride)) in channels.iter().zip(&strides).enumerate() {
+            let has_proj = stride != 1 || cin != cout;
+            blocks.push(Block {
+                w1: load_w(&format!("blocks.{i}.w1"), rng)?,
+                n1: Norm {
+                    gamma: load_n(&format!("blocks.{i}.g1"))?,
+                    beta: load_n(&format!("blocks.{i}.b1"))?,
+                },
+                w2: load_w(&format!("blocks.{i}.w2"), rng)?,
+                n2: Norm {
+                    gamma: load_n(&format!("blocks.{i}.g2"))?,
+                    beta: load_n(&format!("blocks.{i}.b2"))?,
+                },
+                proj: if has_proj {
+                    Some(load_w(&format!("blocks.{i}.wp"), rng)?)
+                } else {
+                    None
+                },
+                stride,
+                cin,
+                cout,
+            });
+            cin = cout;
+        }
+        let head_w = load_w("head.w", rng)?;
+        let head_b = load_n("head.b")?;
+        Ok(NativeResNet {
+            stem_w,
+            stem_n,
+            blocks,
+            head_w,
+            head_b,
+            gn_groups,
+            channels,
+            strides,
+        })
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    fn conv(
+        w: &WeightMatrix,
+        x: &Feature,
+        kh: usize,
+        stride: usize,
+        rng: &mut Pcg64,
+    ) -> Feature {
+        let (cols, ho, wo) = ops::im2col(&x.data, x.n, x.h, x.w, x.c, kh, kh, stride);
+        let m = x.n * ho * wo;
+        let out = w.matmul(&cols, m, rng);
+        Feature {
+            n: x.n,
+            h: ho,
+            w: wo,
+            c: w.n(),
+            data: out,
+        }
+    }
+
+    /// Stem: conv3x3 -> GN -> ReLU.
+    pub fn stem(&self, x: &Feature, rng: &mut Pcg64) -> Feature {
+        let mut y = Self::conv(&self.stem_w, x, 3, 1, rng);
+        ops::group_norm(
+            &mut y.data,
+            y.n,
+            y.h * y.w,
+            y.c,
+            self.gn_groups,
+            &self.stem_n.gamma,
+            &self.stem_n.beta,
+            EPS,
+        );
+        ops::relu(&mut y.data);
+        y
+    }
+
+    /// One residual block; returns `(feature_map, search_vectors (n, c))`.
+    pub fn block(&self, i: usize, x: &Feature, rng: &mut Pcg64) -> (Feature, Vec<f32>) {
+        let b = &self.blocks[i];
+        debug_assert_eq!(x.c, b.cin);
+        let mut h = Self::conv(&b.w1, x, 3, b.stride, rng);
+        ops::group_norm(
+            &mut h.data,
+            h.n,
+            h.h * h.w,
+            h.c,
+            self.gn_groups,
+            &b.n1.gamma,
+            &b.n1.beta,
+            EPS,
+        );
+        ops::relu(&mut h.data);
+        let mut h2 = Self::conv(&b.w2, &h, 3, 1, rng);
+        ops::group_norm(
+            &mut h2.data,
+            h2.n,
+            h2.h * h2.w,
+            h2.c,
+            self.gn_groups,
+            &b.n2.gamma,
+            &b.n2.beta,
+            EPS,
+        );
+        let sc: Feature = match &b.proj {
+            Some(p) => Self::conv(p, x, 1, b.stride, rng),
+            None => x.clone(),
+        };
+        debug_assert_eq!(sc.data.len(), h2.data.len());
+        for (v, s) in h2.data.iter_mut().zip(&sc.data) {
+            *v += s;
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+        let sv = ops::gap(&h2.data, h2.n, h2.h * h2.w, h2.c);
+        (h2, sv)
+    }
+
+    /// Head: GAP -> linear -> logits `(n, classes)`.
+    pub fn head(&self, x: &Feature, rng: &mut Pcg64) -> Vec<f32> {
+        let pooled = ops::gap(&x.data, x.n, x.h * x.w, x.c);
+        let mut logits = self.head_w.matmul(&pooled, x.n, rng);
+        let nc = self.head_b.len();
+        for r in 0..x.n {
+            for j in 0..nc {
+                logits[r * nc + j] += self.head_b[j];
+            }
+        }
+        logits
+    }
+
+    /// Full static forward (all blocks): `(logits, per-block svs)`.
+    pub fn forward(&self, x: &Feature, rng: &mut Pcg64) -> (Vec<f32>, Vec<Vec<f32>>) {
+        let mut h = self.stem(x, rng);
+        let mut svs = Vec::with_capacity(self.blocks.len());
+        for i in 0..self.blocks.len() {
+            let (nh, sv) = self.block(i, &h, rng);
+            h = nh;
+            svs.push(sv);
+        }
+        (self.head(&h, rng), svs)
+    }
+
+    /// Aggregate analogue usage counters across every layer.
+    pub fn take_counters(&self) -> crate::cim::CimCounters {
+        let mut total = crate::cim::CimCounters::default();
+        total.add(&self.stem_w.take_counters());
+        for b in &self.blocks {
+            total.add(&b.w1.take_counters());
+            total.add(&b.w2.take_counters());
+            if let Some(p) = &b.proj {
+                total.add(&p.take_counters());
+            }
+        }
+        total.add(&self.head_w.take_counters());
+        total
+    }
+}
+
+/// Wrap a flat image slice as a (n, 28, 28, 1) feature.
+pub fn image_feature(data: &[f32], n: usize, hw: usize) -> Result<Feature> {
+    if data.len() != n * hw * hw {
+        return Err(anyhow!(
+            "image feature: {} values != {n} x {hw} x {hw}",
+            data.len()
+        ));
+    }
+    Ok(Feature {
+        data: data.to_vec(),
+        n,
+        h: hw,
+        w: hw,
+        c: 1,
+    })
+}

@@ -1,0 +1,191 @@
+//! Weight-matrix abstraction: the same layer can execute on the exact
+//! digital path (the `Qun`/`SFP` software rows of Fig. 3e/5e) or on the
+//! simulated analogue crossbar (`EE.Qun+Noise` / `Mem` rows).
+
+use crate::cim::CimMatrix;
+use crate::crossbar::ConverterConfig;
+use crate::device::DeviceConfig;
+use crate::util::rng::Pcg64;
+
+/// How a model's weights are physically realized.
+#[derive(Clone, Debug)]
+pub enum NoiseSpec {
+    /// Exact digital arithmetic (software baseline rows).
+    Digital,
+    /// Crossbar simulation with the given device + converter models.
+    Analog {
+        dev: DeviceConfig,
+        conv: ConverterConfig,
+    },
+}
+
+impl NoiseSpec {
+    pub fn ideal_analog() -> Self {
+        NoiseSpec::Analog {
+            dev: DeviceConfig::ideal(),
+            conv: ConverterConfig::ideal(),
+        }
+    }
+
+    pub fn paper_default() -> Self {
+        NoiseSpec::Analog {
+            dev: DeviceConfig::default(),
+            conv: ConverterConfig::default(),
+        }
+    }
+
+    pub fn is_analog(&self) -> bool {
+        matches!(self, NoiseSpec::Analog { .. })
+    }
+}
+
+/// One layer's `(k, n)` weight matrix, on whichever substrate.
+pub enum WeightMatrix {
+    Exact {
+        k: usize,
+        n: usize,
+        w: Vec<f32>,
+    },
+    Analog {
+        cim: CimMatrix,
+        /// Digital post-scale (1.0 for ternary; `max|w|` for mapped FP).
+        scale: f32,
+    },
+}
+
+impl WeightMatrix {
+    /// Build from ternary weights (i8 in {-1,0,1}, row-major (k, n)).
+    pub fn from_ternary(
+        w: &[i8],
+        k: usize,
+        n: usize,
+        spec: &NoiseSpec,
+        rng: &mut Pcg64,
+    ) -> Self {
+        match spec {
+            NoiseSpec::Digital => WeightMatrix::Exact {
+                k,
+                n,
+                w: w.iter().map(|&v| v as f32).collect(),
+            },
+            NoiseSpec::Analog { dev, conv } => WeightMatrix::Analog {
+                cim: CimMatrix::program(w, k, n, dev, conv, rng),
+                scale: 1.0,
+            },
+        }
+    }
+
+    /// Build from full-precision weights (the Fig. 4h–i direct-mapping
+    /// baseline): normalized by `max|w|` onto conductances, rescaled
+    /// digitally after the MVM.
+    pub fn from_f32(
+        w: &[f32],
+        k: usize,
+        n: usize,
+        spec: &NoiseSpec,
+        rng: &mut Pcg64,
+    ) -> Self {
+        match spec {
+            NoiseSpec::Digital => WeightMatrix::Exact {
+                k,
+                n,
+                w: w.to_vec(),
+            },
+            NoiseSpec::Analog { dev, conv } => {
+                let wmax = w.iter().fold(0f32, |m, &v| m.max(v.abs())).max(1e-9);
+                let norm: Vec<f32> = w.iter().map(|&v| v / wmax).collect();
+                WeightMatrix::Analog {
+                    cim: CimMatrix::program_f32(&norm, k, n, dev, conv, rng),
+                    scale: wmax,
+                }
+            }
+        }
+    }
+
+    pub fn k(&self) -> usize {
+        match self {
+            WeightMatrix::Exact { k, .. } => *k,
+            WeightMatrix::Analog { cim, .. } => cim.k,
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        match self {
+            WeightMatrix::Exact { n, .. } => *n,
+            WeightMatrix::Analog { cim, .. } => cim.n,
+        }
+    }
+
+    /// `(m, k) @ (k, n)` on this substrate.
+    pub fn matmul(&self, x: &[f32], m: usize, rng: &mut Pcg64) -> Vec<f32> {
+        match self {
+            WeightMatrix::Exact { k, n, w } => super::ops::matmul(x, w, m, *k, *n),
+            WeightMatrix::Analog { cim, scale } => {
+                let mut y = cim.matmul(x, m, rng);
+                if *scale != 1.0 {
+                    for v in y.iter_mut() {
+                        *v *= *scale;
+                    }
+                }
+                y
+            }
+        }
+    }
+
+    /// Device usage since last call (zeros for the digital path).
+    pub fn take_counters(&self) -> crate::cim::CimCounters {
+        match self {
+            WeightMatrix::Exact { .. } => Default::default(),
+            WeightMatrix::Analog { cim, .. } => cim.take_counters(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn digital_equals_ideal_analog_for_ternary() {
+        let (k, n, m) = (96, 20, 4);
+        let mut rng = Pcg64::new(1);
+        let w: Vec<i8> = (0..k * n).map(|_| [-1i8, 0, 1][rng.below(3)]).collect();
+        let dig = WeightMatrix::from_ternary(&w, k, n, &NoiseSpec::Digital, &mut rng);
+        let ana =
+            WeightMatrix::from_ternary(&w, k, n, &NoiseSpec::ideal_analog(), &mut rng);
+        let x: Vec<f32> = (0..m * k).map(|i| ((i % 13) as f32 - 6.0) / 6.0).collect();
+        let a = dig.matmul(&x, m, &mut rng);
+        let b = ana.matmul(&x, m, &mut rng);
+        for (p, q) in a.iter().zip(&b) {
+            assert!((p - q).abs() < 1e-3, "{p} vs {q}");
+        }
+    }
+
+    #[test]
+    fn fp_mapping_roundtrips_scale() {
+        let (k, n) = (32, 8);
+        let mut rng = Pcg64::new(2);
+        let w: Vec<f32> = (0..k * n).map(|i| ((i % 7) as f32 - 3.0) * 0.31).collect();
+        let dig = WeightMatrix::from_f32(&w, k, n, &NoiseSpec::Digital, &mut rng);
+        let ana = WeightMatrix::from_f32(&w, k, n, &NoiseSpec::ideal_analog(), &mut rng);
+        let x: Vec<f32> = (0..k).map(|i| (i as f32 * 0.17).sin()).collect();
+        let a = dig.matmul(&x, 1, &mut rng);
+        let b = ana.matmul(&x, 1, &mut rng);
+        for (p, q) in a.iter().zip(&b) {
+            // HRS floor introduces a tiny bias even in the "ideal" device
+            assert!((p - q).abs() < 0.05, "{p} vs {q}");
+        }
+    }
+
+    #[test]
+    fn analog_counters_flow_through() {
+        let mut rng = Pcg64::new(3);
+        let w = vec![1i8; 16];
+        let m = WeightMatrix::from_ternary(&w, 4, 4, &NoiseSpec::ideal_analog(), &mut rng);
+        let _ = m.matmul(&[1.0, 1.0, 1.0, 1.0], 1, &mut rng);
+        assert!(m.take_counters().mvms > 0);
+        let d = WeightMatrix::from_ternary(&w, 4, 4, &NoiseSpec::Digital, &mut rng);
+        let _ = d.matmul(&[1.0; 4], 1, &mut rng);
+        assert_eq!(d.take_counters().mvms, 0);
+    }
+}

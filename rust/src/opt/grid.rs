@@ -1,0 +1,128 @@
+//! Grid search over exit thresholds (Fig. 6a): sweep a shared threshold
+//! from low to high and record the accuracy/budget frontier.
+
+use crate::budget::BudgetModel;
+use crate::opt::objective::{Objective, Observation};
+use crate::opt::trace::ExitTrace;
+
+/// Sweep a single shared threshold across all exits.
+pub fn shared_threshold_sweep(
+    trace: &ExitTrace,
+    budget: &BudgetModel,
+    objective: &Objective,
+    lo: f32,
+    hi: f32,
+    steps: usize,
+) -> Vec<Observation> {
+    assert!(steps >= 2);
+    (0..steps)
+        .map(|i| {
+            let t = lo + (hi - lo) * i as f32 / (steps - 1) as f32;
+            let thr = vec![t; trace.n_exits];
+            objective.evaluate(trace, budget, &thr)
+        })
+        .collect()
+}
+
+/// Full grid over per-exit thresholds is exponential; the paper (and we)
+/// use the shared sweep for the frontier plot and TPE for per-layer tuning.
+/// For small exit counts this coordinate grid refines a start point one
+/// axis at a time (used by the ablation bench as a cheap local baseline).
+pub fn coordinate_descent(
+    trace: &ExitTrace,
+    budget: &BudgetModel,
+    objective: &Objective,
+    start: &[f32],
+    lo: f32,
+    hi: f32,
+    steps: usize,
+    rounds: usize,
+) -> Observation {
+    let mut cur = start.to_vec();
+    let mut best = objective.evaluate(trace, budget, &cur);
+    for _ in 0..rounds {
+        let mut improved = false;
+        for d in 0..cur.len() {
+            for i in 0..steps {
+                let t = lo + (hi - lo) * i as f32 / (steps - 1) as f32;
+                let mut cand = cur.clone();
+                cand[d] = t;
+                let obs = objective.evaluate(trace, budget, &cand);
+                if obs.score > best.score {
+                    best = obs;
+                    cur = cand;
+                    improved = true;
+                }
+            }
+        }
+        if !improved {
+            break;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    /// Synthetic trace: easy samples separable at exit 0 with sim ~0.9,
+    /// hard samples need the head.
+    fn synthetic() -> (ExitTrace, BudgetModel) {
+        let mut t = ExitTrace::new(3);
+        let mut rng = Pcg64::new(5);
+        for s in 0..200 {
+            let label = (s % 10) as u16;
+            let easy = s % 2 == 0;
+            let sim0 = if easy {
+                0.85 + 0.1 * rng.uniform() as f32
+            } else {
+                0.4 + 0.2 * rng.uniform() as f32
+            };
+            let pred0 = if easy { label } else { (label + 1) % 10 };
+            t.push(
+                &[sim0, sim0 + 0.02, sim0 + 0.04],
+                &[pred0, pred0, label],
+                label,
+                label,
+            );
+        }
+        let b = BudgetModel::new(vec![10_000.0; 3], &[8, 8, 8], 10);
+        (t, b)
+    }
+
+    #[test]
+    fn sweep_is_monotone_in_budget() {
+        let (t, b) = synthetic();
+        let obs = shared_threshold_sweep(&t, &b, &Objective::default(), 0.0, 1.2, 13);
+        // raising the threshold monotonically lowers the budget drop
+        for w in obs.windows(2) {
+            assert!(w[1].budget_drop <= w[0].budget_drop + 1e-9);
+        }
+        // extremes: everyone exits at 0 vs no one exits
+        assert!(obs.first().unwrap().budget_drop > 0.5);
+        assert!(obs.last().unwrap().budget_drop < 0.0);
+    }
+
+    #[test]
+    fn sweep_has_accuracy_tradeoff() {
+        let (t, b) = synthetic();
+        let obs = shared_threshold_sweep(&t, &b, &Objective::default(), 0.0, 1.2, 25);
+        let acc_lo = obs.first().unwrap().accuracy; // everyone exits early
+        let acc_hi = obs.last().unwrap().accuracy; // full depth
+        assert!(acc_hi > acc_lo, "{acc_hi} vs {acc_lo}");
+    }
+
+    #[test]
+    fn coordinate_descent_improves_over_start() {
+        let (t, b) = synthetic();
+        let o = Objective::default();
+        let start = vec![1.1f32; 3]; // nothing exits
+        let best = coordinate_descent(&t, &b, &o, &start, 0.0, 1.1, 23, 4);
+        let base = o.evaluate(&t, &b, &start);
+        assert!(best.score > base.score);
+        assert!(best.budget_drop > 0.2);
+        assert!(best.accuracy > 0.9);
+    }
+}

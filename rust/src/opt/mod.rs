@@ -1,0 +1,18 @@
+//! Threshold optimization: the paper's Pareto trade-off machinery (Fig. 6).
+//!
+//! * `trace` — precomputed per-sample/per-exit CAM outcomes, making any
+//!   threshold vector evaluable in microseconds (no network re-runs);
+//! * `objective` — Eq. 1: `Acc(dm) x (DCB/B)^ω`;
+//! * `grid` — grid search over a shared threshold (Fig. 6a);
+//! * `tpe` — Tree-structured Parzen Estimator (Eq. 2–3, 7–10) implemented
+//!   from scratch (no optuna/hyperopt in this environment);
+//! * `random` — random-search baseline for the ablation benches.
+
+pub mod grid;
+pub mod objective;
+pub mod random;
+pub mod tpe;
+pub mod trace;
+
+pub use objective::Objective;
+pub use trace::ExitTrace;

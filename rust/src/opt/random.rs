@@ -1,0 +1,57 @@
+//! Random-search baseline for the TPE ablation (Fig. 6 benches).
+
+use crate::budget::BudgetModel;
+use crate::opt::objective::{Objective, Observation};
+use crate::opt::trace::ExitTrace;
+use crate::util::rng::Pcg64;
+
+pub struct RandomResult {
+    pub best: Observation,
+    pub history: Vec<Observation>,
+}
+
+pub fn search(
+    trace: &ExitTrace,
+    budget: &BudgetModel,
+    objective: &Objective,
+    lo: f32,
+    hi: f32,
+    iters: usize,
+    seed: u64,
+) -> RandomResult {
+    let mut rng = Pcg64::new(seed);
+    let d = trace.n_exits;
+    let mut history = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let thr: Vec<f32> = (0..d)
+            .map(|_| rng.uniform_in(lo as f64, hi as f64) as f32)
+            .collect();
+        history.push(objective.evaluate(trace, budget, &thr));
+    }
+    let best = history
+        .iter()
+        .max_by(|a, b| a.score.total_cmp(&b.score))
+        .expect("iters >= 1")
+        .clone();
+    RandomResult { best, history }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn finds_something_reasonable() {
+        let mut t = ExitTrace::new(2);
+        for s in 0..100 {
+            let label = (s % 10) as u16;
+            t.push(&[0.9, 0.1], &[label, label], label, label);
+        }
+        let b = BudgetModel::new(vec![1000.0, 1000.0], &[4, 4], 10);
+        let r = search(&t, &b, &Objective::default(), 0.3, 1.05, 200, 1);
+        // everything is exitable at block 0 with full accuracy
+        assert!(r.best.accuracy > 0.99);
+        assert!(r.best.budget_drop > 0.2);
+        assert_eq!(r.history.len(), 200);
+    }
+}

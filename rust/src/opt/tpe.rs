@@ -1,0 +1,285 @@
+//! Tree-structured Parzen Estimator (Bergstra et al., 2011) — implemented
+//! from the paper's Methods (Eq. 2–3, 7–10):
+//!
+//! * observations are split at the γ-quantile of the score into *good*
+//!   (`l(x)`) and *bad* (`g(x)`) sets;
+//! * each set's density is a 1-D Parzen window (Gaussian kernels, Eq. 10)
+//!   per threshold dimension — TPE deliberately does not model interactions
+//!   between dimensions (the paper relies on exactly this property);
+//! * the Expected Improvement acquisition is ∝ `l(x) / g(x)` (Eq. 3):
+//!   candidates are drawn from `l` and the one maximizing the ratio is
+//!   evaluated next.
+
+use crate::budget::BudgetModel;
+use crate::opt::objective::{Objective, Observation};
+use crate::opt::trace::ExitTrace;
+use crate::util::rng::Pcg64;
+
+#[derive(Clone, Debug)]
+pub struct TpeConfig {
+    /// Search interval per threshold dimension.
+    pub lo: f32,
+    pub hi: f32,
+    /// Random-search warmup iterations before the Parzen model engages.
+    pub n_init: usize,
+    /// Total optimization iterations.
+    pub n_iters: usize,
+    /// Quantile γ splitting good/bad observations.
+    pub gamma: f64,
+    /// Candidates drawn from l(x) per iteration.
+    pub n_candidates: usize,
+    pub seed: u64,
+}
+
+impl Default for TpeConfig {
+    fn default() -> Self {
+        TpeConfig {
+            lo: 0.3,
+            hi: 1.05, // > max cosine: the "never exit here" option stays in play
+            n_init: 30,
+            n_iters: 400,
+            gamma: 0.2,
+            n_candidates: 24,
+            seed: 17,
+        }
+    }
+}
+
+/// One-dimensional Parzen window with Gaussian kernels (Eq. 10).
+struct Parzen {
+    centers: Vec<f64>,
+    sigma: f64,
+    lo: f64,
+    hi: f64,
+}
+
+impl Parzen {
+    fn fit(xs: &[f64], lo: f64, hi: f64) -> Parzen {
+        // Silverman-ish bandwidth, floored to keep exploration alive.
+        let n = xs.len().max(1) as f64;
+        let sd = crate::util::stats::std(xs);
+        let sigma = (0.9 * sd * n.powf(-0.2)).max(0.02 * (hi - lo));
+        Parzen {
+            centers: xs.to_vec(),
+            sigma,
+            lo,
+            hi,
+        }
+    }
+
+    fn density(&self, x: f64) -> f64 {
+        if self.centers.is_empty() {
+            return 1.0 / (self.hi - self.lo); // uniform prior
+        }
+        let norm = 1.0 / ((2.0 * std::f64::consts::PI).sqrt() * self.sigma);
+        let mut p = 0.0;
+        for &c in &self.centers {
+            let z = (x - c) / self.sigma;
+            p += norm * (-0.5 * z * z).exp();
+        }
+        p / self.centers.len() as f64
+    }
+
+    fn sample(&self, rng: &mut Pcg64) -> f64 {
+        if self.centers.is_empty() {
+            return rng.uniform_in(self.lo, self.hi);
+        }
+        let c = self.centers[rng.below(self.centers.len())];
+        (c + rng.normal() * self.sigma).clamp(self.lo, self.hi)
+    }
+}
+
+/// Full optimization record (drives Fig. 6h–k).
+pub struct TpeResult {
+    pub best: Observation,
+    /// Every evaluated observation in iteration order.
+    pub history: Vec<Observation>,
+}
+
+/// Maximize `objective` over threshold vectors with TPE.
+pub fn optimize(
+    trace: &ExitTrace,
+    budget: &BudgetModel,
+    objective: &Objective,
+    cfg: &TpeConfig,
+) -> TpeResult {
+    let d = trace.n_exits;
+    let mut rng = Pcg64::new(cfg.seed);
+    let mut history: Vec<Observation> = Vec::with_capacity(cfg.n_iters);
+
+    // 1a. structured warm starts.  Uniform random init almost never lands
+    // in the "every threshold high" corner (probability (1-q)^d), yet the
+    // best solutions live near it: conservative uniform ladders seed l(x)
+    // with mass there so the Parzen model can refine per-layer.
+    for u in [cfg.hi, 0.975, 0.95, 0.925, 0.9, 0.85, 0.8] {
+        if history.len() >= cfg.n_iters {
+            break;
+        }
+        let thr = vec![u.min(cfg.hi); d];
+        history.push(objective.evaluate(trace, budget, &thr));
+    }
+
+    // 1b. random-search initialization
+    while history.len() < cfg.n_init.min(cfg.n_iters) {
+        let thr: Vec<f32> = (0..d)
+            .map(|_| rng.uniform_in(cfg.lo as f64, cfg.hi as f64) as f32)
+            .collect();
+        history.push(objective.evaluate(trace, budget, &thr));
+    }
+
+    // 2. model-guided iterations
+    while history.len() < cfg.n_iters {
+        // split at the γ-quantile of score (maximization: good == top γ)
+        let mut order: Vec<usize> = (0..history.len()).collect();
+        order.sort_by(|&a, &b| history[b].score.total_cmp(&history[a].score));
+        let n_good = ((cfg.gamma * history.len() as f64).ceil() as usize)
+            .clamp(1, history.len() - 1);
+        let good: Vec<usize> = order[..n_good].to_vec();
+        let bad: Vec<usize> = order[n_good..].to_vec();
+
+        // per-dimension Parzen estimators
+        let mut thr = vec![0f32; d];
+        for dim in 0..d {
+            let gxs: Vec<f64> = good
+                .iter()
+                .map(|&i| history[i].thresholds[dim] as f64)
+                .collect();
+            let bxs: Vec<f64> = bad
+                .iter()
+                .map(|&i| history[i].thresholds[dim] as f64)
+                .collect();
+            let l = Parzen::fit(&gxs, cfg.lo as f64, cfg.hi as f64);
+            let g = Parzen::fit(&bxs, cfg.lo as f64, cfg.hi as f64);
+            // draw candidates from l, keep the best l/g ratio (EI ∝ l/g)
+            let mut best_x = l.sample(&mut rng);
+            let mut best_ei = f64::NEG_INFINITY;
+            for _ in 0..cfg.n_candidates {
+                let x = l.sample(&mut rng);
+                let ei = l.density(x).ln() - g.density(x).max(1e-12).ln();
+                if ei > best_ei {
+                    best_ei = ei;
+                    best_x = x;
+                }
+            }
+            thr[dim] = best_x as f32;
+        }
+        history.push(objective.evaluate(trace, budget, &thr));
+    }
+
+    let best = history
+        .iter()
+        .max_by(|a, b| a.score.total_cmp(&b.score))
+        .expect("n_iters >= 1")
+        .clone();
+    TpeResult { best, history }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::opt::random;
+
+    /// Synthetic trace where the optimal policy is "exit easy samples at
+    /// block 0 with threshold ~0.8, never exit at block 1" — TPE must find
+    /// per-layer structure that a shared threshold cannot.
+    fn synthetic(seed: u64) -> (ExitTrace, BudgetModel) {
+        let mut t = ExitTrace::new(3);
+        let mut rng = Pcg64::new(seed);
+        for s in 0..300 {
+            let label = (s % 10) as u16;
+            let easy = s % 3 != 0;
+            // exit 0: reliable for easy samples above 0.75
+            let sim0 = if easy {
+                rng.uniform_in(0.78, 0.95) as f32
+            } else {
+                rng.uniform_in(0.3, 0.77) as f32
+            };
+            let pred0 = if easy { label } else { (label + 3) % 10 };
+            // exit 1: adversarial — confident but often wrong
+            let sim1 = rng.uniform_in(0.7, 0.99) as f32;
+            let pred1 = if rng.uniform() < 0.5 {
+                label
+            } else {
+                (label + 1) % 10
+            };
+            let sim2 = rng.uniform_in(0.2, 0.6) as f32;
+            t.push(&[sim0, sim1, sim2], &[pred0, pred1, label], label, label);
+        }
+        (
+            t,
+            BudgetModel::new(vec![10_000.0; 3], &[8, 8, 8], 10),
+        )
+    }
+
+    #[test]
+    fn tpe_beats_random_search_at_equal_budget() {
+        let (t, b) = synthetic(3);
+        let o = Objective::default();
+        let cfg = TpeConfig {
+            n_iters: 150,
+            n_init: 20,
+            ..Default::default()
+        };
+        let tpe = optimize(&t, &b, &o, &cfg);
+        let rnd = random::search(&t, &b, &o, cfg.lo, cfg.hi, 150, 99);
+        assert!(
+            tpe.best.score >= rnd.best.score,
+            "tpe {} < random {}",
+            tpe.best.score,
+            rnd.best.score
+        );
+    }
+
+    #[test]
+    fn tpe_learns_to_avoid_the_adversarial_exit() {
+        let (t, b) = synthetic(4);
+        let o = Objective::default();
+        let r = optimize(&t, &b, &o, &TpeConfig::default());
+        // exit 1 is a trap: its threshold must end up above its sim range
+        // (~0.99) or at least above exit 0's
+        assert!(
+            r.best.thresholds[1] > 0.9,
+            "trap exit threshold {}",
+            r.best.thresholds[1]
+        );
+        assert!(r.best.accuracy > 0.9, "accuracy {}", r.best.accuracy);
+        assert!(r.best.budget_drop > 0.3, "budget {}", r.best.budget_drop);
+    }
+
+    #[test]
+    fn history_scores_trend_upward() {
+        let (t, b) = synthetic(5);
+        let o = Objective::default();
+        let r = optimize(&t, &b, &o, &TpeConfig::default());
+        let n = r.history.len();
+        let early: f64 = r.history[..50].iter().map(|o| o.score).sum::<f64>() / 50.0;
+        let late: f64 =
+            r.history[n - 50..].iter().map(|o| o.score).sum::<f64>() / 50.0;
+        assert!(late > early, "late {late} <= early {early}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let (t, b) = synthetic(6);
+        let o = Objective::default();
+        let cfg = TpeConfig {
+            n_iters: 60,
+            ..Default::default()
+        };
+        let a = optimize(&t, &b, &o, &cfg);
+        let c = optimize(&t, &b, &o, &cfg);
+        assert_eq!(a.best.thresholds, c.best.thresholds);
+    }
+
+    #[test]
+    fn parzen_density_integrates_roughly_to_one() {
+        let p = Parzen::fit(&[0.4, 0.5, 0.6], 0.0, 1.0);
+        let mut integral = 0.0;
+        let steps = 2000;
+        for i in 0..steps {
+            let x = -1.0 + 3.0 * i as f64 / steps as f64;
+            integral += p.density(x) * (3.0 / steps as f64);
+        }
+        assert!((integral - 1.0).abs() < 0.02, "integral {integral}");
+    }
+}

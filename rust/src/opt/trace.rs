@@ -1,0 +1,175 @@
+//! Exit traces: per-sample, per-exit CAM outcomes recorded once, evaluated
+//! against arbitrary threshold vectors without re-running the network.
+//!
+//! This is what makes grid search and 1000-iteration TPE cheap: one forward
+//! pass of the calibration set through all exits produces the trace; every
+//! candidate threshold vector after that is an O(samples x exits) table
+//! walk.
+
+/// Recorded outcomes for a set of samples.
+#[derive(Clone, Debug, Default)]
+pub struct ExitTrace {
+    pub n_exits: usize,
+    /// (samples x exits) best-match cosine similarity at each exit.
+    pub sims: Vec<f32>,
+    /// (samples x exits) CAM-predicted class at each exit.
+    pub preds: Vec<u16>,
+    /// Final-head prediction per sample (used when no exit fires).
+    pub final_pred: Vec<u16>,
+    /// Ground-truth label per sample.
+    pub labels: Vec<u16>,
+}
+
+/// Outcome of evaluating one threshold vector on a trace.
+#[derive(Clone, Debug)]
+pub struct TraceEval {
+    pub accuracy: f64,
+    /// Exit block per sample (== n_exits-1 for run-to-head too; see
+    /// `exited_early` for the distinction).
+    pub exits: Vec<usize>,
+    /// Predicted class per sample.
+    pub preds: Vec<u16>,
+    /// Whether each sample exited via the CAM (vs reached the head).
+    pub exited_early: Vec<bool>,
+}
+
+impl ExitTrace {
+    pub fn new(n_exits: usize) -> Self {
+        ExitTrace {
+            n_exits,
+            ..Default::default()
+        }
+    }
+
+    pub fn n_samples(&self) -> usize {
+        self.labels.len()
+    }
+
+    /// Record one sample: per-exit (sim, pred), final head pred, label.
+    pub fn push(&mut self, sims: &[f32], preds: &[u16], final_pred: u16, label: u16) {
+        assert_eq!(sims.len(), self.n_exits);
+        assert_eq!(preds.len(), self.n_exits);
+        self.sims.extend_from_slice(sims);
+        self.preds.extend_from_slice(preds);
+        self.final_pred.push(final_pred);
+        self.labels.push(label);
+    }
+
+    /// Evaluate a threshold vector: first exit whose similarity clears its
+    /// threshold wins; otherwise the sample runs to the head.
+    pub fn evaluate(&self, thresholds: &[f32]) -> TraceEval {
+        assert_eq!(thresholds.len(), self.n_exits);
+        let n = self.n_samples();
+        let mut exits = Vec::with_capacity(n);
+        let mut preds = Vec::with_capacity(n);
+        let mut early = Vec::with_capacity(n);
+        let mut correct = 0usize;
+        for s in 0..n {
+            let row_s = &self.sims[s * self.n_exits..(s + 1) * self.n_exits];
+            let row_p = &self.preds[s * self.n_exits..(s + 1) * self.n_exits];
+            let mut exited = false;
+            let mut exit_at = self.n_exits - 1;
+            let mut pred = self.final_pred[s];
+            for e in 0..self.n_exits {
+                if row_s[e] >= thresholds[e] {
+                    exited = true;
+                    exit_at = e;
+                    pred = row_p[e];
+                    break;
+                }
+            }
+            if pred == self.labels[s] {
+                correct += 1;
+            }
+            exits.push(exit_at);
+            preds.push(pred);
+            early.push(exited);
+        }
+        TraceEval {
+            accuracy: correct as f64 / n.max(1) as f64,
+            exits,
+            preds,
+            exited_early: early,
+        }
+    }
+
+    /// Accuracy if every sample ran the full backbone (thresholds = ∞).
+    pub fn full_depth_accuracy(&self) -> f64 {
+        let n = self.n_samples().max(1);
+        let c = self
+            .labels
+            .iter()
+            .zip(&self.final_pred)
+            .filter(|(l, p)| l == p)
+            .count();
+        c as f64 / n as f64
+    }
+
+    /// Per-exit standalone CAM accuracy (how good each semantic memory is
+    /// as a classifier on its own — Fig. 3b–d's quantitative counterpart).
+    pub fn per_exit_accuracy(&self) -> Vec<f64> {
+        let n = self.n_samples().max(1);
+        (0..self.n_exits)
+            .map(|e| {
+                let c = (0..self.n_samples())
+                    .filter(|&s| self.preds[s * self.n_exits + e] == self.labels[s])
+                    .count();
+                c as f64 / n as f64
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// 2 exits; sample 0 is easy (exit 0 correct at sim .9), sample 1 hard
+    /// (exit sims low, head correct), sample 2 trap (exit confident but
+    /// wrong).
+    fn trace() -> ExitTrace {
+        let mut t = ExitTrace::new(2);
+        t.push(&[0.9, 0.95], &[3, 3], 3, 3);
+        t.push(&[0.2, 0.4], &[1, 7], 7, 7);
+        t.push(&[0.85, 0.3], &[2, 5], 5, 5);
+        t
+    }
+
+    #[test]
+    fn high_threshold_runs_to_head() {
+        let t = trace();
+        let e = t.evaluate(&[2.0, 2.0]);
+        assert_eq!(e.accuracy, 1.0);
+        assert!(e.exited_early.iter().all(|&b| !b));
+        assert_eq!(e.exits, vec![1, 1, 1]);
+    }
+
+    #[test]
+    fn low_threshold_exits_everyone_at_first_block() {
+        let t = trace();
+        let e = t.evaluate(&[0.0, 0.0]);
+        assert_eq!(e.exits, vec![0, 0, 0]);
+        // sample1 exit-0 pred (1) != label (7); sample2 pred 2 != 5
+        assert!((e.accuracy - 1.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tuned_threshold_balances() {
+        let t = trace();
+        // exit 0 only for sims >= .88 -> sample0 exits, trap sample doesn't
+        let e = t.evaluate(&[0.88, 0.5]);
+        assert_eq!(e.exits[0], 0);
+        assert_eq!(e.exits[1], 1); // hard sample falls through exit0, not exit1 (0.4 < 0.5)
+        assert_eq!(e.preds[1], 7);
+        assert_eq!(e.accuracy, 1.0);
+    }
+
+    #[test]
+    fn full_depth_and_per_exit_accuracy() {
+        let t = trace();
+        assert_eq!(t.full_depth_accuracy(), 1.0);
+        let pe = t.per_exit_accuracy();
+        assert!((pe[0] - 1.0 / 3.0).abs() < 1e-9);
+        assert!((pe[1] - 1.0).abs() < 1e-9);
+    }
+}

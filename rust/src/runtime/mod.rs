@@ -1,0 +1,144 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts and executes them on the
+//! CPU PJRT client (the `xla` crate).  This is the only place the process
+//! touches XLA; everything above works with plain `Vec<f32>` tensors.
+//!
+//! Interchange is HLO *text* — jax >= 0.5 serializes protos with 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md and python/compile/aot.py).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, Result};
+
+/// Shared PJRT client + executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<PathBuf, Arc<Executable>>>,
+}
+
+/// One compiled artifact.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub path: PathBuf,
+    /// Output element counts are validated lazily on first run.
+    pub n_outputs: usize,
+}
+
+/// A borrowed input tensor (f32, row-major).
+pub struct TensorIn<'a> {
+    pub data: &'a [f32],
+    pub shape: &'a [usize],
+}
+
+impl Runtime {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu: {e}"))?;
+        log::info!(
+            "pjrt platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(Runtime {
+            client,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Load + compile an HLO-text artifact (cached by path).
+    pub fn load(&self, path: &Path) -> Result<Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(path) {
+            return Ok(e.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| anyhow!("non-utf8 path {path:?}"))?,
+        )
+        .map_err(|e| anyhow!("parse {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {path:?}: {e}"))?;
+        let entry = Arc::new(Executable {
+            exe,
+            path: path.to_path_buf(),
+            n_outputs: 0,
+        });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(path.to_path_buf(), entry.clone());
+        Ok(entry)
+    }
+
+    pub fn cached_count(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}
+
+impl Executable {
+    /// Execute with f32 inputs; returns each tuple element as a flat Vec.
+    ///
+    /// All our artifacts are lowered with `return_tuple=True`, so the
+    /// single result literal is a tuple even for one output.
+    pub fn run(&self, inputs: &[TensorIn<'_>]) -> Result<Vec<Vec<f32>>> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for t in inputs {
+            let expect: usize = t.shape.iter().product();
+            if expect != t.data.len() {
+                return Err(anyhow!(
+                    "{:?}: input length {} != shape {:?}",
+                    self.path,
+                    t.data.len(),
+                    t.shape
+                ));
+            }
+            let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(t.data)
+                .reshape(&dims)
+                .map_err(|e| anyhow!("reshape to {dims:?}: {e}"))?;
+            literals.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {:?}: {e}", self.path))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {:?}: {e}", self.path))?;
+        let parts = result
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple {:?}: {e}", self.path))?;
+        parts
+            .into_iter()
+            .map(|l| {
+                l.to_vec::<f32>()
+                    .map_err(|e| anyhow!("to_vec {:?}: {e}", self.path))
+            })
+            .collect()
+    }
+}
+
+/// Convenience: run with one input and expect `n` outputs.
+pub fn run_checked(
+    exe: &Executable,
+    inputs: &[TensorIn<'_>],
+    n_expected: usize,
+) -> Result<Vec<Vec<f32>>> {
+    let out = exe.run(inputs)?;
+    if out.len() != n_expected {
+        return Err(anyhow!(
+            "{:?}: {} outputs, expected {n_expected}",
+            exe.path,
+            out.len()
+        ));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    //! Runtime tests live in rust/tests/ (they need artifacts on disk).
+}

@@ -1,0 +1,265 @@
+//! Exact t-SNE (van der Maaten & Hinton, 2008) for Fig. 3b–d / 5b–d:
+//! embeds search vectors + semantic centers in 2D, and computes the
+//! intra/inter-class distance statistics the paper quotes alongside.
+//!
+//! Exact (O(n²)) affinities are fine here: the figures embed ~110 points
+//! (100 samples + 10 centers).
+
+use crate::util::rng::Pcg64;
+
+#[derive(Clone, Debug)]
+pub struct TsneConfig {
+    pub perplexity: f64,
+    pub n_iters: usize,
+    pub learning_rate: f64,
+    pub momentum: f64,
+    pub early_exaggeration: f64,
+    pub exaggeration_iters: usize,
+    pub seed: u64,
+}
+
+impl Default for TsneConfig {
+    fn default() -> Self {
+        TsneConfig {
+            perplexity: 15.0,
+            n_iters: 400,
+            learning_rate: 100.0,
+            momentum: 0.8,
+            early_exaggeration: 4.0,
+            exaggeration_iters: 80,
+            seed: 12,
+        }
+    }
+}
+
+/// Binary-search the Gaussian bandwidth for one row to hit the target
+/// perplexity; returns the conditional distribution p_{j|i}.
+fn row_affinities(d2: &[f64], i: usize, perplexity: f64) -> Vec<f64> {
+    let n = d2.len();
+    let target = perplexity.ln();
+    let mut beta = 1.0f64;
+    let (mut lo, mut hi) = (f64::NEG_INFINITY, f64::INFINITY);
+    let mut p = vec![0f64; n];
+    for _ in 0..60 {
+        let mut sum = 0.0;
+        for j in 0..n {
+            p[j] = if j == i { 0.0 } else { (-beta * d2[j]).exp() };
+            sum += p[j];
+        }
+        let sum = sum.max(1e-300);
+        let mut h = 0.0; // Shannon entropy of the row
+        for pj in p.iter_mut() {
+            *pj /= sum;
+            if *pj > 1e-12 {
+                h -= *pj * pj.ln();
+            }
+        }
+        let diff = h - target;
+        if diff.abs() < 1e-5 {
+            break;
+        }
+        if diff > 0.0 {
+            lo = beta;
+            beta = if hi.is_finite() { (beta + hi) / 2.0 } else { beta * 2.0 };
+        } else {
+            hi = beta;
+            beta = if lo.is_finite() { (beta + lo) / 2.0 } else { beta / 2.0 };
+        }
+    }
+    p
+}
+
+/// Embed `n` points of dimension `dim` (row-major) into 2D.
+pub fn tsne(x: &[f64], n: usize, dim: usize, cfg: &TsneConfig) -> Vec<[f64; 2]> {
+    assert_eq!(x.len(), n * dim);
+    if n == 0 {
+        return Vec::new();
+    }
+    // pairwise squared distances
+    let mut d2 = vec![0f64; n * n];
+    for i in 0..n {
+        for j in i + 1..n {
+            let mut s = 0.0;
+            for k in 0..dim {
+                let d = x[i * dim + k] - x[j * dim + k];
+                s += d * d;
+            }
+            d2[i * n + j] = s;
+            d2[j * n + i] = s;
+        }
+    }
+    // symmetric affinities P
+    let mut p = vec![0f64; n * n];
+    for i in 0..n {
+        let row = row_affinities(&d2[i * n..(i + 1) * n], i, cfg.perplexity);
+        for j in 0..n {
+            p[i * n + j] = row[j];
+        }
+    }
+    let mut psym = vec![0f64; n * n];
+    let mut psum = 0.0;
+    for i in 0..n {
+        for j in 0..n {
+            psym[i * n + j] = (p[i * n + j] + p[j * n + i]) / (2.0 * n as f64);
+            psum += psym[i * n + j];
+        }
+    }
+    for v in psym.iter_mut() {
+        *v = (*v / psum.max(1e-300)).max(1e-12);
+    }
+
+    // gradient descent on KL(P||Q) with momentum + early exaggeration
+    let mut rng = Pcg64::new(cfg.seed);
+    let mut y: Vec<[f64; 2]> = (0..n)
+        .map(|_| [rng.normal() * 1e-2, rng.normal() * 1e-2])
+        .collect();
+    let mut vel = vec![[0f64; 2]; n];
+    let mut grad = vec![[0f64; 2]; n];
+    let mut q = vec![0f64; n * n];
+
+    for iter in 0..cfg.n_iters {
+        let exag = if iter < cfg.exaggeration_iters {
+            cfg.early_exaggeration
+        } else {
+            1.0
+        };
+        // student-t Q
+        let mut qsum = 0.0;
+        for i in 0..n {
+            for j in i + 1..n {
+                let dx = y[i][0] - y[j][0];
+                let dy = y[i][1] - y[j][1];
+                let w = 1.0 / (1.0 + dx * dx + dy * dy);
+                q[i * n + j] = w;
+                q[j * n + i] = w;
+                qsum += 2.0 * w;
+            }
+        }
+        let qsum = qsum.max(1e-300);
+        for g in grad.iter_mut() {
+            *g = [0.0, 0.0];
+        }
+        for i in 0..n {
+            for j in 0..n {
+                if i == j {
+                    continue;
+                }
+                let w = q[i * n + j];
+                let coef = 4.0 * (exag * psym[i * n + j] - w / qsum) * w;
+                grad[i][0] += coef * (y[i][0] - y[j][0]);
+                grad[i][1] += coef * (y[i][1] - y[j][1]);
+            }
+        }
+        for i in 0..n {
+            for k in 0..2 {
+                vel[i][k] = cfg.momentum * vel[i][k] - cfg.learning_rate * grad[i][k];
+                y[i][k] += vel[i][k];
+            }
+        }
+        // recenter
+        let (mx, my) = y
+            .iter()
+            .fold((0.0, 0.0), |(a, b), p| (a + p[0], b + p[1]));
+        for p in y.iter_mut() {
+            p[0] -= mx / n as f64;
+            p[1] -= my / n as f64;
+        }
+    }
+    y
+}
+
+/// Mean intra-class and inter-class distances (FaceNet-style, the paper's
+/// Fig. 3b–d quality metric) over an embedding or raw vectors.
+pub fn class_distances(x: &[f64], n: usize, dim: usize, labels: &[usize]) -> (f64, f64) {
+    let mut intra = (0.0, 0usize);
+    let mut inter = (0.0, 0usize);
+    for i in 0..n {
+        for j in i + 1..n {
+            let mut s = 0.0;
+            for k in 0..dim {
+                let d = x[i * dim + k] - x[j * dim + k];
+                s += d * d;
+            }
+            let d = s.sqrt();
+            if labels[i] == labels[j] {
+                intra.0 += d;
+                intra.1 += 1;
+            } else {
+                inter.0 += d;
+                inter.1 += 1;
+            }
+        }
+    }
+    (
+        intra.0 / intra.1.max(1) as f64,
+        inter.0 / inter.1.max(1) as f64,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Three well-separated Gaussian blobs in 8-D.
+    fn blobs(n_per: usize, seed: u64) -> (Vec<f64>, Vec<usize>) {
+        let mut rng = Pcg64::new(seed);
+        let mut x = Vec::new();
+        let mut labels = Vec::new();
+        for c in 0..3 {
+            for _ in 0..n_per {
+                for k in 0..8 {
+                    let center = if k == c { 8.0 } else { 0.0 };
+                    x.push(center + rng.normal() * 0.3);
+                }
+                labels.push(c);
+            }
+        }
+        (x, labels)
+    }
+
+    #[test]
+    fn separated_blobs_stay_separated() {
+        let (x, labels) = blobs(15, 1);
+        let y = tsne(&x, 45, 8, &TsneConfig::default());
+        let flat: Vec<f64> = y.iter().flat_map(|p| [p[0], p[1]]).collect();
+        let (intra, inter) = class_distances(&flat, 45, 2, &labels);
+        assert!(
+            inter > 2.0 * intra,
+            "embedding collapsed: intra {intra}, inter {inter}"
+        );
+    }
+
+    #[test]
+    fn class_distances_on_raw_vectors() {
+        let (x, labels) = blobs(10, 2);
+        let (intra, inter) = class_distances(&x, 30, 8, &labels);
+        assert!(inter > 5.0 * intra);
+    }
+
+    #[test]
+    fn output_is_finite_and_centered() {
+        let (x, _) = blobs(10, 3);
+        let y = tsne(&x, 30, 8, &TsneConfig::default());
+        let mut cx = 0.0;
+        for p in &y {
+            assert!(p[0].is_finite() && p[1].is_finite());
+            cx += p[0];
+        }
+        assert!(cx.abs() / 30.0 < 1e-6);
+    }
+
+    #[test]
+    fn empty_input_ok() {
+        assert!(tsne(&[], 0, 4, &TsneConfig::default()).is_empty());
+    }
+
+    #[test]
+    fn perplexity_row_sums_to_one() {
+        let d2 = vec![0.0, 1.0, 4.0, 9.0, 16.0];
+        let p = row_affinities(&d2, 0, 2.0);
+        let s: f64 = p.iter().sum();
+        assert!((s - 1.0).abs() < 1e-9);
+        assert_eq!(p[0], 0.0);
+        assert!(p[1] > p[2] && p[2] > p[3]);
+    }
+}

@@ -1,0 +1,133 @@
+//! Micro-benchmark harness (the vendored crate set has no criterion).
+//!
+//! Cargo benches (`harness = false`) build on this: warmup, repeated timed
+//! runs, and a report with mean / std / min / throughput.  Deliberately
+//! simple — wall-clock on a single core, enough to rank implementations and
+//! record §Perf before/after numbers in EXPERIMENTS.md.
+
+use std::time::{Duration, Instant};
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u32,
+    pub mean: Duration,
+    pub std: Duration,
+    pub min: Duration,
+    /// Optional user-supplied items/iteration for throughput reporting.
+    pub items: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        let mut s = format!(
+            "{:<42} {:>10.3?} ±{:>9.3?} (min {:?}, n={})",
+            self.name, self.mean, self.std, self.min, self.iters
+        );
+        if let Some(items) = self.items {
+            let per_sec = items / self.mean.as_secs_f64();
+            s.push_str(&format!("  [{per_sec:.1} items/s]"));
+        }
+        s
+    }
+}
+
+pub struct Bencher {
+    pub warmup: u32,
+    pub iters: u32,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: 2,
+            iters: 10,
+        }
+    }
+}
+
+impl Bencher {
+    pub fn new(warmup: u32, iters: u32) -> Self {
+        Bencher { warmup, iters }
+    }
+
+    /// Time `f` (which should return something to defeat dead-code elim).
+    pub fn run<T, F: FnMut() -> T>(&self, name: &str, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.iters as usize);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed());
+        }
+        Self::summarize(name, &samples, None)
+    }
+
+    /// As `run`, annotating `items` processed per iteration (throughput).
+    pub fn run_items<T, F: FnMut() -> T>(
+        &self,
+        name: &str,
+        items: f64,
+        mut f: F,
+    ) -> BenchResult {
+        let mut r = self.run(name, &mut f);
+        r.items = Some(items);
+        r
+    }
+
+    fn summarize(name: &str, samples: &[Duration], items: Option<f64>) -> BenchResult {
+        let secs: Vec<f64> = samples.iter().map(|d| d.as_secs_f64()).collect();
+        let mean = crate::util::stats::mean(&secs);
+        let std = crate::util::stats::std(&secs);
+        let min = secs.iter().cloned().fold(f64::INFINITY, f64::min);
+        BenchResult {
+            name: name.to_string(),
+            iters: samples.len() as u32,
+            mean: Duration::from_secs_f64(mean),
+            std: Duration::from_secs_f64(std),
+            min: Duration::from_secs_f64(min.max(0.0)),
+            items,
+        }
+    }
+}
+
+/// Standard bench-binary prologue: prints a header and returns a Bencher
+/// tuned by env (MEMDYN_BENCH_ITERS / MEMDYN_BENCH_FAST).
+pub fn standard_bencher(title: &str) -> Bencher {
+    println!("=== {title} ===");
+    let fast = std::env::var("MEMDYN_BENCH_FAST").is_ok();
+    let iters = std::env::var("MEMDYN_BENCH_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(if fast { 3 } else { 10 });
+    Bencher::new(if fast { 1 } else { 2 }, iters)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let b = Bencher::new(0, 3);
+        let r = b.run("spin", || {
+            let mut acc = 0u64;
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(r.mean > Duration::ZERO);
+        assert_eq!(r.iters, 3);
+        assert!(r.min <= r.mean);
+    }
+
+    #[test]
+    fn throughput_annotation() {
+        let b = Bencher::new(0, 2);
+        let r = b.run_items("noop", 100.0, || 1);
+        assert_eq!(r.items, Some(100.0));
+        assert!(r.report().contains("items/s"));
+    }
+}

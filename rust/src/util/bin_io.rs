@@ -1,0 +1,260 @@
+//! Reader for the tensor bundles written by `python/compile/io_bin.py`.
+//!
+//! A bundle is `<prefix>.bin` (raw little-endian payloads) + `<prefix>.json`
+//! (manifest with name/dtype/shape/offset per tensor).  See io_bin.py for
+//! the writer; `test_datasets.py::test_bundle_roundtrip` covers the Python
+//! side, the tests here cover cross-language decoding.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::util::json::Json;
+
+#[derive(Debug, thiserror::Error)]
+pub enum BinError {
+    #[error("io error reading bundle: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("manifest error: {0}")]
+    Manifest(String),
+    #[error("tensor '{0}' not found in bundle")]
+    NotFound(String),
+    #[error("tensor '{name}' has dtype {actual}, wanted {wanted}")]
+    Dtype {
+        name: String,
+        actual: String,
+        wanted: String,
+    },
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I8 { shape: Vec<usize>, data: Vec<i8> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl Tensor {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { shape, .. }
+            | Tensor::I8 { shape, .. }
+            | Tensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Any numeric tensor widened to f32 (i8 ternary weights included).
+    pub fn to_f32(&self) -> Vec<f32> {
+        match self {
+            Tensor::F32 { data, .. } => data.clone(),
+            Tensor::I8 { data, .. } => data.iter().map(|&v| v as f32).collect(),
+            Tensor::I32 { data, .. } => data.iter().map(|&v| v as f32).collect(),
+        }
+    }
+}
+
+/// A loaded bundle: manifest metadata + tensors by name.
+pub struct Bundle {
+    pub meta: Json,
+    pub tensors: BTreeMap<String, Tensor>,
+}
+
+impl Bundle {
+    pub fn load(prefix: &Path) -> Result<Bundle, BinError> {
+        let manifest_path = prefix.with_extension("json");
+        let bin_path = prefix.with_extension("bin");
+        let text = std::fs::read_to_string(&manifest_path)?;
+        let manifest = Json::parse(&text)
+            .map_err(|e| BinError::Manifest(format!("{manifest_path:?}: {e}")))?;
+        let raw = std::fs::read(&bin_path)?;
+
+        let entries = manifest
+            .get("tensors")
+            .and_then(|t| t.as_arr())
+            .ok_or_else(|| BinError::Manifest("missing 'tensors'".into()))?;
+
+        let mut tensors = BTreeMap::new();
+        for e in entries {
+            let name = e
+                .get("name")
+                .and_then(|n| n.as_str())
+                .ok_or_else(|| BinError::Manifest("tensor without name".into()))?
+                .to_string();
+            let dtype = e.get("dtype").and_then(|d| d.as_str()).unwrap_or("f32");
+            let shape = e
+                .get("shape")
+                .and_then(|s| s.usize_vec())
+                .ok_or_else(|| BinError::Manifest(format!("{name}: bad shape")))?;
+            let offset = e.get("offset").and_then(|o| o.as_usize()).unwrap_or(0);
+            let nbytes = e.get("nbytes").and_then(|o| o.as_usize()).unwrap_or(0);
+            if offset + nbytes > raw.len() {
+                return Err(BinError::Manifest(format!(
+                    "{name}: extent {}..{} beyond payload {}",
+                    offset,
+                    offset + nbytes,
+                    raw.len()
+                )));
+            }
+            let bytes = &raw[offset..offset + nbytes];
+            let t = match dtype {
+                "f32" => Tensor::F32 {
+                    shape,
+                    data: bytes
+                        .chunks_exact(4)
+                        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                        .collect(),
+                },
+                "i8" => Tensor::I8 {
+                    shape,
+                    data: bytes.iter().map(|&b| b as i8).collect(),
+                },
+                "i32" => Tensor::I32 {
+                    shape,
+                    data: bytes
+                        .chunks_exact(4)
+                        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                        .collect(),
+                },
+                other => {
+                    return Err(BinError::Manifest(format!(
+                        "{name}: unknown dtype {other}"
+                    )))
+                }
+            };
+            if t.len() * dtype_size(dtype) != nbytes {
+                return Err(BinError::Manifest(format!(
+                    "{name}: shape/nbytes mismatch"
+                )));
+            }
+            tensors.insert(name, t);
+        }
+        Ok(Bundle {
+            meta: manifest.get("meta").cloned().unwrap_or(Json::Null),
+            tensors,
+        })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor, BinError> {
+        self.tensors
+            .get(name)
+            .ok_or_else(|| BinError::NotFound(name.to_string()))
+    }
+
+    pub fn f32(&self, name: &str) -> Result<(&[usize], Vec<f32>), BinError> {
+        let t = self.get(name)?;
+        Ok((t.shape(), t.to_f32()))
+    }
+
+    pub fn i8(&self, name: &str) -> Result<(&[usize], &[i8]), BinError> {
+        match self.get(name)? {
+            Tensor::I8 { shape, data } => Ok((shape, data)),
+            t => Err(BinError::Dtype {
+                name: name.into(),
+                actual: format!("{t:?}").chars().take(12).collect(),
+                wanted: "i8".into(),
+            }),
+        }
+    }
+
+    pub fn i32(&self, name: &str) -> Result<(&[usize], &[i32]), BinError> {
+        match self.get(name)? {
+            Tensor::I32 { shape, data } => Ok((shape, data)),
+            t => Err(BinError::Dtype {
+                name: name.into(),
+                actual: format!("{t:?}").chars().take(12).collect(),
+                wanted: "i32".into(),
+            }),
+        }
+    }
+
+    /// All tensor names with a given prefix, in lexicographic order.
+    pub fn names_with_prefix(&self, prefix: &str) -> Vec<&str> {
+        self.tensors
+            .keys()
+            .filter(|k| k.starts_with(prefix))
+            .map(|s| s.as_str())
+            .collect()
+    }
+}
+
+fn dtype_size(d: &str) -> usize {
+    match d {
+        "i8" => 1,
+        _ => 4,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_fixture(dir: &Path) {
+        // mirror io_bin.py's layout by hand
+        let f32s: Vec<u8> = [1.0f32, -2.5, 3.25]
+            .iter()
+            .flat_map(|v| v.to_le_bytes())
+            .collect();
+        let i8s: Vec<u8> = vec![0xFFu8, 0, 1]; // -1, 0, 1
+        let i32s: Vec<u8> = [7i32, -9].iter().flat_map(|v| v.to_le_bytes()).collect();
+        let mut bin = Vec::new();
+        bin.extend(&f32s);
+        bin.extend(&i8s);
+        bin.extend(&i32s);
+        std::fs::File::create(dir.join("t.bin"))
+            .unwrap()
+            .write_all(&bin)
+            .unwrap();
+        let manifest = format!(
+            r#"{{"meta": {{"k": 2}}, "tensors": [
+              {{"name": "a", "dtype": "f32", "shape": [3], "offset": 0, "nbytes": 12}},
+              {{"name": "b", "dtype": "i8", "shape": [3], "offset": 12, "nbytes": 3}},
+              {{"name": "c", "dtype": "i32", "shape": [2], "offset": 15, "nbytes": 8}}
+            ]}}"#
+        );
+        std::fs::write(dir.join("t.json"), manifest).unwrap();
+    }
+
+    #[test]
+    fn decodes_all_dtypes() {
+        let dir = std::env::temp_dir().join("memdyn_binio_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        write_fixture(&dir);
+        let b = Bundle::load(&dir.join("t")).unwrap();
+        assert_eq!(b.meta.get("k").unwrap().as_usize(), Some(2));
+        let (shape, a) = b.f32("a").unwrap();
+        assert_eq!(shape, &[3]);
+        assert_eq!(a, vec![1.0, -2.5, 3.25]);
+        let (_, i8s) = b.i8("b").unwrap();
+        assert_eq!(i8s, &[-1, 0, 1]);
+        let (_, i32s) = b.i32("c").unwrap();
+        assert_eq!(i32s, &[7, -9]);
+    }
+
+    #[test]
+    fn missing_tensor_is_error() {
+        let dir = std::env::temp_dir().join("memdyn_binio_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        write_fixture(&dir);
+        let b = Bundle::load(&dir.join("t")).unwrap();
+        assert!(matches!(b.get("zzz"), Err(BinError::NotFound(_))));
+        assert!(b.i8("a").is_err()); // dtype mismatch
+    }
+
+    #[test]
+    fn prefix_listing_sorted() {
+        let dir = std::env::temp_dir().join("memdyn_binio_test3");
+        std::fs::create_dir_all(&dir).unwrap();
+        write_fixture(&dir);
+        let b = Bundle::load(&dir.join("t")).unwrap();
+        assert_eq!(b.names_with_prefix("a"), vec!["a"]);
+        assert_eq!(b.names_with_prefix("").len(), 3);
+    }
+}

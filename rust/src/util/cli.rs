@@ -1,0 +1,103 @@
+//! Tiny CLI argument parser (the vendored crate set has no clap).
+//!
+//! Grammar: `memdyn <subcommand> [positional...] [--flag] [--key value]`.
+//! Flags may be given as `--key=value` or `--key value`; `--flag` with no
+//! value is boolean `true`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(body.to_string(), v);
+                } else {
+                    out.flags.insert(body.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn positional_and_flags() {
+        let a = parse("fig 3e --artifacts ../artifacts --samples 100 --fast");
+        assert_eq!(a.positional, vec!["fig", "3e"]);
+        assert_eq!(a.get("artifacts"), Some("../artifacts"));
+        assert_eq!(a.get_usize("samples", 0), 100);
+        assert!(a.get_bool("fast"));
+        assert!(!a.get_bool("slow"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("serve --port=8080 --noise=0.15");
+        assert_eq!(a.get_usize("port", 0), 8080);
+        assert!((a.get_f64("noise", 0.0) - 0.15).abs() < 1e-12);
+    }
+
+    #[test]
+    fn flag_before_positional() {
+        let a = parse("--verbose run");
+        // "run" is consumed as the value of --verbose (documented grammar)
+        assert_eq!(a.get("verbose"), Some("run"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("x");
+        assert_eq!(a.get_or("missing", "d"), "d");
+        assert_eq!(a.get_usize("missing", 7), 7);
+    }
+}

@@ -1,0 +1,10 @@
+//! Shared substrate utilities: PRNG, stats, JSON, tensor bundles, CLI,
+//! bench harness, and the mini property-testing driver.
+
+pub mod bench;
+pub mod bin_io;
+pub mod cli;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;

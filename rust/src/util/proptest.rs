@@ -1,0 +1,139 @@
+//! Mini property-testing driver (the vendored crate set has no proptest).
+//!
+//! `forall(seed, cases, gen, prop)` draws `cases` random inputs from `gen`
+//! and asserts `prop` on each; on failure it retries with simpler inputs
+//! drawn from the same generator at decreasing "size" (a lightweight stand-in
+//! for shrinking) and reports the smallest failing size plus the seed needed
+//! to reproduce deterministically.
+
+use crate::util::rng::Pcg64;
+
+/// Generation context: carries the RNG and a size hint in `[1, 100]`.
+pub struct Gen<'a> {
+    pub rng: &'a mut Pcg64,
+    pub size: usize,
+}
+
+impl<'a> Gen<'a> {
+    /// Dimension-ish value scaled by current size (at least 1).
+    pub fn dim(&mut self, max: usize) -> usize {
+        let hi = (max * self.size / 100).max(1);
+        1 + self.rng.below(hi)
+    }
+
+    pub fn f32_vec(&mut self, n: usize, lo: f64, hi: f64) -> Vec<f32> {
+        (0..n).map(|_| self.rng.uniform_in(lo, hi) as f32).collect()
+    }
+
+    pub fn ternary_vec(&mut self, n: usize) -> Vec<f32> {
+        (0..n)
+            .map(|_| [-1.0f32, 0.0, 1.0][self.rng.below(3)])
+            .collect()
+    }
+}
+
+/// Run a property over `cases` random inputs.  Panics with a reproducible
+/// report on the first failure (after attempting smaller sizes).
+pub fn forall<T, G, P>(seed: u64, cases: usize, mut gen: G, mut prop: P)
+where
+    G: FnMut(&mut Gen) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+    T: std::fmt::Debug,
+{
+    let mut rng = Pcg64::new(seed);
+    for case in 0..cases {
+        // ramp size: early cases small, later cases large
+        let size = 10 + (90 * case / cases.max(1));
+        let mut case_rng = rng.split();
+        let input = gen(&mut Gen {
+            rng: &mut case_rng,
+            size,
+        });
+        if let Err(msg) = prop(&input) {
+            // "shrink": try to find a failure at smaller sizes for reporting
+            let mut smallest: Option<(usize, String)> = None;
+            for s in [1usize, 2, 5, 10, 25, 50] {
+                if s >= size {
+                    break;
+                }
+                for attempt in 0..20u64 {
+                    let mut r = Pcg64::new(seed ^ (s as u64) << 32 ^ attempt);
+                    let small = gen(&mut Gen { rng: &mut r, size: s });
+                    if let Err(m) = prop(&small) {
+                        smallest = Some((s, m));
+                        break;
+                    }
+                }
+                if smallest.is_some() {
+                    break;
+                }
+            }
+            let extra = smallest
+                .map(|(s, m)| format!("\n  also fails at size {s}: {m}"))
+                .unwrap_or_default();
+            panic!(
+                "property failed (seed={seed}, case={case}, size={size}):\n  \
+                 {msg}\n  input: {input:?}{extra}"
+            );
+        }
+    }
+}
+
+/// Helper for approximate float comparison in properties.
+pub fn close(a: f32, b: f32, tol: f32) -> Result<(), String> {
+    if (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs())) {
+        Ok(())
+    } else {
+        Err(format!("{a} !~ {b} (tol {tol})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall(
+            1,
+            50,
+            |g| {
+                let n = g.rng.below(10) + 1;
+                g.f32_vec(n, -1.0, 1.0)
+            },
+            |v| {
+                count += 1;
+                if v.iter().all(|x| x.abs() <= 1.0) {
+                    Ok(())
+                } else {
+                    Err("out of range".into())
+                }
+            },
+        );
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        forall(
+            2,
+            20,
+            |g| g.dim(100),
+            |&n| {
+                if n < 5 {
+                    Ok(())
+                } else {
+                    Err(format!("{n} >= 5"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn close_tolerance() {
+        assert!(close(1.0, 1.0 + 1e-6, 1e-5).is_ok());
+        assert!(close(1.0, 2.0, 1e-5).is_err());
+    }
+}

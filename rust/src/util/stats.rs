@@ -1,0 +1,189 @@
+//! Small statistics helpers used across the simulator and figure harness.
+
+/// Mean of a slice (0.0 for empty input).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn std(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Pearson correlation coefficient.
+pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let (mx, my) = (mean(xs), mean(ys));
+    let mut num = 0.0;
+    let mut dx = 0.0;
+    let mut dy = 0.0;
+    for (x, y) in xs.iter().zip(ys) {
+        num += (x - mx) * (y - my);
+        dx += (x - mx) * (x - mx);
+        dy += (y - my) * (y - my);
+    }
+    if dx == 0.0 || dy == 0.0 {
+        return 0.0;
+    }
+    num / (dx * dy).sqrt()
+}
+
+/// Quantile via linear interpolation on a sorted copy, `q` in `[0, 1]`.
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut s: Vec<f64> = xs.to_vec();
+    s.sort_by(|a, b| a.total_cmp(b));
+    let pos = q.clamp(0.0, 1.0) * (s.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        s[lo]
+    } else {
+        s[lo] + (pos - lo as f64) * (s[hi] - s[lo])
+    }
+}
+
+/// Equal-width histogram: returns (bin_edges, counts) with `bins + 1` edges.
+pub fn histogram(xs: &[f64], bins: usize) -> (Vec<f64>, Vec<usize>) {
+    assert!(bins > 0);
+    let lo = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let (lo, hi) = if xs.is_empty() || lo == hi {
+        (lo.min(0.0), hi.max(1.0))
+    } else {
+        (lo, hi)
+    };
+    let w = (hi - lo) / bins as f64;
+    let edges: Vec<f64> = (0..=bins).map(|i| lo + w * i as f64).collect();
+    let mut counts = vec![0usize; bins];
+    for &x in xs {
+        let mut b = ((x - lo) / w) as usize;
+        if b >= bins {
+            b = bins - 1;
+        }
+        counts[b] += 1;
+    }
+    (edges, counts)
+}
+
+/// Argmax index (first on ties); None for empty input.
+pub fn argmax(xs: &[f32]) -> Option<usize> {
+    let mut best: Option<usize> = None;
+    for (i, &x) in xs.iter().enumerate() {
+        match best {
+            None => best = Some(i),
+            Some(b) if x > xs[b] => best = Some(i),
+            _ => {}
+        }
+    }
+    best
+}
+
+/// Online accumulator for latency/throughput style metrics.
+#[derive(Default, Clone, Debug)]
+pub struct Accumulator {
+    pub n: u64,
+    pub sum: f64,
+    pub sum2: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Accumulator {
+    pub fn new() -> Self {
+        Accumulator {
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            ..Default::default()
+        }
+    }
+
+    pub fn add(&mut self, v: f64) {
+        self.n += 1;
+        self.sum += v;
+        self.sum2 += v * v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        if self.n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.sum2 / self.n as f64 - m * m).max(0.0).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std_basic() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((std(&xs) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pearson_perfect_correlation() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let ys = [2.0, 4.0, 6.0, 8.0];
+        assert!((pearson(&xs, &ys) - 1.0).abs() < 1e-12);
+        let neg: Vec<f64> = ys.iter().map(|y| -y).collect();
+        assert!((pearson(&xs, &neg) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantile_interpolates() {
+        let xs = [0.0, 1.0, 2.0, 3.0, 4.0];
+        assert_eq!(quantile(&xs, 0.0), 0.0);
+        assert_eq!(quantile(&xs, 1.0), 4.0);
+        assert_eq!(quantile(&xs, 0.5), 2.0);
+        assert!((quantile(&xs, 0.25) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_counts_everything() {
+        let xs = [0.0, 0.1, 0.5, 0.9, 1.0];
+        let (edges, counts) = histogram(&xs, 4);
+        assert_eq!(edges.len(), 5);
+        assert_eq!(counts.iter().sum::<usize>(), xs.len());
+    }
+
+    #[test]
+    fn accumulator_tracks_moments() {
+        let mut a = Accumulator::new();
+        for v in [1.0, 2.0, 3.0] {
+            a.add(v);
+        }
+        assert_eq!(a.n, 3);
+        assert!((a.mean() - 2.0).abs() < 1e-12);
+        assert_eq!(a.min, 1.0);
+        assert_eq!(a.max, 3.0);
+    }
+
+    #[test]
+    fn argmax_first_tie() {
+        assert_eq!(argmax(&[1.0, 5.0, 5.0, 2.0]), Some(1));
+        assert_eq!(argmax(&[]), None);
+    }
+}

@@ -1,0 +1,264 @@
+//! Property-based tests (mini driver in `memdyn::util::proptest`) over the
+//! simulator's core invariants — randomized shapes/values, deterministic
+//! seeds, failure reports with reproduction seeds.
+
+use memdyn::budget::BudgetModel;
+use memdyn::cam::CamBank;
+use memdyn::cim::CimMatrix;
+use memdyn::crossbar::ConverterConfig;
+use memdyn::device::DeviceConfig;
+use memdyn::nn::ops;
+use memdyn::opt::ExitTrace;
+use memdyn::util::json::Json;
+use memdyn::util::proptest::forall;
+use memdyn::util::rng::Pcg64;
+
+fn exact_matmul(w: &[i8], k: usize, n: usize, x: &[f32]) -> Vec<f32> {
+    let mut y = vec![0f32; n];
+    for kk in 0..k {
+        for j in 0..n {
+            y[j] += x[kk] * w[kk * n + j] as f32;
+        }
+    }
+    y
+}
+
+#[test]
+fn prop_ideal_crossbar_mvm_equals_exact_matmul() {
+    forall(
+        11,
+        30,
+        |g| {
+            let k = g.dim(600); // spans multi-tile when large
+            let n = g.dim(300);
+            let w = g.ternary_vec(k * n);
+            let x = g.f32_vec(k, -2.0, 2.0);
+            (k, n, w, x)
+        },
+        |(k, n, w, x)| {
+            let wi: Vec<i8> = w.iter().map(|&v| v as i8).collect();
+            let mut rng = Pcg64::new(99);
+            let cim = CimMatrix::program(
+                &wi,
+                *k,
+                *n,
+                &DeviceConfig::ideal(),
+                &ConverterConfig::ideal(),
+                &mut rng,
+            );
+            let mut y = vec![0f32; *n];
+            cim.mvm(x, &mut y, &mut rng);
+            let want = exact_matmul(&wi, *k, *n, x);
+            for (a, b) in y.iter().zip(&want) {
+                if (a - b).abs() > 1e-2 {
+                    return Err(format!("mvm {a} != exact {b}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_cam_top1_is_exact_cosine_argmax() {
+    forall(
+        12,
+        30,
+        |g| {
+            let classes = 2 + g.rng.below(10);
+            let dim = g.dim(64).max(2);
+            let mut centers = g.ternary_vec(classes * dim);
+            for c in 0..classes {
+                centers[c * dim] = 1.0; // no all-zero centers
+            }
+            let sv = g.f32_vec(dim, -1.5, 1.5);
+            (classes, dim, centers, sv)
+        },
+        |(classes, dim, centers, sv)| {
+            let ci: Vec<i8> = centers.iter().map(|&v| v as i8).collect();
+            let mut rng = Pcg64::new(7);
+            let bank = CamBank::program(
+                &ci,
+                *classes,
+                *dim,
+                &DeviceConfig::ideal(),
+                &ConverterConfig::ideal(),
+                &mut rng,
+            );
+            let got = bank.search(sv, &mut rng);
+            // exact argmax
+            let mut best = (f32::NEG_INFINITY, 0usize);
+            for c in 0..*classes {
+                let row = &centers[c * dim..(c + 1) * dim];
+                let dot: f32 = row.iter().zip(sv).map(|(a, b)| a * b).sum();
+                let nc: f32 = row.iter().map(|v| v * v).sum::<f32>().sqrt();
+                let ns: f32 = sv.iter().map(|v| v * v).sum::<f32>().sqrt();
+                let sim = if nc > 0.0 && ns > 0.0 {
+                    dot / (nc * ns)
+                } else {
+                    0.0
+                };
+                if sim > best.0 {
+                    best = (sim, c);
+                }
+            }
+            // tolerate exact ties
+            if got.class != best.1 && (got.similarity - best.0).abs() > 1e-5 {
+                return Err(format!(
+                    "cam chose {} (sim {}), exact argmax {} (sim {})",
+                    got.class, got.similarity, best.1, best.0
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_exit_monotonicity_in_thresholds() {
+    // raising any threshold can only push exits later (or keep them equal)
+    forall(
+        13,
+        40,
+        |g| {
+            let exits = 2 + g.rng.below(6);
+            let samples = 5 + g.rng.below(40);
+            let mut trace = ExitTrace::new(exits);
+            for s in 0..samples {
+                let sims = g.f32_vec(exits, 0.0, 1.0);
+                let preds: Vec<u16> =
+                    (0..exits).map(|_| g.rng.below(10) as u16).collect();
+                trace.push(&sims, &preds, (s % 10) as u16, (s % 10) as u16);
+            }
+            let lo = g.f32_vec(exits, 0.2, 0.9);
+            let bump: Vec<f32> = lo
+                .iter()
+                .map(|&v| v + g.rng.uniform_in(0.0, 0.3) as f32)
+                .collect();
+            (trace, lo, bump)
+        },
+        |(trace, lo, hi)| {
+            let e_lo = trace.evaluate(lo);
+            let e_hi = trace.evaluate(hi);
+            for (a, b) in e_lo.exits.iter().zip(&e_hi.exits) {
+                if b < a {
+                    return Err(format!("exit moved earlier: {a} -> {b}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_budget_drop_antitone_in_exit_depth() {
+    forall(
+        14,
+        40,
+        |g| {
+            let blocks = 2 + g.rng.below(8);
+            let ops: Vec<f64> = (0..blocks)
+                .map(|_| g.rng.uniform_in(1e4, 1e6))
+                .collect();
+            let n = 5 + g.rng.below(30);
+            let exits: Vec<usize> = (0..n).map(|_| g.rng.below(blocks)).collect();
+            let deeper: Vec<usize> = exits
+                .iter()
+                .map(|&e| (e + g.rng.below(blocks - e)).min(blocks - 1))
+                .collect();
+            (ops, exits, deeper)
+        },
+        |(ops, exits, deeper)| {
+            let m = BudgetModel::new(ops.clone(), &vec![8; ops.len()], 10);
+            let a = m.summarize(exits).budget_drop;
+            let b = m.summarize(deeper).budget_drop;
+            if b > a + 1e-9 {
+                return Err(format!("deeper exits increased budget drop {a} -> {b}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_json_roundtrip_numeric_arrays() {
+    forall(
+        15,
+        50,
+        |g| {
+            let n = g.dim(30);
+            g.f32_vec(n, -1e4, 1e4)
+        },
+        |xs| {
+            let j = memdyn::util::json::arr_f64(
+                &xs.iter().map(|&v| v as f64).collect::<Vec<_>>(),
+            );
+            let text = j.to_string();
+            let back = Json::parse(&text).map_err(|e| e.to_string())?;
+            let got = back.f64_vec().ok_or("not an array")?;
+            if got.len() != xs.len() {
+                return Err("length changed".into());
+            }
+            for (a, b) in xs.iter().zip(&got) {
+                if ((*a as f64) - b).abs() > 1e-3 * (1.0 + b.abs()) {
+                    return Err(format!("{a} != {b}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_im2col_conserves_mass_for_ones_kernel() {
+    // sum over conv output with an all-ones 1x1 kernel == sum over input
+    forall(
+        16,
+        30,
+        |g| {
+            let hw = 2 + g.rng.below(12);
+            let c = 1 + g.rng.below(6);
+            let x = g.f32_vec(hw * hw * c, -1.0, 1.0);
+            (hw, c, x)
+        },
+        |(hw, c, x)| {
+            let (cols, ho, wo) = ops::im2col(x, 1, *hw, *hw, *c, 1, 1, 1);
+            if (ho, wo) != (*hw, *hw) {
+                return Err("1x1 stride-1 must preserve geometry".into());
+            }
+            let a: f32 = cols.iter().sum();
+            let b: f32 = x.iter().sum();
+            if (a - b).abs() > 1e-3 {
+                return Err(format!("mass changed {a} vs {b}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_softmax_is_distribution() {
+    forall(
+        17,
+        40,
+        |g| {
+            let rows = 1 + g.rng.below(5);
+            let c = 2 + g.rng.below(12);
+            (rows, c, g.f32_vec(rows * c, -30.0, 30.0))
+        },
+        |(rows, c, x)| {
+            let mut y = x.clone();
+            ops::softmax(&mut y, *rows, *c);
+            for r in 0..*rows {
+                let s: f32 = y[r * c..(r + 1) * c].iter().sum();
+                if (s - 1.0).abs() > 1e-4 {
+                    return Err(format!("row {r} sums to {s}"));
+                }
+                if y[r * c..(r + 1) * c].iter().any(|&v| !(0.0..=1.0).contains(&v)) {
+                    return Err("probability outside [0,1]".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
