@@ -1,0 +1,27 @@
+#!/usr/bin/env bash
+# Tier-1 gate for the memdyn workspace, exactly what the ROADMAP verifies:
+#
+#   cargo build --release && cargo test -q
+#
+# plus the documentation gate (cargo doc --no-deps must be warning-free) and
+# a compile check of the bench binaries (they use harness = false, so plain
+# `cargo test` does not build them).
+#
+# Run from the repo root or rust/; artifact-dependent tests skip on a fresh
+# checkout, so this script needs no Python step.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+echo "== cargo build --release --benches --examples =="
+cargo build --release --benches --examples
+
+echo "== cargo doc --no-deps (deny warnings) =="
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+
+echo "ci.sh: all gates green"

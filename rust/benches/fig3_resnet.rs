@@ -4,7 +4,6 @@
 
 use memdyn::budget::BudgetModel;
 use memdyn::figures::common::{self as common, Setup, Variant};
-use memdyn::figures::fig3;
 use memdyn::model::artifacts_dir;
 use memdyn::util::bench::standard_bencher;
 

@@ -2,6 +2,11 @@
 //! request stream, reporting latency percentiles and throughput — the
 //! vLLM-router-style view of the paper's system.
 //!
+//! Runs on the native (crossbar-simulation) backend; the XLA artifact
+//! backend needs the PJRT runtime, which is a stub in this build (see the
+//! `memdyn::runtime` module docs — `memdyn serve --backend xla` once it is
+//! restored).
+//!
 //! ```bash
 //! cargo run --release --example serve_vision -- --requests 300 --rate 300
 //! ```
@@ -9,14 +14,10 @@
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
-use memdyn::coordinator::dynmodel::XlaResNetModel;
-use memdyn::coordinator::{
-    CenterSource, Engine, ExitMemory, Server, ServerConfig, ThresholdConfig,
-};
+use memdyn::coordinator::{Server, ServerConfig, ThresholdConfig};
 use memdyn::data;
+use memdyn::figures::common::{self as figcommon, Variant};
 use memdyn::model::{artifacts_dir, DatasetBundle, ModelBundle};
-use memdyn::nn::NoiseSpec;
-use memdyn::runtime::Runtime;
 use memdyn::util::cli::Args;
 
 fn main() -> Result<()> {
@@ -36,18 +37,7 @@ fn main() -> Result<()> {
         let dir2 = dir.clone();
         let thr_values = thr.values.clone();
         let server = Server::start(
-            move || {
-                let bundle = ModelBundle::load(&dir2, "resnet")?;
-                let rt = Runtime::cpu()?;
-                let model = XlaResNetModel::load(&rt, &bundle)?;
-                let memory = ExitMemory::build(
-                    &bundle,
-                    CenterSource::TernaryQ,
-                    &NoiseSpec::Digital,
-                    7,
-                )?;
-                Ok(Engine::new(model, memory, thr_values))
-            },
+            move || figcommon::serving_engine(&dir2, Variant::EeQun, thr_values, 9),
             ServerConfig {
                 max_batch,
                 max_wait: Duration::from_millis(wait_ms),

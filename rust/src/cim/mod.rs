@@ -66,7 +66,7 @@ impl CimMatrix {
         Self::program_f32(&f, k, n, dev, conv, rng)
     }
 
-    /// Program a full-precision matrix with entries normalized to [-1, 1]
+    /// Program a full-precision matrix with entries normalized to `[-1, 1]`
     /// (the Fig. 4h–i direct-mapping baseline; caller handles the scale).
     pub fn program_f32(
         weights: &[f32],

@@ -96,7 +96,7 @@ impl Server {
             let engine = match factory() {
                 Ok(e) => e,
                 Err(e) => {
-                    log::error!("engine construction failed: {e}");
+                    eprintln!("[server] engine construction failed: {e:#}");
                     // drain and drop all requests
                     while rx.recv().is_ok() {}
                     return Metrics::new(0);
@@ -123,7 +123,7 @@ impl Server {
                         }
                     }
                     Err(e) => {
-                        log::error!("batch failed: {e}");
+                        eprintln!("[server] batch failed: {e:#}");
                         // drop the responders: clients see a closed channel
                     }
                 }

@@ -155,7 +155,7 @@ impl CrossbarTile {
         Self::program_analog(&f, rows, cols, dev, conv, rng)
     }
 
-    /// Program a *full-precision* block (entries normalized to [-1, 1]):
+    /// Program a *full-precision* block (entries normalized to `[-1, 1]`):
     /// `G+ = max(w, 0)`, `G- = max(-w, 0)` (HRS floor applies).  This is the
     /// "directly mapping full-precision weights to memristors" baseline of
     /// Fig. 4h–i; the ternary `program()` is the special case w ∈ {-1,0,1}.

@@ -147,6 +147,21 @@ pub fn resnet_engine(
     ))
 }
 
+/// Native ResNet serving engine with thresholds applied — the one factory
+/// `memdyn serve --backend native` and `examples/serve_vision.rs` share
+/// (the engine must be built on the worker thread, hence by-value args).
+pub fn serving_engine(
+    artifacts: &Path,
+    v: Variant,
+    thresholds: Vec<f32>,
+    seed: u64,
+) -> Result<Engine<NativeResNetModel>> {
+    let bundle = ModelBundle::load(artifacts, "resnet")?;
+    let mut engine = resnet_engine(&bundle, v, seed)?;
+    engine.thresholds = thresholds;
+    Ok(engine)
+}
+
 pub fn pointnet_engine(
     bundle: &ModelBundle,
     v: Variant,

@@ -13,8 +13,25 @@
 //! * **Layer 1 (python/compile/kernels)** — Pallas CIM/CAM kernels inside
 //!   those artifacts.
 //!
-//! Python never runs at inference time: `runtime` loads the AOT artifacts
-//! via the PJRT C API, and the analogue (`Crossbar`) backend is pure Rust.
+//! Python never runs at inference time: [`runtime`] loads the AOT artifacts
+//! via the PJRT C API (currently a stub — see that module's docs), and the
+//! analogue crossbar backend ([`crossbar`] / [`cim`] / [`cam`]) is pure
+//! Rust.
+//!
+//! # Where to start
+//!
+//! * `README.md` (repo root) — build/test commands, artifact generation,
+//!   and a runnable quickstart.
+//! * `docs/ARCHITECTURE.md` (repo root) — the module-by-module map and the
+//!   serving request flow (dynamic batcher → early-exit engine → CAM
+//!   semantic lookup).
+//! * [`coordinator`] — the dynamic-network control flow itself.
+
+// Compile the README's Rust snippets as doctests so the documented
+// quickstart can never drift from the real API.
+#[cfg(doctest)]
+#[doc = include_str!("../../README.md")]
+pub struct ReadmeDoctests;
 
 pub mod budget;
 pub mod cam;

@@ -3,10 +3,14 @@
 //! ```text
 //! memdyn fig <id|all> [--artifacts DIR] [--samples N]   regenerate figures
 //! memdyn tune [--model resnet|pointnet] [--iters N]     TPE threshold tuning
-//! memdyn infer --model resnet --index I [--backend xla|native]
-//! memdyn serve [--model resnet] [--requests N] [--rate R] [--max-batch B]
+//! memdyn infer --model resnet --index I [--backend native|xla]
+//! memdyn serve [--requests N] [--rate R] [--max-batch B] [--backend native|xla] [--variant qun|noise|mem]
 //! memdyn characterize                                   device statistics
 //! ```
+//!
+//! `native` (the crossbar simulation) is the default backend for `infer`
+//! and `serve`; `xla` requires the PJRT runtime, which is a stub in this
+//! build (see `memdyn::runtime`).
 
 use std::time::Duration;
 
@@ -50,8 +54,8 @@ fn print_help() {
         "memdyn — semantic-memory dynamic NN with memristive CIM + CAM\n\n\
          USAGE:\n  memdyn fig <id|all> [--artifacts DIR] [--samples N]\n  \
          memdyn tune [--model resnet|pointnet] [--iters N] [--artifacts DIR]\n  \
-         memdyn infer --index I [--model resnet] [--backend xla|native]\n  \
-         memdyn serve [--requests N] [--rate R] [--max-batch B] [--wait-ms W]\n  \
+         memdyn infer --index I [--model resnet] [--backend native|xla]\n  \
+         memdyn serve [--requests N] [--rate R] [--max-batch B] [--wait-ms W] [--backend native|xla] [--variant qun|noise|mem]\n  \
          memdyn characterize\n\nFIGURES: {}",
         figures::ALL.join(", ")
     );
@@ -139,7 +143,9 @@ fn cmd_tune(args: &Args) -> Result<()> {
 fn cmd_infer(args: &Args) -> Result<()> {
     let dir = artifacts_dir(args.get("artifacts"));
     let index = args.get_usize("index", 0);
-    let backend = args.get_or("backend", "xla");
+    // native is the default: the XLA backend needs the PJRT runtime, which
+    // is a stub in this build (see memdyn::runtime module docs)
+    let backend = args.get_or("backend", "native");
     let bundle = ModelBundle::load(&dir, "resnet")?;
     let dataset = DatasetBundle::load(&dir, "mnist")?;
     let thr = ThresholdConfig::load_or_default(
@@ -190,6 +196,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let rate = args.get_f64("rate", 500.0);
     let max_batch = args.get_usize("max-batch", 8);
     let wait_ms = args.get_usize("wait-ms", 2);
+    // native is the default: the XLA backend needs the PJRT runtime, which
+    // is a stub in this build (see memdyn::runtime module docs)
+    let backend = args.get_or("backend", "native");
+    // Substrate variant for the native backend.  Serving defaults to the
+    // digital ternary variant (throughput); pass --variant mem for the full
+    // noise + DAC/ADC macro simulation that `infer --backend native` uses.
+    let variant = match args.get_or("variant", "qun") {
+        "qun" => figcommon::Variant::EeQun,
+        "noise" => figcommon::Variant::EeQunNoise,
+        "mem" => figcommon::Variant::Mem,
+        other => return Err(anyhow!("unknown variant {other} (qun|noise|mem)")),
+    };
     let bundle = ModelBundle::load(&dir, "resnet")?;
     let dataset = DatasetBundle::load(&dir, "mnist")?;
     let thr = ThresholdConfig::load_or_default(
@@ -199,29 +217,37 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     let dir2 = dir.clone();
     let thr_values = thr.values.clone();
-    let server = Server::start(
-        move || {
-            let bundle = ModelBundle::load(&dir2, "resnet")?;
-            let rt = Runtime::cpu()?;
-            let model = XlaResNetModel::load(&rt, &bundle)?;
-            let memory = ExitMemory::build(
-                &bundle,
-                CenterSource::TernaryQ,
-                &NoiseSpec::Digital,
-                7,
-            )?;
-            Ok(Engine::new(model, memory, thr_values))
-        },
-        ServerConfig {
-            max_batch,
-            max_wait: Duration::from_millis(wait_ms as u64),
-            queue_depth: 4096,
-        },
-    );
+    let cfg = ServerConfig {
+        max_batch,
+        max_wait: Duration::from_millis(wait_ms as u64),
+        queue_depth: 4096,
+    };
+    let server = match backend {
+        "native" => Server::start(
+            move || figcommon::serving_engine(&dir2, variant, thr_values, 9),
+            cfg,
+        ),
+        "xla" => Server::start(
+            move || {
+                let bundle = ModelBundle::load(&dir2, "resnet")?;
+                let rt = Runtime::cpu()?;
+                let model = XlaResNetModel::load(&rt, &bundle)?;
+                let memory = ExitMemory::build(
+                    &bundle,
+                    CenterSource::TernaryQ,
+                    &NoiseSpec::Digital,
+                    7,
+                )?;
+                Ok(Engine::new(model, memory, thr_values))
+            },
+            cfg,
+        ),
+        other => return Err(anyhow!("unknown backend {other}")),
+    };
     let client = server.client();
     let stream = data::poisson_stream(rate, n_requests, dataset.n_test(), 5);
     println!(
-        "[serve] {n_requests} requests, poisson {rate}/s, max_batch {max_batch}, wait {wait_ms}ms"
+        "[serve] {n_requests} requests, poisson {rate}/s, max_batch {max_batch}, wait {wait_ms}ms, backend {backend}"
     );
     let t0 = std::time::Instant::now();
     let mut pending = Vec::with_capacity(n_requests);

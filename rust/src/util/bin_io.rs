@@ -6,24 +6,52 @@
 //! side, the tests here cover cross-language decoding.
 
 use std::collections::BTreeMap;
+use std::fmt;
 use std::path::Path;
 
 use crate::util::json::Json;
 
-#[derive(Debug, thiserror::Error)]
+/// Everything that can go wrong decoding a bundle.
+#[derive(Debug)]
 pub enum BinError {
-    #[error("io error reading bundle: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("manifest error: {0}")]
+    Io(std::io::Error),
     Manifest(String),
-    #[error("tensor '{0}' not found in bundle")]
     NotFound(String),
-    #[error("tensor '{name}' has dtype {actual}, wanted {wanted}")]
     Dtype {
         name: String,
         actual: String,
         wanted: String,
     },
+}
+
+impl fmt::Display for BinError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            BinError::Io(e) => write!(f, "io error reading bundle: {e}"),
+            BinError::Manifest(m) => write!(f, "manifest error: {m}"),
+            BinError::NotFound(n) => write!(f, "tensor '{n}' not found in bundle"),
+            BinError::Dtype {
+                name,
+                actual,
+                wanted,
+            } => write!(f, "tensor '{name}' has dtype {actual}, wanted {wanted}"),
+        }
+    }
+}
+
+impl std::error::Error for BinError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            BinError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for BinError {
+    fn from(e: std::io::Error) -> Self {
+        BinError::Io(e)
+    }
 }
 
 #[derive(Clone, Debug, PartialEq)]

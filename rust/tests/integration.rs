@@ -3,16 +3,15 @@
 //!
 //! These need `make artifacts` to have run; they are skipped (with a
 //! message) when the artifacts directory is missing so `cargo test` stays
-//! green on a fresh checkout.
+//! green on a fresh checkout.  XLA-backed tests additionally skip when the
+//! PJRT runtime is the stub build (see `memdyn::runtime` module docs).
 
 use std::path::PathBuf;
 
 use memdyn::coordinator::dynmodel::{
     DynModel, NativeResNetModel, XlaPointNetModel, XlaResNetModel,
 };
-use memdyn::coordinator::{CenterSource, Engine, ExitMemory, ThresholdConfig};
-#[allow(unused_imports)]
-use memdyn::coordinator::ThresholdConfig as _TC;
+use memdyn::coordinator::{CenterSource, Engine, ExitMemory};
 use memdyn::model::{DatasetBundle, ModelBundle};
 use memdyn::nn::resnet::WeightSource;
 use memdyn::nn::{NativeResNet, NoiseSpec};
@@ -32,10 +31,21 @@ fn artifacts() -> Option<PathBuf> {
     }
 }
 
+/// The PJRT runtime, or a skip message when this build has no XLA backend.
+fn runtime() -> Option<Runtime> {
+    match Runtime::cpu() {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP: {e}");
+            None
+        }
+    }
+}
+
 #[test]
 fn runtime_executes_cim_smoke_kernel() {
     let Some(dir) = artifacts() else { return };
-    let rt = Runtime::cpu().unwrap();
+    let Some(rt) = runtime() else { return };
     let exe = rt.load(&dir.join("kernels/cim_smoke.hlo.txt")).unwrap();
     let b = Bundle::load(&dir.join("kernels/cim_smoke")).unwrap();
     let (wshape, w) = b.f32("w").unwrap();
@@ -63,7 +73,7 @@ fn xla_resnet_matches_native_digital_forward() {
     let Some(dir) = artifacts() else { return };
     let bundle = ModelBundle::load(&dir, "resnet").unwrap();
     let data = DatasetBundle::load(&dir, "mnist").unwrap();
-    let rt = Runtime::cpu().unwrap();
+    let Some(rt) = runtime() else { return };
     let xla = XlaResNetModel::load(&rt, &bundle).unwrap();
     let mut rng = Pcg64::new(1);
     let native = NativeResNet::build(
@@ -108,7 +118,7 @@ fn xla_resnet_early_exit_accuracy_on_test_slice() {
     let Some(dir) = artifacts() else { return };
     let bundle = ModelBundle::load(&dir, "resnet").unwrap();
     let data = DatasetBundle::load(&dir, "mnist").unwrap();
-    let rt = Runtime::cpu().unwrap();
+    let Some(rt) = runtime() else { return };
     let xla = XlaResNetModel::load(&rt, &bundle).unwrap();
     let memory =
         ExitMemory::build(&bundle, CenterSource::TernaryQ, &NoiseSpec::Digital, 7)
@@ -153,7 +163,7 @@ fn xla_resnet_bucket_padding_consistency() {
     let Some(dir) = artifacts() else { return };
     let bundle = ModelBundle::load(&dir, "resnet").unwrap();
     let data = DatasetBundle::load(&dir, "mnist").unwrap();
-    let rt = Runtime::cpu().unwrap();
+    let Some(rt) = runtime() else { return };
     let xla = XlaResNetModel::load(&rt, &bundle).unwrap();
     let sl = data.sample_len;
     let mut s1 = xla.init(&data.x_test[..sl], 1).unwrap();
@@ -171,7 +181,7 @@ fn xla_pointnet_forward_runs_and_classifies() {
     let Some(dir) = artifacts() else { return };
     let bundle = ModelBundle::load(&dir, "pointnet").unwrap();
     let data = DatasetBundle::load(&dir, "modelnet").unwrap();
-    let rt = Runtime::cpu().unwrap();
+    let Some(rt) = runtime() else { return };
     let xla = XlaPointNetModel::load(&rt, &bundle).unwrap();
     let n = 8usize;
     let input = &data.x_test[..n * data.sample_len];

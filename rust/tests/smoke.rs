@@ -1,0 +1,125 @@
+//! Public-API smoke tests: exercise the crate surface end to end with no
+//! artifacts on disk — these must stay green on a fresh checkout.
+
+use std::sync::mpsc::sync_channel;
+use std::time::{Duration, Instant};
+
+use memdyn::coordinator::dynmodel::DynModel;
+use memdyn::coordinator::engine::Outcome;
+use memdyn::coordinator::server::{collect_batch, Request, Response};
+use memdyn::coordinator::{Engine, ExitMemory, ServerConfig};
+
+/// `ServerConfig::default()` drives `collect_batch`, and a queued request
+/// round-trips through the public `Request`/`Response` types.
+#[test]
+fn server_config_default_collect_batch_roundtrip() {
+    let cfg = ServerConfig::default();
+    assert!(cfg.max_batch >= 1);
+    assert!(cfg.queue_depth >= 1);
+    assert!(cfg.max_wait > Duration::ZERO);
+
+    let (tx, rx) = sync_channel::<Request>(cfg.queue_depth);
+    let (resp_tx, resp_rx) = sync_channel::<Response>(1);
+    tx.send(Request {
+        input: vec![0.5, 0.25],
+        submitted: Instant::now(),
+        resp: resp_tx,
+    })
+    .unwrap();
+
+    let batch = collect_batch(&rx, cfg.max_batch, cfg.max_wait).expect("open queue");
+    assert_eq!(batch.len(), 1);
+    assert_eq!(batch[0].input, vec![0.5, 0.25]);
+
+    // complete the round trip the way the worker does
+    let outcome = Outcome {
+        class: 1,
+        exit: 0,
+        exited_early: true,
+        similarity: 0.93,
+    };
+    batch[0]
+        .resp
+        .send(Response {
+            outcome,
+            latency: batch[0].submitted.elapsed(),
+        })
+        .unwrap();
+    let r = resp_rx.recv().unwrap();
+    assert_eq!(r.outcome.class, 1);
+    assert!(r.outcome.exited_early);
+
+    // closing the queue ends the batching loop
+    drop(tx);
+    assert!(collect_batch(&rx, cfg.max_batch, cfg.max_wait).is_none());
+}
+
+/// Minimal user-defined backbone: proves the `DynModel` + `ExitMemory` +
+/// `Engine` public surface composes outside the crate.
+struct Identity {
+    blocks: usize,
+    classes: usize,
+}
+
+impl DynModel for Identity {
+    type State = Vec<Vec<f32>>;
+
+    fn n_blocks(&self) -> usize {
+        self.blocks
+    }
+
+    fn classes(&self) -> usize {
+        self.classes
+    }
+
+    fn init(&self, input: &[f32], batch: usize) -> anyhow::Result<Self::State> {
+        let w = input.len() / batch;
+        Ok((0..batch)
+            .map(|i| input[i * w..(i + 1) * w].to_vec())
+            .collect())
+    }
+
+    fn step(&self, _i: usize, state: &mut Self::State) -> anyhow::Result<Vec<f32>> {
+        Ok(state.concat())
+    }
+
+    fn batch_of(&self, state: &Self::State) -> usize {
+        state.len()
+    }
+
+    fn select(&self, state: &Self::State, keep: &[usize]) -> Self::State {
+        keep.iter().map(|&r| state[r].clone()).collect()
+    }
+
+    fn finish(&self, state: &Self::State) -> anyhow::Result<Vec<f32>> {
+        Ok(state
+            .iter()
+            .flat_map(|r| r[..self.classes].to_vec())
+            .collect())
+    }
+}
+
+#[test]
+fn engine_public_api_composes_with_custom_model() {
+    // two classes, axis-aligned centers at both exits
+    let bank = (vec![1.0f32, 0.0, 0.0, 1.0], 2usize, 2usize);
+    let engine = Engine::new(
+        Identity {
+            blocks: 2,
+            classes: 2,
+        },
+        ExitMemory::exact(vec![bank.clone(), bank]),
+        vec![0.95, 0.95],
+    );
+    // a confident class-1 sample exits at block 0; an ambiguous one reaches
+    // the head and is classified by argmax
+    let out = engine
+        .infer_batch(&[0.0, 1.0, 0.6, 0.55], 2)
+        .expect("inference");
+    assert_eq!(out[0].class, 1);
+    assert!(out[0].exited_early);
+    assert_eq!(out[0].exit, 0);
+    assert_eq!(out[1].class, 0);
+    assert!(!out[1].exited_early);
+    assert_eq!(out[1].exit, 1);
+}
