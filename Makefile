@@ -1,0 +1,27 @@
+# memdyn build orchestration.
+#
+#   make artifacts   train + ternarize the JAX models and lower every exit
+#                    block to HLO text under artifacts/ (needs python+jax);
+#                    activates the artifact-gated Rust tests and figures
+#   make ci          the full tier-1 + hygiene gate (what CI runs)
+#   make test        cargo test only
+#   make bench       the figure/hotpath bench binaries (release)
+
+.PHONY: artifacts ci test bench clean-artifacts
+
+ARTIFACTS_DIR := artifacts
+
+artifacts:
+	cd python && python -m compile.aot --out ../$(ARTIFACTS_DIR)
+
+ci:
+	./ci.sh
+
+test:
+	cargo test -q
+
+bench:
+	cargo bench
+
+clean-artifacts:
+	rm -rf $(ARTIFACTS_DIR)

@@ -3,14 +3,21 @@
 #
 #   cargo build --release && cargo test -q
 #
-# plus the documentation gate (cargo doc --no-deps must be warning-free) and
-# a compile check of the bench binaries (they use harness = false, so plain
-# `cargo test` does not build them).
+# plus the hygiene gates CI enforces: rustfmt, clippy (deny warnings), a
+# compile check of the bench binaries (harness = false, so plain
+# `cargo test` does not build them), and warning-free docs.
 #
 # Run from the repo root or rust/; artifact-dependent tests skip on a fresh
-# checkout, so this script needs no Python step.
+# checkout, so this script needs no Python step.  `make artifacts` (or the
+# CI artifact job) activates them.
 set -euo pipefail
 cd "$(dirname "$0")"
+
+echo "== cargo fmt --check =="
+cargo fmt --all --check
+
+echo "== cargo clippy --all-targets (deny warnings) =="
+cargo clippy --all-targets -- -D warnings
 
 echo "== cargo build --release =="
 cargo build --release

@@ -45,6 +45,27 @@ fn main() {
     );
     let _ = b;
 
+    // Mem-variant wall clock vs thread count: the paper's noise-robust
+    // ternary macro simulation, full depth (placeholder thresholds never
+    // exit early), bit-identical outputs at every width.  This is the
+    // EXPERIMENTS.md "parallel crossbar simulation" headline series.
+    let nm = 24usize.min(data.n_test());
+    let mem_input = &data.x_test[..nm * data.sample_len];
+    for threads in [1usize, 2, 4] {
+        let mem_engine = common::resnet_engine(&bundle, Variant::Mem, 33)
+            .unwrap()
+            .with_threads(threads);
+        let name = format!("mem_infer_{nm}_t{threads} (samples/s)");
+        println!(
+            "{}",
+            quick
+                .run_items(&name, nm as f64, || {
+                    mem_engine.infer_batch(mem_input, nm).unwrap().len()
+                })
+                .report()
+        );
+    }
+
     // the actual figure regenerations
     for fig in ["3e", "3g", "3h"] {
         let t0 = std::time::Instant::now();

@@ -64,11 +64,12 @@ fn main() {
             rnd.best.score
         );
     }
+    let start = vec![0.9f32; trace.n_exits];
     let cd = opt::grid::coordinate_descent(
         &trace,
         &budget,
         &objective,
-        &vec![0.9; trace.n_exits],
+        &start,
         0.3,
         1.05,
         16,

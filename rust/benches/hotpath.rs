@@ -10,7 +10,8 @@ use memdyn::crossbar::ConverterConfig;
 use memdyn::device::DeviceConfig;
 use memdyn::nn::ops;
 use memdyn::util::bench::standard_bencher;
-use memdyn::util::rng::Pcg64;
+use memdyn::util::pool;
+use memdyn::util::rng::{Pcg64, StreamKey};
 
 fn main() {
     let b = standard_bencher("hotpath micro-benches");
@@ -55,6 +56,31 @@ fn main() {
         })
         .report()
     );
+
+    // --- multi-core keyed batch MVM: the parallel Mem engine's fan-out ----
+    // a 32-sample batch over the noisy tile, split across 1/2/4/8 threads
+    // with per-request noise streams (outputs identical at every width);
+    // this is the §Perf "per-tile RNG streams" before/after series
+    let batch = 32usize;
+    let xb: Vec<f32> = (0..batch * k)
+        .map(|i| ((i % 23) as f32 - 11.0) / 11.0)
+        .collect();
+    let root = StreamKey::root(9);
+    for threads in [1usize, 2, 4, 8] {
+        let name = format!("xbar_matmul_b32_noisy_t{threads} (device reads/s)");
+        println!(
+            "{}",
+            b.run_items(&name, batch as f64 * reads, || {
+                let outs = pool::run_chunks(batch, threads, |r| {
+                    let keys: Vec<StreamKey> =
+                        r.clone().map(|i| root.child(i as u64)).collect();
+                    noisy.matmul_keyed(&xb[r.start * k..r.end * k], &keys)
+                });
+                outs.len()
+            })
+            .report()
+        );
+    }
 
     // --- im2col on the stem geometry --------------------------------------
     let img: Vec<f32> = (0..8 * 28 * 28 * 16).map(|i| (i % 9) as f32).collect();

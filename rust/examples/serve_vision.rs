@@ -37,7 +37,7 @@ fn main() -> Result<()> {
         let dir2 = dir.clone();
         let thr_values = thr.values.clone();
         let server = Server::start(
-            move || figcommon::serving_engine(&dir2, Variant::EeQun, thr_values, 9),
+            move || figcommon::serving_engine(&dir2, Variant::EeQun, thr_values, 9, 0),
             ServerConfig {
                 max_batch,
                 max_wait: Duration::from_millis(wait_ms),
@@ -62,7 +62,8 @@ fn main() -> Result<()> {
         let mut correct = 0usize;
         for (rx, label) in pending {
             let r = rx.recv().map_err(|_| anyhow!("request dropped"))?;
-            if r.outcome.class == label as usize {
+            let outcome = r.outcome.map_err(|e| anyhow!("engine error: {e}"))?;
+            if outcome.class == label as usize {
                 correct += 1;
             }
         }

@@ -9,7 +9,7 @@
 use crate::crossbar::ConverterConfig;
 use crate::cim::{CimCounters, CimMatrix};
 use crate::device::DeviceConfig;
-use crate::util::rng::Pcg64;
+use crate::util::rng::{Pcg64, StreamKey};
 
 /// A single exit's CAM: `n_classes` ternary centers of dimension `dim`.
 pub struct CamBank {
@@ -71,11 +71,27 @@ impl CamBank {
         }
     }
 
-    /// Cosine similarities of a search vector against every center.
+    /// Cosine similarities of a search vector against every center
+    /// (draw-order noise from `rng`; characterization / bench path).
     pub fn similarities(&self, sv: &[f32], rng: &mut Pcg64) -> Vec<f32> {
         assert_eq!(sv.len(), self.dim);
         let mut ml = vec![0f32; self.n_classes];
         self.matrix.mvm(sv, &mut ml, rng);
+        self.normalize(sv, ml)
+    }
+
+    /// Cosine similarities with identity-derived noise: the match-line MVM
+    /// draws from `key`'s per-tile streams, so the same (request, exit)
+    /// key reproduces bit-identically on any thread.
+    pub fn similarities_keyed(&self, sv: &[f32], key: StreamKey) -> Vec<f32> {
+        assert_eq!(sv.len(), self.dim);
+        let mut ml = vec![0f32; self.n_classes];
+        self.matrix.mvm_keyed(sv, &mut ml, key);
+        self.normalize(sv, ml)
+    }
+
+    /// Digital norm correction: match-line currents -> cosine similarities.
+    fn normalize(&self, sv: &[f32], mut ml: Vec<f32>) -> Vec<f32> {
         let sv_norm: f32 = sv.iter().map(|v| v * v).sum::<f32>().sqrt();
         let inv_sv = if sv_norm > 1e-9 { 1.0 / sv_norm } else { 0.0 };
         for (m, inv_c) in ml.iter_mut().zip(&self.inv_norms) {
@@ -84,9 +100,8 @@ impl CamBank {
         ml
     }
 
-    /// Top-1 associative match with runner-up margin.
-    pub fn search(&self, sv: &[f32], rng: &mut Pcg64) -> Match {
-        let sims = self.similarities(sv, rng);
+    /// Top-1 + runner-up margin over a similarity vector.
+    fn top1(&self, sims: &[f32]) -> Match {
         let mut best = 0usize;
         let mut second = f32::NEG_INFINITY;
         for (i, &s) in sims.iter().enumerate() {
@@ -105,6 +120,18 @@ impl CamBank {
             similarity: sims[best],
             margin: sims[best] - second,
         }
+    }
+
+    /// Top-1 associative match with runner-up margin.
+    pub fn search(&self, sv: &[f32], rng: &mut Pcg64) -> Match {
+        let sims = self.similarities(sv, rng);
+        self.top1(&sims)
+    }
+
+    /// Keyed top-1 match (see [`CamBank::similarities_keyed`]).
+    pub fn search_keyed(&self, sv: &[f32], key: StreamKey) -> Match {
+        let sims = self.similarities_keyed(sv, key);
+        self.top1(&sims)
     }
 
     pub fn take_counters(&self) -> CimCounters {
@@ -152,6 +179,12 @@ impl SemanticMemory {
 
     pub fn search(&self, exit: usize, sv: &[f32], rng: &mut Pcg64) -> Match {
         self.banks[exit].search(sv, rng)
+    }
+
+    /// Keyed search: `key` should already encode (request, exit) identity
+    /// (see `coordinator::memory`).
+    pub fn search_keyed(&self, exit: usize, sv: &[f32], key: StreamKey) -> Match {
+        self.banks[exit].search_keyed(sv, key)
     }
 
     pub fn take_counters(&self) -> CimCounters {
@@ -273,6 +306,45 @@ mod tests {
         let sv: Vec<f32> = exits[1].0[3 * 24..4 * 24].iter().map(|&v| v as f32).collect();
         assert_eq!(mem.search(1, &sv, &mut rng).class, 3);
         assert!(mem.take_counters().mvms > 0);
+    }
+
+    #[test]
+    fn keyed_search_reproduces_per_key_and_matches_ideal() {
+        let (c, d) = (10, 32);
+        let centers = random_centers(c, d, 21);
+        let mut rng = Pcg64::new(22);
+        let noisy = CamBank::program(
+            &centers,
+            c,
+            d,
+            &DeviceConfig::default(),
+            &ConverterConfig::default(),
+            &mut rng,
+        );
+        let sv: Vec<f32> = (0..d).map(|i| (i as f32 * 0.23).sin()).collect();
+        let key = StreamKey::root(500).child(7);
+        let a = noisy.similarities_keyed(&sv, key);
+        let b = noisy.similarities_keyed(&sv, key);
+        assert_eq!(a, b);
+        assert_ne!(a, noisy.similarities_keyed(&sv, key.child(1)));
+
+        let ideal = CamBank::program(
+            &centers,
+            c,
+            d,
+            &DeviceConfig::ideal(),
+            &ConverterConfig::ideal(),
+            &mut rng,
+        );
+        let sims = ideal.similarities_keyed(&sv, key);
+        for (cc, got) in sims.iter().enumerate() {
+            let want = cosine(&sv, &centers[cc * d..(cc + 1) * d]);
+            assert!((got - want).abs() < 1e-4, "class {cc}: {got} vs {want}");
+        }
+        assert_eq!(
+            ideal.search_keyed(&sv, key).class,
+            crate::util::stats::argmax(&sims).unwrap()
+        );
     }
 
     #[test]

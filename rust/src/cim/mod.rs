@@ -8,9 +8,11 @@
 //! `python/compile/kernels/ternary_matmul.py` — the two are cross-checked
 //! by integration tests).
 
+use std::sync::atomic::{AtomicU64, Ordering};
+
 use crate::crossbar::{ConverterConfig, CrossbarTile, XBAR_LOGICAL_COLS, XBAR_ROWS};
 use crate::device::DeviceConfig;
-use crate::util::rng::Pcg64;
+use crate::util::rng::{Pcg64, StreamKey};
 
 /// Running usage counters for energy accounting.
 #[derive(Clone, Copy, Debug, Default)]
@@ -30,6 +32,39 @@ impl CimCounters {
     }
 }
 
+/// Thread-safe accumulator behind [`CimCounters`]: relaxed atomics so
+/// concurrent MVMs (per-tile noise streams, multi-core batches) can count
+/// without a lock.  Totals are exact; only cross-field snapshots taken
+/// mid-flight could mix batches, which energy accounting never does (it
+/// reads after `infer_batch` returns).
+#[derive(Default)]
+struct AtomicCounters {
+    mvms: AtomicU64,
+    device_reads: AtomicU64,
+    dac_conversions: AtomicU64,
+    adc_conversions: AtomicU64,
+}
+
+impl AtomicCounters {
+    fn add(&self, o: &CimCounters) {
+        self.mvms.fetch_add(o.mvms, Ordering::Relaxed);
+        self.device_reads.fetch_add(o.device_reads, Ordering::Relaxed);
+        self.dac_conversions
+            .fetch_add(o.dac_conversions, Ordering::Relaxed);
+        self.adc_conversions
+            .fetch_add(o.adc_conversions, Ordering::Relaxed);
+    }
+
+    fn take(&self) -> CimCounters {
+        CimCounters {
+            mvms: self.mvms.swap(0, Ordering::Relaxed),
+            device_reads: self.device_reads.swap(0, Ordering::Relaxed),
+            dac_conversions: self.dac_conversions.swap(0, Ordering::Relaxed),
+            adc_conversions: self.adc_conversions.swap(0, Ordering::Relaxed),
+        }
+    }
+}
+
 /// A ternary weight matrix programmed across crossbar tiles.
 pub struct CimMatrix {
     pub k: usize,
@@ -38,7 +73,7 @@ pub struct CimMatrix {
     tiles: Vec<Vec<CrossbarTile>>,
     row_splits: Vec<usize>,
     col_splits: Vec<usize>,
-    pub counters: std::cell::Cell<CimCounters>,
+    counters: AtomicCounters,
 }
 
 fn splits(total: usize, max: usize) -> Vec<usize> {
@@ -111,21 +146,55 @@ impl CimMatrix {
     }
 
     /// `y = x @ W` for one input vector (`x: (k,)`, `y: (n,)`), noisy.
+    ///
+    /// Draw-order noise: every tile consumes from the one `rng` in tile
+    /// order.  Characterization paths and micro-benches use this; the
+    /// model hot path goes through [`CimMatrix::mvm_keyed`], whose noise is
+    /// identity-derived and therefore thread-count independent.
     pub fn mvm(&self, x: &[f32], y: &mut [f32], rng: &mut Pcg64) {
+        self.mvm_with(x, y, |_tile_idx| None, Some(rng));
+    }
+
+    /// `y = x @ W` with an independent, counter-derived noise stream per
+    /// physical tile: tile `(ri, ci)` draws from `key.child(tile_index)`.
+    /// Same key -> bit-identical output, on any thread.
+    pub fn mvm_keyed(&self, x: &[f32], y: &mut [f32], key: StreamKey) {
+        self.mvm_with(x, y, |tile_idx| Some(key.child(tile_idx)), None);
+    }
+
+    /// Shared MVM loop: per-tile noise comes from `key_of(tile_index)`
+    /// when given, else from the fallback sequential `rng`.
+    fn mvm_with(
+        &self,
+        x: &[f32],
+        y: &mut [f32],
+        key_of: impl Fn(u64) -> Option<StreamKey>,
+        mut rng: Option<&mut Pcg64>,
+    ) {
         assert_eq!(x.len(), self.k);
         assert_eq!(y.len(), self.n);
         for v in y.iter_mut() {
             *v = 0.0;
         }
-        let mut counters = self.counters.get();
+        let mut counters = CimCounters::default();
         let mut part = vec![0f32; XBAR_LOGICAL_COLS];
+        let cols = self.col_splits.len() - 1;
         for (ri, row_tiles) in self.tiles.iter().enumerate() {
             let (r0, r1) = (self.row_splits[ri], self.row_splits[ri + 1]);
             let xs = &x[r0..r1];
             for (ci, tile) in row_tiles.iter().enumerate() {
                 let (c0, c1) = (self.col_splits[ci], self.col_splits[ci + 1]);
                 let p = &mut part[..c1 - c0];
-                tile.mvm(xs, p, rng);
+                match key_of((ri * cols + ci) as u64) {
+                    Some(k) => {
+                        let mut tile_rng = k.rng();
+                        tile.mvm(xs, p, &mut tile_rng);
+                    }
+                    None => {
+                        let r = rng.as_deref_mut().expect("mvm: rng or key");
+                        tile.mvm(xs, p, r);
+                    }
+                }
                 for (acc, &v) in y[c0..c1].iter_mut().zip(p.iter()) {
                     *acc += v;
                 }
@@ -135,7 +204,7 @@ impl CimMatrix {
                 counters.adc_conversions += (c1 - c0) as u64;
             }
         }
-        self.counters.set(counters);
+        self.counters.add(&counters);
     }
 
     /// Batched matmul: `(m, k) @ (k, n) -> (m, n)` (noisy per row).
@@ -148,6 +217,22 @@ impl CimMatrix {
                 &mut out[i * self.n..(i + 1) * self.n],
             );
             self.mvm(xs, ys, rng);
+        }
+        out
+    }
+
+    /// Batched keyed matmul: row `i` draws its per-tile streams from
+    /// `row_keys[i]` (see [`CimMatrix::mvm_keyed`]).
+    pub fn matmul_keyed(&self, x: &[f32], row_keys: &[StreamKey]) -> Vec<f32> {
+        let m = row_keys.len();
+        assert_eq!(x.len(), m * self.k);
+        let mut out = vec![0f32; m * self.n];
+        for (i, &key) in row_keys.iter().enumerate() {
+            let (xs, ys) = (
+                &x[i * self.k..(i + 1) * self.k],
+                &mut out[i * self.n..(i + 1) * self.n],
+            );
+            self.mvm_keyed(xs, ys, key);
         }
         out
     }
@@ -177,7 +262,7 @@ impl CimMatrix {
     }
 
     pub fn take_counters(&self) -> CimCounters {
-        self.counters.replace(CimCounters::default())
+        self.counters.take()
     }
 
     pub fn tile_count(&self) -> usize {
@@ -285,6 +370,69 @@ mod tests {
         let a: Vec<f64> = y.iter().map(|&v| v as f64).collect();
         let b: Vec<f64> = want.iter().map(|&v| v as f64).collect();
         assert!(crate::util::stats::pearson(&a, &b) > 0.9);
+    }
+
+    #[test]
+    fn keyed_mvm_is_reproducible_and_matches_ideal_exact() {
+        let (k, n) = (700, 300); // multi-tile in both dimensions
+        let w = random_ternary(k, n, 11);
+        let mut rng = Pcg64::new(12);
+        let noisy = CimMatrix::program(
+            &w,
+            k,
+            n,
+            &DeviceConfig::default(),
+            &ConverterConfig::default(),
+            &mut rng,
+        );
+        let x: Vec<f32> = (0..k).map(|i| ((i % 19) as f32 - 9.0) / 9.0).collect();
+        let key = crate::util::rng::StreamKey::root(77).child(3);
+        let mut a = vec![0f32; n];
+        let mut b = vec![0f32; n];
+        noisy.mvm_keyed(&x, &mut a, key);
+        noisy.mvm_keyed(&x, &mut b, key);
+        assert_eq!(a, b, "same key must give bit-identical noise");
+        let mut c = vec![0f32; n];
+        noisy.mvm_keyed(&x, &mut c, key.child(1));
+        assert_ne!(a, c, "distinct keys must give distinct noise");
+
+        // on the ideal device the keyed path reduces to the exact matmul
+        let ideal = CimMatrix::program(
+            &w,
+            k,
+            n,
+            &DeviceConfig::ideal(),
+            &ConverterConfig::ideal(),
+            &mut rng,
+        );
+        let mut y = vec![0f32; n];
+        ideal.mvm_keyed(&x, &mut y, key);
+        let want = exact(&w, k, n, &x, 1);
+        for (p, q) in y.iter().zip(&want) {
+            assert!((p - q).abs() < 1e-3, "{p} vs {q}");
+        }
+    }
+
+    #[test]
+    fn matmul_keyed_rows_are_independent_of_batch_split() {
+        let (k, n) = (64, 16);
+        let w = random_ternary(k, n, 13);
+        let mut rng = Pcg64::new(14);
+        let cim = CimMatrix::program(
+            &w,
+            k,
+            n,
+            &DeviceConfig::default(),
+            &ConverterConfig::default(),
+            &mut rng,
+        );
+        let root = crate::util::rng::StreamKey::root(5);
+        let keys: Vec<_> = (0..4).map(|i| root.child(i)).collect();
+        let x: Vec<f32> = (0..4 * k).map(|i| ((i % 7) as f32) / 7.0).collect();
+        let full = cim.matmul_keyed(&x, &keys);
+        // row 2 computed alone must equal row 2 of the batch
+        let alone = cim.matmul_keyed(&x[2 * k..3 * k], &keys[2..3]);
+        assert_eq!(&full[2 * n..3 * n], &alone[..]);
     }
 
     #[test]

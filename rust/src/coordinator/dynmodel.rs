@@ -12,7 +12,6 @@
 //!   executed through PJRT, with bucket-padded batching.
 
 use std::sync::Arc;
-use std::sync::Mutex;
 
 use anyhow::{anyhow, Result};
 
@@ -20,7 +19,7 @@ use crate::model::ModelBundle;
 use crate::nn::pointnet::NativePointNet;
 use crate::nn::resnet::{Feature, NativeResNet};
 use crate::runtime::{Runtime, TensorIn};
-use crate::util::rng::Pcg64;
+use crate::util::rng::StreamKey;
 
 pub trait DynModel {
     type State;
@@ -29,7 +28,13 @@ pub trait DynModel {
     fn classes(&self) -> usize;
 
     /// Build the initial state from `batch` flattened raw samples.
-    fn init(&self, input: &[f32], batch: usize) -> Result<Self::State>;
+    ///
+    /// `first_req` is the engine-assigned id of the first sample; sample
+    /// `i` of the batch is request `first_req + i`.  Stochastic backends
+    /// derive every noise draw from (seed, request id, layer, tile), so a
+    /// batch split across threads — or replayed sample-by-sample — yields
+    /// bit-identical outputs.  Deterministic backends may ignore it.
+    fn init(&self, input: &[f32], batch: usize, first_req: u64) -> Result<Self::State>;
 
     /// Run exit block `i`; returns search vectors `(batch x dim_i)`.
     fn step(&self, i: usize, state: &mut Self::State) -> Result<Vec<f32>>;
@@ -52,7 +57,9 @@ pub struct NativeResNetModel {
     pub net: NativeResNet,
     pub classes: usize,
     pub img: usize,
-    rng: Mutex<Pcg64>,
+    /// Root of the per-request noise-stream tree (no lock: every request
+    /// derives its own streams, so the MVM hot path is share-nothing).
+    key: StreamKey,
 }
 
 impl NativeResNetModel {
@@ -61,14 +68,17 @@ impl NativeResNetModel {
             net,
             classes,
             img,
-            rng: Mutex::new(Pcg64::new(seed)),
+            key: StreamKey::root(seed),
         }
     }
 }
 
-/// State: stem has already run (init applies it).
+/// State: stem has already run (init applies it).  `keys[r]` is row `r`'s
+/// per-request noise stream; `select` keeps them aligned with the
+/// surviving rows.
 pub struct ResNetState {
     pub feat: Feature,
+    pub keys: Vec<StreamKey>,
 }
 
 impl DynModel for NativeResNetModel {
@@ -82,17 +92,19 @@ impl DynModel for NativeResNetModel {
         self.classes
     }
 
-    fn init(&self, input: &[f32], batch: usize) -> Result<ResNetState> {
+    fn init(&self, input: &[f32], batch: usize, first_req: u64) -> Result<ResNetState> {
         let x = crate::nn::resnet::image_feature(input, batch, self.img)?;
-        let rng = &mut *self.rng.lock().unwrap();
+        let keys: Vec<StreamKey> = (0..batch as u64)
+            .map(|i| self.key.child(first_req + i))
+            .collect();
         Ok(ResNetState {
-            feat: self.net.stem(&x, rng),
+            feat: self.net.stem(&x, &keys),
+            keys,
         })
     }
 
     fn step(&self, i: usize, state: &mut ResNetState) -> Result<Vec<f32>> {
-        let rng = &mut *self.rng.lock().unwrap();
-        let (f, sv) = self.net.block(i, &state.feat, rng);
+        let (f, sv) = self.net.block(i, &state.feat, &state.keys);
         state.feat = f;
         Ok(sv)
     }
@@ -116,12 +128,12 @@ impl DynModel for NativeResNetModel {
                 w: f.w,
                 c: f.c,
             },
+            keys: keep.iter().map(|&r| state.keys[r]).collect(),
         }
     }
 
     fn finish(&self, state: &ResNetState) -> Result<Vec<f32>> {
-        let rng = &mut *self.rng.lock().unwrap();
-        Ok(self.net.head(&state.feat, rng))
+        Ok(self.net.head(&state.feat, &state.keys))
     }
 }
 
@@ -253,7 +265,7 @@ impl DynModel for XlaResNetModel {
         self.classes
     }
 
-    fn init(&self, input: &[f32], batch: usize) -> Result<ResNetState> {
+    fn init(&self, input: &[f32], batch: usize, first_req: u64) -> Result<ResNetState> {
         let row = self.img * self.img;
         let (h, w, c) = self.block_shapes[0];
         let out = Self::run_padded(
@@ -265,6 +277,10 @@ impl DynModel for XlaResNetModel {
             1,
             &[h * w * c],
         )?;
+        // digital backend: keys are carried for state-shape uniformity only
+        let keys = (0..batch as u64)
+            .map(|i| StreamKey::root(0).child(first_req + i))
+            .collect();
         Ok(ResNetState {
             feat: Feature {
                 data: out.into_iter().next().unwrap(),
@@ -273,6 +289,7 @@ impl DynModel for XlaResNetModel {
                 w,
                 c,
             },
+            keys,
         })
     }
 
@@ -328,6 +345,7 @@ impl DynModel for XlaResNetModel {
                 w: f.w,
                 c: f.c,
             },
+            keys: keep.iter().map(|&r| state.keys[r]).collect(),
         }
     }
 
@@ -354,7 +372,8 @@ impl DynModel for XlaResNetModel {
 pub struct NativePointNetModel {
     pub net: NativePointNet,
     pub classes: usize,
-    rng: Mutex<Pcg64>,
+    /// Root of the per-request noise-stream tree (lock-free hot path).
+    key: StreamKey,
 }
 
 impl NativePointNetModel {
@@ -362,19 +381,21 @@ impl NativePointNetModel {
         NativePointNetModel {
             net,
             classes,
-            rng: Mutex::new(Pcg64::new(seed)),
+            key: StreamKey::root(seed),
         }
     }
 }
 
 /// Per-sample point-cloud state (clouds shrink independently through SA
-/// layers, so batch state is a vec of samples).
+/// layers, so batch state is a vec of samples).  Each sample carries its
+/// own per-request noise stream.
 #[derive(Clone)]
 pub struct PnSample {
     pub xyz: Vec<f32>,
     pub n: usize,
     pub feats: Vec<f32>,
     pub c: usize,
+    pub key: StreamKey,
 }
 
 pub struct PointNetState {
@@ -392,7 +413,7 @@ impl DynModel for NativePointNetModel {
         self.classes
     }
 
-    fn init(&self, input: &[f32], batch: usize) -> Result<PointNetState> {
+    fn init(&self, input: &[f32], batch: usize, first_req: u64) -> Result<PointNetState> {
         let n = self.net.n_points;
         if input.len() != batch * n * 3 {
             return Err(anyhow!("pointnet init: bad input length"));
@@ -404,17 +425,17 @@ impl DynModel for NativePointNetModel {
                     n,
                     feats: Vec::new(),
                     c: 0,
+                    key: self.key.child(first_req + b as u64),
                 })
                 .collect(),
         })
     }
 
     fn step(&self, i: usize, state: &mut PointNetState) -> Result<Vec<f32>> {
-        let rng = &mut *self.rng.lock().unwrap();
         let mut svs = Vec::new();
         for s in state.samples.iter_mut() {
             let (nx, nf, sv) =
-                self.net.sa_layer(i, &s.xyz, s.n, &s.feats, s.c, rng);
+                self.net.sa_layer(i, &s.xyz, s.n, &s.feats, s.c, s.key);
             s.n = nx.len() / 3;
             s.c = if s.n > 0 { nf.len() / s.n } else { 0 };
             s.xyz = nx;
@@ -435,10 +456,9 @@ impl DynModel for NativePointNetModel {
     }
 
     fn finish(&self, state: &PointNetState) -> Result<Vec<f32>> {
-        let rng = &mut *self.rng.lock().unwrap();
         let mut logits = Vec::new();
         for s in &state.samples {
-            logits.extend(self.net.head(&s.feats, s.n, s.c, rng));
+            logits.extend(self.net.head(&s.feats, s.n, s.c, s.key));
         }
         Ok(logits)
     }
@@ -507,7 +527,7 @@ impl DynModel for XlaPointNetModel {
         self.classes
     }
 
-    fn init(&self, input: &[f32], batch: usize) -> Result<XlaPnState> {
+    fn init(&self, input: &[f32], batch: usize, _first_req: u64) -> Result<XlaPnState> {
         if input.len() != batch * self.n_points * 3 {
             return Err(anyhow!("pointnet init: bad input length"));
         }

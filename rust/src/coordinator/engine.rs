@@ -1,6 +1,16 @@
 //! The early-exit inference engine: the paper's dynamic network, with the
 //! control flow (block -> GAP search vector -> CAM match -> exit test)
 //! living in Rust between the per-block compute artifacts.
+//!
+//! # Parallelism
+//!
+//! With [`Engine::with_threads`] the engine fans a batch's samples across
+//! a scoped thread pool (`util::pool`).  Every sample carries a globally
+//! unique request id (a per-engine counter), and all analogue noise is
+//! derived from (seed, request id, layer, tile) — never from draw order —
+//! so the result is bit-identical at any thread count, including 1.
+
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::Result;
 
@@ -8,6 +18,7 @@ use super::dynmodel::DynModel;
 use super::memory::ExitMemory;
 use super::policy::ExitPolicy;
 use crate::opt::trace::ExitTrace;
+use crate::util::pool;
 use crate::util::stats::argmax;
 
 /// One sample's inference outcome.
@@ -26,6 +37,11 @@ pub struct Engine<M: DynModel> {
     pub memory: ExitMemory,
     pub thresholds: Vec<f32>,
     pub policy: ExitPolicy,
+    /// Worker threads batches fan across (1 = fully sequential).
+    threads: usize,
+    /// Monotone request-id allocator; every sample this engine ever sees
+    /// gets a unique id, the anchor of its noise streams.
+    next_req: AtomicU64,
 }
 
 impl<M: DynModel> Engine<M> {
@@ -37,6 +53,8 @@ impl<M: DynModel> Engine<M> {
             memory,
             thresholds,
             policy: ExitPolicy::default(),
+            threads: 1,
+            next_req: AtomicU64::new(0),
         }
     }
 
@@ -45,11 +63,57 @@ impl<M: DynModel> Engine<M> {
         self
     }
 
+    /// Fan batches across up to `threads` cores.  Outputs are
+    /// bit-identical for any value, 1 included (see the module docs).
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+}
+
+impl<M: DynModel + Sync> Engine<M> {
     /// Infer a batch with per-sample early exit.  `input` is `batch`
-    /// flattened samples.
+    /// flattened samples.  With `threads > 1` the batch is split into
+    /// contiguous per-thread spans; request ids (and therefore every noise
+    /// draw) are assigned by batch position, so the outcome equals the
+    /// sequential run exactly.
     pub fn infer_batch(&self, input: &[f32], batch: usize) -> Result<Vec<Outcome>> {
+        if batch == 0 {
+            return Ok(Vec::new());
+        }
+        let first = self.next_req.fetch_add(batch as u64, Ordering::Relaxed);
+        let threads = self.threads.min(batch);
+        if threads <= 1 {
+            return self.infer_span(input, batch, first);
+        }
+        let sample_len = input.len() / batch;
+        let spans = pool::run_chunks(batch, threads, |r| {
+            self.infer_span(
+                &input[r.start * sample_len..r.end * sample_len],
+                r.len(),
+                first + r.start as u64,
+            )
+        });
+        let mut out = Vec::with_capacity(batch);
+        for span in spans {
+            out.extend(span?);
+        }
+        Ok(out)
+    }
+
+    /// Sequential early-exit loop over one contiguous span of requests.
+    fn infer_span(
+        &self,
+        input: &[f32],
+        batch: usize,
+        first_req: u64,
+    ) -> Result<Vec<Outcome>> {
         let blocks = self.model.n_blocks();
-        let mut state = self.model.init(input, batch)?;
+        let mut state = self.model.init(input, batch, first_req)?;
         // alive[i] = original position of row i
         let mut alive: Vec<usize> = (0..batch).collect();
         let mut outcomes: Vec<Option<Outcome>> = vec![None; batch];
@@ -62,7 +126,7 @@ impl<M: DynModel> Engine<M> {
             let mut keep: Vec<usize> = Vec::with_capacity(alive.len());
             for (row, &orig) in alive.iter().enumerate() {
                 let sv = &svs[row * dim..(row + 1) * dim];
-                let m = self.memory.search(e, sv);
+                let m = self.memory.search(e, sv, first_req + orig as u64);
                 if self.policy.should_exit(&m, self.thresholds[e]) {
                     outcomes[orig] = Some(Outcome {
                         class: m.class,
@@ -97,6 +161,8 @@ impl<M: DynModel> Engine<M> {
 
     /// Run the full backbone recording every exit's (sim, pred) — the input
     /// to threshold optimization (TPE / grid) and the ablation figures.
+    /// Samples fan across the engine's threads; row order in the returned
+    /// trace always matches `labels` order.
     pub fn record_trace(
         &self,
         xs: &[f32],
@@ -107,11 +173,48 @@ impl<M: DynModel> Engine<M> {
         let blocks = self.model.n_blocks();
         let n = labels.len();
         let mut trace = ExitTrace::new(blocks);
+        if n == 0 {
+            return Ok(trace);
+        }
+        let first = self.next_req.fetch_add(n as u64, Ordering::Relaxed);
+        let threads = self.threads.min(n);
+        let spans = pool::run_chunks(n, threads, |r| {
+            self.trace_span(
+                &xs[r.start * sample_len..r.end * sample_len],
+                sample_len,
+                &labels[r.start..r.end],
+                batch,
+                first + r.start as u64,
+            )
+        });
+        for span in spans {
+            for (sims, preds, final_pred, label) in span? {
+                trace.push(&sims, &preds, final_pred, label);
+            }
+        }
+        Ok(trace)
+    }
+
+    /// Full-depth trace rows for one contiguous span of requests:
+    /// per-sample `(per-exit sims, per-exit preds, head pred, label)`.
+    #[allow(clippy::type_complexity)]
+    fn trace_span(
+        &self,
+        xs: &[f32],
+        sample_len: usize,
+        labels: &[i32],
+        batch: usize,
+        first_req: u64,
+    ) -> Result<Vec<(Vec<f32>, Vec<u16>, u16, u16)>> {
+        let blocks = self.model.n_blocks();
+        let n = labels.len();
+        let mut rows = Vec::with_capacity(n);
         let mut at = 0usize;
         while at < n {
             let take = batch.min(n - at);
             let input = &xs[at * sample_len..(at + take) * sample_len];
-            let mut state = self.model.init(input, take)?;
+            let base = first_req + at as u64;
+            let mut state = self.model.init(input, take, base)?;
             // (take x blocks) sims/preds
             let mut sims = vec![0f32; take * blocks];
             let mut preds = vec![0u16; take * blocks];
@@ -119,7 +222,11 @@ impl<M: DynModel> Engine<M> {
                 let svs = self.model.step(e, &mut state)?;
                 let dim = svs.len() / take;
                 for row in 0..take {
-                    let m = self.memory.search(e, &svs[row * dim..(row + 1) * dim]);
+                    let m = self.memory.search(
+                        e,
+                        &svs[row * dim..(row + 1) * dim],
+                        base + row as u64,
+                    );
                     sims[row * blocks + e] = m.similarity;
                     preds[row * blocks + e] = m.class as u16;
                 }
@@ -128,16 +235,16 @@ impl<M: DynModel> Engine<M> {
             let classes = self.model.classes();
             for row in 0..take {
                 let lrow = &logits[row * classes..(row + 1) * classes];
-                trace.push(
-                    &sims[row * blocks..(row + 1) * blocks],
-                    &preds[row * blocks..(row + 1) * blocks],
+                rows.push((
+                    sims[row * blocks..(row + 1) * blocks].to_vec(),
+                    preds[row * blocks..(row + 1) * blocks].to_vec(),
                     argmax(lrow).unwrap_or(0) as u16,
                     labels[at + row] as u16,
-                );
+                ));
             }
             at += take;
         }
-        Ok(trace)
+        Ok(rows)
     }
 }
 
@@ -170,7 +277,7 @@ mod tests {
             self.classes
         }
 
-        fn init(&self, input: &[f32], batch: usize) -> Result<ToyState> {
+        fn init(&self, input: &[f32], batch: usize, _first_req: u64) -> Result<ToyState> {
             let w = input.len() / batch;
             Ok(ToyState {
                 rows: (0..batch)
@@ -277,6 +384,32 @@ mod tests {
         let ev = t.evaluate(&[0.9, 0.9, 0.9]);
         assert_eq!(ev.exits, vec![0, 0]);
         assert!((ev.accuracy - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn parallel_engine_matches_sequential_exactly() {
+        let mut input = Vec::new();
+        for i in 0..13 {
+            if i % 3 == 0 {
+                input.extend([1.0, 0.0, 0.0, 0.0]);
+            } else if i % 3 == 1 {
+                input.extend([0.0, 1.0, 0.0, 0.0]);
+            } else {
+                input.extend([0.5, 0.45, 0.5, 0.5]);
+            }
+        }
+        let seq = engine(vec![0.95, 0.95, 0.95]);
+        let want = seq.infer_batch(&input, 13).unwrap();
+        for threads in [2usize, 8] {
+            let par = engine(vec![0.95, 0.95, 0.95]).with_threads(threads);
+            let got = par.infer_batch(&input, 13).unwrap();
+            assert_eq!(got.len(), want.len());
+            for (a, b) in want.iter().zip(&got) {
+                assert_eq!(a.class, b.class, "{threads} threads");
+                assert_eq!(a.exit, b.exit, "{threads} threads");
+                assert_eq!(a.exited_early, b.exited_early, "{threads} threads");
+            }
+        }
     }
 
     #[test]

@@ -1,7 +1,10 @@
 //! The engine's semantic memory handle: exact digital cosine search (the
 //! software ablation rows) or the analogue CAM simulation (Mem rows).
-
-use std::sync::Mutex;
+//!
+//! Analogue searches are lock-free: each query's CAM noise is derived from
+//! the memory's seed plus the caller-supplied request id and the exit
+//! index, so concurrent searches from a multi-core engine are both
+//! contention-free and bit-reproducible (see `util::rng::StreamKey`).
 
 use anyhow::{anyhow, Result};
 
@@ -10,7 +13,7 @@ use crate::crossbar::ConverterConfig;
 use crate::device::DeviceConfig;
 use crate::model::ModelBundle;
 use crate::nn::weights::NoiseSpec;
-use crate::util::rng::Pcg64;
+use crate::util::rng::{Pcg64, StreamKey};
 
 /// Per-exit feature standardization (digital pre-processing on the ZYNQ
 /// side): raw GAP vectors are z-scored with training-set statistics before
@@ -49,7 +52,8 @@ pub enum ExitMemory {
     Analog {
         mem: SemanticMemory,
         stats: Vec<ExitStats>,
-        rng: Mutex<Pcg64>,
+        /// Root of the per-(request, exit) search-noise streams.
+        key: StreamKey,
     },
 }
 
@@ -97,7 +101,7 @@ impl ExitMemory {
                 Ok(ExitMemory::Analog {
                     mem,
                     stats,
-                    rng: Mutex::new(Pcg64::new(seed ^ 0x5eed)),
+                    key: StreamKey::root(seed ^ 0x5eed),
                 })
             }
         }
@@ -121,8 +125,11 @@ impl ExitMemory {
     }
 
     /// Top-1 associative search at one exit (z-scores the raw GAP vector
-    /// with the training statistics first).
-    pub fn search(&self, exit: usize, sv_raw: &[f32]) -> Match {
+    /// with the training statistics first).  `req` is the caller's request
+    /// id: the analogue CAM derives its search noise from (seed, req,
+    /// exit), so reruns of the same request reproduce exactly and
+    /// concurrent requests never contend; the exact memory ignores it.
+    pub fn search(&self, exit: usize, sv_raw: &[f32], req: u64) -> Match {
         match self {
             ExitMemory::Exact { banks, stats } => {
                 let sv = stats[exit].apply(sv_raw);
@@ -163,10 +170,9 @@ impl ExitMemory {
                 };
                 best
             }
-            ExitMemory::Analog { mem, stats, rng } => {
+            ExitMemory::Analog { mem, stats, key } => {
                 let sv = stats[exit].apply(sv_raw);
-                let rng = &mut *rng.lock().unwrap();
-                mem.search(exit, &sv, rng)
+                mem.search_keyed(exit, &sv, key.child(req).child(exit as u64))
             }
         }
     }
@@ -200,7 +206,7 @@ mod tests {
             4,
         )];
         let m = ExitMemory::exact(banks);
-        let hit = m.search(0, &[0.1, 0.9, 0.05, 0.0]);
+        let hit = m.search(0, &[0.1, 0.9, 0.05, 0.0], 0);
         assert_eq!(hit.class, 1);
         assert!(hit.similarity > 0.9);
         assert!(hit.margin > 0.0);
@@ -209,7 +215,50 @@ mod tests {
     #[test]
     fn exact_zero_vector_is_safe() {
         let m = ExitMemory::exact(vec![(vec![1.0, 0.0, 0.0, 1.0], 2, 2)]);
-        let hit = m.search(0, &[0.0, 0.0]);
+        let hit = m.search(0, &[0.0, 0.0], 0);
         assert!(hit.similarity.is_finite());
+    }
+
+    #[test]
+    fn analog_search_is_reproducible_per_request() {
+        use crate::cam::SemanticMemory;
+        use crate::crossbar::ConverterConfig;
+        use crate::device::DeviceConfig;
+
+        // tiny synthetic analogue memory: 2 exits x 3 ternary centers
+        let mk_centers = |d: usize, seed: u64| {
+            let mut rng = Pcg64::new(seed);
+            let mut v: Vec<i8> =
+                (0..3 * d).map(|_| [-1i8, 0, 1][rng.below(3)]).collect();
+            for c in 0..3 {
+                v[c * d] = 1;
+            }
+            (v, 3usize, d)
+        };
+        let exits = vec![mk_centers(8, 1), mk_centers(12, 2)];
+        let mut rng = Pcg64::new(3);
+        let mem = SemanticMemory::program(
+            &exits,
+            &DeviceConfig::default(),
+            &ConverterConfig::default(),
+            &mut rng,
+        );
+        let stats = vec![ExitStats::identity(8), ExitStats::identity(12)];
+        let m = ExitMemory::Analog {
+            mem,
+            stats,
+            key: StreamKey::root(9),
+        };
+        let sv: Vec<f32> = (0..8).map(|i| (i as f32 * 0.4).cos()).collect();
+        let a = m.search(0, &sv, 17);
+        let b = m.search(0, &sv, 17);
+        assert_eq!(a, b, "same request id must reproduce the search exactly");
+        // different request ids decorrelate the noise draw (similarities
+        // almost surely differ at f32 resolution under read noise)
+        let c = m.search(0, &sv, 18);
+        assert!(
+            (a.similarity - c.similarity).abs() > 0.0,
+            "distinct requests should draw distinct noise"
+        );
     }
 }

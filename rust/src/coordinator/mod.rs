@@ -22,5 +22,5 @@ pub use dynmodel::DynModel;
 pub use engine::{Engine, Outcome};
 pub use memory::{CenterSource, ExitMemory};
 pub use policy::ExitPolicy;
-pub use server::{Client, Server, ServerConfig};
+pub use server::{Client, EngineError, Server, ServerConfig};
 pub use thresholds::ThresholdConfig;

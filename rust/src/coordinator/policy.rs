@@ -7,18 +7,13 @@
 
 use crate::cam::Match;
 
-#[derive(Clone, Copy, Debug, PartialEq)]
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub enum ExitPolicy {
     /// Exit when top-1 similarity >= threshold (the paper's rule).
+    #[default]
     Similarity,
     /// Exit when similarity >= threshold AND margin to runner-up >= `min_margin`.
     SimilarityWithMargin { min_margin: f32 },
-}
-
-impl Default for ExitPolicy {
-    fn default() -> Self {
-        ExitPolicy::Similarity
-    }
 }
 
 impl ExitPolicy {

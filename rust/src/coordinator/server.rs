@@ -39,11 +39,27 @@ pub struct Request {
     pub resp: SyncSender<Response>,
 }
 
-#[derive(Clone, Copy, Debug)]
+/// What a client receives for one request.  `outcome` is `Err` when the
+/// engine failed the whole batch (the error text is shared by every
+/// request in it) — the responder channel itself stays intact, so clients
+/// can distinguish "engine rejected this batch" from "server is gone".
+#[derive(Clone, Debug)]
 pub struct Response {
-    pub outcome: Outcome,
+    pub outcome: Result<Outcome, EngineError>,
     pub latency: Duration,
 }
+
+/// A batch-level engine failure, cloned to every affected client.
+#[derive(Clone, Debug)]
+pub struct EngineError(pub String);
+
+impl std::fmt::Display for EngineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for EngineError {}
 
 /// Collect one batch from the queue: blocking on the first request, then
 /// draining until `max_batch` or `max_wait` elapses.  Returns None when the
@@ -88,7 +104,7 @@ impl Server {
     /// (crossbar) engines use the same path for uniformity.
     pub fn start<M, F>(factory: F, cfg: ServerConfig) -> Server
     where
-        M: DynModel + 'static,
+        M: DynModel + Sync + 'static,
         F: FnOnce() -> anyhow::Result<Engine<M>> + Send + 'static,
     {
         let (tx, rx) = sync_channel::<Request>(cfg.queue_depth);
@@ -117,14 +133,22 @@ impl Server {
                             let latency = req.submitted.elapsed();
                             metrics.record(latency, out.exit, out.exited_early);
                             let _ = req.resp.send(Response {
-                                outcome: out,
+                                outcome: Ok(out),
                                 latency,
                             });
                         }
                     }
                     Err(e) => {
+                        // surface the engine error to every client in the
+                        // batch instead of dropping the responders
                         eprintln!("[server] batch failed: {e:#}");
-                        // drop the responders: clients see a closed channel
+                        let err = EngineError(format!("{e:#}"));
+                        for req in batch {
+                            let _ = req.resp.send(Response {
+                                outcome: Err(err.clone()),
+                                latency: req.submitted.elapsed(),
+                            });
+                        }
                     }
                 }
             }
@@ -200,7 +224,15 @@ mod tests {
             2
         }
 
-        fn init(&self, input: &[f32], batch: usize) -> anyhow::Result<Self::State> {
+        fn init(
+            &self,
+            input: &[f32],
+            batch: usize,
+            _first_req: u64,
+        ) -> anyhow::Result<Self::State> {
+            if input.iter().any(|v| !v.is_finite()) {
+                return Err(anyhow!("toy: non-finite input"));
+            }
             let w = input.len() / batch;
             Ok((0..batch).map(|i| input[i * w..(i + 1) * w].to_vec()).collect())
         }
@@ -244,10 +276,11 @@ mod tests {
         let srv = server(4, 1);
         let client = srv.client();
         let r0 = client.infer(vec![1.0, 0.0]).unwrap();
-        assert_eq!(r0.outcome.class, 0);
-        assert!(r0.outcome.exited_early);
+        let o0 = r0.outcome.unwrap();
+        assert_eq!(o0.class, 0);
+        assert!(o0.exited_early);
         let r1 = client.infer(vec![0.1, 0.9]).unwrap();
-        assert_eq!(r1.outcome.class, 1);
+        assert_eq!(r1.outcome.unwrap().class, 1);
         drop(client);
         let snap = srv.shutdown().unwrap();
         assert_eq!(snap.requests, 2);
@@ -270,13 +303,30 @@ mod tests {
             .collect();
         for (i, w) in waiters.into_iter().enumerate() {
             let r = w.recv().unwrap();
-            assert_eq!(r.outcome.class, i % 2);
+            assert_eq!(r.outcome.unwrap().class, i % 2);
         }
         drop(client);
         let snap = srv.shutdown().unwrap();
         assert_eq!(snap.requests, 16);
         // queueing 16 requests with a 20ms window must produce real batches
         assert!(snap.mean_batch > 1.5, "mean batch {}", snap.mean_batch);
+    }
+
+    #[test]
+    fn poisoned_batch_yields_err_not_closed_channel() {
+        let srv = server(4, 1);
+        let client = srv.client();
+        // NaN input makes Toy::init fail the whole batch
+        let r = client.infer(vec![f32::NAN, 0.0]).expect("channel stays open");
+        let err = r.outcome.expect_err("engine error must surface");
+        assert!(err.to_string().contains("non-finite"), "got: {err}");
+        // the worker survives a poisoned batch and keeps serving
+        let ok = client.infer(vec![1.0, 0.0]).unwrap();
+        assert_eq!(ok.outcome.unwrap().class, 0);
+        drop(client);
+        let snap = srv.shutdown().unwrap();
+        // only the successful request reaches the metrics
+        assert_eq!(snap.requests, 1);
     }
 
     #[test]

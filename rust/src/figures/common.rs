@@ -15,6 +15,7 @@ use crate::nn::pointnet::NativePointNet;
 use crate::nn::resnet::WeightSource;
 use crate::nn::{NativeResNet, NoiseSpec};
 use crate::opt::{self, ExitTrace, Objective};
+use crate::util::pool;
 use crate::util::rng::Pcg64;
 
 /// The ablation variants of Fig. 3e / 5e.
@@ -124,6 +125,10 @@ impl Setup {
 }
 
 /// Build a native engine for one model/variant.
+///
+/// The engine fans batches across all available cores by default
+/// (`MEMDYN_THREADS` overrides); outputs are bit-identical at any thread
+/// count, so figures and benches stay reproducible.
 pub fn resnet_engine(
     bundle: &ModelBundle,
     v: Variant,
@@ -144,22 +149,30 @@ pub fn resnet_engine(
         model,
         memory,
         vec![2.0; bundle.blocks], // placeholder; callers set thresholds
-    ))
+    )
+    .with_threads(pool::max_threads()))
 }
 
 /// Native ResNet serving engine with thresholds applied — the one factory
 /// `memdyn serve --backend native` and `examples/serve_vision.rs` share
 /// (the engine must be built on the worker thread, hence by-value args).
+/// `threads` caps the per-batch fan-out (0 = all available cores).
 pub fn serving_engine(
     artifacts: &Path,
     v: Variant,
     thresholds: Vec<f32>,
     seed: u64,
+    threads: usize,
 ) -> Result<Engine<NativeResNetModel>> {
     let bundle = ModelBundle::load(artifacts, "resnet")?;
     let mut engine = resnet_engine(&bundle, v, seed)?;
     engine.thresholds = thresholds;
-    Ok(engine)
+    let t = if threads == 0 {
+        pool::max_threads()
+    } else {
+        threads
+    };
+    Ok(engine.with_threads(t))
 }
 
 pub fn pointnet_engine(
@@ -177,11 +190,40 @@ pub fn pointnet_engine(
         spec
     };
     let memory = ExitMemory::build(bundle, v.center_source(), &mem_spec, seed ^ 0xcafe)?;
-    Ok(Engine::new(model, memory, vec![2.0; bundle.blocks]))
+    Ok(Engine::new(model, memory, vec![2.0; bundle.blocks])
+        .with_threads(pool::max_threads()))
+}
+
+/// Per-block search vectors of the first `n` test samples, one sample per
+/// pool task (bit-identical to a serial run: sample `s` is request `s`).
+/// Shared by the fig 3b–d and fig 5b–d embedding figures.
+pub fn collect_block_svs<M: crate::coordinator::DynModel + Sync>(
+    model: &M,
+    data: &DatasetBundle,
+    n: usize,
+    blocks: usize,
+) -> Result<Vec<Vec<f32>>> {
+    let per_sample: Vec<Result<Vec<Vec<f32>>>> =
+        pool::map(n, pool::max_threads(), |s| {
+            let input = data.test_sample(s);
+            let mut state = model.init(input, 1, s as u64)?;
+            let mut svs = Vec::with_capacity(blocks);
+            for e in 0..blocks {
+                svs.push(model.step(e, &mut state)?);
+            }
+            Ok(svs)
+        });
+    let mut svs_per_block: Vec<Vec<f32>> = vec![Vec::new(); blocks];
+    for r in per_sample {
+        for (e, sv) in r?.into_iter().enumerate() {
+            svs_per_block[e].extend(sv);
+        }
+    }
+    Ok(svs_per_block)
 }
 
 /// Record a test-split trace with a native engine.
-pub fn trace_test<M: crate::coordinator::DynModel>(
+pub fn trace_test<M: crate::coordinator::DynModel + Sync>(
     engine: &Engine<M>,
     data: &DatasetBundle,
     n: usize,
@@ -197,7 +239,7 @@ pub fn trace_test<M: crate::coordinator::DynModel>(
 }
 
 /// Record a train-split trace (threshold calibration data).
-pub fn trace_train<M: crate::coordinator::DynModel>(
+pub fn trace_train<M: crate::coordinator::DynModel + Sync>(
     engine: &Engine<M>,
     data: &DatasetBundle,
     n: usize,

@@ -15,17 +15,8 @@ pub fn fig3bcd(setup: &Setup) -> Result<String> {
     let engine = common::resnet_engine(&bundle, Variant::EeQun, 5)?;
     let n = setup.samples.min(100).min(data.n_test());
     let trace_needed = [1usize, 4, 8]; // blocks 2, 5, 9 in 1-based counting
-    // collect per-block svs by re-running the model
-    use crate::coordinator::DynModel;
-    let mut svs_per_block: Vec<Vec<f32>> = vec![Vec::new(); bundle.blocks];
-    for s in 0..n {
-        let input = data.test_sample(s);
-        let mut state = engine.model.init(input, 1)?;
-        for e in 0..bundle.blocks {
-            let sv = engine.model.step(e, &mut state)?;
-            svs_per_block[e].extend(sv);
-        }
-    }
+    let svs_per_block =
+        common::collect_block_svs(&engine.model, &data, n, bundle.blocks)?;
     for &b in &trace_needed {
         let dim = bundle.exit_dims[b];
         let (centers, classes, cdim) = bundle.centers_q(b)?;

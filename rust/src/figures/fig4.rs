@@ -12,7 +12,8 @@ use crate::crossbar::ConverterConfig;
 use crate::device::{self, DeviceConfig};
 use crate::nn::resnet::WeightSource;
 use crate::nn::{NativeResNet, NoiseSpec};
-use crate::util::rng::Pcg64;
+use crate::util::pool;
+use crate::util::rng::{Pcg64, StreamKey};
 use crate::util::stats;
 
 pub fn fig4a(_setup: &Setup) -> Result<String> {
@@ -173,6 +174,7 @@ fn static_accuracy(
     };
     let mut rng = Pcg64::new(seed);
     let net = NativeResNet::build(&bundle, source, &spec, &mut rng)?;
+    let key = StreamKey::root(seed ^ 0xf16);
     let n = n.min(data.n_test());
     let mut correct = 0usize;
     let batch = 20usize;
@@ -184,7 +186,9 @@ fn static_accuracy(
             take,
             28,
         )?;
-        let (logits, _) = net.forward(&feat, &mut rng);
+        let keys: Vec<StreamKey> =
+            (at..at + take).map(|i| key.child(i as u64)).collect();
+        let (logits, _) = net.forward(&feat, &keys);
         for r in 0..take {
             let row = &logits[r * bundle.classes..(r + 1) * bundle.classes];
             if stats::argmax(row) == Some(data.y_test[at + r] as usize) {
@@ -202,7 +206,10 @@ pub fn fig4h(setup: &Setup) -> Result<String> {
         "== Fig 4h: accuracy vs WRITE noise (read noise off) ==\n\
          write% |  ternary | full-precision mapped\n",
     );
-    for wn in [0.0, 0.1, 0.2, 0.3, 0.4, 0.5] {
+    // one noise level per pool task (trial-level fan-out)
+    let levels = [0.0, 0.1, 0.2, 0.3, 0.4, 0.5];
+    let rows = pool::map(levels.len(), pool::max_threads(), |i| {
+        let wn = levels[i];
         let dev = DeviceConfig {
             write_noise: wn,
             read_noise_a: 0.0,
@@ -211,6 +218,10 @@ pub fn fig4h(setup: &Setup) -> Result<String> {
         };
         let t = static_accuracy(setup, WeightSource::Ternary, dev.clone(), n, 51)?;
         let f = static_accuracy(setup, WeightSource::FullPrecision, dev, n, 52)?;
+        Ok::<(f64, f64), anyhow::Error>((t, f))
+    });
+    for (wn, row) in levels.iter().zip(rows) {
+        let (t, f) = row?;
         out.push_str(&format!(
             "{:>6.0} | {:>7.1}% | {:>7.1}%\n",
             wn * 100.0,
@@ -228,10 +239,15 @@ pub fn fig4i(setup: &Setup) -> Result<String> {
         "== Fig 4i: accuracy vs READ noise (write noise fixed 15%) ==\n\
          readx  |  ternary | full-precision mapped\n",
     );
-    for scale in [0.0, 1.0, 2.0, 4.0, 8.0] {
-        let dev = DeviceConfig::default().with_read_noise_scale(scale);
+    let levels = [0.0, 1.0, 2.0, 4.0, 8.0];
+    let rows = pool::map(levels.len(), pool::max_threads(), |i| {
+        let dev = DeviceConfig::default().with_read_noise_scale(levels[i]);
         let t = static_accuracy(setup, WeightSource::Ternary, dev.clone(), n, 61)?;
         let f = static_accuracy(setup, WeightSource::FullPrecision, dev, n, 62)?;
+        Ok::<(f64, f64), anyhow::Error>((t, f))
+    });
+    for (scale, row) in levels.iter().zip(rows) {
+        let (t, f) = row?;
         out.push_str(&format!(
             "{:>6.1} | {:>7.1}% | {:>7.1}%\n",
             scale,

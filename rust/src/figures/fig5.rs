@@ -7,7 +7,6 @@ use anyhow::Result;
 use super::common::{self, Setup, Variant};
 use super::fig3::AblationRow;
 use crate::budget::BudgetModel;
-use crate::coordinator::DynModel;
 use crate::energy::EnergyModel;
 use crate::tsne;
 
@@ -16,15 +15,8 @@ pub fn fig5bcd(setup: &Setup) -> Result<String> {
     let mut out = String::from("== Fig 5b-d: SA-layer embeddings (t-SNE) ==\n");
     let engine = common::pointnet_engine(&bundle, Variant::EeQun, 7)?;
     let n = setup.samples.min(60).min(data.n_test());
-    let mut svs_per_block: Vec<Vec<f32>> = vec![Vec::new(); bundle.blocks];
-    for s in 0..n {
-        let input = data.test_sample(s);
-        let mut state = engine.model.init(input, 1)?;
-        for e in 0..bundle.blocks {
-            let sv = engine.model.step(e, &mut state)?;
-            svs_per_block[e].extend(sv);
-        }
-    }
+    let svs_per_block =
+        common::collect_block_svs(&engine.model, &data, n, bundle.blocks)?;
     for &b in &[1usize, 3, 5] {
         let dim = bundle.exit_dims[b];
         let (centers, classes, cdim) = bundle.centers_q(b)?;

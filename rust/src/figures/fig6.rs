@@ -144,21 +144,21 @@ pub fn fig6hk(setup: &Setup) -> Result<String> {
             .map(|t| (t * 1000.0).round() / 1000.0)
             .collect::<Vec<_>>()
     ));
-    // comparison baselines
-    let rnd = opt::random::search(&trace, &budget, &o, 0.3, 1.05, 1000, 97);
-    let cd = opt::grid::coordinate_descent(
-        &trace,
-        &budget,
-        &o,
-        &vec![0.9; trace.n_exits],
-        0.3,
-        1.05,
-        16,
-        3,
-    );
+    // comparison baselines, one optimizer per pool task
+    let scores = crate::util::pool::map(2, crate::util::pool::max_threads(), |i| {
+        if i == 0 {
+            opt::random::search(&trace, &budget, &o, 0.3, 1.05, 1000, 97)
+                .best
+                .score
+        } else {
+            let init = vec![0.9f32; trace.n_exits];
+            opt::grid::coordinate_descent(&trace, &budget, &o, &init, 0.3, 1.05, 16, 3)
+                .score
+        }
+    });
     out.push_str(&format!(
         "baselines: random-search best {:.4}, coordinate-descent best {:.4}\n",
-        rnd.best.score, cd.score
+        scores[0], scores[1]
     ));
     Ok(out)
 }

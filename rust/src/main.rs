@@ -4,7 +4,7 @@
 //! memdyn fig <id|all> [--artifacts DIR] [--samples N]   regenerate figures
 //! memdyn tune [--model resnet|pointnet] [--iters N]     TPE threshold tuning
 //! memdyn infer --model resnet --index I [--backend native|xla]
-//! memdyn serve [--requests N] [--rate R] [--max-batch B] [--backend native|xla] [--variant qun|noise|mem]
+//! memdyn serve [--requests N] [--rate R] [--max-batch B] [--threads T] [--workload poisson|bursty] [--backend native|xla] [--variant qun|noise|mem]
 //! memdyn characterize                                   device statistics
 //! ```
 //!
@@ -55,7 +55,7 @@ fn print_help() {
          USAGE:\n  memdyn fig <id|all> [--artifacts DIR] [--samples N]\n  \
          memdyn tune [--model resnet|pointnet] [--iters N] [--artifacts DIR]\n  \
          memdyn infer --index I [--model resnet] [--backend native|xla]\n  \
-         memdyn serve [--requests N] [--rate R] [--max-batch B] [--wait-ms W] [--backend native|xla] [--variant qun|noise|mem]\n  \
+         memdyn serve [--requests N] [--rate R] [--max-batch B] [--wait-ms W] [--threads T] [--workload poisson|bursty] [--backend native|xla] [--variant qun|noise|mem]\n  \
          memdyn characterize\n\nFIGURES: {}",
         figures::ALL.join(", ")
     );
@@ -196,6 +196,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let rate = args.get_f64("rate", 500.0);
     let max_batch = args.get_usize("max-batch", 8);
     let wait_ms = args.get_usize("wait-ms", 2);
+    // engine fan-out per batch (0 = all cores; MEMDYN_THREADS also applies)
+    let threads = args.get_usize("threads", 0);
     // native is the default: the XLA backend needs the PJRT runtime, which
     // is a stub in this build (see memdyn::runtime module docs)
     let backend = args.get_or("backend", "native");
@@ -224,7 +226,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     let server = match backend {
         "native" => Server::start(
-            move || figcommon::serving_engine(&dir2, variant, thr_values, 9),
+            move || figcommon::serving_engine(&dir2, variant, thr_values, 9, threads),
             cfg,
         ),
         "xla" => Server::start(
@@ -245,9 +247,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
         other => return Err(anyhow!("unknown backend {other}")),
     };
     let client = server.client();
-    let stream = data::poisson_stream(rate, n_requests, dataset.n_test(), 5);
+    // arrival process: poisson (default) or bursty at the same mean rate
+    let workload = args.get_or("workload", "poisson");
+    let stream = match workload {
+        "poisson" => data::poisson_stream(rate, n_requests, dataset.n_test(), 5),
+        "bursty" => {
+            let burst = 16usize;
+            let period_us = (burst as f64 * 1e6 / rate) as u64;
+            data::bursty_stream(burst, period_us, n_requests, dataset.n_test(), 5)
+        }
+        other => return Err(anyhow!("unknown workload {other} (poisson|bursty)")),
+    };
     println!(
-        "[serve] {n_requests} requests, poisson {rate}/s, max_batch {max_batch}, wait {wait_ms}ms, backend {backend}"
+        "[serve] {n_requests} requests, {workload} {rate}/s, max_batch {max_batch}, wait {wait_ms}ms, threads {threads}, backend {backend}"
     );
     let t0 = std::time::Instant::now();
     let mut pending = Vec::with_capacity(n_requests);
@@ -263,7 +275,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let mut correct = 0usize;
     for (rx, label) in pending.into_iter().zip(labels) {
         let r = rx.recv().map_err(|_| anyhow!("request dropped"))?;
-        if r.outcome.class == label as usize {
+        let outcome = r.outcome.map_err(|e| anyhow!("engine error: {e}"))?;
+        if outcome.class == label as usize {
             correct += 1;
         }
     }

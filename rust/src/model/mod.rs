@@ -218,5 +218,15 @@ pub fn artifacts_dir(flag: Option<&str>) -> PathBuf {
     if let Ok(env) = std::env::var("MEMDYN_ARTIFACTS") {
         return PathBuf::from(env);
     }
-    PathBuf::from("artifacts")
+    // cargo runs test/bench binaries with cwd = the package root (rust/),
+    // while `make artifacts` writes to the workspace root — accept either
+    let local = PathBuf::from("artifacts");
+    if local.join("index.json").exists() {
+        return local;
+    }
+    let parent = PathBuf::from("../artifacts");
+    if parent.join("index.json").exists() {
+        return parent;
+    }
+    local
 }

@@ -7,9 +7,9 @@ use anyhow::Result;
 
 use super::ops;
 use super::resnet::WeightSource;
-use super::weights::{NoiseSpec, WeightMatrix};
+use super::weights::{MvmKeys, NoiseSpec, WeightMatrix};
 use crate::model::ModelBundle;
-use crate::util::rng::Pcg64;
+use crate::util::rng::{str_id, Pcg64, StreamKey};
 
 struct SaLayer {
     w1: WeightMatrix,
@@ -115,20 +115,22 @@ impl NativePointNet {
             .unwrap_or(256);
 
         let load_w = |path: &str, rng: &mut Pcg64| -> Result<WeightMatrix> {
-            match source {
+            let wm = match source {
                 WeightSource::Ternary => {
                     let (shape, w) = bundle.q_i8(path)?;
                     let n = *shape.last().unwrap();
                     let k: usize = shape.iter().product::<usize>() / n;
-                    Ok(WeightMatrix::from_ternary(&w, k, n, spec, rng))
+                    WeightMatrix::from_ternary(&w, k, n, spec, rng)
                 }
                 WeightSource::FullPrecision => {
                     let (shape, w) = bundle.fp_f32(path)?;
                     let n = *shape.last().unwrap();
                     let k: usize = shape.iter().product::<usize>() / n;
-                    Ok(WeightMatrix::from_f32(&w, k, n, spec, rng))
+                    WeightMatrix::from_f32(&w, k, n, spec, rng)
                 }
-            }
+            };
+            // per-layer noise-stream identity from the weight-tree path
+            Ok(wm.with_stream_id(str_id(path)))
         };
         let load_n = |path: &str| -> Result<Vec<f32>> {
             Ok(match source {
@@ -168,7 +170,8 @@ impl NativePointNet {
 
     /// One SA layer on a single cloud.
     ///
-    /// `xyz: (n, 3)`, `feats: (n, c)` (empty for layer 0).  Returns
+    /// `xyz: (n, 3)`, `feats: (n, c)` (empty for layer 0); `key` is the
+    /// cloud's per-request noise stream.  Returns
     /// `(new_xyz (np, 3), new_feats (np, c'), search_vector (c',))`.
     pub fn sa_layer(
         &self,
@@ -177,7 +180,7 @@ impl NativePointNet {
         n: usize,
         feats: &[f32],
         c: usize,
-        rng: &mut Pcg64,
+        key: StreamKey,
     ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
         let l = &self.sa[i];
         let fps = farthest_point_sample(xyz, n, l.npoint);
@@ -199,11 +202,13 @@ impl NativePointNet {
             }
         }
         let rows = l.npoint * l.k;
-        let mut h = l.w1.matmul(&flat, rows, rng);
+        let sample_keys = [key];
+        let mk = MvmKeys::new(&sample_keys, rows);
+        let mut h = l.w1.matmul(&flat, rows, &mk);
         let mid = l.w1.n();
         ops::layer_norm(&mut h, rows, mid, &l.g1, &l.b1, EPS);
         ops::relu(&mut h);
-        let mut h2 = l.w2.matmul(&h, rows, rng);
+        let mut h2 = l.w2.matmul(&h, rows, &mk);
         let cout = l.w2.n();
         ops::layer_norm(&mut h2, rows, cout, &l.g2, &l.b2, EPS);
         ops::relu(&mut h2);
@@ -238,7 +243,13 @@ impl NativePointNet {
     }
 
     /// Head over the final representative features `(np, c)` -> logits.
-    pub fn head(&self, feats: &[f32], np: usize, c: usize, rng: &mut Pcg64) -> Vec<f32> {
+    pub fn head(
+        &self,
+        feats: &[f32],
+        np: usize,
+        c: usize,
+        key: StreamKey,
+    ) -> Vec<f32> {
         // global max pool
         let mut g = vec![f32::NEG_INFINITY; c];
         for q in 0..np {
@@ -248,14 +259,16 @@ impl NativePointNet {
                 }
             }
         }
-        let mut h = self.head_w1.matmul(&g, 1, rng);
+        let sample_keys = [key];
+        let mk = MvmKeys::per_sample(&sample_keys);
+        let mut h = self.head_w1.matmul(&g, 1, &mk);
         for (v, b) in h.iter_mut().zip(&self.head_b1) {
             *v += *b;
             if *v < 0.0 {
                 *v = 0.0;
             }
         }
-        let mut logits = self.head_w2.matmul(&h, 1, rng);
+        let mut logits = self.head_w2.matmul(&h, 1, &mk);
         for (v, b) in logits.iter_mut().zip(&self.head_b2) {
             *v += *b;
         }
@@ -263,21 +276,25 @@ impl NativePointNet {
     }
 
     /// Full forward on one cloud `(n_points, 3)`: `(logits, per-SA svs)`.
-    pub fn forward(&self, cloud: &[f32], rng: &mut Pcg64) -> (Vec<f32>, Vec<Vec<f32>>) {
+    pub fn forward(
+        &self,
+        cloud: &[f32],
+        key: StreamKey,
+    ) -> (Vec<f32>, Vec<Vec<f32>>) {
         let mut xyz = cloud.to_vec();
         let mut n = self.n_points;
         let mut feats: Vec<f32> = Vec::new();
         let mut c = 0usize;
         let mut svs = Vec::with_capacity(self.sa.len());
         for i in 0..self.sa.len() {
-            let (nx, nf, sv) = self.sa_layer(i, &xyz, n, &feats, c, rng);
+            let (nx, nf, sv) = self.sa_layer(i, &xyz, n, &feats, c, key);
             n = self.sa[i].npoint;
             c = self.sa[i].w2.n();
             xyz = nx;
             feats = nf;
             svs.push(sv);
         }
-        (self.head(&feats, n, c, rng), svs)
+        (self.head(&feats, n, c, key), svs)
     }
 
     pub fn take_counters(&self) -> crate::cim::CimCounters {

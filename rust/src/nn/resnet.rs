@@ -7,9 +7,9 @@
 use anyhow::{anyhow, Result};
 
 use super::ops;
-use super::weights::{NoiseSpec, WeightMatrix};
+use super::weights::{MvmKeys, NoiseSpec, WeightMatrix};
 use crate::model::ModelBundle;
-use crate::util::rng::Pcg64;
+use crate::util::rng::{str_id, Pcg64, StreamKey};
 
 /// Which weight tree to physically map.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -75,20 +75,22 @@ impl NativeResNet {
             .unwrap_or(4);
 
         let load_w = |path: &str, rng: &mut Pcg64| -> Result<WeightMatrix> {
-            match source {
+            let wm = match source {
                 WeightSource::Ternary => {
                     let (shape, w) = bundle.q_i8(path)?;
                     let n = *shape.last().unwrap();
                     let k: usize = shape.iter().product::<usize>() / n;
-                    Ok(WeightMatrix::from_ternary(&w, k, n, spec, rng))
+                    WeightMatrix::from_ternary(&w, k, n, spec, rng)
                 }
                 WeightSource::FullPrecision => {
                     let (shape, w) = bundle.fp_f32(path)?;
                     let n = *shape.last().unwrap();
                     let k: usize = shape.iter().product::<usize>() / n;
-                    Ok(WeightMatrix::from_f32(&w, k, n, spec, rng))
+                    WeightMatrix::from_f32(&w, k, n, spec, rng)
                 }
-            }
+            };
+            // per-layer noise-stream identity from the weight-tree path
+            Ok(wm.with_stream_id(str_id(path)))
         };
         // norm params always come from the matching tree
         let load_n = |path: &str| -> Result<Vec<f32>> {
@@ -147,16 +149,19 @@ impl NativeResNet {
         self.blocks.len()
     }
 
+    /// `keys` holds one per-request [`StreamKey`] per sample in `x`; the
+    /// im2col rows of sample `s` derive their noise from `keys[s]`.
     fn conv(
         w: &WeightMatrix,
         x: &Feature,
         kh: usize,
         stride: usize,
-        rng: &mut Pcg64,
+        keys: &[StreamKey],
     ) -> Feature {
+        debug_assert_eq!(keys.len(), x.n);
         let (cols, ho, wo) = ops::im2col(&x.data, x.n, x.h, x.w, x.c, kh, kh, stride);
         let m = x.n * ho * wo;
-        let out = w.matmul(&cols, m, rng);
+        let out = w.matmul(&cols, m, &MvmKeys::new(keys, ho * wo));
         Feature {
             n: x.n,
             h: ho,
@@ -167,8 +172,8 @@ impl NativeResNet {
     }
 
     /// Stem: conv3x3 -> GN -> ReLU.
-    pub fn stem(&self, x: &Feature, rng: &mut Pcg64) -> Feature {
-        let mut y = Self::conv(&self.stem_w, x, 3, 1, rng);
+    pub fn stem(&self, x: &Feature, keys: &[StreamKey]) -> Feature {
+        let mut y = Self::conv(&self.stem_w, x, 3, 1, keys);
         ops::group_norm(
             &mut y.data,
             y.n,
@@ -184,10 +189,15 @@ impl NativeResNet {
     }
 
     /// One residual block; returns `(feature_map, search_vectors (n, c))`.
-    pub fn block(&self, i: usize, x: &Feature, rng: &mut Pcg64) -> (Feature, Vec<f32>) {
+    pub fn block(
+        &self,
+        i: usize,
+        x: &Feature,
+        keys: &[StreamKey],
+    ) -> (Feature, Vec<f32>) {
         let b = &self.blocks[i];
         debug_assert_eq!(x.c, b.cin);
-        let mut h = Self::conv(&b.w1, x, 3, b.stride, rng);
+        let mut h = Self::conv(&b.w1, x, 3, b.stride, keys);
         ops::group_norm(
             &mut h.data,
             h.n,
@@ -199,7 +209,7 @@ impl NativeResNet {
             EPS,
         );
         ops::relu(&mut h.data);
-        let mut h2 = Self::conv(&b.w2, &h, 3, 1, rng);
+        let mut h2 = Self::conv(&b.w2, &h, 3, 1, keys);
         ops::group_norm(
             &mut h2.data,
             h2.n,
@@ -211,7 +221,7 @@ impl NativeResNet {
             EPS,
         );
         let sc: Feature = match &b.proj {
-            Some(p) => Self::conv(p, x, 1, b.stride, rng),
+            Some(p) => Self::conv(p, x, 1, b.stride, keys),
             None => x.clone(),
         };
         debug_assert_eq!(sc.data.len(), h2.data.len());
@@ -226,9 +236,9 @@ impl NativeResNet {
     }
 
     /// Head: GAP -> linear -> logits `(n, classes)`.
-    pub fn head(&self, x: &Feature, rng: &mut Pcg64) -> Vec<f32> {
+    pub fn head(&self, x: &Feature, keys: &[StreamKey]) -> Vec<f32> {
         let pooled = ops::gap(&x.data, x.n, x.h * x.w, x.c);
-        let mut logits = self.head_w.matmul(&pooled, x.n, rng);
+        let mut logits = self.head_w.matmul(&pooled, x.n, &MvmKeys::per_sample(keys));
         let nc = self.head_b.len();
         for r in 0..x.n {
             for j in 0..nc {
@@ -239,15 +249,19 @@ impl NativeResNet {
     }
 
     /// Full static forward (all blocks): `(logits, per-block svs)`.
-    pub fn forward(&self, x: &Feature, rng: &mut Pcg64) -> (Vec<f32>, Vec<Vec<f32>>) {
-        let mut h = self.stem(x, rng);
+    pub fn forward(
+        &self,
+        x: &Feature,
+        keys: &[StreamKey],
+    ) -> (Vec<f32>, Vec<Vec<f32>>) {
+        let mut h = self.stem(x, keys);
         let mut svs = Vec::with_capacity(self.blocks.len());
         for i in 0..self.blocks.len() {
-            let (nh, sv) = self.block(i, &h, rng);
+            let (nh, sv) = self.block(i, &h, keys);
             h = nh;
             svs.push(sv);
         }
-        (self.head(&h, rng), svs)
+        (self.head(&h, keys), svs)
     }
 
     /// Aggregate analogue usage counters across every layer.

@@ -5,7 +5,7 @@
 use crate::cim::CimMatrix;
 use crate::crossbar::ConverterConfig;
 use crate::device::DeviceConfig;
-use crate::util::rng::Pcg64;
+use crate::util::rng::{Pcg64, StreamKey};
 
 /// How a model's weights are physically realized.
 #[derive(Clone, Debug)]
@@ -39,6 +39,39 @@ impl NoiseSpec {
     }
 }
 
+/// Noise-stream addressing for one batched matmul call.
+///
+/// `sample_keys[s]` names sample `s`'s per-request stream; the matmul's
+/// `m` rows are grouped per sample (`m == sample_keys.len() *
+/// rows_per_sample`, e.g. the `ho*wo` im2col rows of one image).  Each row
+/// then derives `sample_keys[s].child(layer id).child(row within sample)`,
+/// so the noise a sample sees depends only on (seed, request, layer, row,
+/// tile) — never on which other samples share the batch or which thread
+/// runs it.
+#[derive(Clone, Copy, Debug)]
+pub struct MvmKeys<'a> {
+    pub sample_keys: &'a [StreamKey],
+    pub rows_per_sample: usize,
+}
+
+impl<'a> MvmKeys<'a> {
+    pub fn new(sample_keys: &'a [StreamKey], rows_per_sample: usize) -> Self {
+        MvmKeys {
+            sample_keys,
+            rows_per_sample,
+        }
+    }
+
+    /// One matmul row per sample (dense heads, GAP features).
+    pub fn per_sample(sample_keys: &'a [StreamKey]) -> Self {
+        MvmKeys::new(sample_keys, 1)
+    }
+
+    pub fn rows(&self) -> usize {
+        self.sample_keys.len() * self.rows_per_sample
+    }
+}
+
 /// One layer's `(k, n)` weight matrix, on whichever substrate.
 pub enum WeightMatrix {
     Exact {
@@ -50,6 +83,10 @@ pub enum WeightMatrix {
         cim: CimMatrix,
         /// Digital post-scale (1.0 for ternary; `max|w|` for mapped FP).
         scale: f32,
+        /// Layer identity mixed into every row's noise stream; set via
+        /// [`WeightMatrix::with_stream_id`] (hash of the weight-tree path)
+        /// so distinct layers never share noise.
+        stream_id: u64,
     },
 }
 
@@ -71,6 +108,7 @@ impl WeightMatrix {
             NoiseSpec::Analog { dev, conv } => WeightMatrix::Analog {
                 cim: CimMatrix::program(w, k, n, dev, conv, rng),
                 scale: 1.0,
+                stream_id: 0,
             },
         }
     }
@@ -97,9 +135,20 @@ impl WeightMatrix {
                 WeightMatrix::Analog {
                     cim: CimMatrix::program_f32(&norm, k, n, dev, conv, rng),
                     scale: wmax,
+                    stream_id: 0,
                 }
             }
         }
+    }
+
+    /// Assign the layer's noise-stream identity (no-op on the digital
+    /// substrate).  Loaders pass `util::rng::str_id` of the weight-tree
+    /// path (e.g. `"blocks.3.w1"`).
+    pub fn with_stream_id(mut self, id: u64) -> Self {
+        if let WeightMatrix::Analog { stream_id, .. } = &mut self {
+            *stream_id = id;
+        }
+        self
     }
 
     pub fn k(&self) -> usize {
@@ -116,12 +165,28 @@ impl WeightMatrix {
         }
     }
 
-    /// `(m, k) @ (k, n)` on this substrate.
-    pub fn matmul(&self, x: &[f32], m: usize, rng: &mut Pcg64) -> Vec<f32> {
+    /// `(m, k) @ (k, n)` on this substrate, with identity-derived noise:
+    /// row `r` of sample `s` draws from
+    /// `keys.sample_keys[s].child(stream_id).child(r)` (per tile inside).
+    /// The digital substrate ignores `keys`.  `m` must equal
+    /// `keys.rows()`.
+    pub fn matmul(&self, x: &[f32], m: usize, keys: &MvmKeys<'_>) -> Vec<f32> {
         match self {
             WeightMatrix::Exact { k, n, w } => super::ops::matmul(x, w, m, *k, *n),
-            WeightMatrix::Analog { cim, scale } => {
-                let mut y = cim.matmul(x, m, rng);
+            WeightMatrix::Analog {
+                cim,
+                scale,
+                stream_id,
+            } => {
+                assert_eq!(m, keys.rows(), "matmul rows vs noise keys");
+                let mut row_keys = Vec::with_capacity(m);
+                for &sk in keys.sample_keys {
+                    let layer = sk.child(*stream_id);
+                    for r in 0..keys.rows_per_sample {
+                        row_keys.push(layer.child(r as u64));
+                    }
+                }
+                let mut y = cim.matmul_keyed(x, &row_keys);
                 if *scale != 1.0 {
                     for v in y.iter_mut() {
                         *v *= *scale;
@@ -145,6 +210,11 @@ impl WeightMatrix {
 mod tests {
     use super::*;
 
+    fn keys_for(n: usize) -> Vec<StreamKey> {
+        let root = StreamKey::root(1234);
+        (0..n as u64).map(|i| root.child(i)).collect()
+    }
+
     #[test]
     fn digital_equals_ideal_analog_for_ternary() {
         let (k, n, m) = (96, 20, 4);
@@ -154,8 +224,10 @@ mod tests {
         let ana =
             WeightMatrix::from_ternary(&w, k, n, &NoiseSpec::ideal_analog(), &mut rng);
         let x: Vec<f32> = (0..m * k).map(|i| ((i % 13) as f32 - 6.0) / 6.0).collect();
-        let a = dig.matmul(&x, m, &mut rng);
-        let b = ana.matmul(&x, m, &mut rng);
+        let sk = keys_for(m);
+        let mk = MvmKeys::per_sample(&sk);
+        let a = dig.matmul(&x, m, &mk);
+        let b = ana.matmul(&x, m, &mk);
         for (p, q) in a.iter().zip(&b) {
             assert!((p - q).abs() < 1e-3, "{p} vs {q}");
         }
@@ -169,8 +241,10 @@ mod tests {
         let dig = WeightMatrix::from_f32(&w, k, n, &NoiseSpec::Digital, &mut rng);
         let ana = WeightMatrix::from_f32(&w, k, n, &NoiseSpec::ideal_analog(), &mut rng);
         let x: Vec<f32> = (0..k).map(|i| (i as f32 * 0.17).sin()).collect();
-        let a = dig.matmul(&x, 1, &mut rng);
-        let b = ana.matmul(&x, 1, &mut rng);
+        let sk = keys_for(1);
+        let mk = MvmKeys::per_sample(&sk);
+        let a = dig.matmul(&x, 1, &mk);
+        let b = ana.matmul(&x, 1, &mk);
         for (p, q) in a.iter().zip(&b) {
             // HRS floor introduces a tiny bias even in the "ideal" device
             assert!((p - q).abs() < 0.05, "{p} vs {q}");
@@ -181,11 +255,31 @@ mod tests {
     fn analog_counters_flow_through() {
         let mut rng = Pcg64::new(3);
         let w = vec![1i8; 16];
-        let m = WeightMatrix::from_ternary(&w, 4, 4, &NoiseSpec::ideal_analog(), &mut rng);
-        let _ = m.matmul(&[1.0, 1.0, 1.0, 1.0], 1, &mut rng);
+        let m =
+            WeightMatrix::from_ternary(&w, 4, 4, &NoiseSpec::ideal_analog(), &mut rng);
+        let sk = keys_for(1);
+        let mk = MvmKeys::per_sample(&sk);
+        let _ = m.matmul(&[1.0, 1.0, 1.0, 1.0], 1, &mk);
         assert!(m.take_counters().mvms > 0);
         let d = WeightMatrix::from_ternary(&w, 4, 4, &NoiseSpec::Digital, &mut rng);
-        let _ = d.matmul(&[1.0; 4], 1, &mut rng);
+        let _ = d.matmul(&[1.0; 4], 1, &mk);
         assert_eq!(d.take_counters().mvms, 0);
+    }
+
+    #[test]
+    fn noisy_matmul_depends_on_request_and_layer_identity() {
+        let (k, n) = (64, 12);
+        let mut rng = Pcg64::new(4);
+        let w: Vec<i8> = (0..k * n).map(|_| [-1i8, 0, 1][rng.below(3)]).collect();
+        let spec = NoiseSpec::paper_default();
+        let m1 = WeightMatrix::from_ternary(&w, k, n, &spec, &mut rng)
+            .with_stream_id(crate::util::rng::str_id("layer.a"));
+        let x = vec![0.5f32; k];
+        let sk = keys_for(2);
+        let a = m1.matmul(&x, 1, &MvmKeys::per_sample(&sk[..1]));
+        let b = m1.matmul(&x, 1, &MvmKeys::per_sample(&sk[..1]));
+        assert_eq!(a, b, "same request key must reproduce exactly");
+        let c = m1.matmul(&x, 1, &MvmKeys::per_sample(&sk[1..2]));
+        assert_ne!(a, c, "different request keys must decorrelate noise");
     }
 }

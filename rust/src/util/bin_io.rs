@@ -75,7 +75,8 @@ impl Tensor {
     }
 
     pub fn is_empty(&self) -> bool {
-        self.len() == 0
+        // a tensor is empty iff any dimension is zero
+        self.shape().contains(&0)
     }
 
     /// Any numeric tensor widened to f32 (i8 ternary weights included).

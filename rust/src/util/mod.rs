@@ -1,10 +1,12 @@
-//! Shared substrate utilities: PRNG, stats, JSON, tensor bundles, CLI,
-//! bench harness, and the mini property-testing driver.
+//! Shared substrate utilities: PRNG + noise streams, scoped thread pool,
+//! stats, JSON, tensor bundles, CLI, bench harness, and the mini
+//! property-testing driver.
 
 pub mod bench;
 pub mod bin_io;
 pub mod cli;
 pub mod json;
+pub mod pool;
 pub mod proptest;
 pub mod rng;
 pub mod stats;

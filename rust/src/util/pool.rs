@@ -1,0 +1,125 @@
+//! Minimal std-only fork-join helpers (`std::thread::scope`).
+//!
+//! The vendored crate set has no rayon; everything the simulator needs is
+//! "split this index range / item list across N cores and join".  Results
+//! come back in input order, so callers stay deterministic as long as the
+//! work items themselves are (which the [`StreamKey`] noise streams
+//! guarantee — see `util::rng`).
+//!
+//! Threads are spawned per call, not pooled: the analogue spans these
+//! helpers fan out (hundreds of µs to seconds of MVM work) dwarf the
+//! ~10 µs spawn+join cost.  For very small digital batches the serving
+//! path should prefer `--threads 1`; a persistent worker pool is a
+//! recorded follow-up (ROADMAP) to be justified by the EXPERIMENTS.md
+//! serving p99 numbers, not assumed.
+//!
+//! [`StreamKey`]: crate::util::rng::StreamKey
+
+use std::ops::Range;
+
+/// Worker count for parallel sections: `MEMDYN_THREADS` if set, else the
+/// machine's available parallelism, else 1.
+pub fn max_threads() -> usize {
+    if let Ok(v) = std::env::var("MEMDYN_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Split `0..n` into at most `threads` contiguous chunks of near-equal
+/// size (first chunks one larger when `n % threads != 0`).
+pub fn chunk_ranges(n: usize, threads: usize) -> Vec<Range<usize>> {
+    let t = threads.max(1).min(n.max(1));
+    let base = n / t;
+    let extra = n % t;
+    let mut out = Vec::with_capacity(t);
+    let mut at = 0;
+    for i in 0..t {
+        let len = base + usize::from(i < extra);
+        out.push(at..at + len);
+        at += len;
+    }
+    debug_assert_eq!(at, n);
+    out
+}
+
+/// Run `f` over the chunks of `0..n` on up to `threads` scoped threads;
+/// returns per-chunk results in chunk order.  `threads <= 1` (or a single
+/// chunk) runs inline on the caller's thread.
+pub fn run_chunks<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(Range<usize>) -> T + Sync,
+{
+    let ranges = chunk_ranges(n, threads);
+    if ranges.len() <= 1 {
+        return ranges.into_iter().map(&f).collect();
+    }
+    std::thread::scope(|s| {
+        let handles: Vec<_> = ranges
+            .into_iter()
+            .map(|r| s.spawn(|| f(r)))
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("pool worker panicked"))
+            .collect()
+    })
+}
+
+/// Map `f` over `0..n` items on up to `threads` scoped threads; returns
+/// the per-item results in item order.
+pub fn map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let per_chunk = run_chunks(n, threads, |r| r.map(&f).collect::<Vec<T>>());
+    per_chunk.into_iter().flatten().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunks_cover_range_in_order() {
+        for (n, t) in [(10, 3), (7, 7), (3, 8), (0, 4), (16, 1)] {
+            let rs = chunk_ranges(n, t);
+            let mut at = 0;
+            for r in &rs {
+                assert_eq!(r.start, at);
+                at = r.end;
+            }
+            assert_eq!(at, n);
+            assert!(rs.len() <= t.max(1));
+        }
+    }
+
+    #[test]
+    fn run_chunks_preserves_order() {
+        let got = run_chunks(100, 4, |r| r.sum::<usize>());
+        assert_eq!(got.iter().sum::<usize>(), (0..100).sum::<usize>());
+        assert_eq!(got.len(), 4);
+    }
+
+    #[test]
+    fn map_matches_sequential() {
+        for threads in [1, 2, 8] {
+            let got = map(50, threads, |i| i * i);
+            let want: Vec<usize> = (0..50).map(|i| i * i).collect();
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn single_thread_runs_inline() {
+        // must not deadlock or reorder with threads == 1
+        let got = map(5, 1, |i| i + 1);
+        assert_eq!(got, vec![1, 2, 3, 4, 5]);
+    }
+}

@@ -1,10 +1,19 @@
-//! PCG64 pseudo-random generator + common distributions.
+//! PCG64 pseudo-random generator + common distributions + counter-based
+//! stream derivation.
 //!
 //! The vendored crate set has no `rand` facade, so the simulator carries its
 //! own small, fully deterministic PRNG (PCG-XSL-RR 128/64, Melissa O'Neill's
 //! reference constants).  Every stochastic subsystem (device programming,
 //! read noise, TPE sampling, workload generation) takes an explicit `Pcg64`
 //! so experiments are reproducible from a single seed.
+//!
+//! [`StreamKey`] is the multi-core counterpart: a counter-derived key that
+//! names an independent noise stream by *identity* (seed → request → layer →
+//! tile) instead of by draw order.  Two calls that derive the same key chain
+//! get bit-identical noise no matter which thread — or how many threads —
+//! executed them, which is what makes the parallel crossbar simulation
+//! reproduce the sequential one exactly (see `docs/ARCHITECTURE.md`,
+//! "Noise streams & threading model").
 
 /// PCG-XSL-RR 128/64: 128-bit LCG state, 64-bit xorshift-rotate output.
 #[derive(Clone, Debug)]
@@ -14,6 +23,73 @@ pub struct Pcg64 {
 }
 
 const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+/// SplitMix64 finalizer: a fast, well-dispersed bijection on `u64` used to
+/// mix ids into [`StreamKey`]s (Steele et al., "Fast splittable pseudorandom
+/// number generators", constants from the reference implementation).
+#[inline]
+pub fn mix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// Stable 64-bit id for a name (FNV-1a over the bytes, then mixed) — used
+/// to key per-layer noise streams by weight-tree path.
+pub fn str_id(name: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in name.as_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    mix64(h)
+}
+
+/// A counter-derived name for an independent noise stream.
+///
+/// Keys form a tree: [`StreamKey::root`] from a base seed, then
+/// [`StreamKey::child`] per id (request index, layer id, tile index, …).
+/// Deriving the same chain of ids always yields the same key — and
+/// therefore, via [`StreamKey::rng`], the same noise — regardless of
+/// thread count or scheduling.  This replaces the global `Mutex<Pcg64>`
+/// the analogue hot path used to serialize on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct StreamKey(u64);
+
+impl StreamKey {
+    /// Root of a key tree for one base seed.
+    #[inline]
+    pub fn root(seed: u64) -> Self {
+        StreamKey(mix64(seed ^ 0x6d65_6d64_796e_5f30)) // "memdyn_0"
+    }
+
+    /// Derive the child stream for `id` (a counter, not a hash input:
+    /// distinct ids at the same tree position give independent streams).
+    #[inline]
+    pub fn child(self, id: u64) -> Self {
+        StreamKey(mix64(self.0 ^ mix64(id.wrapping_add(0x9e37_79b9))))
+    }
+
+    /// Derive a child stream from a name (e.g. a weight-tree path like
+    /// `"blocks.3.w1"`): `child(str_id(name))`.
+    #[inline]
+    pub fn child_str(self, name: &str) -> Self {
+        self.child(str_id(name))
+    }
+
+    /// Materialize the stream as a generator positioned at its start.
+    #[inline]
+    pub fn rng(self) -> Pcg64 {
+        Pcg64::new(self.0)
+    }
+
+    /// The raw 64-bit key value (stable across runs; used in tests).
+    #[inline]
+    pub fn value(self) -> u64 {
+        self.0
+    }
+}
 
 impl Pcg64 {
     /// Seed with an arbitrary 64-bit value (stream constant fixed).
@@ -174,5 +250,48 @@ mod tests {
         for _ in 0..10_000 {
             assert!(r.below(7) < 7);
         }
+    }
+
+    #[test]
+    fn stream_keys_are_deterministic_and_order_free() {
+        let a = StreamKey::root(42).child(3).child(7);
+        let b = StreamKey::root(42).child(3).child(7);
+        assert_eq!(a, b);
+        let mut ra = a.rng();
+        let mut rb = b.rng();
+        for _ in 0..32 {
+            assert_eq!(ra.next_u64(), rb.next_u64());
+        }
+    }
+
+    #[test]
+    fn sibling_streams_are_independent() {
+        let root = StreamKey::root(1);
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..1000u64 {
+            assert!(seen.insert(root.child(i).value()), "collision at {i}");
+        }
+        // child(0) differs from the parent and from child_str("0")
+        assert_ne!(root.child(0), root);
+        assert_ne!(root.child(0), root.child_str("0"));
+    }
+
+    #[test]
+    fn stream_rng_is_statistically_sane() {
+        // means of first draws across many sibling streams ~ Uniform(0,1)
+        let root = StreamKey::root(9);
+        let n = 4000;
+        let mut sum = 0.0;
+        for i in 0..n {
+            sum += root.child(i).rng().uniform();
+        }
+        assert!((sum / n as f64 - 0.5).abs() < 0.02);
+    }
+
+    #[test]
+    fn child_str_matches_itself_only() {
+        let root = StreamKey::root(5);
+        assert_eq!(root.child_str("stem.w"), root.child_str("stem.w"));
+        assert_ne!(root.child_str("stem.w"), root.child_str("head.w"));
     }
 }

@@ -17,12 +17,12 @@ use memdyn::nn::resnet::WeightSource;
 use memdyn::nn::{NativeResNet, NoiseSpec};
 use memdyn::runtime::{Runtime, TensorIn};
 use memdyn::util::bin_io::Bundle;
-use memdyn::util::rng::Pcg64;
+use memdyn::util::rng::{Pcg64, StreamKey};
 
 fn artifacts() -> Option<PathBuf> {
-    let p = std::env::var("MEMDYN_ARTIFACTS")
-        .map(PathBuf::from)
-        .unwrap_or_else(|_| PathBuf::from("artifacts"));
+    // resolves MEMDYN_ARTIFACTS, then ./artifacts, then ../artifacts
+    // (cargo runs tests with cwd = rust/, artifacts live at the repo root)
+    let p = memdyn::model::artifacts_dir(None);
     if p.join("index.json").exists() {
         Some(p)
     } else {
@@ -87,12 +87,15 @@ fn xla_resnet_matches_native_digital_forward() {
     let batch = 3usize;
     let input = &data.x_test[..batch * data.sample_len];
 
-    // native forward
+    // native forward (digital substrate: noise keys are ignored)
     let feat = memdyn::nn::resnet::image_feature(input, batch, 28).unwrap();
-    let (nat_logits, nat_svs) = native.forward(&feat, &mut rng);
+    let keys: Vec<StreamKey> = (0..batch as u64)
+        .map(|i| StreamKey::root(1).child(i))
+        .collect();
+    let (nat_logits, nat_svs) = native.forward(&feat, &keys);
 
     // xla forward through the DynModel interface
-    let mut state = xla.init(input, batch).unwrap();
+    let mut state = xla.init(input, batch, 0).unwrap();
     let mut xla_svs = Vec::new();
     for i in 0..xla.n_blocks() {
         xla_svs.push(xla.step(i, &mut state).unwrap());
@@ -166,8 +169,8 @@ fn xla_resnet_bucket_padding_consistency() {
     let Some(rt) = runtime() else { return };
     let xla = XlaResNetModel::load(&rt, &bundle).unwrap();
     let sl = data.sample_len;
-    let mut s1 = xla.init(&data.x_test[..sl], 1).unwrap();
-    let mut s5 = xla.init(&data.x_test[..5 * sl], 5).unwrap();
+    let mut s1 = xla.init(&data.x_test[..sl], 1, 0).unwrap();
+    let mut s5 = xla.init(&data.x_test[..5 * sl], 5, 0).unwrap();
     let sv1 = xla.step(0, &mut s1).unwrap();
     let sv5 = xla.step(0, &mut s5).unwrap();
     let dim = sv1.len();
@@ -185,7 +188,7 @@ fn xla_pointnet_forward_runs_and_classifies() {
     let xla = XlaPointNetModel::load(&rt, &bundle).unwrap();
     let n = 8usize;
     let input = &data.x_test[..n * data.sample_len];
-    let mut state = xla.init(input, n).unwrap();
+    let mut state = xla.init(input, n, 0).unwrap();
     for i in 0..xla.n_blocks() {
         let svs = xla.step(i, &mut state).unwrap();
         assert_eq!(svs.len(), n * bundle.exit_dims[i], "sv shape at SA {i}");
@@ -201,6 +204,44 @@ fn xla_pointnet_forward_runs_and_classifies() {
         .count();
     // ternary PointNet++ is the weakest model; just require better than chance
     assert!(correct >= 2, "only {correct}/{n} correct");
+}
+
+#[test]
+fn mem_engine_bit_identical_across_thread_counts() {
+    // the real Mem-variant engine must produce identical outcomes at 1, 2
+    // and 8 threads for the same seed (per-request noise streams)
+    let Some(dir) = artifacts() else { return };
+    let bundle = ModelBundle::load(&dir, "resnet").unwrap();
+    let data = DatasetBundle::load(&dir, "mnist").unwrap();
+    let n = 12usize.min(data.n_test());
+    let input = &data.x_test[..n * data.sample_len];
+    let mk = |threads: usize| {
+        let mut e = memdyn::figures::common::resnet_engine(
+            &bundle,
+            memdyn::figures::common::Variant::Mem,
+            33,
+        )
+        .unwrap()
+        .with_threads(threads);
+        e.thresholds = vec![0.9; bundle.blocks];
+        e
+    };
+    let want = mk(1).infer_batch(input, n).unwrap();
+    for threads in [2usize, 8] {
+        let got = mk(threads).infer_batch(input, n).unwrap();
+        for (a, b) in want.iter().zip(&got) {
+            assert_eq!(a.class, b.class, "{threads} threads");
+            assert_eq!(a.exit, b.exit, "{threads} threads");
+            assert_eq!(a.exited_early, b.exited_early, "{threads} threads");
+            assert!(
+                a.similarity == b.similarity
+                    || (a.similarity.is_nan() && b.similarity.is_nan()),
+                "{threads} threads: {} vs {}",
+                a.similarity,
+                b.similarity
+            );
+        }
+    }
 }
 
 #[test]

@@ -169,7 +169,8 @@ fn prop_budget_drop_antitone_in_exit_depth() {
             (ops, exits, deeper)
         },
         |(ops, exits, deeper)| {
-            let m = BudgetModel::new(ops.clone(), &vec![8; ops.len()], 10);
+            let dims = vec![8; ops.len()];
+            let m = BudgetModel::new(ops.clone(), &dims, 10);
             let a = m.summarize(exits).budget_drop;
             let b = m.summarize(deeper).budget_drop;
             if b > a + 1e-9 {

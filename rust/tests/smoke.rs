@@ -41,13 +41,14 @@ fn server_config_default_collect_batch_roundtrip() {
     batch[0]
         .resp
         .send(Response {
-            outcome,
+            outcome: Ok(outcome),
             latency: batch[0].submitted.elapsed(),
         })
         .unwrap();
     let r = resp_rx.recv().unwrap();
-    assert_eq!(r.outcome.class, 1);
-    assert!(r.outcome.exited_early);
+    let got = r.outcome.expect("worker sent a success");
+    assert_eq!(got.class, 1);
+    assert!(got.exited_early);
 
     // closing the queue ends the batching loop
     drop(tx);
@@ -72,7 +73,12 @@ impl DynModel for Identity {
         self.classes
     }
 
-    fn init(&self, input: &[f32], batch: usize) -> anyhow::Result<Self::State> {
+    fn init(
+        &self,
+        input: &[f32],
+        batch: usize,
+        _first_req: u64,
+    ) -> anyhow::Result<Self::State> {
         let w = input.len() / batch;
         Ok((0..batch)
             .map(|i| input[i * w..(i + 1) * w].to_vec())
