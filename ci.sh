@@ -28,6 +28,17 @@ cargo test -q
 echo "== cargo build --release --benches --examples =="
 cargo build --release --benches --examples
 
+# Both execution paths must stay green: the analogue crossbar simulation
+# (native) and the HLO-interpreter digital path (xla). Needs artifacts;
+# skipped on a fresh checkout, exercised by the CI artifact job.
+echo "== backend smoke matrix (native + xla) =="
+if [ -f artifacts/index.json ]; then
+    cargo run --release --quiet -- infer --index 0 --backend native
+    cargo run --release --quiet -- infer --index 0 --backend xla
+else
+    echo "skipped: no artifacts (run \`make artifacts\` to activate)"
+fi
+
 echo "== cargo doc --no-deps (deny warnings) =="
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 

@@ -45,6 +45,34 @@ fn main() {
     );
     let _ = b;
 
+    // native-vs-interpreter latency on the digital path: the same 50
+    // samples through the XLA backend (AOT HLO artifacts on the native
+    // interpreter, bucket-padded batching).  Compare against the
+    // ee_infer_digital_50 row above — this is the EXPERIMENTS.md §Perf
+    // "digital path: native vs interpreter" pair.
+    {
+        let rt = memdyn::runtime::Runtime::cpu().unwrap();
+        let xla =
+            memdyn::coordinator::dynmodel::XlaResNetModel::load(&rt, &bundle).unwrap();
+        let memory = memdyn::coordinator::ExitMemory::build(
+            &bundle,
+            memdyn::coordinator::CenterSource::TernaryQ,
+            &memdyn::nn::NoiseSpec::Digital,
+            7,
+        )
+        .unwrap();
+        let xla_engine =
+            memdyn::coordinator::Engine::new(xla, memory, thr.values.clone());
+        println!(
+            "{}",
+            quick
+                .run_items("ee_infer_xla_interp_50 (samples/s)", n as f64, || {
+                    xla_engine.infer_batch(input, n).unwrap().len()
+                })
+                .report()
+        );
+    }
+
     // Mem-variant wall clock vs thread count: the paper's noise-robust
     // ternary macro simulation, full depth (placeholder thresholds never
     // exit early), bit-identical outputs at every width.  This is the

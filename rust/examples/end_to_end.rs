@@ -2,7 +2,7 @@
 //! EXPERIMENTS.md): exercises every layer of the stack on the full
 //! synthetic-MNIST test split —
 //!
-//! 1. L1/L2 artifacts executed through the PJRT runtime (XLA backend);
+//! 1. L1/L2 artifacts executed on the native HLO interpreter (XLA backend);
 //! 2. the Rust coordinator's early-exit control flow + dynamic batching;
 //! 3. TPE threshold tuning on a training-split calibration trace;
 //! 4. the analogue crossbar backend (Mem variant) on a subset;

@@ -17,7 +17,7 @@ fn main() -> Result<()> {
     let bundle = ModelBundle::load(&dir, "resnet")?;
     let data = DatasetBundle::load(&dir, "mnist")?;
 
-    // XLA backend: the per-block HLO artifacts through PJRT.
+    // XLA backend: the per-block HLO artifacts on the native interpreter.
     let rt = Runtime::cpu()?;
     let model = XlaResNetModel::load(&rt, &bundle)?;
     let memory =

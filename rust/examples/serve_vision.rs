@@ -2,22 +2,27 @@
 //! request stream, reporting latency percentiles and throughput — the
 //! vLLM-router-style view of the paper's system.
 //!
-//! Runs on the native (crossbar-simulation) backend; the XLA artifact
-//! backend needs the PJRT runtime, which is a stub in this build (see the
-//! `memdyn::runtime` module docs — `memdyn serve --backend xla` once it is
-//! restored).
+//! Serves either backend: `--backend native` (default, the digital
+//! ternary crossbar variant) or `--backend xla`, which executes the AOT
+//! HLO artifacts on the native HLO interpreter (`memdyn::runtime`).
 //!
 //! ```bash
 //! cargo run --release --example serve_vision -- --requests 300 --rate 300
+//! cargo run --release --example serve_vision -- --backend xla
 //! ```
 
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
-use memdyn::coordinator::{Server, ServerConfig, ThresholdConfig};
+use memdyn::coordinator::dynmodel::XlaResNetModel;
+use memdyn::coordinator::{
+    CenterSource, Engine, ExitMemory, Server, ServerConfig, ThresholdConfig,
+};
 use memdyn::data;
 use memdyn::figures::common::{self as figcommon, Variant};
 use memdyn::model::{artifacts_dir, DatasetBundle, ModelBundle};
+use memdyn::nn::NoiseSpec;
+use memdyn::runtime::Runtime;
 use memdyn::util::cli::Args;
 
 fn main() -> Result<()> {
@@ -25,6 +30,7 @@ fn main() -> Result<()> {
     let dir = artifacts_dir(args.get("artifacts"));
     let n_requests = args.get_usize("requests", 300);
     let rate = args.get_f64("rate", 300.0);
+    let backend = args.get_or("backend", "native").to_string();
     let data = DatasetBundle::load(&dir, "mnist")?;
     let bundle = ModelBundle::load(&dir, "resnet")?;
     let thr = ThresholdConfig::load_or_default(
@@ -36,14 +42,35 @@ fn main() -> Result<()> {
     for (max_batch, wait_ms) in [(1usize, 0u64), (8, 2), (16, 5)] {
         let dir2 = dir.clone();
         let thr_values = thr.values.clone();
-        let server = Server::start(
-            move || figcommon::serving_engine(&dir2, Variant::EeQun, thr_values, 9, 0),
-            ServerConfig {
-                max_batch,
-                max_wait: Duration::from_millis(wait_ms),
-                queue_depth: 4096,
-            },
-        );
+        let cfg = ServerConfig {
+            max_batch,
+            max_wait: Duration::from_millis(wait_ms),
+            queue_depth: 4096,
+        };
+        let server = match backend.as_str() {
+            "native" => Server::start(
+                move || {
+                    figcommon::serving_engine(&dir2, Variant::EeQun, thr_values, 9, 0)
+                },
+                cfg,
+            ),
+            "xla" => Server::start(
+                move || {
+                    let bundle = ModelBundle::load(&dir2, "resnet")?;
+                    let rt = Runtime::cpu()?;
+                    let model = XlaResNetModel::load(&rt, &bundle)?;
+                    let memory = ExitMemory::build(
+                        &bundle,
+                        CenterSource::TernaryQ,
+                        &NoiseSpec::Digital,
+                        7,
+                    )?;
+                    Ok(Engine::new(model, memory, thr_values))
+                },
+                cfg,
+            ),
+            other => return Err(anyhow!("unknown backend {other} (native|xla)")),
+        };
         let client = server.client();
         let stream = data::poisson_stream(rate, n_requests, data.n_test(), 5);
         let t0 = Instant::now();

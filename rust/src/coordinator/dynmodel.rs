@@ -9,7 +9,10 @@
 //! * [`NativeResNetModel`] / [`NativePointNetModel`] — pure-Rust forwards
 //!   over the (optionally noisy) crossbar substrate;
 //! * [`XlaResNetModel`] / [`XlaPointNetModel`] — the AOT HLO artifacts
-//!   executed through PJRT, with bucket-padded batching.
+//!   executed on the native HLO interpreter (`crate::runtime`), with
+//!   bucket-padded batching; batches larger than the biggest bucket are
+//!   split into chunks and fanned across `util::pool` (the interpreter
+//!   is deterministic, so results are identical at any thread count).
 
 use std::sync::Arc;
 
@@ -151,6 +154,8 @@ pub struct XlaResNetModel {
     pub classes: usize,
     pub img: usize,
     exit_dims: Vec<usize>,
+    /// Chunk fan-out width (0 = all cores); see [`Self::with_threads`].
+    threads: usize,
 }
 
 /// Smallest bucket >= batch (or the largest available).
@@ -211,11 +216,30 @@ impl XlaResNetModel {
             classes: bundle.classes,
             img: 28,
             exit_dims: bundle.exit_dims.clone(),
+            threads: 0,
         })
     }
 
+    /// Cap the bucket-chunk fan-out (0 = all cores, the default;
+    /// `MEMDYN_THREADS` also applies). This is what `memdyn serve
+    /// --threads N --backend xla` plumbs through.
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    fn fanout(&self) -> usize {
+        if self.threads == 0 {
+            crate::util::pool::max_threads()
+        } else {
+            self.threads
+        }
+    }
+
     /// Run an executable over a batch, padding up to the bucket and slicing
-    /// chunks if the batch exceeds the largest bucket.
+    /// chunks if the batch exceeds the largest bucket. Chunks are fanned
+    /// across `util::pool` and stitched back in submission order, so the
+    /// output is bit-identical at any thread count.
     fn run_padded(
         execs: &[(usize, Arc<crate::runtime::Executable>)],
         x: &[f32],
@@ -224,34 +248,53 @@ impl XlaResNetModel {
         shape_tail: &[usize],
         n_outputs: usize,
         out_rows: &[usize], // per-output row length
+        threads: usize,
     ) -> Result<Vec<Vec<f32>>> {
-        let mut outs: Vec<Vec<f32>> = vec![Vec::new(); n_outputs];
-        let mut done = 0usize;
-        while done < batch {
-            let remaining = batch - done;
-            let (bucket, exe) = pick_bucket(execs, remaining);
-            let take = remaining.min(*bucket);
+        let chunks = plan_chunks(execs, batch);
+        let results = crate::util::pool::map(chunks.len(), threads, |ci| {
+            let (start, take) = chunks[ci];
+            let (bucket, exe) = pick_bucket(execs, take);
             let mut padded = vec![0f32; bucket * row];
-            padded[..take * row]
-                .copy_from_slice(&x[done * row..(done + take) * row]);
+            padded[..take * row].copy_from_slice(&x[start * row..(start + take) * row]);
             let mut shape = vec![*bucket];
             shape.extend_from_slice(shape_tail);
-            let res = crate::runtime::run_checked(
+            crate::runtime::run_checked(
                 exe,
                 &[TensorIn {
                     data: &padded,
                     shape: &shape,
                 }],
                 n_outputs,
-            )?;
-            for (o, (r, or)) in res.into_iter().zip(out_rows.iter().zip(outs.iter_mut()))
-            {
+            )
+        });
+        let mut outs: Vec<Vec<f32>> = vec![Vec::new(); n_outputs];
+        for (ci, res) in results.into_iter().enumerate() {
+            let take = chunks[ci].1;
+            for (o, (r, or)) in res?.into_iter().zip(out_rows.iter().zip(outs.iter_mut())) {
                 or.extend_from_slice(&o[..take * r]);
             }
-            done += take;
         }
         Ok(outs)
     }
+}
+
+/// Greedy bucket plan for a batch: `(start_row, rows)` per chunk. The
+/// bucket for a chunk of `rows` re-resolves to the same executable
+/// [`pick_bucket`] chose during planning.
+pub(crate) fn plan_chunks(
+    execs: &[(usize, Arc<crate::runtime::Executable>)],
+    batch: usize,
+) -> Vec<(usize, usize)> {
+    let mut chunks = Vec::new();
+    let mut done = 0usize;
+    while done < batch {
+        let remaining = batch - done;
+        let (bucket, _) = pick_bucket(execs, remaining);
+        let take = remaining.min(*bucket);
+        chunks.push((done, take));
+        done += take;
+    }
+    chunks
 }
 
 impl DynModel for XlaResNetModel {
@@ -276,6 +319,7 @@ impl DynModel for XlaResNetModel {
             &[self.img, self.img, 1],
             1,
             &[h * w * c],
+            self.fanout(),
         )?;
         // digital backend: keys are carried for state-shape uniformity only
         let keys = (0..batch as u64)
@@ -312,6 +356,7 @@ impl DynModel for XlaResNetModel {
             &[h, w, c],
             2,
             &[oh * ow * oc, dim],
+            self.fanout(),
         )?;
         let mut it = out.into_iter();
         let feat = it.next().unwrap();
@@ -360,6 +405,7 @@ impl DynModel for XlaResNetModel {
             &[h, w, c],
             1,
             &[self.classes],
+            self.fanout(),
         )?;
         Ok(out.into_iter().next().unwrap())
     }
@@ -475,6 +521,8 @@ pub struct XlaPointNetModel {
     channels: Vec<usize>,
     pub n_points: usize,
     pub classes: usize,
+    /// Chunk fan-out width (0 = all cores); see [`Self::with_threads`].
+    threads: usize,
 }
 
 /// Batched XLA state: all clouds shrink in lockstep (fixed shapes).
@@ -512,7 +560,23 @@ impl XlaPointNetModel {
                 .and_then(|v| v.as_usize())
                 .unwrap_or(256),
             classes: bundle.classes,
+            threads: 0,
         })
+    }
+
+    /// Cap the bucket-chunk fan-out (0 = all cores, the default;
+    /// `MEMDYN_THREADS` also applies).
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    fn fanout(&self) -> usize {
+        if self.threads == 0 {
+            crate::util::pool::max_threads()
+        } else {
+            self.threads
+        }
     }
 }
 
@@ -545,20 +609,20 @@ impl DynModel for XlaPointNetModel {
         let cout = self.channels[i];
         let dim = cout;
         let execs = &self.sa[i];
-        let mut new_xyz = Vec::new();
-        let mut new_feats = Vec::new();
-        let mut svs = Vec::new();
-        let mut done = 0usize;
-        while done < state.batch {
-            let remaining = state.batch - done;
-            let (bucket, exe) = pick_bucket(execs, remaining);
-            let take = remaining.min(*bucket);
-            let xyz_row = state.n * 3;
+        let chunks = plan_chunks(execs, state.batch);
+        let threads = self.fanout();
+        let xyz = &state.xyz;
+        let feats = &state.feats;
+        let (n, c) = (state.n, state.c);
+        let results = crate::util::pool::map(chunks.len(), threads, |ci| {
+            let (start, take) = chunks[ci];
+            let (bucket, exe) = pick_bucket(execs, take);
+            let xyz_row = n * 3;
             let mut xyz_p = vec![0f32; bucket * xyz_row];
             xyz_p[..take * xyz_row]
-                .copy_from_slice(&state.xyz[done * xyz_row..(done + take) * xyz_row]);
-            let xyz_shape = vec![*bucket, state.n, 3];
-            let res = if i == 0 {
+                .copy_from_slice(&xyz[start * xyz_row..(start + take) * xyz_row]);
+            let xyz_shape = vec![*bucket, n, 3];
+            if i == 0 {
                 crate::runtime::run_checked(
                     exe,
                     &[TensorIn {
@@ -566,13 +630,12 @@ impl DynModel for XlaPointNetModel {
                         shape: &xyz_shape,
                     }],
                     3,
-                )?
+                )
             } else {
-                let f_row = state.n * state.c;
+                let f_row = n * c;
                 let mut f_p = vec![0f32; bucket * f_row];
-                f_p[..take * f_row].copy_from_slice(
-                    &state.feats[done * f_row..(done + take) * f_row],
-                );
+                f_p[..take * f_row]
+                    .copy_from_slice(&feats[start * f_row..(start + take) * f_row]);
                 crate::runtime::run_checked(
                     exe,
                     &[
@@ -582,16 +645,22 @@ impl DynModel for XlaPointNetModel {
                         },
                         TensorIn {
                             data: &f_p,
-                            shape: &[*bucket, state.n, state.c],
+                            shape: &[*bucket, n, c],
                         },
                     ],
                     3,
-                )?
-            };
+                )
+            }
+        });
+        let mut new_xyz = Vec::new();
+        let mut new_feats = Vec::new();
+        let mut svs = Vec::new();
+        for (ci, res) in results.into_iter().enumerate() {
+            let take = chunks[ci].1;
+            let res = res?;
             new_xyz.extend_from_slice(&res[0][..take * np * 3]);
             new_feats.extend_from_slice(&res[1][..take * np * cout]);
             svs.extend_from_slice(&res[2][..take * dim]);
-            done += take;
         }
         state.xyz = new_xyz;
         state.feats = new_feats;
@@ -626,25 +695,27 @@ impl DynModel for XlaPointNetModel {
 
     fn finish(&self, state: &XlaPnState) -> Result<Vec<f32>> {
         let row = state.n * state.c;
-        let mut logits = Vec::new();
-        let mut done = 0usize;
-        while done < state.batch {
-            let remaining = state.batch - done;
-            let (bucket, exe) = pick_bucket(&self.head, remaining);
-            let take = remaining.min(*bucket);
+        let chunks = plan_chunks(&self.head, state.batch);
+        let threads = self.fanout();
+        let results = crate::util::pool::map(chunks.len(), threads, |ci| {
+            let (start, take) = chunks[ci];
+            let (bucket, exe) = pick_bucket(&self.head, take);
             let mut p = vec![0f32; bucket * row];
             p[..take * row]
-                .copy_from_slice(&state.feats[done * row..(done + take) * row]);
-            let res = crate::runtime::run_checked(
+                .copy_from_slice(&state.feats[start * row..(start + take) * row]);
+            crate::runtime::run_checked(
                 exe,
                 &[TensorIn {
                     data: &p,
                     shape: &[*bucket, state.n, state.c],
                 }],
                 1,
-            )?;
-            logits.extend_from_slice(&res[0][..take * self.classes]);
-            done += take;
+            )
+        });
+        let mut logits = Vec::new();
+        for (ci, res) in results.into_iter().enumerate() {
+            let take = chunks[ci].1;
+            logits.extend_from_slice(&res?[0][..take * self.classes]);
         }
         Ok(logits)
     }

@@ -1,0 +1,1429 @@
+//! The HLO evaluator: executes a parsed [`Module`] on plain row-major
+//! tensors.
+//!
+//! Strategy:
+//!
+//! * **Straight-line eval per computation.** Instructions run in
+//!   definition order into a slot table; `last_use` (precomputed by the
+//!   parser) drops dead intermediates eagerly, which matters because jax
+//!   threads multi-megabyte buffers through long straight-line blocks.
+//! * **Declared result types are trusted** for output shapes, so op
+//!   implementations stay short (no shape-inference pass).
+//! * **Applied subcomputations** (`reduce` / `sort` / `scatter` regions
+//!   and the `_where` helpers they `call`) are scalar-only in every
+//!   artifact; those run on a dedicated scalar evaluator with no
+//!   per-element tensor allocation. Non-scalar regions fall back to the
+//!   general evaluator.
+//! * **Heavy ops are native**: `dot` is a row-blocked f32 matmul and
+//!   `convolution` a direct NHWC/HWIO loop, so interpreter cost is
+//!   dominated by the same FLOPs a compiled backend would execute.
+//!
+//! Numeric semantics follow XLA: `maximum`/`minimum` propagate NaN,
+//! float `compare` is non-total (NaN compares false except `NE`), s32
+//! arithmetic wraps, `convert` f32->s32 rounds toward zero, and
+//! `dynamic-slice`/`dynamic-update-slice` clamp their start indices.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::ir::{
+    ArrayVal, BinOp, Computation, ConvDims, Data, Dir, DType, GatherDims, Instr, Module, Op,
+    ScatterDims, Type,
+};
+
+/// A runtime value: a tensor or a tuple of values. Tensors are behind an
+/// `Arc`, so tuple plumbing (`get-tuple-element`, `while` carries) is a
+/// refcount bump, not a buffer copy.
+#[derive(Clone, Debug)]
+pub enum Value {
+    Arr(Arc<ArrayVal>),
+    Tuple(Vec<Value>),
+}
+
+impl Value {
+    pub fn arr(v: ArrayVal) -> Value {
+        Value::Arr(Arc::new(v))
+    }
+
+    pub fn as_arr(&self) -> Result<&ArrayVal> {
+        match self {
+            Value::Arr(a) => Ok(a),
+            Value::Tuple(_) => Err(anyhow!("expected array value, got tuple")),
+        }
+    }
+
+    pub fn as_tuple(&self) -> Result<&[Value]> {
+        match self {
+            Value::Tuple(t) => Ok(t),
+            Value::Arr(_) => Err(anyhow!("expected tuple value, got array")),
+        }
+    }
+}
+
+/// One element, dynamically typed — the currency of applied regions.
+#[derive(Clone, Copy, Debug)]
+enum Scalar {
+    F32(f32),
+    S32(i32),
+    Pred(bool),
+}
+
+// ---------------------------------------------------------------------------
+// small index helpers
+// ---------------------------------------------------------------------------
+
+fn strides_of(shape: &[usize]) -> Vec<usize> {
+    let mut s = vec![1usize; shape.len()];
+    for d in (0..shape.len().saturating_sub(1)).rev() {
+        s[d] = s[d + 1] * shape[d + 1];
+    }
+    s
+}
+
+/// Odometer increment (row-major, last dim fastest).
+fn inc(idx: &mut [usize], shape: &[usize]) {
+    for d in (0..idx.len()).rev() {
+        idx[d] += 1;
+        if idx[d] < shape[d] {
+            return;
+        }
+        idx[d] = 0;
+    }
+}
+
+/// Source linear index for every element of `out_shape`, row-major.
+fn index_list(out_shape: &[usize], mut f: impl FnMut(&[usize]) -> usize) -> Vec<usize> {
+    let n: usize = out_shape.iter().product();
+    let mut idx = vec![0usize; out_shape.len()];
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(f(&idx));
+        inc(&mut idx, out_shape);
+    }
+    out
+}
+
+/// Gather `picks` out of `src` into a fresh array of `shape`.
+fn take(src: &ArrayVal, shape: Vec<usize>, picks: &[usize]) -> ArrayVal {
+    let data = match &src.data {
+        Data::F32(v) => Data::F32(picks.iter().map(|&i| v[i]).collect()),
+        Data::S32(v) => Data::S32(picks.iter().map(|&i| v[i]).collect()),
+        Data::Pred(v) => Data::Pred(picks.iter().map(|&i| v[i]).collect()),
+    };
+    ArrayVal { shape, data }
+}
+
+fn data_get(d: &Data, i: usize) -> Scalar {
+    match d {
+        Data::F32(v) => Scalar::F32(v[i]),
+        Data::S32(v) => Scalar::S32(v[i]),
+        Data::Pred(v) => Scalar::Pred(v[i]),
+    }
+}
+
+fn data_set(d: &mut Data, i: usize, s: Scalar) -> Result<()> {
+    match (d, s) {
+        (Data::F32(v), Scalar::F32(x)) => v[i] = x,
+        (Data::S32(v), Scalar::S32(x)) => v[i] = x,
+        (Data::Pred(v), Scalar::Pred(x)) => v[i] = x,
+        (d, s) => bail!("scalar type mismatch: {s:?} into {}", d.dtype().name()),
+    }
+    Ok(())
+}
+
+fn data_splat(s: Scalar, n: usize) -> Data {
+    match s {
+        Scalar::F32(x) => Data::F32(vec![x; n]),
+        Scalar::S32(x) => Data::S32(vec![x; n]),
+        Scalar::Pred(x) => Data::Pred(vec![x; n]),
+    }
+}
+
+/// `(base, row_len)` pairs describing the contiguous rows of the block of
+/// `small_shape` at offset `starts` inside `big_shape`.
+fn block_rows(big_shape: &[usize], starts: &[usize], small_shape: &[usize]) -> Vec<(usize, usize)> {
+    let rank = big_shape.len();
+    if rank == 0 {
+        return vec![(0, 1)];
+    }
+    let strides = strides_of(big_shape);
+    let row = small_shape[rank - 1];
+    let head = &small_shape[..rank - 1];
+    let n_rows: usize = head.iter().product();
+    let mut idx = vec![0usize; rank - 1];
+    let mut rows = Vec::with_capacity(n_rows);
+    for _ in 0..n_rows {
+        let mut base = starts[rank - 1];
+        for d in 0..rank - 1 {
+            base += (starts[d] + idx[d]) * strides[d];
+        }
+        rows.push((base, row));
+        inc(&mut idx, head);
+    }
+    rows
+}
+
+fn read_block(src: &ArrayVal, starts: &[usize], sizes: &[usize]) -> ArrayVal {
+    let rows = block_rows(&src.shape, starts, sizes);
+    fn go<T: Copy>(v: &[T], rows: &[(usize, usize)]) -> Vec<T> {
+        let mut out = Vec::with_capacity(rows.iter().map(|r| r.1).sum());
+        for &(base, len) in rows {
+            out.extend_from_slice(&v[base..base + len]);
+        }
+        out
+    }
+    let data = match &src.data {
+        Data::F32(v) => Data::F32(go(v, &rows)),
+        Data::S32(v) => Data::S32(go(v, &rows)),
+        Data::Pred(v) => Data::Pred(go(v, &rows)),
+    };
+    ArrayVal {
+        shape: sizes.to_vec(),
+        data,
+    }
+}
+
+fn write_block(dst: &mut ArrayVal, upd: &ArrayVal, starts: &[usize]) -> Result<()> {
+    let rows = block_rows(&dst.shape, starts, &upd.shape);
+    fn go<T: Copy>(dst: &mut [T], src: &[T], rows: &[(usize, usize)]) {
+        let mut at = 0usize;
+        for &(base, len) in rows {
+            dst[base..base + len].copy_from_slice(&src[at..at + len]);
+            at += len;
+        }
+    }
+    match (&mut dst.data, &upd.data) {
+        (Data::F32(d), Data::F32(s)) => go(d, s, &rows),
+        (Data::S32(d), Data::S32(s)) => go(d, s, &rows),
+        (Data::Pred(d), Data::Pred(s)) => go(d, s, &rows),
+        _ => bail!("dynamic-update-slice dtype mismatch"),
+    }
+    Ok(())
+}
+
+/// Operand `k` of `ins` out of the slot table.
+fn operand_val<'v>(ins: &Instr, vals: &'v [Option<Value>], k: usize) -> Result<&'v Value> {
+    let slot = *ins
+        .operands
+        .get(k)
+        .ok_or_else(|| anyhow!("missing operand {k}"))?;
+    vals[slot]
+        .as_ref()
+        .ok_or_else(|| anyhow!("operand {k} already dropped"))
+}
+
+fn operand_arr<'v>(ins: &Instr, vals: &'v [Option<Value>], k: usize) -> Result<&'v ArrayVal> {
+    operand_val(ins, vals, k)?.as_arr()
+}
+
+fn array_out_dims(ins: &Instr) -> Result<Vec<usize>> {
+    match &ins.ty {
+        Type::Array(_, d) => Ok(d.clone()),
+        Type::Tuple(_) => Err(anyhow!("array op with tuple result type")),
+    }
+}
+
+fn array_out_dtype(ins: &Instr) -> Result<DType> {
+    match &ins.ty {
+        Type::Array(dt, _) => Ok(*dt),
+        Type::Tuple(_) => Err(anyhow!("array op with tuple result type")),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// scalar semantics (shared by elementwise ops and applied regions)
+// ---------------------------------------------------------------------------
+
+fn f32_max(a: f32, b: f32) -> f32 {
+    if a.is_nan() || b.is_nan() {
+        f32::NAN
+    } else if a > b {
+        a
+    } else {
+        b
+    }
+}
+
+fn f32_min(a: f32, b: f32) -> f32 {
+    if a.is_nan() || b.is_nan() {
+        f32::NAN
+    } else if a < b {
+        a
+    } else {
+        b
+    }
+}
+
+fn bin_f32(op: BinOp, a: f32, b: f32) -> Result<f32> {
+    Ok(match op {
+        BinOp::Add => a + b,
+        BinOp::Subtract => a - b,
+        BinOp::Multiply => a * b,
+        BinOp::Divide => a / b,
+        BinOp::Maximum => f32_max(a, b),
+        BinOp::Minimum => f32_min(a, b),
+        BinOp::And | BinOp::Or => bail!("and/or on f32"),
+    })
+}
+
+fn bin_s32(op: BinOp, a: i32, b: i32) -> i32 {
+    match op {
+        BinOp::Add => a.wrapping_add(b),
+        BinOp::Subtract => a.wrapping_sub(b),
+        BinOp::Multiply => a.wrapping_mul(b),
+        BinOp::Divide => {
+            if b == 0 {
+                0
+            } else {
+                a.wrapping_div(b)
+            }
+        }
+        BinOp::Maximum => a.max(b),
+        BinOp::Minimum => a.min(b),
+        BinOp::And => a & b,
+        BinOp::Or => a | b,
+    }
+}
+
+fn bin_pred(op: BinOp, a: bool, b: bool) -> Result<bool> {
+    Ok(match op {
+        BinOp::And | BinOp::Minimum => a && b,
+        BinOp::Or | BinOp::Maximum => a || b,
+        _ => bail!("unsupported pred arithmetic"),
+    })
+}
+
+fn scalar_bin(op: BinOp, a: Scalar, b: Scalar) -> Result<Scalar> {
+    Ok(match (a, b) {
+        (Scalar::F32(x), Scalar::F32(y)) => Scalar::F32(bin_f32(op, x, y)?),
+        (Scalar::S32(x), Scalar::S32(y)) => Scalar::S32(bin_s32(op, x, y)),
+        (Scalar::Pred(x), Scalar::Pred(y)) => Scalar::Pred(bin_pred(op, x, y)?),
+        _ => bail!("binary op dtype mismatch"),
+    })
+}
+
+fn cmp_ord<T: PartialOrd + PartialEq>(dir: Dir, a: T, b: T) -> bool {
+    match dir {
+        Dir::Eq => a == b,
+        Dir::Ne => a != b,
+        Dir::Lt => a < b,
+        Dir::Le => a <= b,
+        Dir::Gt => a > b,
+        Dir::Ge => a >= b,
+    }
+}
+
+fn scalar_cmp(dir: Dir, a: Scalar, b: Scalar) -> Result<bool> {
+    Ok(match (a, b) {
+        (Scalar::F32(x), Scalar::F32(y)) => cmp_ord(dir, x, y),
+        (Scalar::S32(x), Scalar::S32(y)) => cmp_ord(dir, x, y),
+        (Scalar::Pred(x), Scalar::Pred(y)) => cmp_ord(dir, x, y),
+        _ => bail!("compare dtype mismatch"),
+    })
+}
+
+fn scalar_convert(s: Scalar, to: DType) -> Scalar {
+    match to {
+        DType::F32 => Scalar::F32(match s {
+            Scalar::F32(x) => x,
+            Scalar::S32(x) => x as f32,
+            Scalar::Pred(x) => {
+                if x {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+        }),
+        DType::S32 => Scalar::S32(match s {
+            Scalar::F32(x) => x as i32, // rounds toward zero, saturating
+            Scalar::S32(x) => x,
+            Scalar::Pred(x) => i32::from(x),
+        }),
+        DType::Pred => Scalar::Pred(match s {
+            Scalar::F32(x) => x != 0.0,
+            Scalar::S32(x) => x != 0,
+            Scalar::Pred(x) => x,
+        }),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the interpreter
+// ---------------------------------------------------------------------------
+
+/// Executable form of a parsed module.
+pub struct Interpreter {
+    module: Module,
+    /// Computations that can run on the fast scalar evaluator (all
+    /// instructions scalar-typed, ops in the scalar subset) — true for
+    /// every `reduce`/`sort`/`scatter` region the artifacts apply.
+    scalar_ok: Vec<bool>,
+}
+
+/// Cap on `while` trip counts so a malformed graph fails instead of
+/// hanging the process (the artifact loops run at most a few thousand).
+const MAX_WHILE_ITERS: usize = 10_000_000;
+
+impl Interpreter {
+    pub fn new(module: Module) -> Self {
+        let scalar_ok = compute_scalar_ok(&module);
+        Interpreter { module, scalar_ok }
+    }
+
+    pub fn module(&self) -> &Module {
+        &self.module
+    }
+
+    /// Evaluate the ENTRY computation.
+    pub fn run_entry(&self, args: &[Value]) -> Result<Value> {
+        self.eval_comp(self.module.entry, args)
+    }
+
+    fn eval_comp(&self, ci: usize, args: &[Value]) -> Result<Value> {
+        let c = &self.module.comps[ci];
+        if args.len() != c.params.len() {
+            bail!(
+                "computation {}: {} arguments, expected {}",
+                c.name,
+                args.len(),
+                c.params.len()
+            );
+        }
+        let mut vals: Vec<Option<Value>> = Vec::with_capacity(c.instrs.len());
+        vals.resize_with(c.instrs.len(), || None);
+        for (i, ins) in c.instrs.iter().enumerate() {
+            let v = self
+                .eval_instr(ins, &vals, args)
+                .with_context(|| format!("computation {}, {} #{i}", c.name, ins.op.name()))?;
+            vals[i] = Some(v);
+            for &s in &ins.operands {
+                if c.last_use[s] == i {
+                    vals[s] = None;
+                }
+            }
+        }
+        Ok(vals[c.root].take().expect("root value"))
+    }
+
+    fn eval_instr(&self, ins: &Instr, vals: &[Option<Value>], args: &[Value]) -> Result<Value> {
+        match &ins.op {
+            Op::Parameter(o) => args
+                .get(*o)
+                .cloned()
+                .ok_or_else(|| anyhow!("missing argument {o}")),
+            Op::Constant(lit) => Ok(Value::Arr(lit.clone())),
+            Op::Broadcast { dims } => {
+                let x = operand_arr(ins, vals, 0)?;
+                if dims.len() != x.shape.len() {
+                    bail!("broadcast dims rank mismatch");
+                }
+                let shape = array_out_dims(ins)?;
+                let s = strides_of(&x.shape);
+                let picks = index_list(&shape, |idx| {
+                    dims.iter().zip(&s).map(|(&d, &st)| idx[d] * st).sum()
+                });
+                Ok(Value::arr(take(x, shape, &picks)))
+            }
+            Op::Iota { dim } => {
+                let shape = array_out_dims(ins)?;
+                let n: usize = shape.iter().product();
+                let mut idx = vec![0usize; shape.len()];
+                let data = match array_out_dtype(ins)? {
+                    DType::F32 => {
+                        let mut v = Vec::with_capacity(n);
+                        for _ in 0..n {
+                            v.push(idx[*dim] as f32);
+                            inc(&mut idx, &shape);
+                        }
+                        Data::F32(v)
+                    }
+                    DType::S32 => {
+                        let mut v = Vec::with_capacity(n);
+                        for _ in 0..n {
+                            v.push(idx[*dim] as i32);
+                            inc(&mut idx, &shape);
+                        }
+                        Data::S32(v)
+                    }
+                    DType::Pred => bail!("iota of pred"),
+                };
+                Ok(Value::arr(ArrayVal { shape, data }))
+            }
+            Op::Convert => {
+                let x = operand_arr(ins, vals, 0)?;
+                let to = array_out_dtype(ins)?;
+                let n = x.elements();
+                // splat of the right target dtype, then fill per element
+                let mut data = data_splat(scalar_convert(Scalar::F32(0.0), to), n);
+                for i in 0..n {
+                    data_set(&mut data, i, scalar_convert(data_get(&x.data, i), to))?;
+                }
+                Ok(Value::arr(ArrayVal {
+                    shape: x.shape.clone(),
+                    data,
+                }))
+            }
+            Op::Rsqrt => {
+                let x = operand_arr(ins, vals, 0)?;
+                let v = match &x.data {
+                    Data::F32(v) => v,
+                    _ => bail!("rsqrt on non-f32"),
+                };
+                Ok(Value::arr(ArrayVal {
+                    shape: x.shape.clone(),
+                    data: Data::F32(v.iter().map(|&a| 1.0 / a.sqrt()).collect()),
+                }))
+            }
+            Op::Binary(op) => {
+                let a = operand_arr(ins, vals, 0)?;
+                let b = operand_arr(ins, vals, 1)?;
+                if a.shape != b.shape {
+                    bail!("binary operand shapes differ: {:?} vs {:?}", a.shape, b.shape);
+                }
+                let data = match (&a.data, &b.data) {
+                    (Data::F32(x), Data::F32(y)) => {
+                        let mut v = Vec::with_capacity(x.len());
+                        for (a, b) in x.iter().zip(y) {
+                            v.push(bin_f32(*op, *a, *b)?);
+                        }
+                        Data::F32(v)
+                    }
+                    (Data::S32(x), Data::S32(y)) => {
+                        Data::S32(x.iter().zip(y).map(|(a, b)| bin_s32(*op, *a, *b)).collect())
+                    }
+                    (Data::Pred(x), Data::Pred(y)) => {
+                        let mut v = Vec::with_capacity(x.len());
+                        for (a, b) in x.iter().zip(y) {
+                            v.push(bin_pred(*op, *a, *b)?);
+                        }
+                        Data::Pred(v)
+                    }
+                    _ => bail!("binary operand dtypes differ"),
+                };
+                Ok(Value::arr(ArrayVal {
+                    shape: a.shape.clone(),
+                    data,
+                }))
+            }
+            Op::Compare(dir) => {
+                let a = operand_arr(ins, vals, 0)?;
+                let b = operand_arr(ins, vals, 1)?;
+                if a.shape != b.shape {
+                    bail!("compare operand shapes differ: {:?} vs {:?}", a.shape, b.shape);
+                }
+                let n = a.elements();
+                let mut v = Vec::with_capacity(n);
+                for i in 0..n {
+                    v.push(scalar_cmp(*dir, data_get(&a.data, i), data_get(&b.data, i))?);
+                }
+                Ok(Value::arr(ArrayVal {
+                    shape: a.shape.clone(),
+                    data: Data::Pred(v),
+                }))
+            }
+            Op::Select => {
+                let p = operand_arr(ins, vals, 0)?;
+                let preds = match &p.data {
+                    Data::Pred(v) => v,
+                    _ => bail!("select predicate is not pred"),
+                };
+                if preds.len() == 1 && p.shape.is_empty() {
+                    let pick = if preds[0] { 1 } else { 2 };
+                    return Ok(operand_val(ins, vals, pick)?.clone());
+                }
+                let t = operand_arr(ins, vals, 1)?;
+                let f = operand_arr(ins, vals, 2)?;
+                if t.elements() != preds.len() || f.elements() != preds.len() {
+                    bail!("select operand shapes differ");
+                }
+                let mut data = t.data.clone();
+                for (i, &keep) in preds.iter().enumerate() {
+                    if !keep {
+                        data_set(&mut data, i, data_get(&f.data, i))?;
+                    }
+                }
+                Ok(Value::arr(ArrayVal {
+                    shape: t.shape.clone(),
+                    data,
+                }))
+            }
+            Op::Reshape => {
+                let x = operand_arr(ins, vals, 0)?;
+                let shape = array_out_dims(ins)?;
+                if shape.iter().product::<usize>() != x.elements() {
+                    bail!("reshape element count mismatch");
+                }
+                Ok(Value::arr(ArrayVal {
+                    shape,
+                    data: x.data.clone(),
+                }))
+            }
+            Op::Transpose { perm } => {
+                let x = operand_arr(ins, vals, 0)?;
+                let shape = array_out_dims(ins)?;
+                let s = strides_of(&x.shape);
+                let picks = index_list(&shape, |idx| {
+                    idx.iter().enumerate().map(|(i, &v)| v * s[perm[i]]).sum()
+                });
+                Ok(Value::arr(take(x, shape, &picks)))
+            }
+            Op::Slice { starts, limits: _, strides } => {
+                let x = operand_arr(ins, vals, 0)?;
+                let shape = array_out_dims(ins)?;
+                let s = strides_of(&x.shape);
+                let picks = index_list(&shape, |idx| {
+                    idx.iter()
+                        .enumerate()
+                        .map(|(d, &v)| (starts[d] + v * strides[d]) * s[d])
+                        .sum()
+                });
+                Ok(Value::arr(take(x, shape, &picks)))
+            }
+            Op::Pad { lo, hi: _, interior } => {
+                let x = operand_arr(ins, vals, 0)?;
+                let pv = operand_arr(ins, vals, 1)?;
+                let shape = array_out_dims(ins)?;
+                let n: usize = shape.iter().product();
+                let mut data = data_splat(data_get(&pv.data, 0), n);
+                let out_strides = strides_of(&shape);
+                let rank = x.shape.len();
+                let total = x.elements();
+                let mut idx = vec![0usize; rank];
+                for lin in 0..total {
+                    let mut ok = true;
+                    let mut out_lin = 0usize;
+                    for d in 0..rank {
+                        let o = lo[d] + (idx[d] * (interior[d] + 1)) as i64;
+                        if o < 0 || o as usize >= shape[d] {
+                            ok = false;
+                            break;
+                        }
+                        out_lin += o as usize * out_strides[d];
+                    }
+                    if ok {
+                        data_set(&mut data, out_lin, data_get(&x.data, lin))?;
+                    }
+                    inc(&mut idx, &x.shape);
+                }
+                Ok(Value::arr(ArrayVal { shape, data }))
+            }
+            Op::Concatenate { dim } => {
+                let shape = array_out_dims(ins)?;
+                let parts: Vec<&ArrayVal> = (0..ins.operands.len())
+                    .map(|k| operand_arr(ins, vals, k))
+                    .collect::<Result<_>>()?;
+                concatenate(&parts, *dim, shape).map(Value::arr)
+            }
+            Op::DynamicSlice { sizes } => {
+                let x = operand_arr(ins, vals, 0)?;
+                let starts = dyn_starts(ins, vals, 1, &x.shape, sizes)?;
+                Ok(Value::arr(read_block(x, &starts, sizes)))
+            }
+            Op::DynamicUpdateSlice => {
+                let x = operand_arr(ins, vals, 0)?;
+                let u = operand_arr(ins, vals, 1)?;
+                let starts = dyn_starts(ins, vals, 2, &x.shape, &u.shape)?;
+                let mut out = x.clone();
+                write_block(&mut out, u, &starts)?;
+                Ok(Value::arr(out))
+            }
+            Op::GetTupleElement { index } => {
+                let t = operand_val(ins, vals, 0)?.as_tuple()?;
+                t.get(*index)
+                    .cloned()
+                    .ok_or_else(|| anyhow!("tuple index {index} out of range"))
+            }
+            Op::Tuple => {
+                let parts: Vec<Value> = (0..ins.operands.len())
+                    .map(|k| operand_val(ins, vals, k).cloned())
+                    .collect::<Result<_>>()?;
+                Ok(Value::Tuple(parts))
+            }
+            Op::Call { comp } => {
+                let cargs: Vec<Value> = (0..ins.operands.len())
+                    .map(|k| operand_val(ins, vals, k).cloned())
+                    .collect::<Result<_>>()?;
+                self.eval_comp(*comp, &cargs)
+            }
+            Op::While { cond, body } => {
+                let mut state = operand_val(ins, vals, 0)?.clone();
+                for _ in 0..MAX_WHILE_ITERS {
+                    let c = self.eval_comp(*cond, std::slice::from_ref(&state))?;
+                    let keep = match &c.as_arr()?.data {
+                        Data::Pred(v) => v[0],
+                        _ => bail!("while condition is not pred"),
+                    };
+                    if !keep {
+                        return Ok(state);
+                    }
+                    state = self.eval_comp(*body, std::slice::from_ref(&state))?;
+                }
+                bail!("while loop exceeded {MAX_WHILE_ITERS} iterations")
+            }
+            Op::Reduce { dims, comp } => {
+                let n_in = ins.operands.len() / 2;
+                if ins.operands.len() != 2 * n_in || n_in == 0 {
+                    bail!("reduce expects inputs + matching inits");
+                }
+                let inputs: Vec<&ArrayVal> = (0..n_in)
+                    .map(|k| operand_arr(ins, vals, k))
+                    .collect::<Result<_>>()?;
+                let inits: Vec<&ArrayVal> = (n_in..2 * n_in)
+                    .map(|k| operand_arr(ins, vals, k))
+                    .collect::<Result<_>>()?;
+                self.eval_reduce(dims, *comp, &inputs, &inits)
+            }
+            Op::Sort { dim, comp } => {
+                let inputs: Vec<&ArrayVal> = (0..ins.operands.len())
+                    .map(|k| operand_arr(ins, vals, k))
+                    .collect::<Result<_>>()?;
+                self.eval_sort(*dim, *comp, &inputs)
+            }
+            Op::Gather(g) => {
+                let x = operand_arr(ins, vals, 0)?;
+                let indices = operand_arr(ins, vals, 1)?;
+                let shape = array_out_dims(ins)?;
+                eval_gather(g, x, indices, shape).map(Value::arr)
+            }
+            Op::Scatter { dims, comp } => {
+                if ins.operands.len() != 3 {
+                    bail!("only single-input scatter is supported");
+                }
+                let x = operand_arr(ins, vals, 0)?;
+                let indices = operand_arr(ins, vals, 1)?;
+                let updates = operand_arr(ins, vals, 2)?;
+                self.eval_scatter(dims, *comp, x, indices, updates)
+                    .map(Value::arr)
+            }
+            Op::Dot { lhs_contracting, rhs_contracting } => {
+                let a = operand_arr(ins, vals, 0)?;
+                let b = operand_arr(ins, vals, 1)?;
+                eval_dot(a, b, lhs_contracting, rhs_contracting, array_out_dims(ins)?)
+                    .map(Value::arr)
+            }
+            Op::Convolution(cd) => {
+                let x = operand_arr(ins, vals, 0)?;
+                let w = operand_arr(ins, vals, 1)?;
+                eval_conv(cd, x, w, array_out_dims(ins)?).map(Value::arr)
+            }
+        }
+    }
+
+    /// Apply a region to scalar arguments, preferring the fast scalar
+    /// evaluator; returns one scalar per region result.
+    fn apply_region(&self, ci: usize, args: &[Scalar]) -> Result<Vec<Scalar>> {
+        if self.scalar_ok[ci] {
+            return self.eval_scalar_comp(ci, args);
+        }
+        let vargs: Vec<Value> = args
+            .iter()
+            .map(|&s| {
+                Value::arr(match s {
+                    Scalar::F32(x) => ArrayVal::scalar_f32(x),
+                    Scalar::S32(x) => ArrayVal::scalar_s32(x),
+                    Scalar::Pred(x) => ArrayVal::scalar_pred(x),
+                })
+            })
+            .collect();
+        match self.eval_comp(ci, &vargs)? {
+            Value::Arr(a) => Ok(vec![data_get(&a.data, 0)]),
+            Value::Tuple(parts) => parts
+                .iter()
+                .map(|p| Ok(data_get(&p.as_arr()?.data, 0)))
+                .collect(),
+        }
+    }
+
+    /// The fast path for scalar-only regions: no tensor values, just a
+    /// slot vector of [`Scalar`]s.
+    fn eval_scalar_comp(&self, ci: usize, args: &[Scalar]) -> Result<Vec<Scalar>> {
+        let c = &self.module.comps[ci];
+        let mut vals: Vec<Scalar> = Vec::with_capacity(c.instrs.len());
+        for ins in &c.instrs {
+            let s = match &ins.op {
+                Op::Parameter(o) => args[*o],
+                Op::Constant(lit) => data_get(&lit.data, 0),
+                Op::Binary(op) => {
+                    scalar_bin(*op, vals[ins.operands[0]], vals[ins.operands[1]])?
+                }
+                Op::Compare(dir) => Scalar::Pred(scalar_cmp(
+                    *dir,
+                    vals[ins.operands[0]],
+                    vals[ins.operands[1]],
+                )?),
+                Op::Select => match vals[ins.operands[0]] {
+                    Scalar::Pred(true) => vals[ins.operands[1]],
+                    Scalar::Pred(false) => vals[ins.operands[2]],
+                    _ => bail!("select predicate is not pred"),
+                },
+                Op::Convert => match &ins.ty {
+                    Type::Array(dt, _) => scalar_convert(vals[ins.operands[0]], *dt),
+                    Type::Tuple(_) => bail!("convert with tuple type"),
+                },
+                Op::Rsqrt => match vals[ins.operands[0]] {
+                    Scalar::F32(x) => Scalar::F32(1.0 / x.sqrt()),
+                    _ => bail!("rsqrt on non-f32"),
+                },
+                Op::Call { comp } => {
+                    let cargs: Vec<Scalar> = ins.operands.iter().map(|&s| vals[s]).collect();
+                    self.eval_scalar_comp(*comp, &cargs)?[0]
+                }
+                // the root tuple is unpacked below; its slot value is unused
+                Op::Tuple => Scalar::Pred(false),
+                other => bail!("op {} in scalar region", other.name()),
+            };
+            vals.push(s);
+        }
+        let root = &c.instrs[c.root];
+        if matches!(root.op, Op::Tuple) {
+            Ok(root.operands.iter().map(|&s| vals[s]).collect())
+        } else {
+            Ok(vec![vals[c.root]])
+        }
+    }
+
+    fn eval_reduce(
+        &self,
+        dims: &[usize],
+        comp: usize,
+        inputs: &[&ArrayVal],
+        inits: &[&ArrayVal],
+    ) -> Result<Value> {
+        let n_in = inputs.len();
+        let in_shape = inputs[0].shape.clone();
+        let rank = in_shape.len();
+        let keep: Vec<usize> = (0..rank).filter(|d| !dims.contains(d)).collect();
+        let out_shape: Vec<usize> = keep.iter().map(|&d| in_shape[d]).collect();
+        let out_n: usize = out_shape.iter().product();
+        let out_strides = strides_of(&out_shape);
+        let mut contrib = vec![0usize; rank];
+        for (p, &d) in keep.iter().enumerate() {
+            contrib[d] = out_strides[p];
+        }
+        let mut accs: Vec<Data> = inits
+            .iter()
+            .map(|init| data_splat(data_get(&init.data, 0), out_n))
+            .collect();
+        let total = inputs[0].elements();
+        let mut idx = vec![0usize; rank];
+        let mut sargs = vec![Scalar::Pred(false); 2 * n_in];
+        for lin in 0..total {
+            let out_lin: usize = idx.iter().zip(&contrib).map(|(i, c)| i * c).sum();
+            for j in 0..n_in {
+                sargs[j] = data_get(&accs[j], out_lin);
+                sargs[n_in + j] = data_get(&inputs[j].data, lin);
+            }
+            let res = self.apply_region(comp, &sargs)?;
+            if res.len() != n_in {
+                bail!("reduce region returned {} values, expected {n_in}", res.len());
+            }
+            for j in 0..n_in {
+                data_set(&mut accs[j], out_lin, res[j])?;
+            }
+            inc(&mut idx, &in_shape);
+        }
+        let mut parts: Vec<Value> = accs
+            .into_iter()
+            .map(|data| {
+                Value::arr(ArrayVal {
+                    shape: out_shape.clone(),
+                    data,
+                })
+            })
+            .collect();
+        if n_in == 1 {
+            Ok(parts.pop().unwrap())
+        } else {
+            Ok(Value::Tuple(parts))
+        }
+    }
+
+    fn eval_sort(&self, dim: usize, comp: usize, inputs: &[&ArrayVal]) -> Result<Value> {
+        let n_in = inputs.len();
+        let shape = inputs[0].shape.clone();
+        let rank = shape.len();
+        let strides = strides_of(&shape);
+        let len = shape[dim];
+        let stride_d = strides[dim];
+        let other: Vec<usize> = (0..rank).filter(|&d| d != dim).collect();
+        let other_shape: Vec<usize> = other.iter().map(|&d| shape[d]).collect();
+        let n_lanes: usize = other_shape.iter().product();
+        let mut outs: Vec<Data> = inputs.iter().map(|a| a.data.clone()).collect();
+        let mut idx = vec![0usize; other.len()];
+        let mut perm: Vec<usize> = Vec::with_capacity(len);
+        for _ in 0..n_lanes {
+            let base: usize = idx.iter().zip(&other).map(|(&i, &d)| i * strides[d]).sum();
+            perm.clear();
+            perm.extend(0..len);
+            let mut cmp_err: Option<anyhow::Error> = None;
+            {
+                let mut less = |a: usize, b: usize| -> bool {
+                    let mut sargs = Vec::with_capacity(2 * n_in);
+                    for input in inputs {
+                        sargs.push(data_get(&input.data, base + a * stride_d));
+                        sargs.push(data_get(&input.data, base + b * stride_d));
+                    }
+                    match self.apply_region(comp, &sargs) {
+                        Ok(res) => matches!(res.first(), Some(Scalar::Pred(true))),
+                        Err(e) => {
+                            if cmp_err.is_none() {
+                                cmp_err = Some(e);
+                            }
+                            false
+                        }
+                    }
+                };
+                perm.sort_by(|&a, &b| {
+                    if less(a, b) {
+                        std::cmp::Ordering::Less
+                    } else if less(b, a) {
+                        std::cmp::Ordering::Greater
+                    } else {
+                        std::cmp::Ordering::Equal
+                    }
+                });
+            }
+            if let Some(e) = cmp_err {
+                return Err(e.context("sort comparator failed"));
+            }
+            for (j, input) in inputs.iter().enumerate() {
+                for (k, &p) in perm.iter().enumerate() {
+                    data_set(
+                        &mut outs[j],
+                        base + k * stride_d,
+                        data_get(&input.data, base + p * stride_d),
+                    )?;
+                }
+            }
+            inc(&mut idx, &other_shape);
+        }
+        let mut parts: Vec<Value> = outs
+            .into_iter()
+            .map(|data| {
+                Value::arr(ArrayVal {
+                    shape: shape.clone(),
+                    data,
+                })
+            })
+            .collect();
+        if n_in == 1 {
+            Ok(parts.pop().unwrap())
+        } else {
+            Ok(Value::Tuple(parts))
+        }
+    }
+
+    fn eval_scatter(
+        &self,
+        sd: &ScatterDims,
+        comp: usize,
+        operand: &ArrayVal,
+        indices: &ArrayVal,
+        updates: &ArrayVal,
+    ) -> Result<ArrayVal> {
+        let op_shape = operand.shape.clone();
+        let rank_op = op_shape.len();
+        let op_strides = strides_of(&op_shape);
+        let up_shape = updates.shape.clone();
+        let window_pos = &sd.update_window_dims;
+        let batch_pos: Vec<usize> = (0..up_shape.len())
+            .filter(|d| !window_pos.contains(d))
+            .collect();
+        let op_window_dims: Vec<usize> = (0..rank_op)
+            .filter(|d| !sd.inserted_window_dims.contains(d))
+            .collect();
+        if op_window_dims.len() != window_pos.len() {
+            bail!("scatter window rank mismatch");
+        }
+        let ind = match &indices.data {
+            Data::S32(v) => v,
+            _ => bail!("scatter indices are not s32"),
+        };
+        let ind_shape = &indices.shape;
+        let ind_strides = strides_of(ind_shape);
+        let ivd = sd.index_vector_dim;
+        let mut out = operand.clone();
+        let total = updates.elements();
+        let mut uidx = vec![0usize; up_shape.len()];
+        for ulin in 0..total {
+            // scatter batch coords, in indices-dim order (minus the vector dim)
+            let gcoords: Vec<usize> = batch_pos.iter().map(|&p| uidx[p]).collect();
+            let mut full = vec![0i64; rank_op];
+            for (k, &od) in sd.scatter_dims_to_operand_dims.iter().enumerate() {
+                let mut ind_idx = gcoords.clone();
+                if ivd < ind_shape.len() {
+                    ind_idx.insert(ivd, k);
+                } else if k != 0 {
+                    bail!("scatter index vector overflow");
+                }
+                let lin: usize = ind_idx.iter().zip(&ind_strides).map(|(i, s)| i * s).sum();
+                full[od] += ind[lin] as i64;
+            }
+            for (w, &od) in op_window_dims.iter().enumerate() {
+                full[od] += uidx[window_pos[w]] as i64;
+            }
+            // XLA semantics: out-of-bounds updates are dropped
+            let in_bounds = full
+                .iter()
+                .zip(&op_shape)
+                .all(|(&v, &d)| v >= 0 && (v as usize) < d);
+            if in_bounds {
+                let lin: usize = full
+                    .iter()
+                    .zip(&op_strides)
+                    .map(|(&v, &s)| v as usize * s)
+                    .sum();
+                let res = self.apply_region(
+                    comp,
+                    &[data_get(&out.data, lin), data_get(&updates.data, ulin)],
+                )?;
+                data_set(&mut out.data, lin, res[0])?;
+            }
+            inc(&mut uidx, &up_shape);
+        }
+        Ok(out)
+    }
+}
+
+/// Clamped start indices for dynamic-slice / dynamic-update-slice, taken
+/// from the scalar s32 operands beginning at `first`.
+fn dyn_starts(
+    ins: &Instr,
+    vals: &[Option<Value>],
+    first: usize,
+    big: &[usize],
+    small: &[usize],
+) -> Result<Vec<usize>> {
+    let n_starts = ins.operands.len().saturating_sub(first);
+    if n_starts != big.len() {
+        bail!("dynamic slice: {n_starts} start operands for rank {}", big.len());
+    }
+    let mut starts = Vec::with_capacity(big.len());
+    for d in 0..big.len() {
+        let v = operand_arr(ins, vals, first + d)?;
+        let raw = match &v.data {
+            Data::S32(x) => x[0] as i64,
+            _ => bail!("dynamic slice start is not s32"),
+        };
+        let max = big[d] as i64 - small[d] as i64;
+        if max < 0 {
+            bail!("dynamic slice size {} exceeds operand dim {}", small[d], big[d]);
+        }
+        starts.push(raw.clamp(0, max) as usize);
+    }
+    Ok(starts)
+}
+
+// ---------------------------------------------------------------------------
+// free-standing op kernels
+// ---------------------------------------------------------------------------
+
+fn concatenate(parts: &[&ArrayVal], dim: usize, out_shape: Vec<usize>) -> Result<ArrayVal> {
+    let outer: usize = out_shape[..dim].iter().product();
+    let inner: usize = out_shape[dim + 1..].iter().product();
+    let out_d = out_shape[dim];
+    fn go<T: Copy + Default>(
+        parts: &[(&[T], usize)],
+        outer: usize,
+        inner: usize,
+        out_d: usize,
+    ) -> Vec<T> {
+        let mut out = vec![T::default(); outer * out_d * inner];
+        let mut off = 0usize;
+        for &(src, ad) in parts {
+            for o in 0..outer {
+                let s = &src[o * ad * inner..(o + 1) * ad * inner];
+                let d0 = (o * out_d + off) * inner;
+                out[d0..d0 + ad * inner].copy_from_slice(s);
+            }
+            off += ad;
+        }
+        out
+    }
+    let data = match &parts[0].data {
+        Data::F32(_) => {
+            let ps: Vec<(&[f32], usize)> = parts
+                .iter()
+                .map(|a| match &a.data {
+                    Data::F32(v) => Ok((v.as_slice(), a.shape[dim])),
+                    _ => Err(anyhow!("concatenate dtype mismatch")),
+                })
+                .collect::<Result<_>>()?;
+            Data::F32(go(&ps, outer, inner, out_d))
+        }
+        Data::S32(_) => {
+            let ps: Vec<(&[i32], usize)> = parts
+                .iter()
+                .map(|a| match &a.data {
+                    Data::S32(v) => Ok((v.as_slice(), a.shape[dim])),
+                    _ => Err(anyhow!("concatenate dtype mismatch")),
+                })
+                .collect::<Result<_>>()?;
+            Data::S32(go(&ps, outer, inner, out_d))
+        }
+        Data::Pred(_) => {
+            let ps: Vec<(&[bool], usize)> = parts
+                .iter()
+                .map(|a| match &a.data {
+                    Data::Pred(v) => Ok((v.as_slice(), a.shape[dim])),
+                    _ => Err(anyhow!("concatenate dtype mismatch")),
+                })
+                .collect::<Result<_>>()?;
+            Data::Pred(go(&ps, outer, inner, out_d))
+        }
+    };
+    Ok(ArrayVal {
+        shape: out_shape,
+        data,
+    })
+}
+
+fn eval_gather(
+    g: &GatherDims,
+    operand: &ArrayVal,
+    indices: &ArrayVal,
+    out_shape: Vec<usize>,
+) -> Result<ArrayVal> {
+    let ind = match &indices.data {
+        Data::S32(v) => v,
+        _ => bail!("gather indices are not s32"),
+    };
+    let ind_shape = &indices.shape;
+    let ind_strides = strides_of(ind_shape);
+    let op_shape = &operand.shape;
+    let op_strides = strides_of(op_shape);
+    let rank_out = out_shape.len();
+    let batch_pos_out: Vec<usize> = (0..rank_out)
+        .filter(|d| !g.offset_dims.contains(d))
+        .collect();
+    // operand dims that receive offset coordinates, in order
+    let offset_op_dims: Vec<usize> = (0..op_shape.len())
+        .filter(|d| !g.collapsed_slice_dims.contains(d) && !g.operand_batching_dims.contains(d))
+        .collect();
+    if offset_op_dims.len() != g.offset_dims.len() {
+        bail!("gather offset rank mismatch");
+    }
+    for (d, &sz) in g.slice_sizes.iter().enumerate() {
+        if sz > op_shape[d] {
+            bail!("gather slice size {sz} exceeds operand dim {}", op_shape[d]);
+        }
+    }
+    // position of each start_indices batching dim among the batch dims
+    // (i.e. the indices dims with the index-vector dim removed)
+    let sib_pos: Vec<usize> = g
+        .start_indices_batching_dims
+        .iter()
+        .map(|&sd| if sd > g.index_vector_dim { sd - 1 } else { sd })
+        .collect();
+    let ivd = g.index_vector_dim;
+    let picks = index_list(&out_shape, |out_idx| {
+        let gcoords: Vec<usize> = batch_pos_out.iter().map(|&p| out_idx[p]).collect();
+        let mut start = vec![0i64; op_shape.len()];
+        for (k, &od) in g.start_index_map.iter().enumerate() {
+            let mut ind_idx = gcoords.clone();
+            if ivd < ind_shape.len() {
+                ind_idx.insert(ivd, k);
+            }
+            let lin: usize = ind_idx.iter().zip(&ind_strides).map(|(i, s)| i * s).sum();
+            start[od] = ind[lin] as i64;
+        }
+        for (j, &od) in g.operand_batching_dims.iter().enumerate() {
+            start[od] = gcoords[sib_pos[j]] as i64;
+        }
+        let mut lin = 0usize;
+        for (d, s) in start.iter().enumerate() {
+            let max = (op_shape[d] - g.slice_sizes[d]) as i64;
+            lin += (s.clamp(0, max) as usize) * op_strides[d];
+        }
+        for (o, &od) in offset_op_dims.iter().enumerate() {
+            lin += out_idx[g.offset_dims[o]] * op_strides[od];
+        }
+        lin
+    });
+    Ok(take(operand, out_shape, &picks))
+}
+
+fn eval_dot(
+    a: &ArrayVal,
+    b: &ArrayVal,
+    lhs_c: &[usize],
+    rhs_c: &[usize],
+    out_shape: Vec<usize>,
+) -> Result<ArrayVal> {
+    let (x, w) = match (&a.data, &b.data) {
+        (Data::F32(x), Data::F32(w)) => (x, w),
+        _ => bail!("dot supports f32 only"),
+    };
+    // the artifacts' only form: [m,k] x [k,n]
+    if a.shape.len() == 2 && b.shape.len() == 2 && lhs_c == [1] && rhs_c == [0] {
+        let (m, k) = (a.shape[0], a.shape[1]);
+        let n = b.shape[1];
+        if b.shape[0] != k {
+            bail!("dot contraction size mismatch");
+        }
+        let mut out = vec![0f32; m * n];
+        for i in 0..m {
+            let xrow = &x[i * k..(i + 1) * k];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (kk, &xv) in xrow.iter().enumerate() {
+                let wrow = &w[kk * n..(kk + 1) * n];
+                for (o, wv) in orow.iter_mut().zip(wrow) {
+                    *o += xv * wv;
+                }
+            }
+        }
+        return Ok(ArrayVal {
+            shape: out_shape,
+            data: Data::F32(out),
+        });
+    }
+    // general case (used only by hand-written test modules)
+    if lhs_c.len() != rhs_c.len() {
+        bail!("dot contracting rank mismatch");
+    }
+    let lfree: Vec<usize> = (0..a.shape.len()).filter(|d| !lhs_c.contains(d)).collect();
+    let rfree: Vec<usize> = (0..b.shape.len()).filter(|d| !rhs_c.contains(d)).collect();
+    let cshape: Vec<usize> = lhs_c.iter().map(|&d| a.shape[d]).collect();
+    for (i, &d) in rhs_c.iter().enumerate() {
+        if b.shape[d] != cshape[i] {
+            bail!("dot contraction size mismatch");
+        }
+    }
+    let sa = strides_of(&a.shape);
+    let sb = strides_of(&b.shape);
+    let n: usize = out_shape.iter().product();
+    let mut out = Vec::with_capacity(n);
+    let mut oidx = vec![0usize; out_shape.len()];
+    let ctotal: usize = cshape.iter().product();
+    for _ in 0..n {
+        let mut abase = 0usize;
+        for (p, &d) in lfree.iter().enumerate() {
+            abase += oidx[p] * sa[d];
+        }
+        let mut bbase = 0usize;
+        for (p, &d) in rfree.iter().enumerate() {
+            bbase += oidx[lfree.len() + p] * sb[d];
+        }
+        let mut cidx = vec![0usize; cshape.len()];
+        let mut acc = 0f32;
+        for _ in 0..ctotal {
+            let mut ai = abase;
+            let mut bi = bbase;
+            for (p, &v) in cidx.iter().enumerate() {
+                ai += v * sa[lhs_c[p]];
+                bi += v * sb[rhs_c[p]];
+            }
+            acc += x[ai] * w[bi];
+            inc(&mut cidx, &cshape);
+        }
+        out.push(acc);
+        inc(&mut oidx, &out_shape);
+    }
+    Ok(ArrayVal {
+        shape: out_shape,
+        data: Data::F32(out),
+    })
+}
+
+/// Direct 2-D convolution, NHWC input / HWIO kernel / NHWC output
+/// (`dim_labels=b01f_01io->b01f`), with feature groups.
+fn eval_conv(cd: &ConvDims, x: &ArrayVal, w: &ArrayVal, out_shape: Vec<usize>) -> Result<ArrayVal> {
+    if cd.window_size.len() != 2 || x.shape.len() != 4 || w.shape.len() != 4 {
+        bail!("convolution supports 2-D NHWC only");
+    }
+    let (xv, wv) = match (&x.data, &w.data) {
+        (Data::F32(a), Data::F32(b)) => (a, b),
+        _ => bail!("convolution supports f32 only"),
+    };
+    let (n, h, wi, ci) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (kh, kw, cig, co) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
+    let (oh, ow) = (out_shape[1], out_shape[2]);
+    let g = cd.feature_group_count;
+    if ci != cig * g || co % g != 0 || out_shape[3] != co || out_shape[0] != n {
+        bail!("convolution geometry mismatch");
+    }
+    let cog = co / g;
+    let mut out = vec![0f32; n * oh * ow * co];
+    for b in 0..n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let obase = ((b * oh + oy) * ow + ox) * co;
+                for ky in 0..kh {
+                    let iy = (oy * cd.stride[0] + ky) as i64 - cd.pad_lo[0];
+                    if iy < 0 || iy as usize >= h {
+                        continue;
+                    }
+                    for kx in 0..kw {
+                        let ix = (ox * cd.stride[1] + kx) as i64 - cd.pad_lo[1];
+                        if ix < 0 || ix as usize >= wi {
+                            continue;
+                        }
+                        let ibase = ((b * h + iy as usize) * wi + ix as usize) * ci;
+                        let wbase = (ky * kw + kx) * cig * co;
+                        for oc in 0..co {
+                            let grp = oc / cog;
+                            let mut acc = 0f32;
+                            for c in 0..cig {
+                                acc += xv[ibase + grp * cig + c] * wv[wbase + c * co + oc];
+                            }
+                            out[obase + oc] += acc;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Ok(ArrayVal {
+        shape: out_shape,
+        data: Data::F32(out),
+    })
+}
+
+/// True per computation when it can run on the scalar evaluator.
+fn compute_scalar_ok(m: &Module) -> Vec<bool> {
+    let n = m.comps.len();
+    let mut ok = vec![false; n];
+    loop {
+        let mut changed = false;
+        for i in 0..n {
+            if !ok[i] && scalar_comp_candidate(m, &m.comps[i], &ok) {
+                ok[i] = true;
+                changed = true;
+            }
+        }
+        if !changed {
+            return ok;
+        }
+    }
+}
+
+fn scalar_comp_candidate(m: &Module, c: &Computation, ok: &[bool]) -> bool {
+    for (k, ins) in c.instrs.iter().enumerate() {
+        let scalar_ty = match &ins.ty {
+            Type::Array(_, dims) => dims.is_empty(),
+            Type::Tuple(parts) => {
+                k == c.root
+                    && parts
+                        .iter()
+                        .all(|p| matches!(p, Type::Array(_, d) if d.is_empty()))
+            }
+        };
+        if !scalar_ty {
+            return false;
+        }
+        match &ins.op {
+            Op::Parameter(_)
+            | Op::Constant(_)
+            | Op::Binary(_)
+            | Op::Compare(_)
+            | Op::Select
+            | Op::Convert
+            | Op::Rsqrt => {}
+            Op::Tuple => {
+                if k != c.root {
+                    return false;
+                }
+            }
+            Op::Call { comp } => {
+                let target = &m.comps[*comp];
+                let target_root_tuple = matches!(target.instrs[target.root].op, Op::Tuple);
+                if !ok[*comp] || target_root_tuple {
+                    return false;
+                }
+            }
+            _ => return false,
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hlo::parser::parse;
+
+    fn run1(text: &str, inputs: &[Value]) -> Value {
+        let interp = Interpreter::new(parse(text).unwrap());
+        interp.run_entry(inputs).unwrap()
+    }
+
+    fn f32_input(shape: &[usize], data: &[f32]) -> Value {
+        Value::arr(ArrayVal {
+            shape: shape.to_vec(),
+            data: Data::F32(data.to_vec()),
+        })
+    }
+
+    #[test]
+    fn while_loop_counts_to_five() {
+        let text = "HloModule w
+cond.1 {
+  p.2 = (s32[]) parameter(0)
+  g.3 = s32[] get-tuple-element(p.2), index=0
+  c.4 = s32[] constant(5)
+  ROOT lt.5 = pred[] compare(g.3, c.4), direction=LT
+}
+body.6 {
+  p.7 = (s32[]) parameter(0)
+  g.8 = s32[] get-tuple-element(p.7), index=0
+  c.9 = s32[] constant(1)
+  a.10 = s32[] add(g.8, c.9)
+  ROOT t.11 = (s32[]) tuple(a.10)
+}
+ENTRY main.12 {
+  c.13 = s32[] constant(0)
+  t.14 = (s32[]) tuple(c.13)
+  w.15 = (s32[]) while(t.14), condition=cond.1, body=body.6
+  ROOT g.16 = s32[] get-tuple-element(w.15), index=0
+}
+";
+        let out = run1(text, &[]);
+        match &out.as_arr().unwrap().data {
+            Data::S32(v) => assert_eq!(v, &vec![5]),
+            other => panic!("expected s32, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn reduce_sum_uses_scalar_region() {
+        let text = "HloModule r
+add.1 {
+  a.2 = f32[] parameter(0)
+  b.3 = f32[] parameter(1)
+  ROOT s.4 = f32[] add(a.2, b.3)
+}
+ENTRY main.5 {
+  x.6 = f32[2,3]{1,0} parameter(0)
+  z.7 = f32[] constant(0)
+  ROOT r.8 = f32[2]{0} reduce(x.6, z.7), dimensions={1}, to_apply=add.1
+}
+";
+        let interp = Interpreter::new(parse(text).unwrap());
+        assert!(interp.scalar_ok[0], "add region should be scalar-evaluable");
+        let out = interp
+            .run_entry(&[f32_input(&[2, 3], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0])])
+            .unwrap();
+        match &out.as_arr().unwrap().data {
+            Data::F32(v) => assert_eq!(v, &vec![6.0, 15.0]),
+            other => panic!("expected f32, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn dynamic_slice_clamps_starts() {
+        let text = "HloModule d
+ENTRY main.1 {
+  x.2 = f32[4]{0} parameter(0)
+  s.3 = s32[] constant(9)
+  ROOT d.4 = f32[2]{0} dynamic-slice(x.2, s.3), dynamic_slice_sizes={2}
+}
+";
+        let out = run1(text, &[f32_input(&[4], &[1.0, 2.0, 3.0, 4.0])]);
+        match &out.as_arr().unwrap().data {
+            Data::F32(v) => assert_eq!(v, &vec![3.0, 4.0]),
+            other => panic!("expected f32, got {other:?}"),
+        }
+    }
+}

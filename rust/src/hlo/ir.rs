@@ -1,0 +1,304 @@
+//! The in-memory form of a parsed HLO module: computations, instructions,
+//! types, and the attribute payloads each opcode carries.
+//!
+//! Design notes:
+//!
+//! * Instructions are stored in **definition order** per computation and
+//!   referenced by slot index, never by name — name resolution happens once
+//!   in the parser, so the evaluator does no string work.
+//! * Result types come straight from the text (`f32[8,28,28,16]{...}`);
+//!   the evaluator trusts them for output shapes instead of re-deriving
+//!   shape inference, which keeps every op implementation short.
+//! * Layout suffixes (`{3,2,1,0}`) are parsed and discarded: values are
+//!   logical row-major tensors, and HLO semantics are layout-independent.
+//! * Constants are lowered to [`ArrayVal`]s behind an `Arc` at parse time,
+//!   so re-executing a `constant` (e.g. inside a `while` body) is a
+//!   refcount bump, not a literal re-parse or a buffer copy.
+
+use std::sync::Arc;
+
+/// Element type. The AOT artifacts use exactly these three.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    S32,
+    Pred,
+}
+
+impl DType {
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::S32 => "s32",
+            DType::Pred => "pred",
+        }
+    }
+}
+
+/// An HLO type: a dense array or a (possibly nested) tuple.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Type {
+    Array(DType, Vec<usize>),
+    Tuple(Vec<Type>),
+}
+
+impl Type {
+    /// Element count of an array type (1 for scalars).
+    pub fn elements(&self) -> usize {
+        match self {
+            Type::Array(_, dims) => dims.iter().product(),
+            Type::Tuple(_) => 0,
+        }
+    }
+}
+
+/// Flat row-major tensor storage, one variant per element type.
+#[derive(Clone, Debug)]
+pub enum Data {
+    F32(Vec<f32>),
+    S32(Vec<i32>),
+    Pred(Vec<bool>),
+}
+
+impl Data {
+    pub fn len(&self) -> usize {
+        match self {
+            Data::F32(v) => v.len(),
+            Data::S32(v) => v.len(),
+            Data::Pred(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            Data::F32(_) => DType::F32,
+            Data::S32(_) => DType::S32,
+            Data::Pred(_) => DType::Pred,
+        }
+    }
+}
+
+/// A concrete tensor: dtype is implied by the [`Data`] variant.
+#[derive(Clone, Debug)]
+pub struct ArrayVal {
+    pub shape: Vec<usize>,
+    pub data: Data,
+}
+
+impl ArrayVal {
+    pub fn scalar_f32(v: f32) -> Self {
+        ArrayVal {
+            shape: Vec::new(),
+            data: Data::F32(vec![v]),
+        }
+    }
+
+    pub fn scalar_s32(v: i32) -> Self {
+        ArrayVal {
+            shape: Vec::new(),
+            data: Data::S32(vec![v]),
+        }
+    }
+
+    pub fn scalar_pred(v: bool) -> Self {
+        ArrayVal {
+            shape: Vec::new(),
+            data: Data::Pred(vec![v]),
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        self.data.dtype()
+    }
+
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// `compare` direction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dir {
+    Eq,
+    Ne,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+}
+
+/// Elementwise binary opcodes (shared shape, shared dtype).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BinOp {
+    Add,
+    Subtract,
+    Multiply,
+    Divide,
+    Maximum,
+    Minimum,
+    And,
+    Or,
+}
+
+/// `gather` dimension numbers (including the operand/start-indices
+/// batching extension that jax >= 0.4.30 emits for vmapped gathers).
+#[derive(Clone, Debug, Default)]
+pub struct GatherDims {
+    pub offset_dims: Vec<usize>,
+    pub collapsed_slice_dims: Vec<usize>,
+    pub start_index_map: Vec<usize>,
+    pub operand_batching_dims: Vec<usize>,
+    pub start_indices_batching_dims: Vec<usize>,
+    pub index_vector_dim: usize,
+    pub slice_sizes: Vec<usize>,
+}
+
+/// `scatter` dimension numbers.
+#[derive(Clone, Debug, Default)]
+pub struct ScatterDims {
+    pub update_window_dims: Vec<usize>,
+    pub inserted_window_dims: Vec<usize>,
+    pub scatter_dims_to_operand_dims: Vec<usize>,
+    pub index_vector_dim: usize,
+}
+
+/// `convolution` window + grouping (dim_labels are validated by the parser
+/// to the one layout the artifacts use: `b01f_01io->b01f`, i.e. NHWC input,
+/// HWIO kernel, NHWC output).
+#[derive(Clone, Debug)]
+pub struct ConvDims {
+    pub window_size: Vec<usize>,
+    pub stride: Vec<usize>,
+    pub pad_lo: Vec<i64>,
+    pub pad_hi: Vec<i64>,
+    pub feature_group_count: usize,
+}
+
+/// One instruction's opcode + attribute payload. Computation references
+/// (`to_apply`, `condition`, `body`) are indices into [`Module::comps`].
+#[derive(Clone, Debug)]
+pub enum Op {
+    Parameter(usize),
+    Constant(Arc<ArrayVal>),
+    Broadcast { dims: Vec<usize> },
+    Iota { dim: usize },
+    Convert,
+    Rsqrt,
+    Binary(BinOp),
+    Compare(Dir),
+    Select,
+    Reshape,
+    Transpose { perm: Vec<usize> },
+    Slice { starts: Vec<usize>, limits: Vec<usize>, strides: Vec<usize> },
+    Pad { lo: Vec<i64>, hi: Vec<i64>, interior: Vec<usize> },
+    Concatenate { dim: usize },
+    DynamicSlice { sizes: Vec<usize> },
+    DynamicUpdateSlice,
+    GetTupleElement { index: usize },
+    Tuple,
+    Call { comp: usize },
+    While { cond: usize, body: usize },
+    Reduce { dims: Vec<usize>, comp: usize },
+    Sort { dim: usize, comp: usize },
+    Gather(Box<GatherDims>),
+    Scatter { dims: Box<ScatterDims>, comp: usize },
+    Dot { lhs_contracting: Vec<usize>, rhs_contracting: Vec<usize> },
+    Convolution(Box<ConvDims>),
+}
+
+impl Op {
+    /// Canonical HLO-text opcode name (used in error messages and the
+    /// conformance census).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Op::Parameter(_) => "parameter",
+            Op::Constant(_) => "constant",
+            Op::Broadcast { .. } => "broadcast",
+            Op::Iota { .. } => "iota",
+            Op::Convert => "convert",
+            Op::Rsqrt => "rsqrt",
+            Op::Binary(BinOp::Add) => "add",
+            Op::Binary(BinOp::Subtract) => "subtract",
+            Op::Binary(BinOp::Multiply) => "multiply",
+            Op::Binary(BinOp::Divide) => "divide",
+            Op::Binary(BinOp::Maximum) => "maximum",
+            Op::Binary(BinOp::Minimum) => "minimum",
+            Op::Binary(BinOp::And) => "and",
+            Op::Binary(BinOp::Or) => "or",
+            Op::Compare(_) => "compare",
+            Op::Select => "select",
+            Op::Reshape => "reshape",
+            Op::Transpose { .. } => "transpose",
+            Op::Slice { .. } => "slice",
+            Op::Pad { .. } => "pad",
+            Op::Concatenate { .. } => "concatenate",
+            Op::DynamicSlice { .. } => "dynamic-slice",
+            Op::DynamicUpdateSlice => "dynamic-update-slice",
+            Op::GetTupleElement { .. } => "get-tuple-element",
+            Op::Tuple => "tuple",
+            Op::Call { .. } => "call",
+            Op::While { .. } => "while",
+            Op::Reduce { .. } => "reduce",
+            Op::Sort { .. } => "sort",
+            Op::Gather(_) => "gather",
+            Op::Scatter { .. } => "scatter",
+            Op::Dot { .. } => "dot",
+            Op::Convolution(_) => "convolution",
+        }
+    }
+}
+
+/// One instruction: opcode payload, operand slots (indices into the same
+/// computation's `instrs`), and the declared result type.
+#[derive(Clone, Debug)]
+pub struct Instr {
+    pub op: Op,
+    pub operands: Vec<usize>,
+    pub ty: Type,
+}
+
+/// A named computation (ENTRY, a `call` target, or a region applied by
+/// `while` / `reduce` / `sort` / `scatter`).
+#[derive(Clone, Debug)]
+pub struct Computation {
+    pub name: String,
+    /// Slot of the parameter instruction for each ordinal.
+    pub params: Vec<usize>,
+    pub instrs: Vec<Instr>,
+    pub root: usize,
+    /// `last_use[i]`: index of the last instruction reading slot `i`
+    /// (the root is pinned to `instrs.len()`), so the evaluator can drop
+    /// dead intermediates eagerly — HLO from jax threads multi-megabyte
+    /// buffers through long straight-line blocks.
+    pub last_use: Vec<usize>,
+}
+
+/// A parsed HLO module.
+#[derive(Clone, Debug)]
+pub struct Module {
+    pub name: String,
+    pub comps: Vec<Computation>,
+    pub entry: usize,
+}
+
+impl Module {
+    pub fn entry_computation(&self) -> &Computation {
+        &self.comps[self.entry]
+    }
+
+    /// Declared parameter types of the entry computation, by ordinal.
+    pub fn entry_param_types(&self) -> Vec<Type> {
+        let c = self.entry_computation();
+        c.params.iter().map(|&s| c.instrs[s].ty.clone()).collect()
+    }
+
+    /// Declared result type of the entry computation.
+    pub fn entry_result_type(&self) -> &Type {
+        let c = self.entry_computation();
+        &c.instrs[c.root].ty
+    }
+}

@@ -1,0 +1,166 @@
+//! Tokenizer for XLA's HLO text format (the `module.to_string()` form that
+//! `python/compile/aot.py` writes).
+//!
+//! The grammar is punctuation-light, so the lexer only distinguishes
+//! punctuation from "words". A word is a maximal run of word characters
+//! and covers identifiers (`dynamic-slice.43`), numbers (`-0.018`,
+//! `1e+06`, `-inf`, `nan`), attribute shorthands (`0_240x0_0`, `3x3`,
+//! `b01f_01io->b01f`), and keywords (`ROOT`, `true`). The parser decides
+//! what each word means from context.
+//!
+//! `/* ... */` comments (jax emits `/*index=5*/` and `/*i0=0*/` markers
+//! inside tuple types and literals) are stripped here.
+
+use anyhow::{anyhow, Result};
+
+/// One token. Words borrow from the source text.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tok<'a> {
+    Word(&'a str),
+    LBrace,
+    RBrace,
+    LParen,
+    RParen,
+    LBracket,
+    RBracket,
+    Comma,
+    Colon,
+    Equals,
+}
+
+impl<'a> Tok<'a> {
+    /// The word's text, if this is a word token.
+    pub fn word(self) -> Option<&'a str> {
+        match self {
+            Tok::Word(w) => Some(w),
+            _ => None,
+        }
+    }
+}
+
+/// True for the characters that may appear inside a word token.
+///
+/// `-` participates both in names (`get-tuple-element.25`) and numbers
+/// (`-1`, `-inf`, `1e-05`); `>` only appears in `dim_labels` values and
+/// the `->` of layout signatures, which the parser skips wholesale.
+fn is_word_char(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || matches!(c, b'_' | b'.' | b'-' | b'+' | b'>' | b'<')
+}
+
+/// Tokenize the whole input. Fails only on an unterminated comment or a
+/// character outside the HLO-text alphabet.
+pub fn lex(text: &str) -> Result<Vec<Tok<'_>>> {
+    let bytes = text.as_bytes();
+    let mut toks = Vec::with_capacity(text.len() / 4);
+    let mut i = 0usize;
+    while i < bytes.len() {
+        let c = bytes[i];
+        match c {
+            b' ' | b'\t' | b'\r' | b'\n' => i += 1,
+            b'/' if bytes.get(i + 1) == Some(&b'*') => {
+                let rest = &text[i + 2..];
+                let end = rest
+                    .find("*/")
+                    .ok_or_else(|| anyhow!("hlo lexer: unterminated /* comment at byte {i}"))?;
+                i += 2 + end + 2;
+            }
+            b'{' => {
+                toks.push(Tok::LBrace);
+                i += 1;
+            }
+            b'}' => {
+                toks.push(Tok::RBrace);
+                i += 1;
+            }
+            b'(' => {
+                toks.push(Tok::LParen);
+                i += 1;
+            }
+            b')' => {
+                toks.push(Tok::RParen);
+                i += 1;
+            }
+            b'[' => {
+                toks.push(Tok::LBracket);
+                i += 1;
+            }
+            b']' => {
+                toks.push(Tok::RBracket);
+                i += 1;
+            }
+            b',' => {
+                toks.push(Tok::Comma);
+                i += 1;
+            }
+            b':' => {
+                toks.push(Tok::Colon);
+                i += 1;
+            }
+            b'=' => {
+                toks.push(Tok::Equals);
+                i += 1;
+            }
+            _ if is_word_char(c) => {
+                let start = i;
+                while i < bytes.len() && is_word_char(bytes[i]) {
+                    i += 1;
+                }
+                toks.push(Tok::Word(&text[start..i]));
+            }
+            _ => {
+                return Err(anyhow!(
+                    "hlo lexer: unexpected character {:?} at byte {i}",
+                    c as char
+                ));
+            }
+        }
+    }
+    Ok(toks)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lexes_instruction_line() {
+        let toks =
+            lex("add.64 = s32[] add(get-tuple-element.25, constant.32)").unwrap();
+        assert_eq!(
+            toks,
+            vec![
+                Tok::Word("add.64"),
+                Tok::Equals,
+                Tok::Word("s32"),
+                Tok::LBracket,
+                Tok::RBracket,
+                Tok::Word("add"),
+                Tok::LParen,
+                Tok::Word("get-tuple-element.25"),
+                Tok::Comma,
+                Tok::Word("constant.32"),
+                Tok::RParen,
+            ]
+        );
+    }
+
+    #[test]
+    fn strips_comments_and_keeps_negative_numbers() {
+        let toks = lex("{ { /*i0=0*/ { -0.5, 1e+06, -inf } } }").unwrap();
+        let words: Vec<&str> = toks.iter().filter_map(|t| t.word()).collect();
+        assert_eq!(words, vec!["-0.5", "1e+06", "-inf"]);
+    }
+
+    #[test]
+    fn lexes_attribute_shorthands_as_single_words() {
+        for w in ["0_240x0_0", "3x3", "b01f_01io->b01f", "1_1x1_1"] {
+            let toks = lex(w).unwrap();
+            assert_eq!(toks, vec![Tok::Word(w)]);
+        }
+    }
+
+    #[test]
+    fn rejects_unterminated_comment() {
+        assert!(lex("add /* oops").is_err());
+    }
+}

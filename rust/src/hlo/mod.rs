@@ -1,0 +1,71 @@
+//! Native HLO-text interpreter.
+//!
+//! This subsystem revives the XLA execution path without linking XLA: it
+//! parses the AOT HLO-text artifacts written by `python/compile/aot.py`
+//! and evaluates them on plain `Vec<f32>` / `Vec<i32>` tensors. The
+//! shipped artifacts use a **closed set of 33 opcodes** (see the
+//! conformance census in `rust/tests/hlo_interpreter.rs`), so full
+//! conformance is a bounded, testable target rather than an open-ended
+//! XLA reimplementation.
+//!
+//! Pipeline: [`lexer`] (tokens) -> [`parser`] (resolved [`ir::Module`])
+//! -> [`eval::Interpreter`] (values). `crate::runtime` wraps this behind
+//! the `Runtime`/`Executable` facade the coordinator consumes, and keeps
+//! the role the ROADMAP assigned it: a software-exact digital reference
+//! beside the analogue crossbar model, in the same binary, so the two
+//! backends can always be diffed (cf. Wu et al., arXiv:2305.14547, which
+//! keeps a digital golden path beside a CIM module for the same reason).
+//!
+//! Why text, not protos: jax >= 0.5 serializes HLO protos with 64-bit
+//! instruction ids that older `xla_extension` builds reject, so the
+//! export pipeline standardized on text (see python/compile/aot.py); the
+//! interpreter consumes the same artifact bytes CI already caches.
+
+pub mod eval;
+pub mod ir;
+pub mod lexer;
+pub mod parser;
+
+pub use eval::{Interpreter, Value};
+pub use ir::{ArrayVal, Data, DType, Module, Type};
+pub use parser::parse;
+
+/// Every opcode the interpreter implements — exactly the census of the
+/// shipped artifacts. The conformance test greps the artifacts and
+/// asserts the two sets stay equal, so a regenerated artifact with a new
+/// opcode fails loudly.
+pub const SUPPORTED_OPS: &[&str] = &[
+    "add",
+    "and",
+    "broadcast",
+    "call",
+    "compare",
+    "concatenate",
+    "constant",
+    "convert",
+    "convolution",
+    "divide",
+    "dot",
+    "dynamic-slice",
+    "dynamic-update-slice",
+    "gather",
+    "get-tuple-element",
+    "iota",
+    "maximum",
+    "minimum",
+    "multiply",
+    "or",
+    "pad",
+    "parameter",
+    "reduce",
+    "reshape",
+    "rsqrt",
+    "scatter",
+    "select",
+    "slice",
+    "sort",
+    "subtract",
+    "transpose",
+    "tuple",
+    "while",
+];

@@ -1,0 +1,783 @@
+//! Recursive-descent parser: HLO text -> [`Module`].
+//!
+//! Two passes: raw parsing collects computations with operand *names* and
+//! uninterpreted attribute values; lowering resolves names to slot/
+//! computation indices and interprets each opcode's attributes. Both
+//! operand references and `to_apply`/`condition`/`body` references are
+//! resolved after everything is enumerated, so definition order never
+//! matters.
+//!
+//! Only the constructs the AOT artifacts use are accepted (33 opcodes,
+//! `f32`/`s32`/`pred` dtypes, `b01f_01io->b01f` convolutions); anything
+//! else is a hard error naming the opcode, so a future artifact change
+//! fails loudly in the conformance suite instead of silently miscomputing.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::ir::{
+    ArrayVal, BinOp, Computation, ConvDims, Data, Dir, DType, GatherDims, Instr, Module, Op,
+    ScatterDims, Type,
+};
+use super::lexer::{lex, Tok};
+
+/// Parse a full HLO-text module.
+pub fn parse(text: &str) -> Result<Module> {
+    let toks = lex(text)?;
+    let mut p = Parser { toks: &toks, pos: 0 };
+    let module = p.parse_module()?;
+    Ok(module)
+}
+
+/// One uninterpreted attribute value: a bare word or the tokens between a
+/// balanced `{ ... }` pair.
+enum AttrVal<'a> {
+    Word(&'a str),
+    Toks(Vec<Tok<'a>>),
+}
+
+struct RawInstr<'a> {
+    name: &'a str,
+    ty: Type,
+    opcode: &'a str,
+    operands: Vec<&'a str>,
+    literal: Vec<Tok<'a>>,
+    attrs: Vec<(&'a str, AttrVal<'a>)>,
+    is_root: bool,
+}
+
+struct RawComp<'a> {
+    name: &'a str,
+    instrs: Vec<RawInstr<'a>>,
+}
+
+struct Parser<'a, 'b> {
+    toks: &'b [Tok<'a>],
+    pos: usize,
+}
+
+impl<'a, 'b> Parser<'a, 'b> {
+    fn peek(&self) -> Option<Tok<'a>> {
+        self.toks.get(self.pos).copied()
+    }
+
+    fn bump(&mut self) -> Option<Tok<'a>> {
+        let t = self.peek();
+        if t.is_some() {
+            self.pos += 1;
+        }
+        t
+    }
+
+    fn eat(&mut self, t: Tok<'a>) -> bool {
+        if self.peek() == Some(t) {
+            self.pos += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn expect(&mut self, t: Tok<'a>) -> Result<()> {
+        match self.bump() {
+            Some(got) if got == t => Ok(()),
+            got => Err(anyhow!("hlo parser: expected {t:?}, got {got:?} at token {}", self.pos)),
+        }
+    }
+
+    fn word(&mut self) -> Result<&'a str> {
+        match self.bump() {
+            Some(Tok::Word(w)) => Ok(w),
+            got => Err(anyhow!("hlo parser: expected word, got {got:?} at token {}", self.pos)),
+        }
+    }
+
+    fn peek_word(&self) -> Option<&'a str> {
+        self.peek().and_then(|t| t.word())
+    }
+
+    /// Skip a `{ ... }` group (brace-balanced) or a single token.
+    fn skip_value(&mut self) -> Result<()> {
+        if self.eat(Tok::LBrace) {
+            let mut depth = 1usize;
+            while depth > 0 {
+                match self.bump() {
+                    Some(Tok::LBrace) => depth += 1,
+                    Some(Tok::RBrace) => depth -= 1,
+                    Some(_) => {}
+                    None => bail!("hlo parser: unbalanced braces in attribute value"),
+                }
+            }
+            Ok(())
+        } else {
+            self.bump()
+                .map(|_| ())
+                .ok_or_else(|| anyhow!("hlo parser: missing attribute value"))
+        }
+    }
+
+    fn parse_module(&mut self) -> Result<Module> {
+        match self.word()? {
+            "HloModule" => {}
+            other => bail!("hlo parser: expected HloModule header, got {other:?}"),
+        }
+        let mname = self.word()?.to_string();
+        while self.eat(Tok::Comma) {
+            let _key = self.word()?;
+            self.expect(Tok::Equals)?;
+            self.skip_value()?;
+        }
+        let mut raw = Vec::new();
+        let mut entry = None;
+        while self.peek().is_some() {
+            let is_entry = if self.peek_word() == Some("ENTRY") {
+                self.bump();
+                true
+            } else {
+                false
+            };
+            let cname = self.word()?;
+            self.expect(Tok::LBrace)?;
+            let comp = self
+                .parse_computation(cname)
+                .with_context(|| format!("in computation {cname}"))?;
+            if is_entry {
+                entry = Some(raw.len());
+            }
+            raw.push(comp);
+        }
+        if raw.is_empty() {
+            bail!("hlo parser: module {mname} has no computations");
+        }
+        // a module printed without an explicit ENTRY keyword ends with it
+        let entry = entry.unwrap_or(raw.len() - 1);
+        lower(mname, &raw, entry)
+    }
+
+    fn parse_computation(&mut self, name: &'a str) -> Result<RawComp<'a>> {
+        let mut instrs = Vec::new();
+        loop {
+            if self.eat(Tok::RBrace) {
+                break;
+            }
+            let is_root = if self.peek_word() == Some("ROOT") {
+                self.bump();
+                true
+            } else {
+                false
+            };
+            let iname = self.word()?;
+            self.expect(Tok::Equals)?;
+            let ty = self.parse_type()?;
+            let opcode = self.word()?;
+            self.expect(Tok::LParen)?;
+            let mut operands = Vec::new();
+            let mut literal = Vec::new();
+            if opcode == "constant" {
+                // literal tokens up to the closing paren (braces + words)
+                loop {
+                    match self.bump() {
+                        Some(Tok::RParen) => break,
+                        Some(t) => literal.push(t),
+                        None => bail!("hlo parser: unterminated constant literal"),
+                    }
+                }
+            } else if !self.eat(Tok::RParen) {
+                loop {
+                    operands.push(self.word()?);
+                    if self.eat(Tok::Comma) {
+                        continue;
+                    }
+                    self.expect(Tok::RParen)?;
+                    break;
+                }
+            }
+            let mut attrs = Vec::new();
+            while self.eat(Tok::Comma) {
+                let key = self.word()?;
+                self.expect(Tok::Equals)?;
+                let val = if self.eat(Tok::LBrace) {
+                    let mut depth = 1usize;
+                    let mut toks = Vec::new();
+                    loop {
+                        match self.bump() {
+                            Some(Tok::LBrace) => {
+                                depth += 1;
+                                toks.push(Tok::LBrace);
+                            }
+                            Some(Tok::RBrace) => {
+                                depth -= 1;
+                                if depth == 0 {
+                                    break;
+                                }
+                                toks.push(Tok::RBrace);
+                            }
+                            Some(t) => toks.push(t),
+                            None => bail!("hlo parser: unbalanced attribute braces"),
+                        }
+                    }
+                    AttrVal::Toks(toks)
+                } else {
+                    AttrVal::Word(self.word()?)
+                };
+                attrs.push((key, val));
+            }
+            instrs.push(RawInstr {
+                name: iname,
+                ty,
+                opcode,
+                operands,
+                literal,
+                attrs,
+                is_root,
+            });
+        }
+        if instrs.is_empty() {
+            bail!("hlo parser: computation {name} is empty");
+        }
+        Ok(RawComp { name, instrs })
+    }
+
+    fn parse_type(&mut self) -> Result<Type> {
+        if self.eat(Tok::LParen) {
+            let mut parts = Vec::new();
+            if !self.eat(Tok::RParen) {
+                loop {
+                    parts.push(self.parse_type()?);
+                    if self.eat(Tok::Comma) {
+                        continue;
+                    }
+                    self.expect(Tok::RParen)?;
+                    break;
+                }
+            }
+            return Ok(Type::Tuple(parts));
+        }
+        let dt = match self.word()? {
+            "f32" => DType::F32,
+            "s32" => DType::S32,
+            "pred" => DType::Pred,
+            other => bail!("hlo parser: unsupported element type {other:?}"),
+        };
+        self.expect(Tok::LBracket)?;
+        let mut dims = Vec::new();
+        if !self.eat(Tok::RBracket) {
+            loop {
+                let w = self.word()?;
+                dims.push(
+                    w.parse::<usize>()
+                        .map_err(|_| anyhow!("hlo parser: bad dimension {w:?}"))?,
+                );
+                if self.eat(Tok::Comma) {
+                    continue;
+                }
+                self.expect(Tok::RBracket)?;
+                break;
+            }
+        }
+        // optional layout suffix, e.g. {3,2,1,0} — logical values only
+        if self.peek() == Some(Tok::LBrace) {
+            self.skip_value()?;
+        }
+        Ok(Type::Array(dt, dims))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Lowering: raw text structures -> resolved IR
+// ---------------------------------------------------------------------------
+
+fn lower(name: String, raw: &[RawComp<'_>], entry: usize) -> Result<Module> {
+    let comp_ids: HashMap<&str, usize> =
+        raw.iter().enumerate().map(|(i, c)| (c.name, i)).collect();
+    let mut comps = Vec::with_capacity(raw.len());
+    for rc in raw {
+        comps.push(
+            lower_computation(rc, &comp_ids)
+                .with_context(|| format!("lowering computation {}", rc.name))?,
+        );
+    }
+    Ok(Module { name, comps, entry })
+}
+
+fn lower_computation(
+    rc: &RawComp<'_>,
+    comp_ids: &HashMap<&str, usize>,
+) -> Result<Computation> {
+    let slot_of: HashMap<&str, usize> = rc
+        .instrs
+        .iter()
+        .enumerate()
+        .map(|(i, ins)| (ins.name, i))
+        .collect();
+    let mut instrs = Vec::with_capacity(rc.instrs.len());
+    let mut params: Vec<Option<usize>> = Vec::new();
+    let mut root = rc.instrs.len() - 1;
+    for (slot, ri) in rc.instrs.iter().enumerate() {
+        if ri.is_root {
+            root = slot;
+        }
+        let op = lower_op(ri, comp_ids)
+            .with_context(|| format!("instruction {}", ri.name))?;
+        let operands = if matches!(op, Op::Parameter(_)) {
+            Vec::new()
+        } else {
+            ri.operands
+                .iter()
+                .map(|n| {
+                    slot_of.get(n).copied().ok_or_else(|| {
+                        anyhow!("instruction {}: unknown operand {n:?}", ri.name)
+                    })
+                })
+                .collect::<Result<Vec<usize>>>()?
+        };
+        if let Op::Parameter(ordinal) = op {
+            if params.len() <= ordinal {
+                params.resize(ordinal + 1, None);
+            }
+            params[ordinal] = Some(slot);
+        }
+        instrs.push(Instr {
+            op,
+            operands,
+            ty: ri.ty.clone(),
+        });
+    }
+    let params = params
+        .into_iter()
+        .enumerate()
+        .map(|(i, s)| s.ok_or_else(|| anyhow!("missing parameter({i})")))
+        .collect::<Result<Vec<usize>>>()?;
+    let mut last_use: Vec<usize> = (0..instrs.len()).collect();
+    for (j, ins) in instrs.iter().enumerate() {
+        for &s in &ins.operands {
+            last_use[s] = last_use[s].max(j);
+        }
+    }
+    last_use[root] = instrs.len();
+    Ok(Computation {
+        name: rc.name.to_string(),
+        params,
+        instrs,
+        root,
+        last_use,
+    })
+}
+
+fn lower_op(ri: &RawInstr<'_>, comp_ids: &HashMap<&str, usize>) -> Result<Op> {
+    let a = AttrView { attrs: &ri.attrs };
+    let op = match ri.opcode {
+        "parameter" => {
+            let w = ri
+                .operands
+                .first()
+                .ok_or_else(|| anyhow!("parameter without ordinal"))?;
+            Op::Parameter(w.parse::<usize>().map_err(|_| anyhow!("bad parameter ordinal {w:?}"))?)
+        }
+        "constant" => Op::Constant(Arc::new(parse_literal(&ri.ty, &ri.literal)?)),
+        "broadcast" => Op::Broadcast {
+            dims: a.usize_list("dimensions").unwrap_or_default(),
+        },
+        "iota" => Op::Iota {
+            dim: a.usize_word("iota_dimension")?,
+        },
+        "convert" => Op::Convert,
+        "rsqrt" => Op::Rsqrt,
+        "add" => Op::Binary(BinOp::Add),
+        "subtract" => Op::Binary(BinOp::Subtract),
+        "multiply" => Op::Binary(BinOp::Multiply),
+        "divide" => Op::Binary(BinOp::Divide),
+        "maximum" => Op::Binary(BinOp::Maximum),
+        "minimum" => Op::Binary(BinOp::Minimum),
+        "and" => Op::Binary(BinOp::And),
+        "or" => Op::Binary(BinOp::Or),
+        "compare" => Op::Compare(match a.word("direction")? {
+            "EQ" => Dir::Eq,
+            "NE" => Dir::Ne,
+            "LT" => Dir::Lt,
+            "LE" => Dir::Le,
+            "GT" => Dir::Gt,
+            "GE" => Dir::Ge,
+            other => bail!("unknown compare direction {other:?}"),
+        }),
+        "select" => Op::Select,
+        "reshape" => Op::Reshape,
+        "transpose" => Op::Transpose {
+            perm: a.usize_list("dimensions")?,
+        },
+        "slice" => {
+            let toks = a.toks("slice")?;
+            let (starts, limits, strides) = parse_slice_spec(toks)?;
+            Op::Slice { starts, limits, strides }
+        }
+        "pad" => {
+            let spec = a.word("padding")?;
+            let mut lo = Vec::new();
+            let mut hi = Vec::new();
+            let mut interior = Vec::new();
+            for dim in spec.split('x') {
+                let parts: Vec<&str> = dim.split('_').collect();
+                if parts.len() != 2 && parts.len() != 3 {
+                    bail!("bad padding spec {spec:?}");
+                }
+                lo.push(parse_i64(parts[0])?);
+                hi.push(parse_i64(parts[1])?);
+                interior.push(if parts.len() == 3 {
+                    parts[2].parse::<usize>().map_err(|_| anyhow!("bad padding spec {spec:?}"))?
+                } else {
+                    0
+                });
+            }
+            Op::Pad { lo, hi, interior }
+        }
+        "concatenate" => Op::Concatenate {
+            dim: a.single_usize("dimensions")?,
+        },
+        "dynamic-slice" => Op::DynamicSlice {
+            sizes: a.usize_list("dynamic_slice_sizes")?,
+        },
+        "dynamic-update-slice" => Op::DynamicUpdateSlice,
+        "get-tuple-element" => Op::GetTupleElement {
+            index: a.usize_word("index")?,
+        },
+        "tuple" => Op::Tuple,
+        "call" => Op::Call {
+            comp: a.comp("to_apply", comp_ids)?,
+        },
+        "while" => Op::While {
+            cond: a.comp("condition", comp_ids)?,
+            body: a.comp("body", comp_ids)?,
+        },
+        "reduce" => Op::Reduce {
+            dims: a.usize_list("dimensions")?,
+            comp: a.comp("to_apply", comp_ids)?,
+        },
+        "sort" => Op::Sort {
+            dim: a.single_usize("dimensions")?,
+            comp: a.comp("to_apply", comp_ids)?,
+        },
+        "gather" => Op::Gather(Box::new(GatherDims {
+            offset_dims: a.usize_list("offset_dims").unwrap_or_default(),
+            collapsed_slice_dims: a.usize_list("collapsed_slice_dims").unwrap_or_default(),
+            start_index_map: a.usize_list("start_index_map")?,
+            operand_batching_dims: a.usize_list("operand_batching_dims").unwrap_or_default(),
+            start_indices_batching_dims: a
+                .usize_list("start_indices_batching_dims")
+                .unwrap_or_default(),
+            index_vector_dim: a.usize_word("index_vector_dim")?,
+            slice_sizes: a.usize_list("slice_sizes")?,
+        })),
+        "scatter" => Op::Scatter {
+            dims: Box::new(ScatterDims {
+                update_window_dims: a.usize_list("update_window_dims").unwrap_or_default(),
+                inserted_window_dims: a.usize_list("inserted_window_dims").unwrap_or_default(),
+                scatter_dims_to_operand_dims: a
+                    .usize_list("scatter_dims_to_operand_dims")
+                    .unwrap_or_default(),
+                index_vector_dim: a.usize_word("index_vector_dim")?,
+            }),
+            comp: a.comp("to_apply", comp_ids)?,
+        },
+        "dot" => Op::Dot {
+            lhs_contracting: a.usize_list("lhs_contracting_dims").unwrap_or_default(),
+            rhs_contracting: a.usize_list("rhs_contracting_dims").unwrap_or_default(),
+        },
+        "convolution" => {
+            let labels = a.word("dim_labels")?;
+            if labels != "b01f_01io->b01f" {
+                bail!("unsupported convolution dim_labels {labels:?}");
+            }
+            Op::Convolution(Box::new(parse_window(
+                a.toks("window")?,
+                a.usize_word("feature_group_count").unwrap_or(1),
+            )?))
+        }
+        other => bail!("unsupported HLO opcode {other:?}"),
+    };
+    Ok(op)
+}
+
+fn parse_i64(w: &str) -> Result<i64> {
+    w.parse::<i64>().map_err(|_| anyhow!("bad integer {w:?}"))
+}
+
+/// `slice={[0:784], [0:16:2]}` -> per-dim starts / limits / strides.
+fn parse_slice_spec(toks: &[Tok<'_>]) -> Result<(Vec<usize>, Vec<usize>, Vec<usize>)> {
+    let mut starts = Vec::new();
+    let mut limits = Vec::new();
+    let mut strides = Vec::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        match toks[i] {
+            Tok::Comma => i += 1,
+            Tok::LBracket => {
+                let mut nums = Vec::new();
+                i += 1;
+                while i < toks.len() && toks[i] != Tok::RBracket {
+                    if let Tok::Word(w) = toks[i] {
+                        nums.push(
+                            w.parse::<usize>()
+                                .map_err(|_| anyhow!("bad slice bound {w:?}"))?,
+                        );
+                    }
+                    i += 1;
+                }
+                if i == toks.len() {
+                    bail!("unterminated slice bracket");
+                }
+                i += 1; // closing bracket
+                if nums.len() != 2 && nums.len() != 3 {
+                    bail!("bad slice spec: {nums:?}");
+                }
+                starts.push(nums[0]);
+                limits.push(nums[1]);
+                strides.push(if nums.len() == 3 { nums[2] } else { 1 });
+            }
+            other => bail!("unexpected token {other:?} in slice spec"),
+        }
+    }
+    Ok((starts, limits, strides))
+}
+
+/// `window={size=3x3 stride=2x2 pad=1_1x1_1}` -> [`ConvDims`].
+fn parse_window(toks: &[Tok<'_>], feature_group_count: usize) -> Result<ConvDims> {
+    let mut size: Vec<usize> = Vec::new();
+    let mut stride: Vec<usize> = Vec::new();
+    let mut pad: Vec<(i64, i64)> = Vec::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        let key = match toks[i] {
+            Tok::Word(w) => w,
+            other => bail!("unexpected token {other:?} in window spec"),
+        };
+        if toks.get(i + 1) != Some(&Tok::Equals) {
+            bail!("window spec: missing '=' after {key:?}");
+        }
+        let val = match toks.get(i + 2) {
+            Some(Tok::Word(w)) => *w,
+            other => bail!("window spec: bad value {other:?} for {key:?}"),
+        };
+        i += 3;
+        match key {
+            "size" => {
+                for part in val.split('x') {
+                    size.push(
+                        part.parse::<usize>()
+                            .map_err(|_| anyhow!("bad window size {val:?}"))?,
+                    );
+                }
+            }
+            "stride" => {
+                for part in val.split('x') {
+                    stride.push(
+                        part.parse::<usize>()
+                            .map_err(|_| anyhow!("bad window stride {val:?}"))?,
+                    );
+                }
+            }
+            "pad" => {
+                for part in val.split('x') {
+                    let lh: Vec<&str> = part.split('_').collect();
+                    if lh.len() != 2 {
+                        bail!("bad window pad {val:?}");
+                    }
+                    pad.push((parse_i64(lh[0])?, parse_i64(lh[1])?));
+                }
+            }
+            // rhs_dilate / lhs_dilate never appear in the artifacts
+            other => bail!("unsupported window field {other:?}"),
+        }
+    }
+    if size.is_empty() {
+        bail!("window spec without size");
+    }
+    let rank = size.len();
+    if stride.is_empty() {
+        stride = vec![1; rank];
+    }
+    if pad.is_empty() {
+        pad = vec![(0, 0); rank];
+    }
+    if stride.len() != rank || pad.len() != rank {
+        bail!("window spec rank mismatch");
+    }
+    Ok(ConvDims {
+        window_size: size,
+        stride,
+        pad_lo: pad.iter().map(|p| p.0).collect(),
+        pad_hi: pad.iter().map(|p| p.1).collect(),
+        feature_group_count,
+    })
+}
+
+/// Constant literal -> [`ArrayVal`]. Nested braces only delimit structure;
+/// the flat word sequence is the row-major element list.
+fn parse_literal(ty: &Type, toks: &[Tok<'_>]) -> Result<ArrayVal> {
+    let (dt, shape) = match ty {
+        Type::Array(dt, shape) => (*dt, shape.clone()),
+        Type::Tuple(_) => bail!("tuple constants are not supported"),
+    };
+    let words: Vec<&str> = toks.iter().filter_map(|t| t.word()).collect();
+    let n: usize = shape.iter().product();
+    if words.len() != n {
+        bail!(
+            "constant literal has {} elements, type wants {n}",
+            words.len()
+        );
+    }
+    let data = match dt {
+        DType::F32 => Data::F32(
+            words
+                .iter()
+                .map(|w| w.parse::<f32>().map_err(|_| anyhow!("bad f32 literal {w:?}")))
+                .collect::<Result<Vec<f32>>>()?,
+        ),
+        DType::S32 => Data::S32(
+            words
+                .iter()
+                .map(|w| w.parse::<i32>().map_err(|_| anyhow!("bad s32 literal {w:?}")))
+                .collect::<Result<Vec<i32>>>()?,
+        ),
+        DType::Pred => Data::Pred(
+            words
+                .iter()
+                .map(|w| match *w {
+                    "true" | "1" => Ok(true),
+                    "false" | "0" => Ok(false),
+                    other => Err(anyhow!("bad pred literal {other:?}")),
+                })
+                .collect::<Result<Vec<bool>>>()?,
+        ),
+    };
+    Ok(ArrayVal { shape, data })
+}
+
+/// Keyed access into a raw attribute list.
+struct AttrView<'a, 'b> {
+    attrs: &'b [(&'a str, AttrVal<'a>)],
+}
+
+impl<'a, 'b> AttrView<'a, 'b> {
+    fn find(&self, key: &str) -> Option<&'b AttrVal<'a>> {
+        self.attrs.iter().find(|(k, _)| *k == key).map(|(_, v)| v)
+    }
+
+    fn word(&self, key: &str) -> Result<&'a str> {
+        match self.find(key) {
+            Some(AttrVal::Word(w)) => Ok(*w),
+            Some(AttrVal::Toks(_)) => Err(anyhow!("attribute {key} is not a word")),
+            None => Err(anyhow!("missing attribute {key}")),
+        }
+    }
+
+    fn toks(&self, key: &str) -> Result<&'b [Tok<'a>]> {
+        match self.find(key) {
+            Some(AttrVal::Toks(t)) => Ok(t),
+            Some(AttrVal::Word(_)) => Err(anyhow!("attribute {key} is not a braced list")),
+            None => Err(anyhow!("missing attribute {key}")),
+        }
+    }
+
+    fn usize_word(&self, key: &str) -> Result<usize> {
+        let w = self.word(key)?;
+        w.parse::<usize>()
+            .map_err(|_| anyhow!("attribute {key}: bad integer {w:?}"))
+    }
+
+    fn usize_list(&self, key: &str) -> Result<Vec<usize>> {
+        let toks = self.toks(key)?;
+        toks.iter()
+            .filter_map(|t| t.word())
+            .map(|w| {
+                w.parse::<usize>()
+                    .map_err(|_| anyhow!("attribute {key}: bad integer {w:?}"))
+            })
+            .collect()
+    }
+
+    fn single_usize(&self, key: &str) -> Result<usize> {
+        let v = self.usize_list(key)?;
+        if v.len() != 1 {
+            bail!("attribute {key}: expected one dimension, got {v:?}");
+        }
+        Ok(v[0])
+    }
+
+    fn comp(&self, key: &str, comp_ids: &HashMap<&str, usize>) -> Result<usize> {
+        let name = self.word(key)?;
+        comp_ids
+            .get(name)
+            .copied()
+            .ok_or_else(|| anyhow!("attribute {key}: unknown computation {name:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const TINY: &str = "HloModule tiny, entry_computation_layout={(f32[2]{0})->(f32[2]{0})}
+
+add_one.1 {
+  Arg_0.2 = f32[2]{0} parameter(0)
+  constant.3 = f32[2]{0} constant({1, 1})
+  ROOT add.4 = f32[2]{0} add(Arg_0.2, constant.3)
+}
+
+ENTRY main.5 {
+  Arg_0.6 = f32[2]{0} parameter(0)
+  call.7 = f32[2]{0} call(Arg_0.6), to_apply=add_one.1
+  ROOT tuple.8 = (f32[2]{0}) tuple(call.7)
+}
+";
+
+    #[test]
+    fn parses_module_structure() {
+        let m = parse(TINY).unwrap();
+        assert_eq!(m.comps.len(), 2);
+        assert_eq!(m.comps[m.entry].name, "main.5");
+        assert_eq!(m.entry_param_types(), vec![Type::Array(DType::F32, vec![2])]);
+        match m.entry_result_type() {
+            Type::Tuple(parts) => assert_eq!(parts.len(), 1),
+            other => panic!("expected tuple result, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn resolves_call_targets_and_operands() {
+        let m = parse(TINY).unwrap();
+        let main = &m.comps[m.entry];
+        match &main.instrs[1].op {
+            Op::Call { comp } => assert_eq!(m.comps[*comp].name, "add_one.1"),
+            other => panic!("expected call, got {other:?}"),
+        }
+        assert_eq!(main.instrs[1].operands, vec![0]);
+        assert_eq!(main.root, 2);
+    }
+
+    #[test]
+    fn rejects_unknown_opcode() {
+        let bad = "HloModule m\nENTRY e.1 {\n  ROOT fft.2 = f32[2]{0} fft(fft.2)\n}\n";
+        // {:#} prints the whole context chain down to the root cause
+        let err = format!("{:#}", parse(bad).unwrap_err());
+        assert!(err.contains("unsupported HLO opcode \"fft\""), "{err}");
+    }
+
+    #[test]
+    fn parses_scalar_special_literals() {
+        let m = parse(
+            "HloModule m\nENTRY e.1 {\n  c.2 = f32[] constant(-inf)\n  \
+             ROOT t.3 = (f32[]) tuple(c.2)\n}\n",
+        )
+        .unwrap();
+        match &m.comps[m.entry].instrs[0].op {
+            Op::Constant(v) => match &v.data {
+                Data::F32(d) => assert_eq!(d[0], f32::NEG_INFINITY),
+                other => panic!("expected f32 data, got {other:?}"),
+            },
+            other => panic!("expected constant, got {other:?}"),
+        }
+    }
+}

@@ -13,10 +13,10 @@
 //! * **Layer 1 (python/compile/kernels)** — Pallas CIM/CAM kernels inside
 //!   those artifacts.
 //!
-//! Python never runs at inference time: [`runtime`] loads the AOT artifacts
-//! via the PJRT C API (currently a stub — see that module's docs), and the
-//! analogue crossbar backend ([`crossbar`] / [`cim`] / [`cam`]) is pure
-//! Rust.
+//! Python never runs at inference time: [`runtime`] executes the AOT
+//! artifacts on the native HLO-text interpreter ([`hlo`] — pure Rust, no
+//! XLA linked in), and the analogue crossbar backend ([`crossbar`] /
+//! [`cim`] / [`cam`]) is pure Rust as well.
 //!
 //! # Where to start
 //!
@@ -40,6 +40,7 @@ pub mod coordinator;
 pub mod runtime;
 pub mod data;
 pub mod energy;
+pub mod hlo;
 pub mod opt;
 pub mod tsne;
 pub mod model;

@@ -9,8 +9,9 @@
 //! ```
 //!
 //! `native` (the crossbar simulation) is the default backend for `infer`
-//! and `serve`; `xla` requires the PJRT runtime, which is a stub in this
-//! build (see `memdyn::runtime`).
+//! and `serve`; `xla` executes the AOT HLO artifacts on the native HLO
+//! interpreter (see `memdyn::runtime` / `memdyn::hlo`) and needs
+//! `make artifacts` to have run.
 
 use std::time::Duration;
 
@@ -143,8 +144,8 @@ fn cmd_tune(args: &Args) -> Result<()> {
 fn cmd_infer(args: &Args) -> Result<()> {
     let dir = artifacts_dir(args.get("artifacts"));
     let index = args.get_usize("index", 0);
-    // native is the default: the XLA backend needs the PJRT runtime, which
-    // is a stub in this build (see memdyn::runtime module docs)
+    // native (the analogue crossbar simulation) is the default; xla runs
+    // the same samples on the digital HLO-interpreter path
     let backend = args.get_or("backend", "native");
     let bundle = ModelBundle::load(&dir, "resnet")?;
     let dataset = DatasetBundle::load(&dir, "mnist")?;
@@ -198,8 +199,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let wait_ms = args.get_usize("wait-ms", 2);
     // engine fan-out per batch (0 = all cores; MEMDYN_THREADS also applies)
     let threads = args.get_usize("threads", 0);
-    // native is the default: the XLA backend needs the PJRT runtime, which
-    // is a stub in this build (see memdyn::runtime module docs)
+    // native is the default serving backend; xla serves the digital
+    // HLO-interpreter path (--threads caps its bucket-chunk fan-out,
+    // 0 = all cores; MEMDYN_THREADS also applies)
     let backend = args.get_or("backend", "native");
     // Substrate variant for the native backend.  Serving defaults to the
     // digital ternary variant (throughput); pass --variant mem for the full
@@ -233,7 +235,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             move || {
                 let bundle = ModelBundle::load(&dir2, "resnet")?;
                 let rt = Runtime::cpu()?;
-                let model = XlaResNetModel::load(&rt, &bundle)?;
+                let model = XlaResNetModel::load(&rt, &bundle)?.with_threads(threads);
                 let memory = ExitMemory::build(
                     &bundle,
                     CenterSource::TernaryQ,

@@ -1,30 +1,34 @@
-//! PJRT runtime facade: the layer that loads the AOT HLO-text artifacts
-//! (exported by `python/compile/aot.py`) and executes them on an XLA PJRT
-//! client.  This is the only place the process would touch XLA; everything
-//! above works with plain `Vec<f32>` tensors.
+//! Artifact runtime: loads the AOT HLO-text artifacts (exported by
+//! `python/compile/aot.py`) and executes them on the native HLO
+//! interpreter ([`crate::hlo`]). This is the layer that used to front an
+//! XLA PJRT client; everything above it works with plain `Vec<f32>`
+//! tensors and is unchanged.
 //!
-//! # Current status: stub
+//! # Current status: native interpreter (no XLA linked in)
 //!
-//! This build has **no XLA backend linked in** — the `xla` crate is not
-//! vendored in the build environment, so [`Runtime::cpu`] returns an error
-//! and the XLA execution paths ([`XlaResNetModel`], [`XlaPointNetModel`],
-//! the `--backend xla` CLI flag) are unavailable at runtime.  The API
-//! surface is kept intact so that:
+//! `xla_extension` cannot be vendored in this build environment, so
+//! instead of the PJRT C API the runtime parses each `.hlo.txt` artifact
+//! once (cached per path) and evaluates it in-process:
 //!
-//! * every caller (coordinator, examples, integration tests) compiles and
-//!   type-checks against the real interface;
-//! * artifact-dependent tests skip with a message instead of failing;
-//! * restoring the backend is a drop-in change inside this module only
-//!   (see ROADMAP.md, "PJRT runtime" open item).
+//! * [`Runtime::cpu`] constructs a working runtime — the XLA execution
+//!   paths ([`XlaResNetModel`], [`XlaPointNetModel`], `--backend xla`)
+//!   are live again;
+//! * [`Runtime::load`] parses + validates an artifact and caches one
+//!   [`Executable`] per path, preserving the original caching contract;
+//! * [`Executable::run`] validates input shapes against the entry
+//!   computation's declared parameter types, evaluates, and returns each
+//!   tuple element as a flat `Vec<f32>`.
 //!
-//! The native crossbar backend (`crate::nn` + `crate::cim`) is pure Rust
-//! and fully functional; it is what `memdyn infer --backend native` and the
-//! figure harness use.
+//! Execution is deterministic and `Executable` is `Sync`, so callers may
+//! fan concurrent `run` calls across threads; the coordinator's XLA
+//! models split bucket-padded batches across `util::pool` (see
+//! `coordinator::dynmodel`).
 //!
-//! Interchange with the artifacts is HLO *text* — jax >= 0.5 serializes
-//! protos with 64-bit instruction ids that older xla_extension builds
-//! reject, so the export pipeline writes text and the runtime re-parses it
-//! (see python/compile/aot.py).
+//! Interchange stays HLO *text* — jax >= 0.5 serializes protos with
+//! 64-bit instruction ids that older xla_extension builds reject, so the
+//! export pipeline writes text and the runtime re-parses it (see
+//! python/compile/aot.py). Swapping a real PJRT client back in would
+//! again be contained to this module.
 //!
 //! [`XlaResNetModel`]: crate::coordinator::dynmodel::XlaResNetModel
 //! [`XlaPointNetModel`]: crate::coordinator::dynmodel::XlaPointNetModel
@@ -33,34 +37,28 @@ use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
-/// Message used by every entry point of the stub so callers (and test skip
-/// paths) can recognize the condition.
-pub const UNAVAILABLE: &str = "PJRT runtime unavailable: memdyn was built without an XLA backend \
-     (the `xla` crate is not vendored in this environment); use the native \
-     crossbar backend instead, or see ROADMAP.md \"PJRT runtime\"";
+use crate::hlo::{self, ArrayVal, Data, DType, Interpreter, Type, Value};
 
-/// Shared PJRT client + executable cache.
-///
-/// In the stub build [`Runtime::cpu`] always fails, so no `Runtime` value
-/// can be observed; the cache plumbing is kept so the caching contract
-/// (`load` returns one [`Executable`] per path) survives the backend swap.
+/// Shared interpreter runtime + executable cache.
 pub struct Runtime {
     cache: Mutex<HashMap<PathBuf, Arc<Executable>>>,
 }
 
-/// One compiled artifact.
+/// One compiled (parsed + validated) artifact.
 ///
-/// `#[non_exhaustive]` keeps external construction impossible, exactly as
-/// when the real backend's private executable handle lives here — so
-/// restoring the backend stays a drop-in change confined to this module.
-#[non_exhaustive]
+/// Construction happens only through [`Runtime::load`], exactly as when a
+/// backend-private executable handle lived here — so swapping the
+/// execution engine stays a drop-in change confined to this module.
 pub struct Executable {
-    /// Path of the HLO-text artifact this executable was compiled from.
+    /// Path of the HLO-text artifact this executable was parsed from.
     pub path: PathBuf,
-    /// Output element counts are validated lazily on first run.
+    /// Number of entry-result tuple elements.
     pub n_outputs: usize,
+    interp: Interpreter,
+    /// Declared dims of each entry parameter (all f32 in the artifacts).
+    param_dims: Vec<Vec<usize>>,
 }
 
 /// A borrowed input tensor (f32, row-major).
@@ -70,19 +68,24 @@ pub struct TensorIn<'a> {
 }
 
 impl Runtime {
-    /// Create the CPU PJRT client.
-    ///
-    /// Stub build: always returns an error (see the module docs).
+    /// Create the CPU runtime backed by the native HLO interpreter.
     pub fn cpu() -> Result<Self> {
-        Err(anyhow!(UNAVAILABLE))
+        Ok(Runtime {
+            cache: Mutex::new(HashMap::new()),
+        })
     }
 
-    /// Load + compile an HLO-text artifact (cached by path).
+    /// Load + parse an HLO-text artifact (cached by path).
     pub fn load(&self, path: &Path) -> Result<Arc<Executable>> {
         if let Some(e) = self.cache.lock().unwrap().get(path) {
             return Ok(e.clone());
         }
-        Err(anyhow!("{UNAVAILABLE} (while loading {path:?})"))
+        let exe = Arc::new(Executable::parse_file(path)?);
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(path.to_path_buf(), exe.clone());
+        Ok(exe)
     }
 
     /// Number of executables currently cached.
@@ -92,13 +95,52 @@ impl Runtime {
 }
 
 impl Executable {
+    fn parse_file(path: &Path) -> Result<Executable> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading HLO artifact {path:?}"))?;
+        Executable::parse_text(&text, path.to_path_buf())
+    }
+
+    /// Parse HLO text into a runnable executable (exposed for tests and
+    /// tools that synthesize modules without touching disk).
+    pub fn parse_text(text: &str, path: PathBuf) -> Result<Executable> {
+        let module = hlo::parse(text).with_context(|| format!("parsing {path:?}"))?;
+        let mut param_dims = Vec::new();
+        for (i, ty) in module.entry_param_types().iter().enumerate() {
+            match ty {
+                Type::Array(DType::F32, dims) => param_dims.push(dims.clone()),
+                other => bail!("{path:?}: entry parameter {i} has unsupported type {other:?}"),
+            }
+        }
+        let n_outputs = match module.entry_result_type() {
+            Type::Tuple(parts) => parts.len(),
+            Type::Array(..) => 1,
+        };
+        Ok(Executable {
+            path,
+            n_outputs,
+            interp: Interpreter::new(module),
+            param_dims,
+        })
+    }
+
     /// Execute with f32 inputs; returns each tuple element as a flat Vec.
     ///
-    /// All artifacts are lowered with `return_tuple=True`, so the single
-    /// result literal is a tuple even for one output.  The stub validates
-    /// input shapes (so shape bugs surface in tests) and then errors.
+    /// All artifacts are lowered with `return_tuple=True`, so the result
+    /// is a tuple even for one output (a bare array result is accepted
+    /// for hand-written modules). Input shapes are validated against the
+    /// entry computation's declared parameter types.
     pub fn run(&self, inputs: &[TensorIn<'_>]) -> Result<Vec<Vec<f32>>> {
-        for t in inputs {
+        if inputs.len() != self.param_dims.len() {
+            return Err(anyhow!(
+                "{:?}: {} inputs, entry wants {}",
+                self.path,
+                inputs.len(),
+                self.param_dims.len()
+            ));
+        }
+        let mut args = Vec::with_capacity(inputs.len());
+        for (i, t) in inputs.iter().enumerate() {
             let expect: usize = t.shape.iter().product();
             if expect != t.data.len() {
                 return Err(anyhow!(
@@ -108,8 +150,38 @@ impl Executable {
                     t.shape
                 ));
             }
+            if t.shape != self.param_dims[i].as_slice() {
+                return Err(anyhow!(
+                    "{:?}: input {i} shape {:?} != declared {:?}",
+                    self.path,
+                    t.shape,
+                    self.param_dims[i]
+                ));
+            }
+            args.push(Value::arr(ArrayVal {
+                shape: t.shape.to_vec(),
+                data: Data::F32(t.data.to_vec()),
+            }));
         }
-        Err(anyhow!("{UNAVAILABLE} (while executing {:?})", self.path))
+        let out = self
+            .interp
+            .run_entry(&args)
+            .with_context(|| format!("executing {:?}", self.path))?;
+        let parts: Vec<&Value> = match &out {
+            Value::Tuple(t) => t.iter().collect(),
+            v @ Value::Arr(_) => vec![v],
+        };
+        parts
+            .into_iter()
+            .map(|p| {
+                let a = p.as_arr()?;
+                Ok(match &a.data {
+                    Data::F32(v) => v.clone(),
+                    Data::S32(v) => v.iter().map(|&x| x as f32).collect(),
+                    Data::Pred(v) => v.iter().map(|&x| f32::from(u8::from(x))).collect(),
+                })
+            })
+            .collect()
     }
 }
 
@@ -134,33 +206,74 @@ pub fn run_checked(
 mod tests {
     use super::*;
 
+    /// A tiny matmul-with-constant module in the artifacts' shape
+    /// (tuple result, layout suffixes, computation call).
+    const MATMUL: &str = "HloModule jit_fn, \
+entry_computation_layout={(f32[2,2]{1,0})->(f32[2,2]{1,0})}
+
+mm.1 {
+  Arg_0.2 = f32[2,2]{1,0} parameter(0)
+  Arg_1.3 = f32[2,2]{1,0} parameter(1)
+  ROOT dot.4 = f32[2,2]{1,0} dot(Arg_0.2, Arg_1.3), \
+lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+
+ENTRY main.5 {
+  Arg_0.6 = f32[2,2]{1,0} parameter(0)
+  constant.7 = f32[2,2]{1,0} constant({ { 1, 0 }, { 0, 2 } })
+  call.8 = f32[2,2]{1,0} call(Arg_0.6, constant.7), to_apply=mm.1
+  ROOT tuple.9 = (f32[2,2]{1,0}) tuple(call.8)
+}
+";
+
     #[test]
-    fn stub_runtime_reports_unavailable() {
-        let err = Runtime::cpu().err().expect("stub must not construct");
-        assert!(err.to_string().contains("PJRT runtime unavailable"));
+    fn runtime_constructs_and_executes_inline_module() {
+        let rt = Runtime::cpu().expect("native runtime always constructs");
+        assert_eq!(rt.cached_count(), 0);
+        let exe =
+            Executable::parse_text(MATMUL, PathBuf::from("inline.hlo.txt")).unwrap();
+        assert_eq!(exe.n_outputs, 1);
+        let out = exe
+            .run(&[TensorIn {
+                data: &[1.0, 2.0, 3.0, 4.0],
+                shape: &[2, 2],
+            }])
+            .unwrap();
+        assert_eq!(out, vec![vec![1.0, 4.0, 3.0, 8.0]]);
     }
 
     #[test]
-    fn stub_executable_still_validates_shapes() {
-        let exe = Executable {
-            path: PathBuf::from("fake.hlo.txt"),
-            n_outputs: 1,
-        };
+    fn executable_validates_shapes() {
+        let exe =
+            Executable::parse_text(MATMUL, PathBuf::from("inline.hlo.txt")).unwrap();
         let bad = exe.run(&[TensorIn {
             data: &[1.0, 2.0, 3.0],
             shape: &[2, 2],
         }]);
         let msg = bad.err().unwrap().to_string();
         assert!(msg.contains("input length 3"), "got: {msg}");
-        // well-shaped input reaches the backend-unavailable error instead
-        let unavailable = exe.run(&[TensorIn {
-            data: &[1.0; 4],
-            shape: &[2, 2],
+        let wrong_shape = exe.run(&[TensorIn {
+            data: &[1.0; 6],
+            shape: &[2, 3],
         }]);
-        assert!(unavailable
-            .err()
-            .unwrap()
-            .to_string()
-            .contains("PJRT runtime unavailable"));
+        let msg = wrong_shape.err().unwrap().to_string();
+        assert!(msg.contains("declared"), "got: {msg}");
+    }
+
+    #[test]
+    fn run_checked_enforces_output_arity() {
+        let exe =
+            Executable::parse_text(MATMUL, PathBuf::from("inline.hlo.txt")).unwrap();
+        let err = run_checked(
+            &exe,
+            &[TensorIn {
+                data: &[0.0; 4],
+                shape: &[2, 2],
+            }],
+            3,
+        )
+        .err()
+        .unwrap();
+        assert!(err.to_string().contains("expected 3"));
     }
 }

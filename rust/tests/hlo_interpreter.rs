@@ -1,0 +1,628 @@
+//! Conformance suite for the native HLO-text interpreter (`memdyn::hlo`).
+//!
+//! Three layers:
+//!
+//! 1. **Per-op unit tests** — one tiny hand-written HLO-text module per
+//!    opcode family, no artifacts needed, so `cargo test` exercises the
+//!    full op set on a fresh checkout.
+//! 2. **Artifact census** (needs `make artifacts`) — every shipped
+//!    `.hlo.txt` parses, and the set of opcodes they use is *exactly*
+//!    [`memdyn::hlo::SUPPORTED_OPS`], so a regenerated artifact with a
+//!    new opcode fails loudly instead of miscomputing.
+//! 3. **Parity** (needs `make artifacts`) — the `--backend xla`
+//!    interpreter path reproduces the native digital-path forward within
+//!    1e-4 (relative) on the bundled MNIST samples, and is bucket-padding
+//!    consistent on the bundled ModelNet samples.
+
+use std::collections::BTreeSet;
+use std::path::PathBuf;
+
+use memdyn::coordinator::dynmodel::{DynModel, XlaPointNetModel, XlaResNetModel};
+use memdyn::hlo::{ArrayVal, Data, Interpreter, parse, SUPPORTED_OPS, Value};
+use memdyn::model::{DatasetBundle, ModelBundle};
+use memdyn::nn::resnet::WeightSource;
+use memdyn::nn::{NativeResNet, NoiseSpec};
+use memdyn::runtime::Runtime;
+use memdyn::util::rng::{Pcg64, StreamKey};
+
+// ---------------------------------------------------------------------------
+// helpers
+// ---------------------------------------------------------------------------
+
+fn vf32(shape: &[usize], data: Vec<f32>) -> Value {
+    Value::arr(ArrayVal {
+        shape: shape.to_vec(),
+        data: Data::F32(data),
+    })
+}
+
+fn vs32(shape: &[usize], data: Vec<i32>) -> Value {
+    Value::arr(ArrayVal {
+        shape: shape.to_vec(),
+        data: Data::S32(data),
+    })
+}
+
+fn run(text: &str, inputs: &[Value]) -> Value {
+    let m = parse(text).expect("module should parse");
+    Interpreter::new(m).run_entry(inputs).expect("module should evaluate")
+}
+
+fn out_f32(v: &Value) -> Vec<f32> {
+    match &v.as_arr().expect("array result").data {
+        Data::F32(d) => d.clone(),
+        other => panic!("expected f32 result, got {other:?}"),
+    }
+}
+
+fn out_s32(v: &Value) -> Vec<i32> {
+    match &v.as_arr().expect("array result").data {
+        Data::S32(d) => d.clone(),
+        other => panic!("expected s32 result, got {other:?}"),
+    }
+}
+
+fn artifacts() -> Option<PathBuf> {
+    let p = memdyn::model::artifacts_dir(None);
+    if p.join("index.json").exists() {
+        Some(p)
+    } else {
+        eprintln!("SKIP: no artifacts at {p:?} (run `make artifacts`)");
+        None
+    }
+}
+
+// ---------------------------------------------------------------------------
+// per-op unit tests (no artifacts needed)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn elementwise_arithmetic_family() {
+    let text = "HloModule arith
+ENTRY main.1 {
+  a.2 = f32[4] parameter(0)
+  b.3 = f32[4] parameter(1)
+  add.4 = f32[4] add(a.2, b.3)
+  sub.5 = f32[4] subtract(a.2, b.3)
+  mul.6 = f32[4] multiply(add.4, sub.5)
+  div.7 = f32[4] divide(mul.6, b.3)
+  max.8 = f32[4] maximum(div.7, a.2)
+  min.9 = f32[4] minimum(max.8, b.3)
+  ROOT rs.10 = f32[4] rsqrt(min.9)
+}
+";
+    let a = [1.0f32, 2.0, 3.0, 4.0];
+    let b = [4.0f32, 3.0, 2.0, 1.0];
+    let got = out_f32(&run(
+        text,
+        &[vf32(&[4], a.to_vec()), vf32(&[4], b.to_vec())],
+    ));
+    for i in 0..4 {
+        let want = 1.0
+            / ((a[i] + b[i]) * (a[i] - b[i]) / b[i])
+                .max(a[i])
+                .min(b[i])
+                .sqrt();
+        assert!(
+            (got[i] - want).abs() < 1e-6 || (got[i].is_nan() && want.is_nan()),
+            "lane {i}: {} vs {want}",
+            got[i]
+        );
+    }
+}
+
+#[test]
+fn maximum_propagates_nan() {
+    let text = "HloModule m
+ENTRY main.1 {
+  a.2 = f32[2] parameter(0)
+  n.3 = f32[] constant(nan)
+  b.4 = f32[2] broadcast(n.3), dimensions={}
+  ROOT m.5 = f32[2] maximum(a.2, b.4)
+}
+";
+    let got = out_f32(&run(text, &[vf32(&[2], vec![1.0, -1.0])]));
+    assert!(got.iter().all(|v| v.is_nan()), "{got:?}");
+}
+
+#[test]
+fn compare_select_and_logic_family() {
+    let text = "HloModule c
+ENTRY main.1 {
+  a.2 = f32[4] parameter(0)
+  b.3 = f32[4] parameter(1)
+  lt.4 = pred[4] compare(a.2, b.3), direction=LT
+  ge.5 = pred[4] compare(a.2, b.3), direction=GE
+  or.6 = pred[4] or(lt.4, ge.5)
+  and.7 = pred[4] and(lt.4, ge.5)
+  sel.8 = f32[4] select(lt.4, a.2, b.3)
+  z.9 = f32[] constant(0)
+  zb.10 = f32[4] broadcast(z.9), dimensions={}
+  o.11 = f32[] constant(1)
+  ob.12 = f32[4] broadcast(o.11), dimensions={}
+  both.13 = f32[4] select(and.7, ob.12, zb.10)
+  either.14 = f32[4] select(or.6, ob.12, zb.10)
+  s.15 = f32[4] add(sel.8, both.13)
+  ROOT t.16 = f32[4] add(s.15, either.14)
+}
+";
+    // sel = min(a,b); and = false; or = true (total order lanes)
+    let got = out_f32(&run(
+        text,
+        &[
+            vf32(&[4], vec![1.0, 5.0, 2.0, 2.0]),
+            vf32(&[4], vec![3.0, 1.0, 2.0, 7.0]),
+        ],
+    ));
+    assert_eq!(got, vec![2.0, 2.0, 3.0, 3.0]);
+}
+
+#[test]
+fn s32_arithmetic_and_convert_family() {
+    let text = "HloModule s
+ENTRY main.1 {
+  a.2 = s32[3] parameter(0)
+  c.3 = s32[] constant(3)
+  cb.4 = s32[3] broadcast(c.3), dimensions={}
+  m.5 = s32[3] multiply(a.2, cb.4)
+  f.6 = f32[3] convert(m.5)
+  h.7 = f32[] constant(0.5)
+  hb.8 = f32[3] broadcast(h.7), dimensions={}
+  g.9 = f32[3] multiply(f.6, hb.8)
+  ROOT r.10 = s32[3] convert(g.9)
+}
+";
+    // x*3*0.5 truncated toward zero: 1->1, -3->-4.5->-4, 5->7.5->7
+    let got = out_s32(&run(text, &[vs32(&[3], vec![1, -3, 5])]));
+    assert_eq!(got, vec![1, -4, 7]);
+}
+
+#[test]
+fn broadcast_iota_reshape_transpose_family() {
+    let text = "HloModule b
+ENTRY main.1 {
+  i.2 = s32[6] iota(), iota_dimension=0
+  r.3 = s32[2,3] reshape(i.2)
+  t.4 = s32[3,2] transpose(r.3), dimensions={1,0}
+  row.5 = s32[2] parameter(0)
+  b.6 = s32[3,2] broadcast(row.5), dimensions={1}
+  ROOT s.7 = s32[3,2] add(t.4, b.6)
+}
+";
+    // iota 0..6 as [[0,1,2],[3,4,5]]; transpose -> [[0,3],[1,4],[2,5]];
+    // +[10,20] per row
+    let got = out_s32(&run(text, &[vs32(&[2], vec![10, 20])]));
+    assert_eq!(got, vec![10, 23, 11, 24, 12, 25]);
+}
+
+#[test]
+fn slice_pad_concatenate_family() {
+    let text = "HloModule s
+ENTRY main.1 {
+  x.2 = f32[2,4] parameter(0)
+  s.3 = f32[2,2] slice(x.2), slice={[0:2], [0:4:2]}
+  z.4 = f32[] constant(9)
+  p.5 = f32[2,3] pad(s.3, z.4), padding=0_0x0_1
+  ROOT c.6 = f32[2,5] concatenate(p.5, s.3), dimensions={1}
+}
+";
+    let got = out_f32(&run(
+        text,
+        &[vf32(&[2, 4], vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0])],
+    ));
+    // strided slice cols {0,2}: [[0,2],[4,6]]; pad col 9 on the right;
+    // concat the slice again
+    assert_eq!(
+        got,
+        vec![0.0, 2.0, 9.0, 0.0, 2.0, 4.0, 6.0, 9.0, 4.0, 6.0]
+    );
+}
+
+#[test]
+fn pad_interior_family() {
+    let text = "HloModule p
+ENTRY main.1 {
+  x.2 = f32[3] parameter(0)
+  z.3 = f32[] constant(0)
+  ROOT p.4 = f32[6] pad(x.2, z.3), padding=1_0_1
+}
+";
+    let got = out_f32(&run(text, &[vf32(&[3], vec![1.0, 2.0, 3.0])]));
+    assert_eq!(got, vec![0.0, 1.0, 0.0, 2.0, 0.0, 3.0]);
+}
+
+#[test]
+fn dynamic_slice_and_update_family() {
+    let text = "HloModule d
+ENTRY main.1 {
+  x.2 = f32[2,4] parameter(0)
+  u.3 = f32[2,2] parameter(1)
+  zero.4 = s32[] constant(0)
+  two.5 = s32[] constant(2)
+  upd.6 = f32[2,4] dynamic-update-slice(x.2, u.3, zero.4, two.5)
+  big.7 = s32[] constant(99)
+  ROOT ds.8 = f32[2,2] dynamic-slice(upd.6, zero.4, big.7), dynamic_slice_sizes={2,2}
+}
+";
+    let got = out_f32(&run(
+        text,
+        &[
+            vf32(&[2, 4], vec![0.0; 8]),
+            vf32(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]),
+        ],
+    ));
+    // update written at col 2; the out-of-range start 99 clamps to col 2
+    assert_eq!(got, vec![1.0, 2.0, 3.0, 4.0]);
+}
+
+#[test]
+fn reduce_variadic_argmax_family() {
+    // the artifacts' argmax idiom: a two-operand reduce over (value, index)
+    let text = "HloModule a
+region.1 {
+  a0.2 = f32[] parameter(0)
+  a1.3 = s32[] parameter(1)
+  b0.4 = f32[] parameter(2)
+  b1.5 = s32[] parameter(3)
+  gt.6 = pred[] compare(a0.2, b0.4), direction=GT
+  v.7 = f32[] select(gt.6, a0.2, b0.4)
+  eq.8 = pred[] compare(a0.2, b0.4), direction=EQ
+  lt.9 = pred[] compare(a1.3, b1.5), direction=LT
+  tie.10 = pred[] and(eq.8, lt.9)
+  keep.11 = pred[] or(gt.6, tie.10)
+  i.12 = s32[] select(keep.11, a1.3, b1.5)
+  ROOT t.13 = (f32[], s32[]) tuple(v.7, i.12)
+}
+ENTRY main.14 {
+  x.15 = f32[2,4] parameter(0)
+  iota.16 = s32[4] iota(), iota_dimension=0
+  idx.17 = s32[2,4] broadcast(iota.16), dimensions={1}
+  ninf.18 = f32[] constant(-inf)
+  zero.19 = s32[] constant(0)
+  r.20 = (f32[2], s32[2]) reduce(x.15, idx.17, ninf.18, zero.19), dimensions={1}, to_apply=region.1
+  ROOT am.21 = s32[2] get-tuple-element(r.20), index=1
+}
+";
+    let got = out_s32(&run(
+        text,
+        &[vf32(&[2, 4], vec![0.1, 0.9, 0.9, 0.2, 7.0, -1.0, 2.0, 7.0])],
+    ));
+    // ties resolve to the smallest index
+    assert_eq!(got, vec![1, 0]);
+}
+
+#[test]
+fn sort_two_operands_stable_family() {
+    let text = "HloModule s
+cmp.1 {
+  a0.2 = f32[] parameter(0)
+  b0.3 = f32[] parameter(1)
+  a1.4 = s32[] parameter(2)
+  b1.5 = s32[] parameter(3)
+  ROOT lt.6 = pred[] compare(a0.2, b0.3), direction=LT
+}
+ENTRY main.7 {
+  k.8 = f32[2,4] parameter(0)
+  i.9 = s32[4] iota(), iota_dimension=0
+  ib.10 = s32[2,4] broadcast(i.9), dimensions={1}
+  s.11 = (f32[2,4], s32[2,4]) sort(k.8, ib.10), dimensions={1}, is_stable=true, to_apply=cmp.1
+  ROOT p.12 = s32[2,4] get-tuple-element(s.11), index=1
+}
+";
+    let got = out_s32(&run(
+        text,
+        &[vf32(&[2, 4], vec![3.0, 1.0, 2.0, 1.0, 0.0, 0.0, -1.0, 5.0])],
+    ));
+    // row 0: keys [3,1,2,1] -> indices [1,3,2,0] (equal keys keep order);
+    // row 1: keys [0,0,-1,5] -> [2,0,1,3]
+    assert_eq!(got, vec![1, 3, 2, 0, 2, 0, 1, 3]);
+}
+
+#[test]
+fn gather_simple_family() {
+    // artifact idiom gather.84: pick one element per index vector
+    let text = "HloModule g
+ENTRY main.1 {
+  x.2 = s32[1,4] parameter(0)
+  i.3 = s32[1] parameter(1)
+  ROOT g.4 = s32[1,1] gather(x.2, i.3), offset_dims={0,1}, collapsed_slice_dims={}, start_index_map={1}, index_vector_dim=0, slice_sizes={1,1}, indices_are_sorted=true
+}
+";
+    let got = out_s32(&run(
+        text,
+        &[vs32(&[1, 4], vec![10, 11, 12, 13]), vs32(&[1], vec![2])],
+    ));
+    assert_eq!(got, vec![12]);
+}
+
+#[test]
+fn gather_with_batching_dims_family() {
+    // artifact idiom gather.214: per-(batch,row) element lookup through
+    // operand/start-indices batching dims
+    let text = "HloModule g
+ENTRY main.1 {
+  x.2 = f32[1,2,3] parameter(0)
+  i.3 = s32[1,2,2] parameter(1)
+  ROOT g.4 = f32[1,2,2] gather(x.2, i.3), offset_dims={}, collapsed_slice_dims={2}, start_index_map={2}, operand_batching_dims={0,1}, start_indices_batching_dims={0,1}, index_vector_dim=3, slice_sizes={1,1,1}
+}
+";
+    let got = out_f32(&run(
+        text,
+        &[
+            vf32(&[1, 2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]),
+            vs32(&[1, 2, 2], vec![2, 0, 1, 1]),
+        ],
+    ));
+    // row 0 picks cols {2,0}; row 1 picks cols {1,1}
+    assert_eq!(got, vec![3.0, 1.0, 5.0, 5.0]);
+}
+
+#[test]
+fn scatter_overwrite_family() {
+    // artifact idiom scatter.104: mark visited indices (overwrite region)
+    let text = "HloModule s
+over.1 {
+  old.2 = s32[] parameter(0)
+  ROOT new.3 = s32[] parameter(1)
+}
+ENTRY main.4 {
+  x.5 = s32[1,4] parameter(0)
+  i.6 = s32[1] parameter(1)
+  u.7 = s32[1] parameter(2)
+  ROOT s.8 = s32[1,4] scatter(x.5, i.6, u.7), update_window_dims={0}, inserted_window_dims={1}, scatter_dims_to_operand_dims={1}, index_vector_dim=0, indices_are_sorted=true, unique_indices=true, to_apply=over.1
+}
+";
+    let got = out_s32(&run(
+        text,
+        &[
+            vs32(&[1, 4], vec![0, 0, 0, 0]),
+            vs32(&[1], vec![2]),
+            vs32(&[1], vec![7]),
+        ],
+    ));
+    assert_eq!(got, vec![0, 0, 7, 0]);
+}
+
+#[test]
+fn dot_matmul_family() {
+    let text = "HloModule d
+ENTRY main.1 {
+  a.2 = f32[2,3] parameter(0)
+  b.3 = f32[3,2] parameter(1)
+  ROOT d.4 = f32[2,2] dot(a.2, b.3), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+";
+    let got = out_f32(&run(
+        text,
+        &[
+            vf32(&[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]),
+            vf32(&[3, 2], vec![1.0, 0.0, 0.0, 1.0, 1.0, 1.0]),
+        ],
+    ));
+    assert_eq!(got, vec![4.0, 5.0, 10.0, 11.0]);
+}
+
+/// Reference conv for the test below: NHWC x HWIO with groups.
+#[allow(clippy::too_many_arguments)]
+fn ref_conv(
+    x: &[f32],
+    w: &[f32],
+    (n, h, wi, ci): (usize, usize, usize, usize),
+    (kh, kw, cig, co): (usize, usize, usize, usize),
+    stride: usize,
+    pad: i64,
+    (oh, ow): (usize, usize),
+) -> Vec<f32> {
+    let g = ci / cig;
+    let cog = co / g;
+    let mut out = vec![0f32; n * oh * ow * co];
+    for b in 0..n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for oc in 0..co {
+                    let grp = oc / cog;
+                    let mut acc = 0f32;
+                    for ky in 0..kh {
+                        for kx in 0..kw {
+                            let iy = (oy * stride + ky) as i64 - pad;
+                            let ix = (ox * stride + kx) as i64 - pad;
+                            if iy < 0 || ix < 0 || iy as usize >= h || ix as usize >= wi {
+                                continue;
+                            }
+                            for c in 0..cig {
+                                let xi = ((b * h + iy as usize) * wi + ix as usize) * ci
+                                    + grp * cig
+                                    + c;
+                                let wx = ((ky * kw + kx) * cig + c) * co + oc;
+                                acc += x[xi] * w[wx];
+                            }
+                        }
+                    }
+                    out[((b * oh + oy) * ow + ox) * co + oc] = acc;
+                }
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn convolution_depthwise_family() {
+    let text = "HloModule c
+ENTRY main.1 {
+  x.2 = f32[1,3,3,2] parameter(0)
+  w.3 = f32[3,3,1,2] parameter(1)
+  ROOT c.4 = f32[1,3,3,2] convolution(x.2, w.3), window={size=3x3 pad=1_1x1_1}, dim_labels=b01f_01io->b01f, feature_group_count=2
+}
+";
+    let x: Vec<f32> = (0..18).map(|i| (i as f32 * 0.37).sin()).collect();
+    let w: Vec<f32> = (0..18).map(|i| ((i * 7 % 5) as f32 - 2.0) / 2.0).collect();
+    let got = out_f32(&run(
+        text,
+        &[vf32(&[1, 3, 3, 2], x.clone()), vf32(&[3, 3, 1, 2], w.clone())],
+    ));
+    let want = ref_conv(&x, &w, (1, 3, 3, 2), (3, 3, 1, 2), 1, 1, (3, 3));
+    for (a, b) in got.iter().zip(&want) {
+        assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+    }
+}
+
+#[test]
+fn convolution_strided_downsample_family() {
+    let text = "HloModule c
+ENTRY main.1 {
+  x.2 = f32[1,4,4,2] parameter(0)
+  w.3 = f32[1,1,2,3] parameter(1)
+  ROOT c.4 = f32[1,2,2,3] convolution(x.2, w.3), window={size=1x1 stride=2x2}, dim_labels=b01f_01io->b01f
+}
+";
+    let x: Vec<f32> = (0..32).map(|i| i as f32).collect();
+    let w: Vec<f32> = (0..6).map(|i| (i as f32) - 2.5).collect();
+    let got = out_f32(&run(
+        text,
+        &[vf32(&[1, 4, 4, 2], x.clone()), vf32(&[1, 1, 2, 3], w.clone())],
+    ));
+    let want = ref_conv(&x, &w, (1, 4, 4, 2), (1, 1, 2, 3), 2, 0, (2, 2));
+    for (a, b) in got.iter().zip(&want) {
+        assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+    }
+}
+
+#[test]
+fn constant_array_literals_family() {
+    let text = "HloModule k
+ENTRY main.1 {
+  c.2 = s32[2,2] constant({ {1, -2}, {3, -4} })
+  f.3 = f32[2,2] constant({ { /*i0=0*/ 0.5, 1.5 }, { 2.5, 1e+01 } })
+  g.4 = f32[2,2] convert(c.2)
+  ROOT m.5 = f32[2,2] multiply(g.4, f.3)
+}
+";
+    let got = out_f32(&run(text, &[]));
+    assert_eq!(got, vec![0.5, -3.0, 7.5, -40.0]);
+}
+
+// ---------------------------------------------------------------------------
+// artifact census + end-to-end conformance (need `make artifacts`)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn artifact_census_every_opcode_supported_and_used() {
+    let Some(dir) = artifacts() else { return };
+    let mut used: BTreeSet<String> = BTreeSet::new();
+    let mut files = 0usize;
+    for sub in ["resnet", "pointnet", "kernels"] {
+        let Ok(entries) = std::fs::read_dir(dir.join(sub)) else {
+            continue;
+        };
+        for e in entries.flatten() {
+            let p = e.path();
+            if !p.to_string_lossy().ends_with(".hlo.txt") {
+                continue;
+            }
+            let text = std::fs::read_to_string(&p).unwrap();
+            let module = parse(&text)
+                .unwrap_or_else(|err| panic!("{p:?} failed to parse: {err:#}"));
+            for c in &module.comps {
+                for ins in &c.instrs {
+                    used.insert(ins.op.name().to_string());
+                }
+            }
+            files += 1;
+        }
+    }
+    assert!(files >= 40, "only {files} HLO artifacts found");
+    let supported: BTreeSet<String> =
+        SUPPORTED_OPS.iter().map(|s| s.to_string()).collect();
+    assert_eq!(
+        used, supported,
+        "artifact opcode census diverged from SUPPORTED_OPS"
+    );
+}
+
+#[test]
+fn cim_smoke_kernel_matches_plain_matmul() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt.load(&dir.join("kernels/cim_smoke.hlo.txt")).unwrap();
+    let b = memdyn::util::bin_io::Bundle::load(&dir.join("kernels/cim_smoke")).unwrap();
+    let (wshape, w) = b.f32("w").unwrap();
+    let (k, n) = (wshape[0], wshape[1]);
+    let m = 16usize;
+    let x: Vec<f32> = (0..m * k).map(|i| ((i % 7) as f32 - 3.0) / 3.0).collect();
+    let out = exe
+        .run(&[memdyn::runtime::TensorIn {
+            data: &x,
+            shape: &[m, k],
+        }])
+        .unwrap();
+    let want = memdyn::nn::ops::matmul(&x, &w, m, k, n);
+    assert_eq!(out.len(), 1);
+    for (a, b) in out[0].iter().zip(&want) {
+        assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+    }
+}
+
+/// |a-b| <= tol * max(1, |b|): "within 1e-4" in the relative sense, with
+/// an absolute floor for near-zero entries.
+fn close(a: f32, b: f32, tol: f32) -> bool {
+    (a - b).abs() <= tol * b.abs().max(1.0)
+}
+
+#[test]
+fn xla_resnet_parity_with_native_digital_within_1e4() {
+    let Some(dir) = artifacts() else { return };
+    let bundle = ModelBundle::load(&dir, "resnet").unwrap();
+    let data = DatasetBundle::load(&dir, "mnist").unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let xla = XlaResNetModel::load(&rt, &bundle).unwrap();
+    let mut rng = Pcg64::new(1);
+    let native =
+        NativeResNet::build(&bundle, WeightSource::Ternary, &NoiseSpec::Digital, &mut rng)
+            .unwrap();
+
+    let batch = 3usize;
+    let input = &data.x_test[..batch * data.sample_len];
+    let feat = memdyn::nn::resnet::image_feature(input, batch, 28).unwrap();
+    let keys: Vec<StreamKey> = (0..batch as u64).map(|i| StreamKey::root(1).child(i)).collect();
+    let (nat_logits, nat_svs) = native.forward(&feat, &keys);
+
+    let mut state = xla.init(input, batch, 0).unwrap();
+    let mut xla_svs = Vec::new();
+    for i in 0..xla.n_blocks() {
+        xla_svs.push(xla.step(i, &mut state).unwrap());
+    }
+    let xla_logits = xla.finish(&state).unwrap();
+
+    for (i, (nsv, xsv)) in nat_svs.iter().zip(&xla_svs).enumerate() {
+        assert_eq!(nsv.len(), xsv.len(), "sv length at block {i}");
+        for (a, b) in xsv.iter().zip(nsv) {
+            assert!(close(*a, *b, 1e-4), "block {i}: xla {a} vs native {b}");
+        }
+    }
+    assert_eq!(xla_logits.len(), nat_logits.len());
+    for (a, b) in xla_logits.iter().zip(&nat_logits) {
+        assert!(close(*a, *b, 1e-4), "logits: xla {a} vs native {b}");
+    }
+}
+
+#[test]
+fn xla_pointnet_bucket_padding_consistent_within_1e4() {
+    let Some(dir) = artifacts() else { return };
+    let bundle = ModelBundle::load(&dir, "pointnet").unwrap();
+    let data = DatasetBundle::load(&dir, "modelnet").unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let xla = XlaPointNetModel::load(&rt, &bundle).unwrap();
+    let sl = data.sample_len;
+    // the same cloud must produce the same search vectors at batch 1
+    // (b1 executable) and batch 3 (padded into the b4 executable)
+    let mut s1 = xla.init(&data.x_test[..sl], 1, 0).unwrap();
+    let mut s3 = xla.init(&data.x_test[..3 * sl], 3, 0).unwrap();
+    for i in 0..2 {
+        let sv1 = xla.step(i, &mut s1).unwrap();
+        let sv3 = xla.step(i, &mut s3).unwrap();
+        for (a, b) in sv1.iter().zip(&sv3[..sv1.len()]) {
+            assert!(close(*a, *b, 1e-4), "SA {i}: b1 {a} vs b4 {b}");
+        }
+    }
+}

@@ -1,10 +1,13 @@
-//! Integration tests over the real AOT artifacts: the PJRT runtime, the
-//! XLA-vs-native numerical parity, and end-to-end early-exit accuracy.
+//! Integration tests over the real AOT artifacts: the interpreter-backed
+//! runtime, the XLA-vs-native numerical parity, and end-to-end early-exit
+//! accuracy.  (Stricter interpreter conformance lives in
+//! `tests/hlo_interpreter.rs`.)
 //!
 //! These need `make artifacts` to have run; they are skipped (with a
 //! message) when the artifacts directory is missing so `cargo test` stays
-//! green on a fresh checkout.  XLA-backed tests additionally skip when the
-//! PJRT runtime is the stub build (see `memdyn::runtime` module docs).
+//! green on a fresh checkout.  With the native HLO interpreter in place,
+//! `Runtime::cpu()` always succeeds, so every XLA-gated test executes for
+//! real once the artifacts exist.
 
 use std::path::PathBuf;
 
@@ -31,7 +34,8 @@ fn artifacts() -> Option<PathBuf> {
     }
 }
 
-/// The PJRT runtime, or a skip message when this build has no XLA backend.
+/// The artifact runtime (kept as an Option so a future backend swap that
+/// can fail at construction degrades back to a skip, not a panic).
 fn runtime() -> Option<Runtime> {
     match Runtime::cpu() {
         Ok(rt) => Some(rt),

@@ -1,0 +1,483 @@
+"""Full mirror of rust/src/hlo/eval.rs (all 33 ops), transcribed 1:1 from
+the Rust implementations, run on REAL artifacts:
+
+  1. resnet stem_b1 vs stem_b8 on the same image (conv, groupnorm
+     reduces, rsqrt, transpose, pad, while-matmul ...)
+  2. resnet block_00_b1 forward: shape + finiteness + second output
+  3. pointnet sa_0_b1 vs sa_0_b4 on the same cloud (sort with
+     interpreted comparator, gather w/ batching dims, scatter, variadic
+     argmax reduce, concatenate, iota, FPS while loop)
+
+Cross-bucket agreement is a strong semantic check: the b1/b4/b8 graphs
+are separately traced (different broadcasts/reshapes/batching dims), so
+they only agree if the op semantics are right.
+"""
+import math
+from functools import cmp_to_key
+from check_hlo_smoke import parse_module_ir, strides_of, fnum
+from check_hlo_parse import nelem
+
+def inc(idx, shape):
+    for d in range(len(idx) - 1, -1, -1):
+        idx[d] += 1
+        if idx[d] < shape[d]:
+            return
+        idx[d] = 0
+
+class Ev:
+    def __init__(self, comps, entry):
+        self.comps, self.entry = comps, entry
+
+    def run(self, args):
+        return self.eval(self.entry, args)
+
+    def eval(self, cname, args):
+        instrs, slot_of, root = self.comps[cname]
+        vals = [None] * len(instrs)
+        for i, (op, ops, ty, attrs, lit) in enumerate(instrs):
+            slots = [slot_of.get(o) for o in ops]
+            try:
+                vals[i] = self.instr(op, slots, ops, ty, attrs, lit, vals, args)
+            except Exception as e:
+                raise AssertionError(f"{cname} instr {i} ({op}): {e}") from e
+        return vals[root]
+
+    def dims_attr(self, attrs, key):
+        return [int(t[1]) for t in attrs.get(key, []) if isinstance(t, tuple)]
+
+    def instr(self, op, slots, opnames, ty, attrs, lit, vals, args):
+        def V(k):
+            return vals[slots[k]]
+        if op == "parameter":
+            return args[int(opnames[0])]
+        if op == "constant":
+            dt, dims = ty[1], ty[2]
+            if dt == "f32":
+                data = [fnum(w) for w in lit]
+            elif dt == "s32":
+                data = [int(w) for w in lit]
+            else:
+                data = [w == "true" for w in lit]
+            return (dims, data)
+        if op == "broadcast":
+            dims = self.dims_attr(attrs, "dimensions")
+            shape = ty[2]
+            src_shape, src = V(0)
+            ss = strides_of(src_shape)
+            out = []
+            idx = [0] * len(shape)
+            for _ in range(nelem(shape)):
+                out.append(src[sum(idx[d] * st for d, st in zip(dims, ss))])
+                inc(idx, shape)
+            return (shape, out)
+        if op == "iota":
+            shape = ty[2]
+            d = int(attrs["iota_dimension"])
+            out, idx = [], [0] * len(shape)
+            for _ in range(nelem(shape)):
+                out.append(float(idx[d]) if ty[1] == "f32" else idx[d])
+                inc(idx, shape)
+            return (shape, out)
+        if op == "convert":
+            s, data = V(0)
+            dt = ty[1]
+            if dt == "f32":
+                return (s, [float(x) for x in data])
+            if dt == "s32":
+                return (s, [int(x) for x in data])  # python int() truncs toward 0
+            return (s, [bool(x) for x in data])
+        if op == "rsqrt":
+            s, data = V(0)
+            return (s, [1.0 / math.sqrt(x) if x > 0 else float("inf") if x == 0 else float("nan") for x in data])
+        if op in ("add", "subtract", "multiply", "divide", "maximum", "minimum", "and", "or"):
+            (sa, a), (sb, b) = V(0), V(1)
+            def mx(x, y):
+                if isinstance(x, float) and (math.isnan(x) or math.isnan(y)):
+                    return float("nan")
+                return x if x > y else y
+            def mn(x, y):
+                if isinstance(x, float) and (math.isnan(x) or math.isnan(y)):
+                    return float("nan")
+                return x if x < y else y
+            f = {"add": lambda x, y: x + y, "subtract": lambda x, y: x - y,
+                 "multiply": lambda x, y: x * y,
+                 "divide": lambda x, y: (x / y) if isinstance(x, float) else (0 if y == 0 else int(x / y)),
+                 "maximum": mx, "minimum": mn,
+                 "and": lambda x, y: x and y, "or": lambda x, y: x or y}[op]
+            return (sa, [f(x, y) for x, y in zip(a, b)])
+        if op == "compare":
+            (sa, a), (sb, b) = V(0), V(1)
+            d = attrs["direction"]
+            f = {"EQ": lambda x, y: x == y, "NE": lambda x, y: x != y,
+                 "LT": lambda x, y: x < y, "LE": lambda x, y: x <= y,
+                 "GT": lambda x, y: x > y, "GE": lambda x, y: x >= y}[d]
+            return (sa, [f(x, y) for x, y in zip(a, b)])
+        if op == "select":
+            sp, p = V(0)
+            if len(p) == 1 and sp == []:
+                return V(1) if p[0] else V(2)
+            (st, t), (sf, fv) = V(1), V(2)
+            return (st, [tv if pv else fvv for pv, tv, fvv in zip(p, t, fv)])
+        if op == "reshape":
+            _, data = V(0)
+            return (ty[2], data)
+        if op == "transpose":
+            perm = self.dims_attr(attrs, "dimensions")
+            shape = ty[2]
+            ss, src = V(0)
+            s = strides_of(ss)
+            out, idx = [], [0] * len(shape)
+            for _ in range(nelem(shape)):
+                out.append(src[sum(v * s[perm[i]] for i, v in enumerate(idx))])
+                inc(idx, shape)
+            return (shape, out)
+        if op == "slice":
+            spec = attrs["slice"]
+            nums, starts, strides_ = [], [], []
+            cur = []
+            for t in spec:
+                if t == "[":
+                    cur = []
+                elif t == "]":
+                    starts.append(cur[0])
+                    strides_.append(cur[2] if len(cur) == 3 else 1)
+                elif isinstance(t, tuple):
+                    cur.append(int(t[1]))
+            shape = ty[2]
+            ss, src = V(0)
+            s = strides_of(ss)
+            out, idx = [], [0] * len(shape)
+            for _ in range(nelem(shape)):
+                out.append(src[sum((starts[d] + v * strides_[d]) * s[d] for d, v in enumerate(idx))])
+                inc(idx, shape)
+            return (shape, out)
+        if op == "pad":
+            shape = ty[2]
+            ss, src = V(0)
+            _, pv = V(1)
+            lo, intr = [], []
+            for dim in attrs["padding"].split("x"):
+                parts = dim.split("_")
+                lo.append(int(parts[0]))
+                intr.append(int(parts[2]) if len(parts) == 3 else 0)
+            out = [pv[0]] * nelem(shape)
+            ostr = strides_of(shape)
+            idx = [0] * len(ss)
+            for lin in range(nelem(ss)):
+                ok, out_lin = True, 0
+                for d in range(len(ss)):
+                    o = lo[d] + idx[d] * (intr[d] + 1)
+                    if o < 0 or o >= shape[d]:
+                        ok = False
+                        break
+                    out_lin += o * ostr[d]
+                if ok:
+                    out[out_lin] = src[lin]
+                inc(idx, ss)
+            return (shape, out)
+        if op == "concatenate":
+            dim = self.dims_attr(attrs, "dimensions")[0]
+            shape = ty[2]
+            outer = nelem(shape[:dim])
+            inner = nelem(shape[dim + 1:])
+            out_d = shape[dim]
+            out = [None] * nelem(shape)
+            off = 0
+            for k in range(len(slots)):
+                aship, adata = V(k)
+                ad = aship[dim]
+                for o in range(outer):
+                    blk = adata[o * ad * inner:(o + 1) * ad * inner]
+                    d0 = (o * out_d + off) * inner
+                    out[d0:d0 + ad * inner] = blk
+                off += ad
+            return (shape, out)
+        if op == "dynamic-slice":
+            sizes = self.dims_attr(attrs, "dynamic_slice_sizes")
+            ss, src = V(0)
+            starts = []
+            for d in range(len(ss)):
+                _, sv = V(1 + d)
+                starts.append(max(0, min(sv[0], ss[d] - sizes[d])))
+            st = strides_of(ss)
+            out, idx = [], [0] * len(sizes)
+            for _ in range(nelem(sizes)):
+                out.append(src[sum((starts[d] + idx[d]) * st[d] for d in range(len(ss)))])
+                inc(idx, sizes)
+            return (sizes, out)
+        if op == "dynamic-update-slice":
+            ss, src = V(0)
+            us, upd = V(1)
+            starts = []
+            for d in range(len(ss)):
+                _, sv = V(2 + d)
+                starts.append(max(0, min(sv[0], ss[d] - us[d])))
+            st = strides_of(ss)
+            out = list(src)
+            idx = [0] * len(us)
+            for k in range(nelem(us)):
+                out[sum((starts[d] + idx[d]) * st[d] for d in range(len(ss)))] = upd[k]
+                inc(idx, us)
+            return (ss, out)
+        if op == "get-tuple-element":
+            return V(0)[int(attrs["index"])]
+        if op == "tuple":
+            return tuple(V(k) for k in range(len(slots)))
+        if op == "call":
+            return self.eval(attrs["to_apply"], [V(k) for k in range(len(slots))])
+        if op == "while":
+            state = V(0)
+            for _ in range(10_000_000):
+                _, cdata = self.eval(attrs["condition"], [state])
+                if not cdata[0]:
+                    return state
+                state = self.eval(attrs["body"], [state])
+            raise AssertionError("while overflow")
+        if op == "reduce":
+            n_in = len(slots) // 2
+            inputs = [V(k) for k in range(n_in)]
+            inits = [V(n_in + k) for k in range(n_in)]
+            dims = self.dims_attr(attrs, "dimensions")
+            in_shape = inputs[0][0]
+            rank = len(in_shape)
+            keep = [d for d in range(rank) if d not in dims]
+            out_shape = [in_shape[d] for d in keep]
+            out_n = nelem(out_shape)
+            ostr = strides_of(out_shape)
+            contrib = [0] * rank
+            for p, d in enumerate(keep):
+                contrib[d] = ostr[p]
+            accs = [[init[1][0]] * out_n for init in inits]
+            comp = attrs["to_apply"]
+            idx = [0] * rank
+            for lin in range(nelem(in_shape)):
+                out_lin = sum(i * c for i, c in zip(idx, contrib))
+                sargs = [([], [accs[j][out_lin]]) for j in range(n_in)] + \
+                        [([], [inputs[j][1][lin]]) for j in range(n_in)]
+                res = self.eval(comp, sargs)
+                # an array value is (shape_list, data_list); a tuple value
+                # is a tuple of such pairs
+                if isinstance(res[0], list):
+                    res = (res,)
+                for j in range(n_in):
+                    accs[j][out_lin] = res[j][1][0]
+                inc(idx, in_shape)
+            parts = [(out_shape, accs[j]) for j in range(n_in)]
+            return parts[0] if n_in == 1 else tuple(parts)
+        if op == "sort":
+            n_in = len(slots)
+            inputs = [V(k) for k in range(n_in)]
+            dim = self.dims_attr(attrs, "dimensions")[0]
+            shape = inputs[0][0]
+            strides = strides_of(shape)
+            length = shape[dim]
+            sd = strides[dim]
+            other = [d for d in range(len(shape)) if d != dim]
+            other_shape = [shape[d] for d in other]
+            outs = [list(a[1]) for a in inputs]
+            comp = attrs["to_apply"]
+            idx = [0] * len(other)
+            for _ in range(max(1, nelem(other_shape))):
+                base = sum(i * strides[d] for i, d in zip(idx, other))
+                def less(a, b):
+                    sargs = []
+                    for _, data in inputs:
+                        sargs.append(([], [data[base + a * sd]]))
+                        sargs.append(([], [data[base + b * sd]]))
+                    _, r = self.eval(comp, sargs)
+                    return r[0]
+                def cmp(a, b):
+                    if less(a, b):
+                        return -1
+                    if less(b, a):
+                        return 1
+                    return 0
+                perm = sorted(range(length), key=cmp_to_key(cmp))
+                for j, (_, data) in enumerate(inputs):
+                    for k, p in enumerate(perm):
+                        outs[j][base + k * sd] = data[base + p * sd]
+                inc(idx, other_shape)
+            parts = [(shape, outs[j]) for j in range(n_in)]
+            return parts[0] if n_in == 1 else tuple(parts)
+        if op == "gather":
+            op_shape, operand = V(0)
+            ind_shape, ind = V(1)
+            out_shape = ty[2]
+            offset_dims = self.dims_attr(attrs, "offset_dims")
+            collapsed = self.dims_attr(attrs, "collapsed_slice_dims")
+            simap = self.dims_attr(attrs, "start_index_map")
+            ob = self.dims_attr(attrs, "operand_batching_dims")
+            sib = self.dims_attr(attrs, "start_indices_batching_dims")
+            ivd = int(attrs["index_vector_dim"])
+            sizes = self.dims_attr(attrs, "slice_sizes")
+            ostr = strides_of(op_shape)
+            istr = strides_of(ind_shape)
+            batch_pos_out = [d for d in range(len(out_shape)) if d not in offset_dims]
+            offset_op = [d for d in range(len(op_shape)) if d not in collapsed and d not in ob]
+            sib_pos = [sd2 - 1 if sd2 > ivd else sd2 for sd2 in sib]
+            out, oidx = [], [0] * len(out_shape)
+            for _ in range(nelem(out_shape)):
+                g = [oidx[p] for p in batch_pos_out]
+                start = [0] * len(op_shape)
+                for k, od in enumerate(simap):
+                    ii = list(g)
+                    if ivd < len(ind_shape):
+                        ii.insert(ivd, k)
+                    start[od] = ind[sum(i * s for i, s in zip(ii, istr))]
+                for j, od in enumerate(ob):
+                    start[od] = g[sib_pos[j]]
+                lin = 0
+                for d in range(len(op_shape)):
+                    mx = op_shape[d] - sizes[d]
+                    lin += max(0, min(start[d], mx)) * ostr[d]
+                for o, od in enumerate(offset_op):
+                    lin += oidx[offset_dims[o]] * ostr[od]
+                out.append(operand[lin])
+                inc(oidx, out_shape)
+            return (out_shape, out)
+        if op == "scatter":
+            op_shape, operand = V(0)
+            ind_shape, ind = V(1)
+            up_shape, upd = V(2)
+            uwd = self.dims_attr(attrs, "update_window_dims")
+            iwd = self.dims_attr(attrs, "inserted_window_dims")
+            sdtod = self.dims_attr(attrs, "scatter_dims_to_operand_dims")
+            ivd = int(attrs["index_vector_dim"])
+            comp = attrs["to_apply"]
+            ostr = strides_of(op_shape)
+            istr = strides_of(ind_shape)
+            batch_pos = [d for d in range(len(up_shape)) if d not in uwd]
+            opw = [d for d in range(len(op_shape)) if d not in iwd]
+            out = list(operand)
+            uidx = [0] * len(up_shape)
+            for ulin in range(nelem(up_shape)):
+                g = [uidx[p] for p in batch_pos]
+                full = [0] * len(op_shape)
+                for k, od in enumerate(sdtod):
+                    ii = list(g)
+                    if ivd < len(ind_shape):
+                        ii.insert(ivd, k)
+                    full[od] += ind[sum(i * s for i, s in zip(ii, istr))]
+                for w, od in enumerate(opw):
+                    full[od] += uidx[uwd[w]]
+                if all(0 <= v < d for v, d in zip(full, op_shape)):
+                    lin = sum(v * s for v, s in zip(full, ostr))
+                    res = self.eval(comp, [([], [out[lin]]), ([], [upd[ulin]])])
+                    out[lin] = res[1][0]
+                inc(uidx, up_shape)
+            return (op_shape, out)
+        if op == "dot":
+            (sa, a), (sb, b) = V(0), V(1)
+            m, k = sa
+            k2, n = sb
+            out = [0.0] * (m * n)
+            for i in range(m):
+                for kk in range(k):
+                    xv = a[i * k + kk]
+                    if xv != 0.0:
+                        for j in range(n):
+                            out[i * n + j] += xv * b[kk * n + j]
+            return ([m, n], out)
+        if op == "convolution":
+            xs, xv = V(0)
+            ws, wv = V(1)
+            out_shape = ty[2]
+            window = {k: v for k, v in self.window_pairs(attrs["window"])}
+            size = [int(t) for t in window["size"].split("x")]
+            stride = [int(t) for t in window.get("stride", "1x1").split("x")]
+            pad = window.get("pad", "0_0x0_0")
+            pads = [tuple(int(u) for u in p.split("_")) for p in pad.split("x")]
+            g = int(attrs.get("feature_group_count", "1"))
+            n_, h, wi, ci = xs
+            kh, kw, cig, co = ws
+            oh, ow = out_shape[1], out_shape[2]
+            cog = co // g
+            out = [0.0] * (n_ * oh * ow * co)
+            for b in range(n_):
+                for oy in range(oh):
+                    for ox in range(ow):
+                        obase = ((b * oh + oy) * ow + ox) * co
+                        for ky in range(kh):
+                            iy = oy * stride[0] + ky - pads[0][0]
+                            if iy < 0 or iy >= h:
+                                continue
+                            for kx in range(kw):
+                                ix = ox * stride[1] + kx - pads[1][0]
+                                if ix < 0 or ix >= wi:
+                                    continue
+                                ibase = ((b * h + iy) * wi + ix) * ci
+                                wbase = (ky * kw + kx) * cig * co
+                                for oc in range(co):
+                                    grp = oc // cog
+                                    acc = 0.0
+                                    for c in range(cig):
+                                        acc += xv[ibase + grp * cig + c] * wv[wbase + c * co + oc]
+                                    out[obase + oc] += acc
+            return (out_shape, out)
+        raise AssertionError(f"op {op} not mirrored")
+
+    @staticmethod
+    def window_pairs(toks):
+        pairs, i = [], 0
+        while i < len(toks):
+            key = toks[i][1]
+            assert toks[i + 1] == "="
+            pairs.append((key, toks[i + 2][1]))
+            i += 3
+        return pairs
+
+def load(path):
+    comps, entry = parse_module_ir(path)
+    return Ev(comps, entry)
+
+def maxdiff(a, b):
+    return max(abs(x - y) for x, y in zip(a, b))
+
+import os
+A = os.environ.get("MEMDYN_ARTIFACTS") or os.path.join(os.path.dirname(__file__), "..", "artifacts")
+
+# --- 1. resnet stem b1 vs b8 --------------------------------------------
+img = [((i * 37 % 97) / 96.0) for i in range(28 * 28)]
+stem1 = load(f"{A}/resnet/stem_b1.hlo.txt")
+r1 = stem1.run([([1, 28, 28, 1], img)])
+r1 = r1 if isinstance(r1, tuple) else (r1,)
+(s1, o1), = r1
+assert s1 == [1, 28, 28, 16], s1
+assert all(math.isfinite(v) for v in o1)
+stem8 = load(f"{A}/resnet/stem_b8.hlo.txt")
+img8 = img + [0.0] * (7 * 28 * 28)
+r8 = stem8.run([([8, 28, 28, 1], img8)])
+r8 = r8 if isinstance(r8, tuple) else (r8,)
+(s8, o8), = r8
+assert s8 == [8, 28, 28, 16], s8
+d = maxdiff(o1, o8[:len(o1)])
+print(f"stem b1-vs-b8 max diff: {d:.2e}")
+assert d < 1e-4
+
+# --- 2. resnet block_00_b1 ----------------------------------------------
+blk = load(f"{A}/resnet/block_00_b1.hlo.txt")
+rb = blk.run([(s1, o1)])
+(bs, bo), (vs_, vo) = rb
+assert bs == [1, 28, 28, 16] and vs_ == [1, 16], (bs, vs_)
+assert all(math.isfinite(v) for v in bo + vo)
+print("block_00_b1: shapes ok, outputs finite, sv:", [round(v, 4) for v in vo[:4]], "...")
+
+# --- 3. pointnet sa_0 b1 vs b4 ------------------------------------------
+import random
+random.seed(7)
+cloud = [random.uniform(-1, 1) for _ in range(256 * 3)]
+sa1 = load(f"{A}/pointnet/sa_0_b1.hlo.txt")
+p1 = sa1.run([([1, 256, 3], cloud)])
+(x1s, x1), (f1s, f1), (v1s, v1) = p1
+assert x1s == [1, 128, 3] and f1s == [1, 128, 24] and v1s == [1, 24], (x1s, f1s, v1s)
+sa4 = load(f"{A}/pointnet/sa_0_b4.hlo.txt")
+cloud4 = cloud * 4
+p4 = sa4.run([([4, 256, 3], cloud4)])
+(x4s, x4), (f4s, f4), (v4s, v4) = p4
+assert x4s == [4, 128, 3] and f4s == [4, 128, 24] and v4s == [4, 24]
+print(f"sa_0 xyz b1-vs-b4 max diff:   {maxdiff(x1, x4[:len(x1)]):.2e}")
+print(f"sa_0 feats b1-vs-b4 max diff: {maxdiff(f1, f4[:len(f1)]):.2e}")
+print(f"sa_0 sv b1-vs-b4 max diff:    {maxdiff(v1, v4[:len(v1)]):.2e}")
+assert maxdiff(v1, v4[:len(v1)]) < 1e-4
+assert maxdiff(x1, x4[:len(x1)]) < 1e-4
+print("ALL CROSS-BUCKET PARITY CHECKS PASSED")

