@@ -71,6 +71,45 @@ fn main() {
                 })
                 .report()
         );
+
+        // the same batch with the interpreter's dot/convolution row
+        // fan-out pinned to 1 and 4 (outputs bit-identical; only the
+        // wall clock moves).  This is the §Perf "in-place loop buffers +
+        // row-parallel kernels" series.  The model's chunk-level fan-out
+        // is capped to 1 so every kernel runs on the caller, where the
+        // row fan-out knob actually applies (inside pool workers nested
+        // calls run inline and the knob would be inert).
+        let xla1 = memdyn::coordinator::dynmodel::XlaResNetModel::load(&rt, &bundle)
+            .unwrap()
+            .with_threads(1);
+        let memory1 = memdyn::coordinator::ExitMemory::build(
+            &bundle,
+            memdyn::coordinator::CenterSource::TernaryQ,
+            &memdyn::nn::NoiseSpec::Digital,
+            7,
+        )
+        .unwrap();
+        let lin_engine =
+            memdyn::coordinator::Engine::new(xla1, memory1, thr.values.clone());
+        for fanout in [1usize, 4] {
+            memdyn::hlo::eval::set_linear_fanout(fanout);
+            println!(
+                "{}",
+                quick
+                    .run_items(
+                        &format!("ee_infer_xla_interp_50_lin{fanout} (samples/s)"),
+                        n as f64,
+                        || lin_engine.infer_batch(input, n).unwrap().len()
+                    )
+                    .report()
+            );
+        }
+        memdyn::hlo::eval::set_linear_fanout(0);
+        println!(
+            "[dynamic-update-slice: {} in-place, {} copied so far this process]",
+            memdyn::hlo::eval::dus_in_place_count(),
+            memdyn::hlo::eval::dus_copied_count()
+        );
     }
 
     // Mem-variant wall clock vs thread count: the paper's noise-robust

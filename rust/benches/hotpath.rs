@@ -2,8 +2,9 @@
 //! optimization in EXPERIMENTS.md §Perf.
 //!
 //! Covers the L3 request path end to end: crossbar MVM (the Mem backend's
-//! inner loop), im2col, a native residual block, CAM search, the batcher,
-//! and a full native-engine inference.
+//! inner loop), the pooled keyed batch MVM, pool-vs-scoped dispatch
+//! overhead (`spawn_overhead` rows), im2col, GroupNorm, the dense digital
+//! matmul, and CAM search.
 
 use memdyn::cim::CimMatrix;
 use memdyn::crossbar::ConverterConfig;
@@ -58,29 +59,70 @@ fn main() {
     );
 
     // --- multi-core keyed batch MVM: the parallel Mem engine's fan-out ----
-    // a 32-sample batch over the noisy tile, split across 1/2/4/8 threads
-    // with per-request noise streams (outputs identical at every width);
-    // this is the §Perf "per-tile RNG streams" before/after series
+    // a 32-sample batch over the noisy tile at pool widths 1/2/4/8 with
+    // per-request noise streams (outputs identical at every width); this
+    // is the §Perf "per-tile RNG streams" before/after series.  The width
+    // is pinned via pool::set_max_threads (the race-free stand-in for
+    // MEMDYN_THREADS) and the pool is restarted under each cap.
     let batch = 32usize;
     let xb: Vec<f32> = (0..batch * k)
         .map(|i| ((i % 23) as f32 - 11.0) / 11.0)
         .collect();
     let root = StreamKey::root(9);
+    let keys: Vec<StreamKey> = (0..batch as u64).map(|i| root.child(i)).collect();
     for threads in [1usize, 2, 4, 8] {
+        // pin the pool width the race-free way (no env mutation), and
+        // restart so the worker set re-grows under the new cap
+        pool::set_max_threads(threads);
+        pool::restart();
         let name = format!("xbar_matmul_b32_noisy_t{threads} (device reads/s)");
         println!(
             "{}",
             b.run_items(&name, batch as f64 * reads, || {
-                let outs = pool::run_chunks(batch, threads, |r| {
-                    let keys: Vec<StreamKey> =
-                        r.clone().map(|i| root.child(i as u64)).collect();
-                    noisy.matmul_keyed(&xb[r.start * k..r.end * k], &keys)
-                });
-                outs.len()
+                noisy.matmul_keyed(&xb, &keys).len()
             })
             .report()
         );
     }
+    pool::set_max_threads(0);
+    pool::restart();
+
+    // --- dispatch overhead: persistent pool vs per-call scoped spawn -------
+    // near-empty chunks, so the number measured is the dispatch machinery
+    // itself — the cost that dominated small digital batches on the
+    // serving path before the pool (§Perf `spawn_overhead` rows; the
+    // pooled/scoped ratio is the win of this change).  The cap is pinned
+    // per width so the pooled side really dispatches `threads` lanes
+    // even on a smaller machine — same width as the scoped reference.
+    for threads in [2usize, 4, 8] {
+        pool::set_max_threads(threads);
+        pool::restart();
+        pool::prewarm(threads);
+        println!(
+            "{}",
+            b.run_items(
+                &format!("spawn_overhead_pooled_t{threads} (dispatches/s)"),
+                1.0,
+                || pool::run_chunks(threads, threads, |r| r.sum::<usize>())
+                    .iter()
+                    .sum::<usize>()
+            )
+            .report()
+        );
+        println!(
+            "{}",
+            b.run_items(
+                &format!("spawn_overhead_scoped_t{threads} (dispatches/s)"),
+                1.0,
+                || pool::run_chunks_scoped(threads, threads, |r| r.sum::<usize>())
+                    .iter()
+                    .sum::<usize>()
+            )
+            .report()
+        );
+    }
+    pool::set_max_threads(0);
+    pool::restart();
 
     // --- im2col on the stem geometry --------------------------------------
     let img: Vec<f32> = (0..8 * 28 * 28 * 16).map(|i| (i % 9) as f32).collect();

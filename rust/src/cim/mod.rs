@@ -14,8 +14,10 @@ use crate::crossbar::{ConverterConfig, CrossbarTile, XBAR_LOGICAL_COLS, XBAR_ROW
 use crate::device::DeviceConfig;
 use crate::util::rng::{Pcg64, StreamKey};
 
-/// Running usage counters for energy accounting.
-#[derive(Clone, Copy, Debug, Default)]
+/// Running usage counters for energy accounting.  `PartialEq`/`Eq` let
+/// the determinism suite assert counter totals bit-identical across
+/// thread counts.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct CimCounters {
     pub mvms: u64,
     pub device_reads: u64,
@@ -223,18 +225,38 @@ impl CimMatrix {
 
     /// Batched keyed matmul: row `i` draws its per-tile streams from
     /// `row_keys[i]` (see [`CimMatrix::mvm_keyed`]).
+    ///
+    /// Rows are independent (noise is identity-derived), so large
+    /// batches fan across the persistent pool (`util::pool`); the call
+    /// runs inline when nested inside a pool worker (e.g. under
+    /// `Engine::with_threads`), and the output is bit-identical at any
+    /// width.
     pub fn matmul_keyed(&self, x: &[f32], row_keys: &[StreamKey]) -> Vec<f32> {
         let m = row_keys.len();
         assert_eq!(x.len(), m * self.k);
-        let mut out = vec![0f32; m * self.n];
-        for (i, &key) in row_keys.iter().enumerate() {
-            let (xs, ys) = (
-                &x[i * self.k..(i + 1) * self.k],
-                &mut out[i * self.n..(i + 1) * self.n],
-            );
-            self.mvm_keyed(xs, ys, key);
+        let threads = crate::util::pool::max_threads().min(m);
+        if threads <= 1 {
+            let mut out = vec![0f32; m * self.n];
+            for (i, &key) in row_keys.iter().enumerate() {
+                let (xs, ys) = (
+                    &x[i * self.k..(i + 1) * self.k],
+                    &mut out[i * self.n..(i + 1) * self.n],
+                );
+                self.mvm_keyed(xs, ys, key);
+            }
+            return out;
         }
-        out
+        crate::util::pool::run_chunks_flat(m, threads, |r| {
+            let mut part = vec![0f32; r.len() * self.n];
+            for (pi, i) in r.enumerate() {
+                let (xs, ys) = (
+                    &x[i * self.k..(i + 1) * self.k],
+                    &mut part[pi * self.n..(pi + 1) * self.n],
+                );
+                self.mvm_keyed(xs, ys, row_keys[i]);
+            }
+            part
+        })
     }
 
     /// Noise-free matmul over programmed means (verification path).

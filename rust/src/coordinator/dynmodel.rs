@@ -11,8 +11,11 @@
 //! * [`XlaResNetModel`] / [`XlaPointNetModel`] — the AOT HLO artifacts
 //!   executed on the native HLO interpreter (`crate::runtime`), with
 //!   bucket-padded batching; batches larger than the biggest bucket are
-//!   split into chunks and fanned across `util::pool` (the interpreter
-//!   is deterministic, so results are identical at any thread count).
+//!   split into chunks and fanned across the persistent `util::pool`
+//!   (the interpreter is deterministic, so results are identical at any
+//!   thread count).  A single-chunk batch runs on the caller's thread,
+//!   where the interpreter's `dot`/`convolution` row fan-out picks up
+//!   the idle pool lanes instead — small batches no longer serialize.
 
 use std::sync::Arc;
 
@@ -238,8 +241,9 @@ impl XlaResNetModel {
 
     /// Run an executable over a batch, padding up to the bucket and slicing
     /// chunks if the batch exceeds the largest bucket. Chunks are fanned
-    /// across `util::pool` and stitched back in submission order, so the
-    /// output is bit-identical at any thread count.
+    /// across the persistent `util::pool` (one channel send per chunk, no
+    /// spawn+join) and stitched back in submission order, so the output is
+    /// bit-identical at any thread count.
     fn run_padded(
         execs: &[(usize, Arc<crate::runtime::Executable>)],
         x: &[f32],

@@ -5,10 +5,17 @@
 //! # Parallelism
 //!
 //! With [`Engine::with_threads`] the engine fans a batch's samples across
-//! a scoped thread pool (`util::pool`).  Every sample carries a globally
-//! unique request id (a per-engine counter), and all analogue noise is
-//! derived from (seed, request id, layer, tile) — never from draw order —
-//! so the result is bit-identical at any thread count, including 1.
+//! the persistent worker pool (`util::pool`): long-lived channel-fed
+//! workers, so per-batch dispatch is a channel send rather than a
+//! spawn+join (which dominated small digital batches on the serving
+//! path).  Every sample carries a globally unique request id (a
+//! per-engine counter), and all analogue noise is derived from (seed,
+//! request id, layer, tile) — never from draw order — so the result is
+//! bit-identical at any thread count, including 1, and across pool
+//! restarts.  Inner parallel sections (keyed crossbar rows, interpreter
+//! `dot`/`convolution`) run inline inside pool workers — the pool's
+//! nesting rule — so an engine span never blocks on the queue it came
+//! from.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -63,7 +70,7 @@ impl<M: DynModel> Engine<M> {
         self
     }
 
-    /// Fan batches across up to `threads` cores.  Outputs are
+    /// Fan batches across up to `threads` pool lanes.  Outputs are
     /// bit-identical for any value, 1 included (see the module docs).
     pub fn with_threads(mut self, threads: usize) -> Self {
         self.threads = threads.max(1);

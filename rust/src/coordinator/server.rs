@@ -5,6 +5,12 @@
 //! Batching policy: collect up to `max_batch` requests, waiting at most
 //! `max_wait` after the first arrival (classic dynamic batching: the
 //! latency/throughput knob of the serving benches).
+//!
+//! The batch worker dispatches onto the persistent `util::pool`
+//! (pre-warmed at engine construction to the engine's width), so the
+//! per-batch cost on the hot path is a channel send, not a thread
+//! spawn+join — the lever that matters for small digital batches, where
+//! early-exit savings used to be eaten by dispatch overhead.
 
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
 use std::thread::JoinHandle;
@@ -118,6 +124,9 @@ impl Server {
                     return Metrics::new(0);
                 }
             };
+            // spawn the engine's pool lanes before the first request so
+            // no client pays the lazy worker spawn in its latency
+            crate::util::pool::prewarm(engine.threads());
             let mut metrics = Metrics::new(engine.model.n_blocks());
             metrics.start();
             while let Some(batch) = collect_batch(&rx, cfg.max_batch, cfg.max_wait) {

@@ -22,7 +22,29 @@
 //! float `compare` is non-total (NaN compares false except `NE`), s32
 //! arithmetic wraps, `convert` f32->s32 rounds toward zero, and
 //! `dynamic-slice`/`dynamic-update-slice` clamp their start indices.
+//!
+//! Memory discipline: evaluation threads **ownership**, not just
+//! references.  Arguments arrive as `Option<Value>` slots that parameter
+//! instructions *move* out of, a `while` hands its carried state to the
+//! body by value, and an instruction that is the final consumer of an
+//! operand takes the slot instead of cloning it.  The payoff is the
+//! `dynamic-update-slice` fast path: when the operand's `Arc` ends up
+//! uniquely held (the common case for loop-carried buffers after the
+//! first iteration), the update is written **in place** via
+//! `Arc::try_unwrap` instead of copying the whole buffer every
+//! iteration.  Liveness (`last_use`) makes the reuse safe by
+//! construction — a buffer still referenced anywhere keeps a refcount
+//! > 1 and falls back to the copy.  The [`dus_in_place_count`] /
+//! [`dus_copied_count`] counters expose which path ran (aliasing
+//! regression tests assert on them; they never steer control flow).
+//!
+//! Threading: `dot` and `convolution` fan their independent output rows
+//! across the persistent worker pool (`util::pool`) when the kernel is
+//! large enough to amortize dispatch.  Each row is computed with exactly
+//! the sequential operation order, so results are bit-identical at any
+//! width; [`set_linear_fanout`] pins the width for tests and benches.
 
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Context, Result};
@@ -68,6 +90,53 @@ enum Scalar {
     S32(i32),
     Pred(bool),
 }
+
+// ---------------------------------------------------------------------------
+// observability: buffer-reuse counters and the linear-kernel fan-out knob
+// ---------------------------------------------------------------------------
+
+/// `dynamic-update-slice` executions that mutated the operand in place
+/// (operand `Arc` uniquely held at its final use).
+static DUS_IN_PLACE: AtomicU64 = AtomicU64::new(0);
+/// `dynamic-update-slice` executions that had to copy the operand
+/// (buffer still live elsewhere).
+static DUS_COPIED: AtomicU64 = AtomicU64::new(0);
+
+/// Process-wide count of in-place `dynamic-update-slice` executions.
+/// Monotone; tests assert on deltas (other interpreter runs can only
+/// increase it).
+pub fn dus_in_place_count() -> u64 {
+    DUS_IN_PLACE.load(Ordering::Relaxed)
+}
+
+/// Process-wide count of copying `dynamic-update-slice` executions.
+pub fn dus_copied_count() -> u64 {
+    DUS_COPIED.load(Ordering::Relaxed)
+}
+
+/// Fan-out override for the `dot`/`convolution` row loops: 0 (default)
+/// uses `pool::max_threads()`.  Tests and benches pin an explicit width
+/// here instead of mutating the process environment.
+static LINEAR_FANOUT: AtomicUsize = AtomicUsize::new(0);
+
+/// Pin the `dot`/`convolution` row fan-out width (0 restores the
+/// default, `pool::max_threads()`).  Results are bit-identical at every
+/// width; this only changes scheduling.
+pub fn set_linear_fanout(threads: usize) {
+    LINEAR_FANOUT.store(threads, Ordering::Relaxed);
+}
+
+fn linear_fanout() -> usize {
+    match LINEAR_FANOUT.load(Ordering::Relaxed) {
+        0 => crate::util::pool::max_threads(),
+        n => n,
+    }
+}
+
+/// Minimum multiply-accumulate count before a `dot`/`convolution`
+/// fans rows across the pool — below this the channel dispatch costs
+/// more than it saves.
+const PAR_MIN_MACS: usize = 1 << 16;
 
 // ---------------------------------------------------------------------------
 // small index helpers
@@ -231,6 +300,44 @@ fn array_out_dtype(ins: &Instr) -> Result<DType> {
     }
 }
 
+/// True when operand `k` of instruction `i` can be *moved* out of the
+/// slot table: this instruction is the slot's final consumer and the
+/// slot appears only once in the operand list (so no earlier/later read
+/// of the same instruction is invalidated).  The root is never movable
+/// (`last_use[root] == instrs.len()`).
+fn operand_movable(c: &Computation, i: usize, ins: &Instr, k: usize) -> bool {
+    match ins.operands.get(k) {
+        Some(&slot) => {
+            c.last_use[slot] == i && ins.operands.iter().filter(|&&s| s == slot).count() == 1
+        }
+        None => false,
+    }
+}
+
+/// Take operand `k`'s value out of the slot table (caller has checked
+/// [`operand_movable`]).
+fn take_operand(vals: &mut [Option<Value>], ins: &Instr, k: usize) -> Result<Value> {
+    vals[ins.operands[k]]
+        .take()
+        .ok_or_else(|| anyhow!("operand {k} already dropped"))
+}
+
+/// Operand `k` by value: moved when this is its final use, cloned
+/// (refcount bump) otherwise.
+fn move_or_clone_operand(
+    c: &Computation,
+    i: usize,
+    ins: &Instr,
+    vals: &mut [Option<Value>],
+    k: usize,
+) -> Result<Value> {
+    if operand_movable(c, i, ins, k) {
+        take_operand(vals, ins, k)
+    } else {
+        Ok(operand_val(ins, vals, k)?.clone())
+    }
+}
+
 // ---------------------------------------------------------------------------
 // scalar semantics (shared by elementwise ops and applied regions)
 // ---------------------------------------------------------------------------
@@ -381,7 +488,18 @@ impl Interpreter {
         self.eval_comp(self.module.entry, args)
     }
 
+    /// Evaluate a computation on borrowed arguments (clones each one).
     fn eval_comp(&self, ci: usize, args: &[Value]) -> Result<Value> {
+        self.eval_comp_owned(ci, args.iter().cloned().map(Some).collect())
+    }
+
+    /// Evaluate a computation on **owned** arguments: parameter
+    /// instructions move their value out instead of cloning, so a caller
+    /// that hands over its last reference (the `while` body handoff, a
+    /// `call`'s moved operands) lets loop-carried buffers become
+    /// uniquely held — the precondition for the in-place
+    /// `dynamic-update-slice` fast path.
+    fn eval_comp_owned(&self, ci: usize, mut args: Vec<Option<Value>>) -> Result<Value> {
         let c = &self.module.comps[ci];
         if args.len() != c.params.len() {
             bail!(
@@ -395,7 +513,7 @@ impl Interpreter {
         vals.resize_with(c.instrs.len(), || None);
         for (i, ins) in c.instrs.iter().enumerate() {
             let v = self
-                .eval_instr(ins, &vals, args)
+                .eval_instr(c, i, ins, &mut vals, &mut args)
                 .with_context(|| format!("computation {}, {} #{i}", c.name, ins.op.name()))?;
             vals[i] = Some(v);
             for &s in &ins.operands {
@@ -407,11 +525,18 @@ impl Interpreter {
         Ok(vals[c.root].take().expect("root value"))
     }
 
-    fn eval_instr(&self, ins: &Instr, vals: &[Option<Value>], args: &[Value]) -> Result<Value> {
+    fn eval_instr(
+        &self,
+        c: &Computation,
+        i: usize,
+        ins: &Instr,
+        vals: &mut [Option<Value>],
+        args: &mut [Option<Value>],
+    ) -> Result<Value> {
         match &ins.op {
             Op::Parameter(o) => args
-                .get(*o)
-                .cloned()
+                .get_mut(*o)
+                .and_then(Option::take)
                 .ok_or_else(|| anyhow!("missing argument {o}")),
             Op::Constant(lit) => Ok(Value::Arr(lit.clone())),
             Op::Broadcast { dims } => {
@@ -610,6 +735,7 @@ impl Interpreter {
                 Ok(Value::arr(ArrayVal { shape, data }))
             }
             Op::Concatenate { dim } => {
+                let vals: &[Option<Value>] = vals;
                 let shape = array_out_dims(ins)?;
                 let parts: Vec<&ArrayVal> = (0..ins.operands.len())
                     .map(|k| operand_arr(ins, vals, k))
@@ -622,47 +748,85 @@ impl Interpreter {
                 Ok(Value::arr(read_block(x, &starts, sizes)))
             }
             Op::DynamicUpdateSlice => {
-                let x = operand_arr(ins, vals, 0)?;
-                let u = operand_arr(ins, vals, 1)?;
-                let starts = dyn_starts(ins, vals, 2, &x.shape, &u.shape)?;
-                let mut out = x.clone();
-                write_block(&mut out, u, &starts)?;
+                // read the update and the starts *before* potentially
+                // taking the operand slot (they may alias it)
+                let u = match operand_val(ins, vals, 1)? {
+                    Value::Arr(a) => Arc::clone(a),
+                    Value::Tuple(_) => bail!("dynamic-update-slice update is a tuple"),
+                };
+                let x_shape = operand_arr(ins, vals, 0)?.shape.clone();
+                let starts = dyn_starts(ins, vals, 2, &x_shape, &u.shape)?;
+                let x: Arc<ArrayVal> = match move_or_clone_operand(c, i, ins, vals, 0)? {
+                    Value::Arr(a) => a,
+                    Value::Tuple(_) => bail!("dynamic-update-slice on tuple"),
+                };
+                // in place when this was the only live handle (the
+                // loop-carried steady state); full copy otherwise — a
+                // buffer still referenced anywhere keeps refcount > 1,
+                // so live data is never mutated
+                let mut out = match Arc::try_unwrap(x) {
+                    Ok(owned) => {
+                        DUS_IN_PLACE.fetch_add(1, Ordering::Relaxed);
+                        owned
+                    }
+                    Err(shared) => {
+                        DUS_COPIED.fetch_add(1, Ordering::Relaxed);
+                        (*shared).clone()
+                    }
+                };
+                write_block(&mut out, &u, &starts)?;
                 Ok(Value::arr(out))
             }
             Op::GetTupleElement { index } => {
-                let t = operand_val(ins, vals, 0)?.as_tuple()?;
-                t.get(*index)
-                    .cloned()
-                    .ok_or_else(|| anyhow!("tuple index {index} out of range"))
+                if operand_movable(c, i, ins, 0) {
+                    // final use of the tuple: move the element out, so a
+                    // loop result's buffer keeps a unique Arc
+                    match take_operand(vals, ins, 0)? {
+                        Value::Tuple(parts) => parts
+                            .into_iter()
+                            .nth(*index)
+                            .ok_or_else(|| anyhow!("tuple index {index} out of range")),
+                        Value::Arr(_) => Err(anyhow!("expected tuple value, got array")),
+                    }
+                } else {
+                    let t = operand_val(ins, vals, 0)?.as_tuple()?;
+                    t.get(*index)
+                        .cloned()
+                        .ok_or_else(|| anyhow!("tuple index {index} out of range"))
+                }
             }
             Op::Tuple => {
                 let parts: Vec<Value> = (0..ins.operands.len())
-                    .map(|k| operand_val(ins, vals, k).cloned())
+                    .map(|k| move_or_clone_operand(c, i, ins, vals, k))
                     .collect::<Result<_>>()?;
                 Ok(Value::Tuple(parts))
             }
             Op::Call { comp } => {
-                let cargs: Vec<Value> = (0..ins.operands.len())
-                    .map(|k| operand_val(ins, vals, k).cloned())
+                let cargs: Vec<Option<Value>> = (0..ins.operands.len())
+                    .map(|k| move_or_clone_operand(c, i, ins, vals, k).map(Some))
                     .collect::<Result<_>>()?;
-                self.eval_comp(*comp, &cargs)
+                self.eval_comp_owned(*comp, cargs)
             }
             Op::While { cond, body } => {
-                let mut state = operand_val(ins, vals, 0)?.clone();
+                let mut state = move_or_clone_operand(c, i, ins, vals, 0)?;
                 for _ in 0..MAX_WHILE_ITERS {
-                    let c = self.eval_comp(*cond, std::slice::from_ref(&state))?;
-                    let keep = match &c.as_arr()?.data {
+                    let cv = self.eval_comp(*cond, std::slice::from_ref(&state))?;
+                    let keep = match &cv.as_arr()?.data {
                         Data::Pred(v) => v[0],
                         _ => bail!("while condition is not pred"),
                     };
                     if !keep {
                         return Ok(state);
                     }
-                    state = self.eval_comp(*body, std::slice::from_ref(&state))?;
+                    // hand the carried state to the body by value: the
+                    // body's parameter takes it, so buffers the previous
+                    // iteration produced stay uniquely held
+                    state = self.eval_comp_owned(*body, vec![Some(state)])?;
                 }
                 bail!("while loop exceeded {MAX_WHILE_ITERS} iterations")
             }
             Op::Reduce { dims, comp } => {
+                let vals: &[Option<Value>] = vals;
                 let n_in = ins.operands.len() / 2;
                 if ins.operands.len() != 2 * n_in || n_in == 0 {
                     bail!("reduce expects inputs + matching inits");
@@ -676,6 +840,7 @@ impl Interpreter {
                 self.eval_reduce(dims, *comp, &inputs, &inits)
             }
             Op::Sort { dim, comp } => {
+                let vals: &[Option<Value>] = vals;
                 let inputs: Vec<&ArrayVal> = (0..ins.operands.len())
                     .map(|k| operand_arr(ins, vals, k))
                     .collect::<Result<_>>()?;
@@ -717,17 +882,17 @@ impl Interpreter {
         if self.scalar_ok[ci] {
             return self.eval_scalar_comp(ci, args);
         }
-        let vargs: Vec<Value> = args
+        let vargs: Vec<Option<Value>> = args
             .iter()
             .map(|&s| {
-                Value::arr(match s {
+                Some(Value::arr(match s {
                     Scalar::F32(x) => ArrayVal::scalar_f32(x),
                     Scalar::S32(x) => ArrayVal::scalar_s32(x),
                     Scalar::Pred(x) => ArrayVal::scalar_pred(x),
-                })
+                }))
             })
             .collect();
-        match self.eval_comp(ci, &vargs)? {
+        match self.eval_comp_owned(ci, vargs)? {
             Value::Arr(a) => Ok(vec![data_get(&a.data, 0)]),
             Value::Tuple(parts) => parts
                 .iter()
@@ -1163,17 +1328,29 @@ fn eval_dot(
         if b.shape[0] != k {
             bail!("dot contraction size mismatch");
         }
-        let mut out = vec![0f32; m * n];
-        for i in 0..m {
-            let xrow = &x[i * k..(i + 1) * k];
-            let orow = &mut out[i * n..(i + 1) * n];
-            for (kk, &xv) in xrow.iter().enumerate() {
-                let wrow = &w[kk * n..(kk + 1) * n];
-                for (o, wv) in orow.iter_mut().zip(wrow) {
-                    *o += xv * wv;
+        // each output row is an independent chunk with the exact
+        // sequential accumulation order, so the fan-out is bit-identical
+        // at any width (inline when nested inside a pool worker)
+        let row_block = |r: std::ops::Range<usize>| -> Vec<f32> {
+            let mut part = vec![0f32; r.len() * n];
+            for (pi, i) in r.enumerate() {
+                let xrow = &x[i * k..(i + 1) * k];
+                let orow = &mut part[pi * n..(pi + 1) * n];
+                for (kk, &xv) in xrow.iter().enumerate() {
+                    let wrow = &w[kk * n..(kk + 1) * n];
+                    for (o, wv) in orow.iter_mut().zip(wrow) {
+                        *o += xv * wv;
+                    }
                 }
             }
-        }
+            part
+        };
+        let threads = linear_fanout();
+        let out = if threads > 1 && m > 1 && m * k * n >= PAR_MIN_MACS {
+            crate::util::pool::run_chunks_flat(m, threads, row_block)
+        } else {
+            row_block(0..m)
+        };
         return Ok(ArrayVal {
             shape: out_shape,
             data: Data::F32(out),
@@ -1245,11 +1422,18 @@ fn eval_conv(cd: &ConvDims, x: &ArrayVal, w: &ArrayVal, out_shape: Vec<usize>) -
         bail!("convolution geometry mismatch");
     }
     let cog = co / g;
-    let mut out = vec![0f32; n * oh * ow * co];
-    for b in 0..n {
-        for oy in 0..oh {
+    // one work unit = one (batch, output-row) pair; units write disjoint
+    // contiguous spans of the output and keep the exact sequential
+    // accumulation order, so the pool fan-out is bit-identical at any
+    // width (and runs inline when nested inside a pool worker)
+    let units = n * oh;
+    let row_len = ow * co;
+    let unit_block = |r: std::ops::Range<usize>| -> Vec<f32> {
+        let mut part = vec![0f32; r.len() * row_len];
+        for (pu, u) in r.enumerate() {
+            let (b, oy) = (u / oh, u % oh);
             for ox in 0..ow {
-                let obase = ((b * oh + oy) * ow + ox) * co;
+                let obase = pu * row_len + ox * co;
                 for ky in 0..kh {
                     let iy = (oy * cd.stride[0] + ky) as i64 - cd.pad_lo[0];
                     if iy < 0 || iy as usize >= h {
@@ -1268,13 +1452,21 @@ fn eval_conv(cd: &ConvDims, x: &ArrayVal, w: &ArrayVal, out_shape: Vec<usize>) -
                             for c in 0..cig {
                                 acc += xv[ibase + grp * cig + c] * wv[wbase + c * co + oc];
                             }
-                            out[obase + oc] += acc;
+                            part[obase + oc] += acc;
                         }
                     }
                 }
             }
         }
-    }
+        part
+    };
+    let threads = linear_fanout();
+    let macs = units * ow * co * kh * kw * cig;
+    let out = if threads > 1 && units > 1 && macs >= PAR_MIN_MACS {
+        crate::util::pool::run_chunks_flat(units, threads, unit_block)
+    } else {
+        unit_block(0..units)
+    };
     Ok(ArrayVal {
         shape: out_shape,
         data: Data::F32(out),

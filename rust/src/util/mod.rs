@@ -1,6 +1,6 @@
-//! Shared substrate utilities: PRNG + noise streams, scoped thread pool,
-//! stats, JSON, tensor bundles, CLI, bench harness, and the mini
-//! property-testing driver.
+//! Shared substrate utilities: PRNG + noise streams, the persistent
+//! worker pool, stats, JSON, tensor bundles, CLI, bench harness, and the
+//! mini property-testing driver.
 
 pub mod bench;
 pub mod bin_io;

@@ -1,4 +1,4 @@
-//! Minimal std-only fork-join helpers (`std::thread::scope`).
+//! Persistent std-only worker pool (long-lived threads fed over `mpsc`).
 //!
 //! The vendored crate set has no rayon; everything the simulator needs is
 //! "split this index range / item list across N cores and join".  Results
@@ -6,20 +6,72 @@
 //! work items themselves are (which the [`StreamKey`] noise streams
 //! guarantee — see `util::rng`).
 //!
-//! Threads are spawned per call, not pooled: the analogue spans these
-//! helpers fan out (hundreds of µs to seconds of MVM work) dwarf the
-//! ~10 µs spawn+join cost.  For very small digital batches the serving
-//! path should prefer `--threads 1`; a persistent worker pool is a
-//! recorded follow-up (ROADMAP) to be justified by the EXPERIMENTS.md
-//! serving p99 numbers, not assumed.
+//! Workers are **pooled, not spawned per call**: the first dispatching
+//! call lazily spawns long-lived worker threads (capped by
+//! `MEMDYN_THREADS`, else the machine's available parallelism) that block
+//! on a shared `mpsc` job queue.  Per-call `thread::scope` spawn+join was
+//! fine for analogue spans (hundreds of µs to seconds of MVM work per
+//! chunk) but its ~10 µs per-thread cost dominates small digital batches
+//! on the serving path; with the pool a dispatch is one channel send.
+//! [`run_chunks_scoped`] keeps the old fork-join implementation as the
+//! reference the `spawn_overhead` bench and the property tests compare
+//! against.
+//!
+//! Rules of the pool:
+//!
+//! * **The caller works too.** `run_chunks` hands chunks `1..` to the
+//!   pool and runs chunk `0` on the calling thread, so a width-`t` call
+//!   occupies the caller plus `t - 1` workers.
+//! * **Nested calls run inline.** A pool call made *from inside a pool
+//!   worker* executes sequentially on that worker (no re-dispatch).
+//!   Workers therefore never block on the queue they drain, which rules
+//!   out exhaustion deadlock by construction; results are unchanged
+//!   because chunking never affects values, only scheduling.
+//! * **No idle lane, no dispatch.** A call that finds no free lane
+//!   (every worker accounted for by queued-or-running tasks, or none
+//!   spawnable) runs inline rather than parking its chunks behind
+//!   unrelated jobs on the FIFO queue — head-of-line blocking would
+//!   make small fan-outs slower than serial.  Scheduling-only, like
+//!   the nesting rule.
+//! * **Panics propagate.** A panicking chunk is caught on the worker,
+//!   shipped back, and re-raised on the caller *after* every sibling
+//!   chunk has finished — no borrow held by a job can outlive the call.
+//! * **Shutdown is explicit and optional.** [`restart`] drains and joins
+//!   the workers (never call it from inside a pool task); the next
+//!   dispatching call re-spawns lazily.  Exiting the process with idle
+//!   workers parked on the queue is fine.
 //!
 //! [`StreamKey`]: crate::util::rng::StreamKey
 
 use std::ops::Range;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
 
-/// Worker count for parallel sections: `MEMDYN_THREADS` if set, else the
-/// machine's available parallelism, else 1.
+/// Process-local override for [`max_threads`] (0 = none).  Mutating
+/// `MEMDYN_THREADS` itself via `env::set_var` races with concurrent
+/// `env::var` readers (libc getenv/setenv are not thread-safe), so
+/// multi-threaded test binaries and the bench sweeps pin the width here
+/// instead.
+static THREADS_OVERRIDE: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(0);
+
+/// Pin [`max_threads`] — and with it every default fan-out width and the
+/// pool's worker cap — standing in for `MEMDYN_THREADS` where touching
+/// the process environment would be racy.  0 restores the default.
+/// Usually paired with [`restart`] so the worker set re-grows under the
+/// new cap.
+pub fn set_max_threads(threads: usize) {
+    THREADS_OVERRIDE.store(threads, std::sync::atomic::Ordering::Relaxed);
+}
+
+/// Worker count for parallel sections: the [`set_max_threads`] override
+/// if set, else `MEMDYN_THREADS`, else the machine's available
+/// parallelism, else 1.
 pub fn max_threads() -> usize {
+    match THREADS_OVERRIDE.load(std::sync::atomic::Ordering::Relaxed) {
+        0 => {}
+        n => return n,
+    }
     if let Ok(v) = std::env::var("MEMDYN_THREADS") {
         if let Ok(n) = v.parse::<usize>() {
             return n.max(1);
@@ -28,6 +80,166 @@ pub fn max_threads() -> usize {
     std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(1)
+}
+
+/// Absolute ceiling on pool size, guarding against absurd width requests.
+const MAX_WORKERS: usize = 256;
+
+/// The pool's worker-count cap (re-read on every spawn decision so a
+/// [`restart`] picks up a new `MEMDYN_THREADS`/[`set_max_threads`] cap).
+fn worker_cap() -> usize {
+    max_threads().min(MAX_WORKERS)
+}
+
+/// A type-erased unit of work (lifetime erased by `erase_task`).
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+struct PoolState {
+    tx: Sender<Task>,
+    rx: Arc<Mutex<Receiver<Task>>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+/// Tasks submitted and not yet finished — queued *or* running, so a
+/// backlogged queue reads as "no idle lane".  Each task decrements the
+/// counter itself, *before* shipping its result: a caller that has
+/// collected all its results therefore observes a drained counter, and
+/// back-to-back dispatches (consecutive kernels, the server's batch
+/// loop) never see a stale "busy" reading for work that already
+/// completed.  Dispatchers use this to avoid parking chunks behind
+/// unrelated jobs on the FIFO queue (head-of-line blocking), which
+/// would make small fan-outs slower than serial.
+static OUTSTANDING_TASKS: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(0);
+
+impl PoolState {
+    fn new() -> Self {
+        let (tx, rx) = channel::<Task>();
+        PoolState {
+            tx,
+            rx: Arc::new(Mutex::new(rx)),
+            workers: Vec::new(),
+        }
+    }
+
+    /// Lazily spawn workers until `want` are live (clamped to the cap).
+    /// Best-effort: a spawn failure (thread limit) leaves the pool at
+    /// its current size instead of panicking — dispatch works at any
+    /// worker count, including zero (see `submit`).  Panicking here
+    /// would unwind a `run_chunks` caller while lifetime-erased tasks
+    /// still borrow its stack, which must never happen.
+    fn ensure_workers(&mut self, want: usize) {
+        let want = want.min(worker_cap());
+        while self.workers.len() < want {
+            let rx = Arc::clone(&self.rx);
+            let idx = self.workers.len();
+            match std::thread::Builder::new()
+                .name(format!("memdyn-pool-{idx}"))
+                .spawn(move || worker_loop(rx))
+            {
+                Ok(handle) => self.workers.push(handle),
+                Err(_) => break,
+            }
+        }
+    }
+}
+
+static POOL: Mutex<Option<PoolState>> = Mutex::new(None);
+
+thread_local! {
+    static IN_WORKER: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+fn in_worker() -> bool {
+    IN_WORKER.with(|w| w.get())
+}
+
+fn worker_loop(rx: Arc<Mutex<Receiver<Task>>>) {
+    IN_WORKER.with(|w| w.set(true));
+    loop {
+        // hold the lock only for the blocking recv; run the task after
+        // the guard is dropped so siblings can pick up the next job
+        let task = {
+            let guard = rx.lock().unwrap_or_else(|e| e.into_inner());
+            guard.recv()
+        };
+        match task {
+            Ok(task) => task(), // the task body maintains OUTSTANDING_TASKS
+            Err(_) => return,   // queue drained and pool shut down
+        }
+    }
+}
+
+/// Erase the lifetime of a boxed task.
+///
+/// # Safety
+///
+/// The caller must not return (or unwind) until the task has either run
+/// to completion or been destroyed unrun — `run_chunks` guarantees this
+/// by draining one result message per submitted job before returning.
+unsafe fn erase_task<'a>(task: Box<dyn FnOnce() + Send + 'a>) -> Task {
+    std::mem::transmute::<Box<dyn FnOnce() + Send + 'a>, Task>(task)
+}
+
+/// Grow the pool toward `want` workers and report whether dispatching
+/// is worthwhile right now: returns a sender only when at least one
+/// worker exists *and* at least one lane is idle.  With every worker
+/// busy, queued chunks would sit behind unrelated jobs while the caller
+/// blocks — running inline is strictly better.
+fn acquire_lanes(want: usize) -> Option<Sender<Task>> {
+    let mut guard = POOL.lock().unwrap_or_else(|e| e.into_inner());
+    let state = guard.get_or_insert_with(PoolState::new);
+    state.ensure_workers(want);
+    let alive = state.workers.len();
+    let outstanding = OUTSTANDING_TASKS.load(std::sync::atomic::Ordering::Relaxed);
+    if alive == 0 || outstanding >= alive {
+        None
+    } else {
+        Some(state.tx.clone())
+    }
+}
+
+/// Submit a task on a sender obtained from `acquire_lanes`.  If the
+/// pool was shut down in between, the task runs inline on the caller.
+fn submit(tx: &Sender<Task>, task: Task) {
+    if let Err(returned) = tx.send(task) {
+        (returned.0)();
+    }
+}
+
+/// Pre-spawn workers for a width-`threads` caller (e.g. at server start),
+/// so the first request does not pay the lazy spawn.  No-op at width 1.
+pub fn prewarm(threads: usize) {
+    if threads <= 1 {
+        return;
+    }
+    let mut guard = POOL.lock().unwrap_or_else(|e| e.into_inner());
+    guard
+        .get_or_insert_with(PoolState::new)
+        .ensure_workers(threads - 1);
+}
+
+/// Live worker-thread count (0 before the first dispatch or after
+/// [`restart`]).  Observability for tests and the bench harness.
+pub fn workers_alive() -> usize {
+    POOL.lock()
+        .unwrap_or_else(|e| e.into_inner())
+        .as_ref()
+        .map_or(0, |s| s.workers.len())
+}
+
+/// Shut the pool down: close the queue, let workers drain any queued
+/// jobs, and join them.  The next dispatching call re-spawns lazily, so
+/// this is a *restart* from the caller's point of view.  Must not be
+/// called from inside a pool task (a worker cannot join itself).
+pub fn restart() {
+    let state = POOL.lock().unwrap_or_else(|e| e.into_inner()).take();
+    if let Some(state) = state {
+        drop(state.tx);
+        drop(state.rx);
+        for handle in state.workers {
+            let _ = handle.join();
+        }
+    }
 }
 
 /// Split `0..n` into at most `threads` contiguous chunks of near-equal
@@ -47,10 +259,115 @@ pub fn chunk_ranges(n: usize, threads: usize) -> Vec<Range<usize>> {
     out
 }
 
-/// Run `f` over the chunks of `0..n` on up to `threads` scoped threads;
-/// returns per-chunk results in chunk order.  `threads <= 1` (or a single
-/// chunk) runs inline on the caller's thread.
+/// Run `f` over the chunks of `0..n` on up to `threads` lanes of the
+/// persistent pool; returns per-chunk results in chunk order.  The caller
+/// runs chunk 0 itself; `threads <= 1` (or a single chunk, or a call from
+/// inside a pool worker) runs fully inline on the caller's thread.
 pub fn run_chunks<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(Range<usize>) -> T + Sync,
+{
+    let mut ranges = chunk_ranges(n, threads);
+    if ranges.len() <= 1 || in_worker() {
+        return ranges.into_iter().map(&f).collect();
+    }
+    let n_rest = ranges.len() - 1;
+    let Some(pool_tx) = acquire_lanes(n_rest) else {
+        // no idle lane (or no spawnable worker): inline beats queueing
+        // behind unrelated jobs
+        return ranges.into_iter().map(&f).collect();
+    };
+    let first = ranges.remove(0);
+    let (rtx, rrx) = channel::<(usize, std::thread::Result<T>)>();
+    for (i, r) in ranges.into_iter().enumerate() {
+        let tx = rtx.clone();
+        let fref = &f;
+        let task: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+            let res = catch_unwind(AssertUnwindSafe(|| fref(r)));
+            // drain the lane accounting before delivering the result, so
+            // a dispatcher that has seen every result also sees the
+            // counter at rest (no stale-busy window)
+            OUTSTANDING_TASKS.fetch_sub(1, std::sync::atomic::Ordering::Relaxed);
+            let _ = tx.send((i, res));
+        });
+        OUTSTANDING_TASKS.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        // SAFETY: the task borrows `f` and carries a non-'static `T`.
+        // Nothing on this path panics before the drain loop below, which
+        // collects one result message per job before returning or
+        // unwinding; a queue disconnect (the only early exit) proves
+        // every job closure — and thus every borrow — is already gone.
+        let task = unsafe { erase_task(task) };
+        submit(&pool_tx, task);
+    }
+    drop(rtx);
+    // the caller thread takes the first chunk instead of blocking idle
+    let r0 = catch_unwind(AssertUnwindSafe(|| f(first)));
+    let mut rest: Vec<Option<std::thread::Result<T>>> = Vec::with_capacity(n_rest);
+    rest.resize_with(n_rest, || None);
+    let mut received = 0usize;
+    while received < n_rest {
+        match rrx.recv() {
+            Ok((i, res)) => {
+                rest[i] = Some(res);
+                received += 1;
+            }
+            Err(_) => break, // every job ran or was destroyed unrun
+        }
+    }
+    let mut out = Vec::with_capacity(n_rest + 1);
+    match r0 {
+        Ok(v) => out.push(v),
+        Err(payload) => resume_unwind(payload),
+    }
+    for (i, slot) in rest.into_iter().enumerate() {
+        match slot {
+            Some(Ok(v)) => out.push(v),
+            Some(Err(payload)) => resume_unwind(payload),
+            None => panic!("pool dropped chunk {} (shut down mid-call)", i + 1),
+        }
+    }
+    out
+}
+
+/// Map `f` over `0..n` items on up to `threads` pool lanes; returns the
+/// per-item results in item order.
+pub fn map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let per_chunk = run_chunks(n, threads, |r| r.map(&f).collect::<Vec<T>>());
+    per_chunk.into_iter().flatten().collect()
+}
+
+/// Run `f` over the chunks of `0..n` and concatenate the per-chunk Vecs
+/// in chunk order — the "rows of a fixed-width output" pattern shared by
+/// the keyed crossbar matmul and the interpreter's `dot`/`convolution`
+/// fan-outs.  A single chunk is returned without copying.
+pub fn run_chunks_flat<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(Range<usize>) -> Vec<T> + Sync,
+{
+    let mut parts = run_chunks(n, threads, f);
+    if parts.len() == 1 {
+        return parts.pop().unwrap();
+    }
+    let total = parts.iter().map(Vec::len).sum();
+    let mut out = Vec::with_capacity(total);
+    for p in parts {
+        out.extend(p);
+    }
+    out
+}
+
+/// The pre-pool implementation: run `f` over the chunks of `0..n` on
+/// per-call `std::thread::scope` threads.  Kept as the dispatch-cost
+/// reference for the `spawn_overhead` bench rows and as the independent
+/// oracle the pool property tests compare against; production call sites
+/// use [`run_chunks`].
+pub fn run_chunks_scoped<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
 where
     T: Send,
     F: Fn(Range<usize>) -> T + Sync,
@@ -60,26 +377,12 @@ where
         return ranges.into_iter().map(&f).collect();
     }
     std::thread::scope(|s| {
-        let handles: Vec<_> = ranges
-            .into_iter()
-            .map(|r| s.spawn(|| f(r)))
-            .collect();
+        let handles: Vec<_> = ranges.into_iter().map(|r| s.spawn(|| f(r))).collect();
         handles
             .into_iter()
-            .map(|h| h.join().expect("pool worker panicked"))
+            .map(|h| h.join().expect("scoped worker panicked"))
             .collect()
     })
-}
-
-/// Map `f` over `0..n` items on up to `threads` scoped threads; returns
-/// the per-item results in item order.
-pub fn map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
-where
-    T: Send,
-    F: Fn(usize) -> T + Sync,
-{
-    let per_chunk = run_chunks(n, threads, |r| r.map(&f).collect::<Vec<T>>());
-    per_chunk.into_iter().flatten().collect()
 }
 
 #[cfg(test)]
@@ -121,5 +424,51 @@ mod tests {
         // must not deadlock or reorder with threads == 1
         let got = map(5, 1, |i| i + 1);
         assert_eq!(got, vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn pooled_matches_scoped_reference() {
+        for (n, t) in [(0usize, 3usize), (1, 4), (9, 2), (64, 8), (5, 9)] {
+            let pooled = run_chunks(n, t, |r| r.map(|i| i * 7 + 1).sum::<usize>());
+            let scoped = run_chunks_scoped(n, t, |r| r.map(|i| i * 7 + 1).sum::<usize>());
+            assert_eq!(pooled, scoped, "n={n} t={t}");
+        }
+    }
+
+    #[test]
+    fn nested_call_from_worker_runs_inline() {
+        // inner pool call inside a pool job must complete (no deadlock)
+        // and agree with the flat computation
+        let inner_sum: usize = (0..16).map(|i| i + 1).sum();
+        let got = run_chunks(8, 4, |outer| {
+            let inner: usize = map(16, 4, |i| i + 1).into_iter().sum();
+            outer.sum::<usize>() + inner
+        });
+        let want: Vec<usize> = chunk_ranges(8, 4)
+            .into_iter()
+            .map(|r| r.sum::<usize>() + inner_sum)
+            .collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    #[should_panic(expected = "boom")]
+    fn worker_panic_propagates_to_caller() {
+        let _ = run_chunks(4, 4, |r| {
+            if r.start == 2 {
+                panic!("boom");
+            }
+            r.len()
+        });
+    }
+
+    #[test]
+    fn pool_is_capped_and_survives_restart() {
+        let before = map(40, 4, |i| i * 3);
+        assert!(workers_alive() <= worker_cap());
+        restart();
+        let after = map(40, 4, |i| i * 3);
+        assert_eq!(before, after);
+        assert!(workers_alive() <= worker_cap());
     }
 }

@@ -30,6 +30,20 @@ impl<'a> Gen<'a> {
             .map(|_| [-1.0f32, 0.0, 1.0][self.rng.below(3)])
             .collect()
     }
+
+    /// Size-like value that *includes zero* (scaled by current size) —
+    /// for properties over collection lengths where the empty case is a
+    /// required corner (e.g. pool chunking with `n = 0`).
+    pub fn dim0(&mut self, max: usize) -> usize {
+        let hi = (max * self.size / 100).max(1);
+        self.rng.below(hi + 1)
+    }
+
+    /// Thread-count-like value in `[1, max]`, biased by size so small
+    /// cases probe width 1 and large cases probe oversubscription.
+    pub fn threads(&mut self, max: usize) -> usize {
+        1 + self.rng.below(self.dim(max))
+    }
 }
 
 /// Run a property over `cases` random inputs.  Panics with a reproducible

@@ -4,6 +4,11 @@
 //! layers + analogue CAM) so it needs no artifacts and exercises the whole
 //! keyed noise chain: per-request streams -> per-layer ids -> per-tile
 //! derivation -> CAM search keys.
+//!
+//! The pooled sweep below additionally locks down the persistent worker
+//! pool: logits, exit decisions *and CIM energy counters* are
+//! bit-identical at every width, across `MEMDYN_THREADS`, and across a
+//! pool restart within one process.
 
 use anyhow::Result;
 
@@ -213,6 +218,105 @@ fn parallel_trace_matches_sequential_bitwise() {
             "{threads} threads: head logits diverged"
         );
     }
+}
+
+/// Total device-usage counters across every analogue surface the toy
+/// model touches (3 crossbar layers + the analogue CAM).  Drains the
+/// counters, so call exactly once per engine run.
+fn energy(e: &Engine<XbarToy>) -> memdyn::cim::CimCounters {
+    let mut total = memdyn::cim::CimCounters::default();
+    for layer in &e.model.layers {
+        total.add(&layer.take_counters());
+    }
+    total.add(&e.memory.take_counters());
+    total
+}
+
+fn assert_outcomes_eq(
+    want: &[memdyn::coordinator::engine::Outcome],
+    got: &[memdyn::coordinator::engine::Outcome],
+    tag: &str,
+) {
+    assert_eq!(want.len(), got.len(), "{tag}: batch size");
+    for (i, (a, b)) in want.iter().zip(got).enumerate() {
+        assert_eq!(a.class, b.class, "{tag}: sample {i} class");
+        assert_eq!(a.exit, b.exit, "{tag}: sample {i} exit");
+        assert_eq!(a.exited_early, b.exited_early, "{tag}: sample {i} early");
+        assert!(
+            a.similarity == b.similarity
+                || (a.similarity.is_nan() && b.similarity.is_nan()),
+            "{tag}: sample {i} similarity {} vs {}",
+            a.similarity,
+            b.similarity
+        );
+    }
+}
+
+#[test]
+fn pooled_thread_sweep_is_bit_identical_including_energy_counters() {
+    let n = 12;
+    let xs = inputs(n);
+    let seq = engine(1);
+    let want = seq.infer_batch(&xs, n).unwrap();
+    assert!(want.iter().any(|o| o.exited_early), "no early exits");
+    assert!(want.iter().any(|o| !o.exited_early), "no head exits");
+    let want_energy = energy(&seq);
+    assert!(want_energy.mvms > 0, "toy model must touch the crossbars");
+    for threads in [2usize, 4, 8] {
+        let par = engine(threads);
+        let got = par.infer_batch(&xs, n).unwrap();
+        assert_outcomes_eq(&want, &got, &format!("{threads} threads"));
+        assert_eq!(
+            energy(&par),
+            want_energy,
+            "{threads} threads: CIM energy counters diverged"
+        );
+    }
+}
+
+#[test]
+fn pool_restart_within_process_preserves_results() {
+    let n = 10;
+    let xs = inputs(n);
+    let before_engine = engine(4);
+    let before = before_engine.infer_batch(&xs, n).unwrap();
+    let before_energy = energy(&before_engine);
+    // tear the pool down mid-process; the next dispatch respawns lazily
+    memdyn::util::pool::restart();
+    let after_engine = engine(4);
+    let after = after_engine.infer_batch(&xs, n).unwrap();
+    let after_energy = energy(&after_engine);
+    assert_outcomes_eq(&before, &after, "after pool restart");
+    assert_eq!(before_energy, after_energy, "energy counters after restart");
+}
+
+#[test]
+fn worker_cap_sweep_is_bit_identical() {
+    // pool::set_max_threads is the MEMDYN_THREADS cap minus the env read
+    // (env::set_var would race with concurrent env::var readers in this
+    // multi-threaded test binary).  Every cap in {1, 2, 4, 8} must
+    // produce the same bits: the cap affects scheduling only.
+    let n = 10;
+    let xs = inputs(n);
+    memdyn::util::pool::set_max_threads(1);
+    let seq = engine(4);
+    let want = seq.infer_batch(&xs, n).unwrap();
+    let want_energy = energy(&seq);
+    for cap in [2usize, 4, 8] {
+        memdyn::util::pool::set_max_threads(cap);
+        // restart so the worker set is re-grown under the new cap
+        memdyn::util::pool::restart();
+        let par = engine(4);
+        let got = par.infer_batch(&xs, n).unwrap();
+        assert_outcomes_eq(&want, &got, &format!("worker cap {cap}"));
+        assert_eq!(
+            energy(&par),
+            want_energy,
+            "worker cap {cap}: CIM energy counters diverged"
+        );
+    }
+    memdyn::util::pool::set_max_threads(0);
+    memdyn::util::pool::restart();
 }
 
 #[test]

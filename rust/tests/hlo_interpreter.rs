@@ -503,6 +503,194 @@ ENTRY main.1 {
 }
 
 // ---------------------------------------------------------------------------
+// aliasing regressions: the in-place dynamic-update-slice discipline
+// ---------------------------------------------------------------------------
+
+/// A `while` loop whose carried `f32[8]` buffer is dead outside the loop:
+/// after the first iteration the buffer's `Arc` is uniquely held, so the
+/// evaluator MUST update it in place (no per-iteration copy).
+const WHILE_DUS_TEXT: &str = "HloModule w
+cond.1 {
+  p.2 = (f32[8], s32[]) parameter(0)
+  i.3 = s32[] get-tuple-element(p.2), index=1
+  c.4 = s32[] constant(4)
+  ROOT lt.5 = pred[] compare(i.3, c.4), direction=LT
+}
+body.6 {
+  p.7 = (f32[8], s32[]) parameter(0)
+  buf.8 = f32[8] get-tuple-element(p.7), index=0
+  i.9 = s32[] get-tuple-element(p.7), index=1
+  one.10 = f32[1] constant({1})
+  upd.11 = f32[8] dynamic-update-slice(buf.8, one.10, i.9)
+  c.12 = s32[] constant(1)
+  ni.13 = s32[] add(i.9, c.12)
+  ROOT t.14 = (f32[8], s32[]) tuple(upd.11, ni.13)
+}
+ENTRY main.15 {
+  z.16 = f32[8] parameter(0)
+  c.17 = s32[] constant(0)
+  t.18 = (f32[8], s32[]) tuple(z.16, c.17)
+  w.19 = (f32[8], s32[]) while(t.18), condition=cond.1, body=body.6
+  ROOT g.20 = f32[8] get-tuple-element(w.19), index=0
+}
+";
+
+#[test]
+fn while_loop_dus_reuses_uniquely_held_buffer_in_place() {
+    // counters are process-global and monotone: concurrent tests can only
+    // add, so the deltas below are lower bounds on *this* run's behavior
+    let in_place_before = memdyn::hlo::eval::dus_in_place_count();
+    let got = out_f32(&run(WHILE_DUS_TEXT, &[vf32(&[8], vec![0.0; 8])]));
+    assert_eq!(got, vec![1.0, 1.0, 1.0, 1.0, 0.0, 0.0, 0.0, 0.0]);
+    let in_place_delta = memdyn::hlo::eval::dus_in_place_count() - in_place_before;
+    // 4 iterations: iteration 1 must copy (the caller still holds the
+    // input buffer), iterations 2-4 must reuse
+    assert!(
+        in_place_delta >= 3,
+        "expected >= 3 in-place dynamic-update-slice executions, saw {in_place_delta}"
+    );
+}
+
+#[test]
+fn while_loop_dus_must_not_mutate_buffer_live_after_the_loop() {
+    // same loop shape, but the loop-carried operand is ALSO consumed
+    // after the loop: the first write may never be applied in place to
+    // the shared buffer, or `z + loop_result` silently corrupts
+    let text = "HloModule alias
+cond.1 {
+  p.2 = (f32[4], s32[]) parameter(0)
+  i.3 = s32[] get-tuple-element(p.2), index=1
+  c.4 = s32[] constant(4)
+  ROOT lt.5 = pred[] compare(i.3, c.4), direction=LT
+}
+body.6 {
+  p.7 = (f32[4], s32[]) parameter(0)
+  buf.8 = f32[4] get-tuple-element(p.7), index=0
+  i.9 = s32[] get-tuple-element(p.7), index=1
+  nine.10 = f32[1] constant({9})
+  upd.11 = f32[4] dynamic-update-slice(buf.8, nine.10, i.9)
+  c.12 = s32[] constant(1)
+  ni.13 = s32[] add(i.9, c.12)
+  ROOT t.14 = (f32[4], s32[]) tuple(upd.11, ni.13)
+}
+ENTRY main.15 {
+  z.16 = f32[4] parameter(0)
+  c.17 = s32[] constant(0)
+  t.18 = (f32[4], s32[]) tuple(z.16, c.17)
+  w.19 = (f32[4], s32[]) while(t.18), condition=cond.1, body=body.6
+  wb.20 = f32[4] get-tuple-element(w.19), index=0
+  ROOT s.21 = f32[4] add(wb.20, z.16)
+}
+";
+    let got = out_f32(&run(text, &[vf32(&[4], vec![1.0, 2.0, 3.0, 4.0])]));
+    // loop overwrites every lane with 9; z must still be [1,2,3,4]
+    assert_eq!(got, vec![10.0, 11.0, 12.0, 13.0]);
+}
+
+#[test]
+fn straight_line_dus_reuses_fresh_buffer_and_copies_shared_one() {
+    // `a = x + x` is freshly allocated and dies at the update: MUST reuse.
+    // `x` itself is a parameter the caller still holds: updating it must
+    // leave the original readable (checked through the second output).
+    let text = "HloModule d
+ENTRY main.1 {
+  x.2 = f32[6] parameter(0)
+  u.3 = f32[2] parameter(1)
+  s.4 = s32[] constant(1)
+  a.5 = f32[6] add(x.2, x.2)
+  fresh.6 = f32[6] dynamic-update-slice(a.5, u.3, s.4)
+  shared.7 = f32[6] dynamic-update-slice(x.2, u.3, s.4)
+  back.8 = f32[6] add(shared.7, x.2)
+  ROOT t.9 = (f32[6], f32[6]) tuple(fresh.6, back.8)
+}
+";
+    let in_place_before = memdyn::hlo::eval::dus_in_place_count();
+    let copied_before = memdyn::hlo::eval::dus_copied_count();
+    let out = run(
+        text,
+        &[
+            vf32(&[6], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]),
+            vf32(&[2], vec![40.0, 50.0]),
+        ],
+    );
+    let parts = out.as_tuple().expect("tuple result");
+    let fresh = match &parts[0].as_arr().unwrap().data {
+        Data::F32(d) => d.clone(),
+        other => panic!("expected f32, got {other:?}"),
+    };
+    let back = match &parts[1].as_arr().unwrap().data {
+        Data::F32(d) => d.clone(),
+        other => panic!("expected f32, got {other:?}"),
+    };
+    assert_eq!(fresh, vec![2.0, 40.0, 50.0, 8.0, 10.0, 12.0]);
+    // shared.7 = [1,40,50,4,5,6]; x.2 unchanged when the add reads it
+    assert_eq!(back, vec![2.0, 42.0, 53.0, 8.0, 10.0, 12.0]);
+    assert!(
+        memdyn::hlo::eval::dus_in_place_count() - in_place_before >= 1,
+        "uniquely held operand must be updated in place"
+    );
+    assert!(
+        memdyn::hlo::eval::dus_copied_count() - copied_before >= 1,
+        "operand with live references must be copied"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// row-parallel dot/convolution: bit-identical at every fan-out width
+// ---------------------------------------------------------------------------
+
+#[test]
+fn dot_row_parallelism_is_bit_identical_across_fanout() {
+    // 32x64 @ 64x64 = 131072 MACs, above the fan-out threshold
+    let text = "HloModule d
+ENTRY main.1 {
+  a.2 = f32[32,64] parameter(0)
+  b.3 = f32[64,64] parameter(1)
+  ROOT d.4 = f32[32,64] dot(a.2, b.3), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+";
+    let a: Vec<f32> = (0..32 * 64).map(|i| ((i % 13) as f32 - 6.0) * 0.17).collect();
+    let b: Vec<f32> = (0..64 * 64).map(|i| ((i % 7) as f32 - 3.0) * 0.29).collect();
+    let mut outs = Vec::new();
+    for threads in [1usize, 4] {
+        memdyn::hlo::eval::set_linear_fanout(threads);
+        outs.push(out_f32(&run(
+            text,
+            &[vf32(&[32, 64], a.clone()), vf32(&[64, 64], b.clone())],
+        )));
+    }
+    memdyn::hlo::eval::set_linear_fanout(0);
+    assert_eq!(outs[0], outs[1], "dot rows diverged between fanout 1 and 4");
+}
+
+#[test]
+fn convolution_row_parallelism_is_bit_identical_across_fanout() {
+    // 8 output rows x 8x16x(3*3*8) = 73728 MACs, above the threshold
+    let text = "HloModule c
+ENTRY main.1 {
+  x.2 = f32[1,8,8,8] parameter(0)
+  w.3 = f32[3,3,8,16] parameter(1)
+  ROOT c.4 = f32[1,8,8,16] convolution(x.2, w.3), window={size=3x3 pad=1_1x1_1}, dim_labels=b01f_01io->b01f
+}
+";
+    let x: Vec<f32> = (0..8 * 8 * 8).map(|i| (i as f32 * 0.13).sin()).collect();
+    let w: Vec<f32> = (0..3 * 3 * 8 * 16).map(|i| ((i % 11) as f32 - 5.0) * 0.07).collect();
+    let mut outs = Vec::new();
+    for threads in [1usize, 4] {
+        memdyn::hlo::eval::set_linear_fanout(threads);
+        outs.push(out_f32(&run(
+            text,
+            &[vf32(&[1, 8, 8, 8], x.clone()), vf32(&[3, 3, 8, 16], w.clone())],
+        )));
+    }
+    memdyn::hlo::eval::set_linear_fanout(0);
+    assert_eq!(
+        outs[0], outs[1],
+        "convolution rows diverged between fanout 1 and 4"
+    );
+}
+
+// ---------------------------------------------------------------------------
 // artifact census + end-to-end conformance (need `make artifacts`)
 // ---------------------------------------------------------------------------
 
@@ -604,6 +792,52 @@ fn xla_resnet_parity_with_native_digital_within_1e4() {
     for (a, b) in xla_logits.iter().zip(&nat_logits) {
         assert!(close(*a, *b, 1e-4), "logits: xla {a} vs native {b}");
     }
+}
+
+#[test]
+fn xla_resnet_parity_holds_under_row_parallel_kernels() {
+    // the 1e-4 xla-vs-native gate re-run with the interpreter's
+    // dot/convolution row fan-out pinned to 1 and 4: outputs must stay
+    // within tolerance of the native forward at both widths AND be
+    // bit-identical to each other
+    let Some(dir) = artifacts() else { return };
+    let bundle = ModelBundle::load(&dir, "resnet").unwrap();
+    let data = DatasetBundle::load(&dir, "mnist").unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let xla = XlaResNetModel::load(&rt, &bundle).unwrap();
+    let mut rng = Pcg64::new(1);
+    let native =
+        NativeResNet::build(&bundle, WeightSource::Ternary, &NoiseSpec::Digital, &mut rng)
+            .unwrap();
+
+    let batch = 2usize;
+    let input = &data.x_test[..batch * data.sample_len];
+    let feat = memdyn::nn::resnet::image_feature(input, batch, 28).unwrap();
+    let keys: Vec<StreamKey> =
+        (0..batch as u64).map(|i| StreamKey::root(1).child(i)).collect();
+    let (nat_logits, _) = native.forward(&feat, &keys);
+
+    let mut per_fanout: Vec<Vec<f32>> = Vec::new();
+    for threads in [1usize, 4] {
+        memdyn::hlo::eval::set_linear_fanout(threads);
+        let mut state = xla.init(input, batch, 0).unwrap();
+        for i in 0..xla.n_blocks() {
+            let _ = xla.step(i, &mut state).unwrap();
+        }
+        let logits = xla.finish(&state).unwrap();
+        for (a, b) in logits.iter().zip(&nat_logits) {
+            assert!(
+                close(*a, *b, 1e-4),
+                "fanout {threads}: xla {a} vs native {b}"
+            );
+        }
+        per_fanout.push(logits);
+    }
+    memdyn::hlo::eval::set_linear_fanout(0);
+    assert_eq!(
+        per_fanout[0], per_fanout[1],
+        "interpreter logits diverged between fanout 1 and 4"
+    );
 }
 
 #[test]

@@ -10,8 +10,106 @@ use memdyn::device::DeviceConfig;
 use memdyn::nn::ops;
 use memdyn::opt::ExitTrace;
 use memdyn::util::json::Json;
+use memdyn::util::pool;
 use memdyn::util::proptest::forall;
 use memdyn::util::rng::Pcg64;
+
+// ---------------------------------------------------------------------------
+// persistent worker pool: chunking is a partition, pooled == sequential
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_chunk_ranges_is_a_partition() {
+    // random (n, threads) including n = 0, threads = 1, threads > n
+    forall(
+        21,
+        80,
+        |g| (g.dim0(64), g.threads(12)),
+        |&(n, threads)| {
+            let rs = pool::chunk_ranges(n, threads);
+            if rs.len() > threads.max(1) {
+                return Err(format!("{} chunks for {threads} threads", rs.len()));
+            }
+            let mut at = 0usize;
+            for r in &rs {
+                if r.start != at {
+                    return Err(format!("gap/overlap at {at}: chunk starts {}", r.start));
+                }
+                if n > 0 && r.is_empty() {
+                    return Err(format!("empty chunk {r:?} with n = {n}"));
+                }
+                at = r.end;
+            }
+            if at != n {
+                return Err(format!("chunks cover 0..{at}, want 0..{n}"));
+            }
+            // near-equal sizes: largest and smallest differ by at most 1
+            if n > 0 {
+                let lens: Vec<usize> = rs.iter().map(|r| r.len()).collect();
+                let (lo, hi) = (lens.iter().min().unwrap(), lens.iter().max().unwrap());
+                if hi - lo > 1 {
+                    return Err(format!("uneven chunks {lens:?}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_pooled_run_chunks_and_map_match_sequential() {
+    forall(
+        22,
+        60,
+        |g| (g.dim0(48), g.threads(10), g.rng.below(1000) as u64),
+        |&(n, threads, salt)| {
+            let f = |i: usize| (i as u64).wrapping_mul(31).wrapping_add(salt);
+            // map: per-item results in item order
+            let got = pool::map(n, threads, f);
+            let want: Vec<u64> = (0..n).map(f).collect();
+            if got != want {
+                return Err(format!("map({n}, {threads}) diverged from sequential"));
+            }
+            // run_chunks: per-chunk results equal an inline fold of the
+            // same ranges, and equal the scoped (per-call spawn) oracle
+            let pooled = pool::run_chunks(n, threads, |r| r.map(f).sum::<u64>());
+            let inline: Vec<u64> = pool::chunk_ranges(n, threads)
+                .into_iter()
+                .map(|r| r.map(f).sum::<u64>())
+                .collect();
+            if pooled != inline {
+                return Err(format!("run_chunks({n}, {threads}) diverged from inline"));
+            }
+            let scoped = pool::run_chunks_scoped(n, threads, |r| r.map(f).sum::<u64>());
+            if pooled != scoped {
+                return Err(format!("run_chunks({n}, {threads}) diverged from scoped"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn pool_nested_use_does_not_deadlock() {
+    // a pool call issued from inside a pool worker must complete (the
+    // nesting rule runs it inline) and agree with the flat computation;
+    // repeat enough times to cross lazy spawn and queue reuse
+    for round in 0..16u64 {
+        let inner_n = 8 + (round as usize % 5);
+        let inner_sum: u64 = (0..inner_n as u64).map(|i| i * i + round).sum();
+        let got = pool::run_chunks(6, 3, |outer| {
+            let inner: u64 = pool::map(inner_n, 4, |i| (i as u64) * (i as u64) + round)
+                .into_iter()
+                .sum();
+            outer.map(|i| i as u64).sum::<u64>() + inner
+        });
+        let want: Vec<u64> = pool::chunk_ranges(6, 3)
+            .into_iter()
+            .map(|r| r.map(|i| i as u64).sum::<u64>() + inner_sum)
+            .collect();
+        assert_eq!(got, want, "round {round}");
+    }
+}
 
 fn exact_matmul(w: &[i8], k: usize, n: usize, x: &[f32]) -> Vec<f32> {
     let mut y = vec![0f32; n];
