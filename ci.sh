@@ -29,12 +29,18 @@ echo "== cargo build --release --benches --examples =="
 cargo build --release --benches --examples
 
 # Both execution paths must stay green: the analogue crossbar simulation
-# (native) and the HLO-interpreter digital path (xla). Needs artifacts;
-# skipped on a fresh checkout, exercised by the CI artifact job.
-echo "== backend smoke matrix (native + xla) =="
+# (native) and the HLO-interpreter digital path (xla), single-shot and
+# through the sharded serving layer (2 replicas exercises the shared
+# admission queue + per-replica engines). Needs artifacts; skipped on a
+# fresh checkout, exercised by the CI artifact job.
+echo "== backend smoke matrix (native + xla, infer + sharded serve) =="
 if [ -f artifacts/index.json ]; then
     cargo run --release --quiet -- infer --index 0 --backend native
     cargo run --release --quiet -- infer --index 0 --backend xla
+    cargo run --release --quiet -- serve --requests 40 --rate 2000 \
+        --max-batch 8 --wait-ms 2 --replicas 2 --backend native
+    cargo run --release --quiet -- serve --requests 40 --rate 2000 \
+        --max-batch 8 --wait-ms 2 --replicas 2 --backend xla
 else
     echo "skipped: no artifacts (run \`make artifacts\` to activate)"
 fi

@@ -3,16 +3,97 @@
 //!
 //! Covers the L3 request path end to end: crossbar MVM (the Mem backend's
 //! inner loop), the pooled keyed batch MVM, pool-vs-scoped dispatch
-//! overhead (`spawn_overhead` rows), im2col, GroupNorm, the dense digital
-//! matmul, and CAM search.
+//! overhead (`spawn_overhead` rows), the sharded server at replicas
+//! 1/2/4 (`serve_toy_r{1,2,4}` rows), im2col, GroupNorm, the dense
+//! digital matmul, and CAM search.
+
+use std::time::Duration;
 
 use memdyn::cim::CimMatrix;
+use memdyn::coordinator::dynmodel::DynModel;
+use memdyn::coordinator::{Engine, ExitMemory, Server, ServerConfig};
 use memdyn::crossbar::ConverterConfig;
 use memdyn::device::DeviceConfig;
 use memdyn::nn::ops;
 use memdyn::util::bench::standard_bencher;
 use memdyn::util::pool;
 use memdyn::util::rng::{Pcg64, StreamKey};
+
+/// Artifact-free toy backbone for the serving-path shard sweep: enough
+/// arithmetic per block (a 64x64 dense layer) that batches cost real
+/// work, but cheap enough that the *dispatch* machinery — admission
+/// queue, batch assembly, replica fan-out — stays visible.
+struct BenchToy {
+    w: Vec<f32>,
+}
+
+const BT_DIM: usize = 64;
+const BT_BLOCKS: usize = 2;
+
+impl DynModel for BenchToy {
+    type State = Vec<Vec<f32>>;
+
+    fn n_blocks(&self) -> usize {
+        BT_BLOCKS
+    }
+
+    fn classes(&self) -> usize {
+        2
+    }
+
+    fn input_len(&self) -> Option<usize> {
+        Some(BT_DIM)
+    }
+
+    fn init(&self, input: &[f32], batch: usize, _reqs: &[u64]) -> anyhow::Result<Self::State> {
+        Ok((0..batch)
+            .map(|i| input[i * BT_DIM..(i + 1) * BT_DIM].to_vec())
+            .collect())
+    }
+
+    fn step(&self, _i: usize, state: &mut Self::State) -> anyhow::Result<Vec<f32>> {
+        for row in state.iter_mut() {
+            let y: Vec<f32> = (0..BT_DIM)
+                .map(|o| {
+                    let mut acc = 0f32;
+                    for (k, v) in row.iter().enumerate() {
+                        acc += v * self.w[k * BT_DIM + o];
+                    }
+                    (acc / BT_DIM as f32).tanh()
+                })
+                .collect();
+            *row = y;
+        }
+        Ok(state.concat())
+    }
+
+    fn batch_of(&self, state: &Self::State) -> usize {
+        state.len()
+    }
+
+    fn select(&self, state: &Self::State, keep: &[usize]) -> Self::State {
+        keep.iter().map(|&r| state[r].clone()).collect()
+    }
+
+    fn finish(&self, state: &Self::State) -> anyhow::Result<Vec<f32>> {
+        Ok(state.iter().flat_map(|r| r[..2].to_vec()).collect())
+    }
+}
+
+fn bench_toy_engine() -> Engine<BenchToy> {
+    let mut rng = Pcg64::new(42);
+    let w: Vec<f32> = (0..BT_DIM * BT_DIM)
+        .map(|_| rng.uniform_in(-1.0, 1.0) as f32)
+        .collect();
+    // centers the toy inputs never match: every request runs full depth,
+    // so the served work per request is fixed across replica counts
+    let bank = (vec![1.0f32; BT_DIM * 2], 2usize, BT_DIM);
+    Engine::new(
+        BenchToy { w },
+        ExitMemory::exact(vec![bank.clone(); BT_BLOCKS]),
+        vec![2.0; BT_BLOCKS],
+    )
+}
 
 fn main() {
     let b = standard_bencher("hotpath micro-benches");
@@ -123,6 +204,46 @@ fn main() {
     }
     pool::set_max_threads(0);
     pool::restart();
+
+    // --- sharded serving: replicas 1/2/4 over the shared admission queue --
+    // a 64-request closed-loop burst through the full server path
+    // (admission stamp -> shared-queue batch assembly -> replica engine ->
+    // response); the r1 -> r4 series is the §Serving shard-scaling row.
+    // The toy engine runs full depth on every request, so served work per
+    // request is constant and the delta is the serving layer itself.
+    let burst = 64usize;
+    let sample: Vec<f32> = (0..BT_DIM).map(|i| (i as f32 * 0.1).sin()).collect();
+    for replicas in [1usize, 2, 4] {
+        let srv = Server::start(
+            || Ok(bench_toy_engine()),
+            ServerConfig {
+                max_batch: 8,
+                max_wait: Duration::from_millis(1),
+                queue_depth: 1024,
+                replicas,
+            },
+        );
+        let client = srv.client();
+        println!(
+            "{}",
+            b.run_items(
+                &format!("serve_toy_r{replicas} (requests/s)"),
+                burst as f64,
+                || {
+                    let waiters: Vec<_> = (0..burst)
+                        .map(|_| client.submit(sample.clone()).unwrap())
+                        .collect();
+                    waiters
+                        .into_iter()
+                        .map(|w| w.recv().unwrap().outcome.unwrap().class)
+                        .sum::<usize>()
+                }
+            )
+            .report()
+        );
+        drop(client);
+        srv.shutdown().unwrap();
+    }
 
     // --- im2col on the stem geometry --------------------------------------
     let img: Vec<f32> = (0..8 * 28 * 28 * 16).map(|i| (i % 9) as f32).collect();

@@ -6,9 +6,14 @@
 //! ternary crossbar variant) or `--backend xla`, which executes the AOT
 //! HLO artifacts on the native HLO interpreter (`memdyn::runtime`).
 //!
+//! `--replicas N` spawns N engine replicas pulling from the shared
+//! admission queue (request outcomes are replica-count invariant: ids are
+//! stamped at admission, see `coordinator::server`).
+//!
 //! ```bash
 //! cargo run --release --example serve_vision -- --requests 300 --rate 300
 //! cargo run --release --example serve_vision -- --backend xla
+//! cargo run --release --example serve_vision -- --replicas 4 --rate 600
 //! ```
 
 use std::time::{Duration, Instant};
@@ -31,6 +36,7 @@ fn main() -> Result<()> {
     let n_requests = args.get_usize("requests", 300);
     let rate = args.get_f64("rate", 300.0);
     let backend = args.get_or("backend", "native").to_string();
+    let replicas = args.get_usize("replicas", 1).max(1);
     let data = DatasetBundle::load(&dir, "mnist")?;
     let bundle = ModelBundle::load(&dir, "resnet")?;
     let thr = ThresholdConfig::load_or_default(
@@ -46,11 +52,19 @@ fn main() -> Result<()> {
             max_batch,
             max_wait: Duration::from_millis(wait_ms),
             queue_depth: 4096,
+            replicas,
         };
+        // cloneable factories: one call per replica, each on its own thread
         let server = match backend.as_str() {
             "native" => Server::start(
                 move || {
-                    figcommon::serving_engine(&dir2, Variant::EeQun, thr_values, 9, 0)
+                    figcommon::serving_engine(
+                        &dir2,
+                        Variant::EeQun,
+                        thr_values.clone(),
+                        9,
+                        0,
+                    )
                 },
                 cfg,
             ),
@@ -65,7 +79,7 @@ fn main() -> Result<()> {
                         &NoiseSpec::Digital,
                         7,
                     )?;
-                    Ok(Engine::new(model, memory, thr_values))
+                    Ok(Engine::new(model, memory, thr_values.clone()))
                 },
                 cfg,
             ),
@@ -97,7 +111,7 @@ fn main() -> Result<()> {
         drop(client);
         let snap = server.shutdown()?;
         println!(
-            "max_batch={max_batch:<2} wait={wait_ms}ms | accuracy {:.1}% | {}",
+            "max_batch={max_batch:<2} wait={wait_ms}ms replicas={replicas} | accuracy {:.1}% | {}",
             100.0 * correct as f64 / n_requests as f64,
             snap.report()
         );

@@ -51,9 +51,8 @@ impl CamBank {
             }
         }
         let matrix = CimMatrix::program(&t, dim, n_classes, dev, conv, rng);
-        // calibrated norms from programmed differential means
-        let ones: Vec<f32> = vec![1.0; dim];
-        let _ = ones; // norms need per-entry squares; compute from targets
+        // digital norm correction from the target centers (per-entry
+        // squares, which the programmed differential means cannot supply)
         let mut inv_norms = Vec::with_capacity(n_classes);
         for c in 0..n_classes {
             let mut s = 0f64;

@@ -33,14 +33,33 @@ pub trait DynModel {
     fn n_blocks(&self) -> usize;
     fn classes(&self) -> usize;
 
+    /// Flattened per-sample input width this model expects, when it is
+    /// known up front (`None` for shape-agnostic toys).  The server uses
+    /// this to reject a malformed request *before* it is flattened into a
+    /// batch, so one bad client cannot poison co-batched requests.
+    fn input_len(&self) -> Option<usize> {
+        None
+    }
+
     /// Build the initial state from `batch` flattened raw samples.
     ///
-    /// `first_req` is the engine-assigned id of the first sample; sample
-    /// `i` of the batch is request `first_req + i`.  Stochastic backends
-    /// derive every noise draw from (seed, request id, layer, tile), so a
-    /// batch split across threads — or replayed sample-by-sample — yields
-    /// bit-identical outputs.  Deterministic backends may ignore it.
-    fn init(&self, input: &[f32], batch: usize, first_req: u64) -> Result<Self::State>;
+    /// `reqs[i]` is the globally unique request id of sample `i`
+    /// (`reqs.len() == batch`).  Stochastic backends derive every noise
+    /// draw from (seed, request id, layer, tile), so a batch split across
+    /// threads, replayed sample-by-sample, or served by a different
+    /// replica yields bit-identical outputs.  Ids are *carried*, not
+    /// allocated here: the engine allocates them for direct calls, and
+    /// the sharded server stamps them at admission so the id — and hence
+    /// every noise draw — does not depend on which shard runs the sample.
+    /// Deterministic backends may ignore them.
+    fn init(&self, input: &[f32], batch: usize, reqs: &[u64]) -> Result<Self::State>;
+
+    /// [`DynModel::init`] with the contiguous id block `first_req..first_req + batch`
+    /// — the common case for direct (non-serving) callers.
+    fn init_seq(&self, input: &[f32], batch: usize, first_req: u64) -> Result<Self::State> {
+        let reqs: Vec<u64> = (0..batch as u64).map(|i| first_req + i).collect();
+        self.init(input, batch, &reqs)
+    }
 
     /// Run exit block `i`; returns search vectors `(batch x dim_i)`.
     fn step(&self, i: usize, state: &mut Self::State) -> Result<Vec<f32>>;
@@ -98,11 +117,13 @@ impl DynModel for NativeResNetModel {
         self.classes
     }
 
-    fn init(&self, input: &[f32], batch: usize, first_req: u64) -> Result<ResNetState> {
+    fn input_len(&self) -> Option<usize> {
+        Some(self.img * self.img)
+    }
+
+    fn init(&self, input: &[f32], batch: usize, reqs: &[u64]) -> Result<ResNetState> {
         let x = crate::nn::resnet::image_feature(input, batch, self.img)?;
-        let keys: Vec<StreamKey> = (0..batch as u64)
-            .map(|i| self.key.child(first_req + i))
-            .collect();
+        let keys: Vec<StreamKey> = reqs.iter().map(|&r| self.key.child(r)).collect();
         Ok(ResNetState {
             feat: self.net.stem(&x, &keys),
             keys,
@@ -312,7 +333,11 @@ impl DynModel for XlaResNetModel {
         self.classes
     }
 
-    fn init(&self, input: &[f32], batch: usize, first_req: u64) -> Result<ResNetState> {
+    fn input_len(&self) -> Option<usize> {
+        Some(self.img * self.img)
+    }
+
+    fn init(&self, input: &[f32], batch: usize, reqs: &[u64]) -> Result<ResNetState> {
         let row = self.img * self.img;
         let (h, w, c) = self.block_shapes[0];
         let out = Self::run_padded(
@@ -326,9 +351,7 @@ impl DynModel for XlaResNetModel {
             self.fanout(),
         )?;
         // digital backend: keys are carried for state-shape uniformity only
-        let keys = (0..batch as u64)
-            .map(|i| StreamKey::root(0).child(first_req + i))
-            .collect();
+        let keys = reqs.iter().map(|&r| StreamKey::root(0).child(r)).collect();
         Ok(ResNetState {
             feat: Feature {
                 data: out.into_iter().next().unwrap(),
@@ -463,7 +486,11 @@ impl DynModel for NativePointNetModel {
         self.classes
     }
 
-    fn init(&self, input: &[f32], batch: usize, first_req: u64) -> Result<PointNetState> {
+    fn input_len(&self) -> Option<usize> {
+        Some(self.net.n_points * 3)
+    }
+
+    fn init(&self, input: &[f32], batch: usize, reqs: &[u64]) -> Result<PointNetState> {
         let n = self.net.n_points;
         if input.len() != batch * n * 3 {
             return Err(anyhow!("pointnet init: bad input length"));
@@ -475,7 +502,7 @@ impl DynModel for NativePointNetModel {
                     n,
                     feats: Vec::new(),
                     c: 0,
-                    key: self.key.child(first_req + b as u64),
+                    key: self.key.child(reqs[b]),
                 })
                 .collect(),
         })
@@ -595,7 +622,11 @@ impl DynModel for XlaPointNetModel {
         self.classes
     }
 
-    fn init(&self, input: &[f32], batch: usize, _first_req: u64) -> Result<XlaPnState> {
+    fn input_len(&self) -> Option<usize> {
+        Some(self.n_points * 3)
+    }
+
+    fn init(&self, input: &[f32], batch: usize, _reqs: &[u64]) -> Result<XlaPnState> {
         if input.len() != batch * self.n_points * 3 {
             return Err(anyhow!("pointnet init: bad input length"));
         }

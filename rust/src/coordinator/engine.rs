@@ -8,14 +8,16 @@
 //! the persistent worker pool (`util::pool`): long-lived channel-fed
 //! workers, so per-batch dispatch is a channel send rather than a
 //! spawn+join (which dominated small digital batches on the serving
-//! path).  Every sample carries a globally unique request id (a
-//! per-engine counter), and all analogue noise is derived from (seed,
-//! request id, layer, tile) — never from draw order — so the result is
-//! bit-identical at any thread count, including 1, and across pool
-//! restarts.  Inner parallel sections (keyed crossbar rows, interpreter
-//! `dot`/`convolution`) run inline inside pool workers — the pool's
-//! nesting rule — so an engine span never blocks on the queue it came
-//! from.
+//! path).  Every sample carries a globally unique request id — allocated
+//! by a per-engine counter for direct calls, or stamped at admission and
+//! passed through [`Engine::infer_batch_keyed`] on the sharded serving
+//! path — and all analogue noise is derived from (seed, request id,
+//! layer, tile) — never from draw order — so the result is bit-identical
+//! at any thread count, including 1, across pool restarts, and across
+//! server replica counts.  Inner parallel sections (keyed crossbar rows,
+//! interpreter `dot`/`convolution`) run inline inside pool workers — the
+//! pool's nesting rule — so an engine span never blocks on the queue it
+//! came from.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -47,8 +49,13 @@ pub struct Engine<M: DynModel> {
     /// Worker threads batches fan across (1 = fully sequential).
     threads: usize,
     /// Monotone request-id allocator; every sample this engine ever sees
-    /// gets a unique id, the anchor of its noise streams.
+    /// gets a unique id, the anchor of its noise streams.  The `k`-th
+    /// allocation yields `id_base + k * id_stride` (base 0, stride 1 by
+    /// default), so replica engines configured via [`Engine::with_id_stream`]
+    /// draw from disjoint id sets.
     next_req: AtomicU64,
+    id_base: u64,
+    id_stride: u64,
 }
 
 impl<M: DynModel> Engine<M> {
@@ -62,6 +69,8 @@ impl<M: DynModel> Engine<M> {
             policy: ExitPolicy::default(),
             threads: 1,
             next_req: AtomicU64::new(0),
+            id_base: 0,
+            id_stride: 1,
         }
     }
 
@@ -80,6 +89,36 @@ impl<M: DynModel> Engine<M> {
     pub fn threads(&self) -> usize {
         self.threads
     }
+
+    /// Stripe this engine's internal id allocator: the `k`-th allocated id
+    /// becomes `(1 << 63) | base + k * stride`.  Replica `r` of an
+    /// `n`-replica server uses `(r, n)`, so ids self-allocated by
+    /// different replicas (for direct [`Engine::infer_batch`] /
+    /// [`Engine::record_trace`] calls, e.g. from a shutdown finalizer)
+    /// can never collide with each other — and the high-bit tag keeps
+    /// them disjoint from admission-stamped serving ids too, which count
+    /// up from zero and bypass this allocator entirely (they are carried
+    /// via [`Engine::infer_batch_keyed`]).  No noise stream is ever
+    /// reused across shards or across the two id sources.
+    pub fn with_id_stream(mut self, base: u64, stride: u64) -> Self {
+        // disjointness requires base < stride (shard index < shard count)
+        debug_assert!(
+            base < stride.max(1),
+            "with_id_stream: base {base} >= stride {stride} would overlap \
+             a sibling's id stream"
+        );
+        self.id_base = (1u64 << 63) | base;
+        self.id_stride = stride.max(1);
+        self
+    }
+
+    /// Allocate `n` request ids from the (possibly striped) counter.
+    fn alloc_ids(&self, n: usize) -> Vec<u64> {
+        let c = self.next_req.fetch_add(n as u64, Ordering::Relaxed);
+        (0..n as u64)
+            .map(|i| self.id_base + (c + i) * self.id_stride)
+            .collect()
+    }
 }
 
 impl<M: DynModel + Sync> Engine<M> {
@@ -92,17 +131,40 @@ impl<M: DynModel + Sync> Engine<M> {
         if batch == 0 {
             return Ok(Vec::new());
         }
-        let first = self.next_req.fetch_add(batch as u64, Ordering::Relaxed);
+        let ids = self.alloc_ids(batch);
+        self.infer_batch_keyed(input, batch, &ids)
+    }
+
+    /// [`Engine::infer_batch`] with caller-supplied request ids (one per
+    /// sample, need not be contiguous).  This is the sharded-serving entry
+    /// point: the server stamps ids at admission, so a request's noise
+    /// streams — and therefore its outcome — are bit-identical no matter
+    /// which replica serves it or what else shares its batch.
+    pub fn infer_batch_keyed(
+        &self,
+        input: &[f32],
+        batch: usize,
+        ids: &[u64],
+    ) -> Result<Vec<Outcome>> {
+        if batch == 0 {
+            return Ok(Vec::new());
+        }
+        if ids.len() != batch {
+            return Err(anyhow::anyhow!(
+                "infer_batch_keyed: {} ids for batch {batch}",
+                ids.len()
+            ));
+        }
         let threads = self.threads.min(batch);
         if threads <= 1 {
-            return self.infer_span(input, batch, first);
+            return self.infer_span(input, batch, ids);
         }
         let sample_len = input.len() / batch;
         let spans = pool::run_chunks(batch, threads, |r| {
             self.infer_span(
                 &input[r.start * sample_len..r.end * sample_len],
                 r.len(),
-                first + r.start as u64,
+                &ids[r.start..r.end],
             )
         });
         let mut out = Vec::with_capacity(batch);
@@ -112,15 +174,11 @@ impl<M: DynModel + Sync> Engine<M> {
         Ok(out)
     }
 
-    /// Sequential early-exit loop over one contiguous span of requests.
-    fn infer_span(
-        &self,
-        input: &[f32],
-        batch: usize,
-        first_req: u64,
-    ) -> Result<Vec<Outcome>> {
+    /// Sequential early-exit loop over one span of requests (`ids[i]` is
+    /// sample `i`'s request id).
+    fn infer_span(&self, input: &[f32], batch: usize, ids: &[u64]) -> Result<Vec<Outcome>> {
         let blocks = self.model.n_blocks();
-        let mut state = self.model.init(input, batch, first_req)?;
+        let mut state = self.model.init(input, batch, ids)?;
         // alive[i] = original position of row i
         let mut alive: Vec<usize> = (0..batch).collect();
         let mut outcomes: Vec<Option<Outcome>> = vec![None; batch];
@@ -133,7 +191,7 @@ impl<M: DynModel + Sync> Engine<M> {
             let mut keep: Vec<usize> = Vec::with_capacity(alive.len());
             for (row, &orig) in alive.iter().enumerate() {
                 let sv = &svs[row * dim..(row + 1) * dim];
-                let m = self.memory.search(e, sv, first_req + orig as u64);
+                let m = self.memory.search(e, sv, ids[orig]);
                 if self.policy.should_exit(&m, self.thresholds[e]) {
                     outcomes[orig] = Some(Outcome {
                         class: m.class,
@@ -183,7 +241,7 @@ impl<M: DynModel + Sync> Engine<M> {
         if n == 0 {
             return Ok(trace);
         }
-        let first = self.next_req.fetch_add(n as u64, Ordering::Relaxed);
+        let ids = self.alloc_ids(n);
         let threads = self.threads.min(n);
         let spans = pool::run_chunks(n, threads, |r| {
             self.trace_span(
@@ -191,7 +249,7 @@ impl<M: DynModel + Sync> Engine<M> {
                 sample_len,
                 &labels[r.start..r.end],
                 batch,
-                first + r.start as u64,
+                &ids[r.start..r.end],
             )
         });
         for span in spans {
@@ -211,7 +269,7 @@ impl<M: DynModel + Sync> Engine<M> {
         sample_len: usize,
         labels: &[i32],
         batch: usize,
-        first_req: u64,
+        ids: &[u64],
     ) -> Result<Vec<(Vec<f32>, Vec<u16>, u16, u16)>> {
         let blocks = self.model.n_blocks();
         let n = labels.len();
@@ -220,8 +278,7 @@ impl<M: DynModel + Sync> Engine<M> {
         while at < n {
             let take = batch.min(n - at);
             let input = &xs[at * sample_len..(at + take) * sample_len];
-            let base = first_req + at as u64;
-            let mut state = self.model.init(input, take, base)?;
+            let mut state = self.model.init(input, take, &ids[at..at + take])?;
             // (take x blocks) sims/preds
             let mut sims = vec![0f32; take * blocks];
             let mut preds = vec![0u16; take * blocks];
@@ -232,7 +289,7 @@ impl<M: DynModel + Sync> Engine<M> {
                     let m = self.memory.search(
                         e,
                         &svs[row * dim..(row + 1) * dim],
-                        base + row as u64,
+                        ids[at + row],
                     );
                     sims[row * blocks + e] = m.similarity;
                     preds[row * blocks + e] = m.class as u16;
@@ -284,7 +341,7 @@ mod tests {
             self.classes
         }
 
-        fn init(&self, input: &[f32], batch: usize, _first_req: u64) -> Result<ToyState> {
+        fn init(&self, input: &[f32], batch: usize, _reqs: &[u64]) -> Result<ToyState> {
             let w = input.len() / batch;
             Ok(ToyState {
                 rows: (0..batch)
@@ -416,6 +473,36 @@ mod tests {
                 assert_eq!(a.exit, b.exit, "{threads} threads");
                 assert_eq!(a.exited_early, b.exited_early, "{threads} threads");
             }
+        }
+    }
+
+    #[test]
+    fn keyed_batch_matches_allocated_ids() {
+        // for a fresh engine the allocator hands out 0..batch, so carrying
+        // those ids explicitly must reproduce infer_batch exactly — and a
+        // mismatched id count is an error, not a truncation
+        let input = vec![1.0, 0.0, 0.0, 0.0, 0.6, 0.55, 0.4, 0.3];
+        let want = engine(vec![0.95, 0.95, 0.95]).infer_batch(&input, 2).unwrap();
+        let keyed = engine(vec![0.95, 0.95, 0.95]);
+        let got = keyed.infer_batch_keyed(&input, 2, &[0, 1]).unwrap();
+        for (a, b) in want.iter().zip(&got) {
+            assert_eq!(a.class, b.class);
+            assert_eq!(a.exit, b.exit);
+        }
+        assert!(keyed.infer_batch_keyed(&input, 2, &[7]).is_err());
+    }
+
+    #[test]
+    fn striped_id_stream_only_affects_allocation() {
+        // Toy is deterministic, so striping must not change outcomes; it
+        // only relabels the internally allocated request ids
+        let input = vec![1.0, 0.0, 0.0, 0.0, 0.6, 0.55, 0.4, 0.3];
+        let want = engine(vec![0.95, 0.95, 0.95]).infer_batch(&input, 2).unwrap();
+        let striped = engine(vec![0.95, 0.95, 0.95]).with_id_stream(3, 4);
+        let got = striped.infer_batch(&input, 2).unwrap();
+        for (a, b) in want.iter().zip(&got) {
+            assert_eq!(a.class, b.class);
+            assert_eq!(a.exit, b.exit);
         }
     }
 

@@ -1,5 +1,10 @@
 //! Serving metrics: latency percentiles, throughput, exit distribution,
-//! batch-size statistics.
+//! batch-size statistics, and error accounting.
+//!
+//! Each server replica owns one `Metrics` (no cross-shard locking on the
+//! hot path); [`Metrics::merge`] folds the per-shard records into one at
+//! shutdown, and [`Metrics::snapshot`] turns the merged record into the
+//! reported [`Snapshot`].
 
 use std::time::{Duration, Instant};
 
@@ -12,6 +17,10 @@ pub struct Metrics {
     pub exit_hist: Vec<u64>,
     pub requests: u64,
     pub early_exits: u64,
+    /// Requests answered with an `Err` outcome (rejected before batching
+    /// or failed in the engine).  Disjoint from `requests`, which counts
+    /// completed inferences only.
+    pub errors: u64,
     started: Option<Instant>,
     pub finished_at: Option<Instant>,
 }
@@ -44,8 +53,43 @@ impl Metrics {
         self.finished_at = Some(Instant::now());
     }
 
+    /// Record one *completed* batch.  Callers must invoke this only after
+    /// the engine accepted the batch: failed batches contribute to
+    /// [`Metrics::errors`], not to `mean_batch` (counting them used to
+    /// inflate the batch statistics while adding zero requests).
     pub fn record_batch(&mut self, size: usize) {
         self.batch_sizes.add(size as f64);
+    }
+
+    /// Record one request answered with an `Err` outcome.
+    pub fn record_error(&mut self) {
+        self.errors += 1;
+        self.finished_at = Some(Instant::now());
+    }
+
+    /// Fold another shard's record into this one: latencies and batch
+    /// statistics concatenate, counters add, the exit histogram adds
+    /// elementwise, and the serving window spans min(start)..max(finish).
+    pub fn merge(&mut self, o: Metrics) {
+        self.latencies_us.extend(o.latencies_us);
+        self.batch_sizes.merge(&o.batch_sizes);
+        if self.exit_hist.len() < o.exit_hist.len() {
+            self.exit_hist.resize(o.exit_hist.len(), 0);
+        }
+        for (h, v) in self.exit_hist.iter_mut().zip(&o.exit_hist) {
+            *h += v;
+        }
+        self.requests += o.requests;
+        self.early_exits += o.early_exits;
+        self.errors += o.errors;
+        self.started = match (self.started, o.started) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        };
+        self.finished_at = match (self.finished_at, o.finished_at) {
+            (Some(a), Some(b)) => Some(a.max(b)),
+            (a, b) => a.or(b),
+        };
     }
 
     pub fn snapshot(&self) -> Snapshot {
@@ -55,6 +99,7 @@ impl Metrics {
         };
         Snapshot {
             requests: self.requests,
+            errors: self.errors,
             early_exit_frac: if self.requests > 0 {
                 self.early_exits as f64 / self.requests as f64
             } else {
@@ -78,6 +123,9 @@ impl Metrics {
 #[derive(Clone, Debug)]
 pub struct Snapshot {
     pub requests: u64,
+    /// Requests answered with an `Err` outcome (length-rejected, engine
+    /// failure, or engine-construction failure).
+    pub errors: u64,
     pub early_exit_frac: f64,
     pub p50_us: f64,
     pub p95_us: f64,
@@ -91,9 +139,11 @@ pub struct Snapshot {
 impl Snapshot {
     pub fn report(&self) -> String {
         format!(
-            "requests={} early_exit={:.1}% p50={:.0}us p95={:.0}us p99={:.0}us \
-             mean={:.0}us throughput={:.1} req/s mean_batch={:.2}\n  exits: {:?}",
+            "requests={} errors={} early_exit={:.1}% p50={:.0}us p95={:.0}us \
+             p99={:.0}us mean={:.0}us throughput={:.1} req/s mean_batch={:.2}\n  \
+             exits: {:?}",
             self.requests,
+            self.errors,
             self.early_exit_frac * 100.0,
             self.p50_us,
             self.p95_us,
@@ -119,13 +169,56 @@ mod tests {
         m.record(Duration::from_micros(300), 0, true);
         m.record_batch(2);
         m.record_batch(4);
+        m.record_error();
         let s = m.snapshot();
         assert_eq!(s.requests, 3);
+        assert_eq!(s.errors, 1);
         assert!((s.early_exit_frac - 2.0 / 3.0).abs() < 1e-9);
         assert!((s.p50_us - 200.0).abs() < 1.0);
         assert_eq!(s.exit_hist, vec![2, 0, 1]);
         assert!((s.mean_batch - 3.0).abs() < 1e-9);
         assert!(s.throughput_rps > 0.0);
         assert!(!s.report().is_empty());
+    }
+
+    #[test]
+    fn merge_aggregates_shards() {
+        let mut a = Metrics::new(2);
+        a.start();
+        a.record(Duration::from_micros(100), 0, true);
+        a.record_batch(1);
+        let mut b = Metrics::new(2);
+        b.start();
+        b.record(Duration::from_micros(300), 1, false);
+        b.record(Duration::from_micros(500), 1, false);
+        b.record_batch(2);
+        b.record_error();
+        a.merge(b);
+        let s = a.snapshot();
+        assert_eq!(s.requests, 3);
+        assert_eq!(s.errors, 1);
+        assert_eq!(s.exit_hist, vec![1, 2]);
+        assert!((s.mean_batch - 1.5).abs() < 1e-9);
+        assert!((s.early_exit_frac - 1.0 / 3.0).abs() < 1e-9);
+        // merged percentiles come from the concatenated latency vector
+        assert!((s.p50_us - 300.0).abs() < 1.0);
+        assert!(s.throughput_rps > 0.0);
+    }
+
+    #[test]
+    fn merge_into_empty_shard_record() {
+        // a shard that served nothing (or failed construction) merges as
+        // identity apart from its error count
+        let mut a = Metrics::new(0);
+        let mut b = Metrics::new(3);
+        b.start();
+        b.record(Duration::from_micros(50), 2, false);
+        b.record_batch(1);
+        a.record_error();
+        a.merge(b);
+        let s = a.snapshot();
+        assert_eq!(s.requests, 1);
+        assert_eq!(s.errors, 1);
+        assert_eq!(s.exit_hist, vec![0, 0, 1]);
     }
 }

@@ -6,9 +6,12 @@
 //! * [`engine`] — block -> search-vector -> CAM -> exit-or-continue control
 //!   flow, with per-sample early exit inside a batch;
 //! * [`policy`] — exit decision rules;
-//! * [`server`] — threaded dynamic-batching front-end;
+//! * [`server`] — sharded multi-replica dynamic-batching front-end
+//!   (admission-stamped request ids keep outcomes replica-count
+//!   invariant);
 //! * [`thresholds`] — tuned-threshold persistence;
-//! * [`metrics`] — latency/throughput/exit accounting.
+//! * [`metrics`] — per-shard latency/throughput/exit/error accounting,
+//!   merged at shutdown.
 
 pub mod dynmodel;
 pub mod engine;

@@ -1,18 +1,68 @@
-//! Threaded serving front-end: a dynamic batcher feeding the early-exit
-//! engine (std threads + mpsc — the vendored crate set has no tokio; one
-//! worker matches the single analogue macro / single-core testbed anyway).
+//! Sharded serving front-end: N replica workers, each owning its own
+//! early-exit engine, all batching from one shared admission queue
+//! (std threads + mpsc — the vendored crate set has no tokio).
 //!
-//! Batching policy: collect up to `max_batch` requests, waiting at most
-//! `max_wait` after the first arrival (classic dynamic batching: the
-//! latency/throughput knob of the serving benches).
+//! # Sharding model
 //!
-//! The batch worker dispatches onto the persistent `util::pool`
-//! (pre-warmed at engine construction to the engine's width), so the
-//! per-batch cost on the hot path is a channel send, not a thread
-//! spawn+join — the lever that matters for small digital batches, where
-//! early-exit savings used to be eaten by dispatch overhead.
+//! `ServerConfig::replicas` spawns N workers; each builds its own
+//! [`Engine`] from the cloneable factory (engines stay thread-local:
+//! backend handles need not be `Send`, and the crossbar state is
+//! replicated the way a multi-macro deployment replicates arrays).  All
+//! replicas pull batches from a **single shared queue** behind
+//! `Arc<Mutex<Receiver<Request>>>` rather than per-shard channels with a
+//! dispatcher, because the shared queue is:
+//!
+//! * **work-conserving** — a replica is idle only when the queue is
+//!   empty, so one slow batch never strands requests behind a busy shard
+//!   (least-outstanding dispatch approximates this but needs a dispatcher
+//!   thread plus a load signal, and still guesses wrong under early-exit
+//!   latency variance);
+//! * **drain-correct at shutdown** — closing the one queue ends every
+//!   worker's `collect_batch` loop only after the queue is empty, so no
+//!   queued request can be orphaned in a private shard channel;
+//! * **batching-compatible** — batch assembly is inherently serial (the
+//!   assembler must see consecutive arrivals), so one replica holding
+//!   the receiver lock while it blocks for the first arrival and then
+//!   fills for at most `max_wait` costs nothing that a dispatcher would
+//!   not: the holder is exactly the replica that will take the next
+//!   batch, and everyone it blocks is idle by definition.  Inference —
+//!   the expensive part — runs outside the lock, in parallel across
+//!   replicas.  (Corollary: never take this lock from a non-worker path;
+//!   an idle collector may hold it until the next request arrives.)
+//!
+//! # Determinism
+//!
+//! Request ids anchor every analogue noise stream (PR 2's `StreamKey`
+//! seed→request derivation), so ids must not depend on scheduling.  The
+//! server therefore stamps ids **at admission**: one shared counter in
+//! submission order, carried through [`Request::id`] into
+//! [`Engine::infer_batch_keyed`].  A given request stream thus reproduces
+//! bit-identically at any replica count — whichever shard wins a request,
+//! it computes the same bits (`tests/determinism.rs` sweeps replicas
+//! 1/2/4 including the CIM/CAM energy counters).  Each replica engine is
+//! additionally striped via [`Engine::with_id_stream`]`(r, n)` so ids it
+//! allocates *itself* (direct `infer_batch` calls outside the serving
+//! path) stay disjoint across replicas — and, via the allocator's
+//! high-bit tag, disjoint from the admission id space.  Per-replica
+//! base+stride alone
+//! would keep streams disjoint, but which id a request gets would depend
+//! on which shard won it — admission stamping is what makes outcomes
+//! shard-invariant.
+//!
+//! # Batching policy
+//!
+//! Collect up to `max_batch` requests, waiting at most `max_wait` after
+//! the first arrival (classic dynamic batching: the latency/throughput
+//! knob of the serving benches).  A request whose input length does not
+//! match the model's declared width is answered `Err` at assembly and
+//! never joins a batch, so one malformed client cannot poison co-batched
+//! requests.  Workers dispatch onto the persistent `util::pool`
+//! (pre-warmed to the engine's width), so the per-batch cost on the hot
+//! path is a channel send, not a thread spawn+join.
 
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
+use std::sync::{Arc, Mutex, MutexGuard};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -27,6 +77,8 @@ pub struct ServerConfig {
     pub max_batch: usize,
     pub max_wait: Duration,
     pub queue_depth: usize,
+    /// Number of worker replicas, each owning one engine (min 1).
+    pub replicas: usize,
 }
 
 impl Default for ServerConfig {
@@ -35,27 +87,32 @@ impl Default for ServerConfig {
             max_batch: 8,
             max_wait: Duration::from_millis(2),
             queue_depth: 1024,
+            replicas: 1,
         }
     }
 }
 
 pub struct Request {
     pub input: Vec<f32>,
+    /// Admission-order id (stamped by [`Client::submit`]); the anchor of
+    /// this request's noise streams on every backend.
+    pub id: u64,
     pub submitted: Instant,
     pub resp: SyncSender<Response>,
 }
 
 /// What a client receives for one request.  `outcome` is `Err` when the
-/// engine failed the whole batch (the error text is shared by every
-/// request in it) — the responder channel itself stays intact, so clients
-/// can distinguish "engine rejected this batch" from "server is gone".
+/// server rejected or failed this request (malformed input, engine batch
+/// failure, or engine construction failure) — the responder channel
+/// itself stays intact, so clients can distinguish "server answered Err"
+/// from "server is gone".
 #[derive(Clone, Debug)]
 pub struct Response {
     pub outcome: Result<Outcome, EngineError>,
     pub latency: Duration,
 }
 
-/// A batch-level engine failure, cloned to every affected client.
+/// A request-level engine failure, cloned to every affected client.
 #[derive(Clone, Debug)]
 pub struct EngineError(pub String);
 
@@ -92,112 +149,306 @@ pub fn collect_batch(
     Some(batch)
 }
 
+/// Lock the shared admission queue, surviving a sibling worker's panic
+/// (the receiver holds no invariants a panic could corrupt).
+fn admission(rx: &Mutex<Receiver<Request>>) -> MutexGuard<'_, Receiver<Request>> {
+    rx.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// Answer one request with an error outcome.
+fn respond_err(req: Request, err: &EngineError, metrics: &mut Metrics) {
+    metrics.record_error();
+    let _ = req.resp.send(Response {
+        outcome: Err(err.clone()),
+        latency: req.submitted.elapsed(),
+    });
+}
+
 pub struct Server {
     tx: SyncSender<Request>,
-    handle: Option<JoinHandle<Metrics>>,
+    next_id: Arc<AtomicU64>,
+    handles: Vec<JoinHandle<Metrics>>,
 }
 
 pub struct Client {
     tx: SyncSender<Request>,
+    next_id: Arc<AtomicU64>,
 }
 
 impl Server {
-    /// Spawn the worker thread owning the engine.
+    /// Spawn `cfg.replicas` worker threads, each owning one engine.
     ///
-    /// The engine is built *inside* the worker via `factory`: PJRT handles
-    /// (the `xla` crate's client/executables) are not `Send`, so the XLA
-    /// backend must be constructed on the thread that will run it.  Native
-    /// (crossbar) engines use the same path for uniformity.
+    /// Engines are built *inside* each worker via `factory`: backend
+    /// handles (e.g. PJRT-era client/executables) are not `Send`, so an
+    /// engine must be constructed on the thread that will run it.  The
+    /// factory is therefore `Clone` (one call per replica) rather than
+    /// `FnOnce`.  If construction fails on a replica while at least one
+    /// sibling came up, the failed replica steps aside and the healthy
+    /// replicas serve everything; if *no* replica came up, the failed
+    /// workers answer every queued request with
+    /// `Err("engine construction failed: …")` instead of silently
+    /// dropping it.
     pub fn start<M, F>(factory: F, cfg: ServerConfig) -> Server
     where
         M: DynModel + Sync + 'static,
-        F: FnOnce() -> anyhow::Result<Engine<M>> + Send + 'static,
+        F: Fn() -> anyhow::Result<Engine<M>> + Clone + Send + 'static,
+    {
+        Self::start_with_finalizer(factory, |_| {}, cfg)
+    }
+
+    /// [`Server::start`] with a per-replica finalizer, called with the
+    /// replica's engine after its serve loop drains (still on the worker
+    /// thread, so non-`Send` engines work).  Used to harvest per-engine
+    /// state at shutdown — e.g. the determinism suite drains CIM/CAM
+    /// energy counters into a shared accumulator.
+    pub fn start_with_finalizer<M, F, D>(factory: F, finalize: D, cfg: ServerConfig) -> Server
+    where
+        M: DynModel + Sync + 'static,
+        F: Fn() -> anyhow::Result<Engine<M>> + Clone + Send + 'static,
+        D: Fn(Engine<M>) + Clone + Send + 'static,
     {
         let (tx, rx) = sync_channel::<Request>(cfg.queue_depth);
-        let handle = std::thread::spawn(move || {
-            let engine = match factory() {
-                Ok(e) => e,
-                Err(e) => {
-                    eprintln!("[server] engine construction failed: {e:#}");
-                    // drain and drop all requests
-                    while rx.recv().is_ok() {}
-                    return Metrics::new(0);
-                }
-            };
-            // spawn the engine's pool lanes before the first request so
-            // no client pays the lazy worker spawn in its latency
-            crate::util::pool::prewarm(engine.threads());
-            let mut metrics = Metrics::new(engine.model.n_blocks());
-            metrics.start();
-            while let Some(batch) = collect_batch(&rx, cfg.max_batch, cfg.max_wait) {
-                metrics.record_batch(batch.len());
-                let sample_len = batch[0].input.len();
-                let mut flat = Vec::with_capacity(batch.len() * sample_len);
-                for r in &batch {
-                    flat.extend_from_slice(&r.input);
-                }
-                match engine.infer_batch(&flat, batch.len()) {
-                    Ok(outcomes) => {
-                        for (req, out) in batch.into_iter().zip(outcomes) {
-                            let latency = req.submitted.elapsed();
-                            metrics.record(latency, out.exit, out.exited_early);
-                            let _ = req.resp.send(Response {
-                                outcome: Ok(out),
-                                latency,
-                            });
-                        }
-                    }
-                    Err(e) => {
-                        // surface the engine error to every client in the
-                        // batch instead of dropping the responders
-                        eprintln!("[server] batch failed: {e:#}");
-                        let err = EngineError(format!("{e:#}"));
-                        for req in batch {
-                            let _ = req.resp.send(Response {
-                                outcome: Err(err.clone()),
-                                latency: req.submitted.elapsed(),
-                            });
-                        }
-                    }
-                }
-            }
-            metrics
-        });
+        let shared_rx = Arc::new(Mutex::new(rx));
+        let replicas = cfg.replicas.max(1);
+        // construction census: how many replicas finished building their
+        // engine, and how many succeeded — a failed replica uses it to
+        // decide whether healthy siblings own the queue (see worker_loop)
+        let built = Arc::new(AtomicUsize::new(0));
+        let healthy = Arc::new(AtomicUsize::new(0));
+        let handles = (0..replicas)
+            .map(|r| {
+                let rx = Arc::clone(&shared_rx);
+                let built = Arc::clone(&built);
+                let healthy = Arc::clone(&healthy);
+                let factory = factory.clone();
+                let finalize = finalize.clone();
+                let cfg = cfg.clone();
+                std::thread::spawn(move || {
+                    worker_loop(
+                        r as u64,
+                        replicas as u64,
+                        factory,
+                        finalize,
+                        &rx,
+                        &cfg,
+                        &built,
+                        &healthy,
+                    )
+                })
+            })
+            .collect();
         Server {
             tx,
-            handle: Some(handle),
+            next_id: Arc::new(AtomicU64::new(0)),
+            handles,
         }
     }
 
     pub fn client(&self) -> Client {
         Client {
             tx: self.tx.clone(),
+            next_id: Arc::clone(&self.next_id),
         }
     }
 
-    /// Close the queue and join the worker, returning final metrics.
+    /// Close the queue and join every replica, returning the aggregated
+    /// snapshot.  Workers keep answering until the queue is drained, so
+    /// every request admitted before shutdown receives a response.
     ///
     /// All [`Client`] handles must be dropped first — each holds a sender
-    /// clone that keeps the worker's request loop alive.
-    pub fn shutdown(mut self) -> Result<Snapshot> {
+    /// clone that keeps the admission queue alive.
+    pub fn shutdown(self) -> Result<Snapshot> {
         drop(self.tx);
-        let metrics = self
-            .handle
-            .take()
-            .expect("shutdown once")
-            .join()
-            .map_err(|_| anyhow!("worker panicked"))?;
-        Ok(metrics.snapshot())
+        let mut total = Metrics::new(0);
+        let mut panicked = 0usize;
+        for h in self.handles {
+            match h.join() {
+                Ok(m) => total.merge(m),
+                Err(_) => panicked += 1,
+            }
+        }
+        if panicked > 0 {
+            return Err(anyhow!("{panicked} worker(s) panicked"));
+        }
+        Ok(total.snapshot())
+    }
+}
+
+/// Increments the construction census on drop, so the census completes
+/// even when a replica's factory panics and unwinds — a failed sibling's
+/// census wait must always terminate.
+struct CensusTick<'a>(&'a AtomicUsize);
+
+impl Drop for CensusTick<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_add(1, Ordering::SeqCst);
+    }
+}
+
+/// One replica: build the engine, then batch-serve until the queue closes.
+fn worker_loop<M, F, D>(
+    replica: u64,
+    replicas: u64,
+    factory: F,
+    finalize: D,
+    rx: &Mutex<Receiver<Request>>,
+    cfg: &ServerConfig,
+    built: &AtomicUsize,
+    healthy: &AtomicUsize,
+) -> Metrics
+where
+    M: DynModel + Sync + 'static,
+    F: Fn() -> anyhow::Result<Engine<M>>,
+    D: Fn(Engine<M>),
+{
+    let constructed = {
+        let census = CensusTick(built);
+        let result = factory();
+        if result.is_ok() {
+            // publish health before the census tick (guard drop), so a
+            // failed sibling that observes built == replicas also sees us
+            healthy.fetch_add(1, Ordering::SeqCst);
+        }
+        drop(census);
+        result
+    };
+    let engine = match constructed {
+        Ok(e) => e.with_id_stream(replica, replicas),
+        Err(e) => {
+            eprintln!("[server] engine construction failed: {e:#}");
+            // wait for every sibling's construction verdict (bounded by
+            // the slowest factory call, which is running concurrently;
+            // CensusTick guarantees a tick even from a panicked factory)
+            while built.load(Ordering::SeqCst) < replicas as usize {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            let mut metrics = Metrics::new(0);
+            if healthy.load(Ordering::SeqCst) > 0 {
+                // healthy siblings own the queue: exit without pulling,
+                // otherwise this replica — always instantly back on the
+                // admission lock while siblings are busy inferring —
+                // would error-fail traffic that healthy capacity can
+                // serve
+                return metrics;
+            }
+            // no replica came up: answer — don't drop — every queued
+            // request, so clients see *why* instead of a dead responder
+            let err = EngineError(format!("engine construction failed: {e:#}"));
+            metrics.start();
+            loop {
+                // like collect_batch, this holds the admission lock
+                // across the blocking recv (only failed siblings can
+                // contend here — every healthy path exited above)
+                let req = admission(rx).recv();
+                let Ok(req) = req else { break };
+                respond_err(req, &err, &mut metrics);
+            }
+            return metrics;
+        }
+    };
+    // spawn the engine's pool lanes before the first request so no client
+    // pays the lazy worker spawn in its latency
+    crate::util::pool::prewarm(engine.threads());
+    let mut metrics = Metrics::new(engine.model.n_blocks());
+    metrics.start();
+    loop {
+        let batch = {
+            let rx = admission(rx);
+            collect_batch(&rx, cfg.max_batch, cfg.max_wait)
+        };
+        let Some(batch) = batch else { break };
+        serve_batch(&engine, batch, &mut metrics);
+    }
+    finalize(engine);
+    metrics
+}
+
+/// Validate, flatten, infer, and answer one assembled batch.
+fn serve_batch<M: DynModel + Sync>(
+    engine: &Engine<M>,
+    batch: Vec<Request>,
+    metrics: &mut Metrics,
+) {
+    // length validation at assembly: against the model's declared input
+    // width when it has one (every production model declares one), else
+    // against the plurality length of the batch, so a lone malformed
+    // request cannot invert the check by arriving first.  A plurality
+    // *tie* falls back to the earliest arrival — without a declared
+    // width the server cannot know which length is right, only be
+    // deterministic about it.  Offenders are answered individually; the
+    // rest of the batch runs.
+    let expected = engine.model.input_len().unwrap_or_else(|| {
+        // one counting pass; insertion order preserves first-seen ties
+        let mut counts: Vec<(usize, usize)> = Vec::new(); // (len, count)
+        for r in &batch {
+            let len = r.input.len();
+            match counts.iter_mut().find(|(l, _)| *l == len) {
+                Some((_, c)) => *c += 1,
+                None => counts.push((len, 1)),
+            }
+        }
+        let mut best = (0usize, 0usize); // (count, len)
+        for &(len, count) in &counts {
+            if count > best.0 {
+                best = (count, len);
+            }
+        }
+        best.1
+    });
+    let (batch, rejected): (Vec<Request>, Vec<Request>) = batch
+        .into_iter()
+        .partition(|r| r.input.len() == expected);
+    for req in rejected {
+        let err = EngineError(format!(
+            "input length {} does not match the model's expected {expected}",
+            req.input.len()
+        ));
+        respond_err(req, &err, metrics);
+    }
+    if batch.is_empty() {
+        return;
+    }
+    let mut flat = Vec::with_capacity(batch.len() * expected);
+    for r in &batch {
+        flat.extend_from_slice(&r.input);
+    }
+    let ids: Vec<u64> = batch.iter().map(|r| r.id).collect();
+    match engine.infer_batch_keyed(&flat, batch.len(), &ids) {
+        Ok(outcomes) => {
+            // completed batches only: failed ones must not skew mean_batch
+            metrics.record_batch(batch.len());
+            for (req, out) in batch.into_iter().zip(outcomes) {
+                let latency = req.submitted.elapsed();
+                metrics.record(latency, out.exit, out.exited_early);
+                let _ = req.resp.send(Response {
+                    outcome: Ok(out),
+                    latency,
+                });
+            }
+        }
+        Err(e) => {
+            // surface the engine error to every client in the batch
+            // instead of dropping the responders
+            eprintln!("[server] batch failed: {e:#}");
+            let err = EngineError(format!("{e:#}"));
+            for req in batch {
+                respond_err(req, &err, metrics);
+            }
+        }
     }
 }
 
 impl Client {
-    /// Submit one sample; returns the response receiver.
+    /// Submit one sample; returns the response receiver.  The request is
+    /// stamped with the next admission id — the submission-order anchor of
+    /// its noise streams, independent of which replica serves it.
     pub fn submit(&self, input: Vec<f32>) -> Result<Receiver<Response>> {
         let (resp_tx, resp_rx) = sync_channel(1);
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         self.tx
             .send(Request {
                 input,
+                id,
                 submitted: Instant::now(),
                 resp: resp_tx,
             })
@@ -237,7 +488,7 @@ mod tests {
             &self,
             input: &[f32],
             batch: usize,
-            _first_req: u64,
+            _reqs: &[u64],
         ) -> anyhow::Result<Self::State> {
             if input.iter().any(|v| !v.is_finite()) {
                 return Err(anyhow!("toy: non-finite input"));
@@ -263,21 +514,29 @@ mod tests {
         }
     }
 
-    fn server(max_batch: usize, wait_ms: u64) -> Server {
+    fn toy_engine() -> Engine<Toy> {
         let bank = (vec![1.0f32, 0.0, 0.0, 1.0], 2, 2);
-        let engine = Engine::new(
+        Engine::new(
             Toy,
             ExitMemory::exact(vec![bank.clone(), bank]),
             vec![0.95, 0.95],
-        );
+        )
+    }
+
+    fn server_n(replicas: usize, max_batch: usize, wait_ms: u64) -> Server {
         Server::start(
-            move || Ok(engine),
+            move || Ok(toy_engine()),
             ServerConfig {
                 max_batch,
                 max_wait: Duration::from_millis(wait_ms),
-                queue_depth: 64,
+                queue_depth: 256,
+                replicas,
             },
         )
+    }
+
+    fn server(max_batch: usize, wait_ms: u64) -> Server {
+        server_n(1, max_batch, wait_ms)
     }
 
     #[test]
@@ -293,6 +552,7 @@ mod tests {
         drop(client);
         let snap = srv.shutdown().unwrap();
         assert_eq!(snap.requests, 2);
+        assert_eq!(snap.errors, 0);
         assert!(snap.p50_us > 0.0);
     }
 
@@ -322,6 +582,143 @@ mod tests {
     }
 
     #[test]
+    fn replicated_server_serves_all_requests() {
+        for replicas in [2usize, 4] {
+            let srv = server_n(replicas, 4, 1);
+            let client = srv.client();
+            let waiters: Vec<_> = (0..24)
+                .map(|i| {
+                    let v = if i % 2 == 0 {
+                        vec![1.0, 0.0]
+                    } else {
+                        vec![0.0, 1.0]
+                    };
+                    client.submit(v).unwrap()
+                })
+                .collect();
+            for (i, w) in waiters.into_iter().enumerate() {
+                let r = w.recv().unwrap();
+                assert_eq!(r.outcome.unwrap().class, i % 2, "replicas {replicas}");
+            }
+            drop(client);
+            let snap = srv.shutdown().unwrap();
+            assert_eq!(snap.requests, 24, "replicas {replicas}");
+            assert_eq!(snap.errors, 0, "replicas {replicas}");
+        }
+    }
+
+    /// Regression (batch poisoning): a mixed-length co-submission fails
+    /// exactly the offending request; co-batched requests still complete.
+    #[test]
+    fn mixed_length_batch_fails_only_the_offender() {
+        // a wide window so all three requests land in one batch
+        let srv = server(8, 200);
+        let client = srv.client();
+        let good0 = client.submit(vec![1.0, 0.0]).unwrap();
+        let bad = client.submit(vec![0.5, 0.5, 0.5, 0.5]).unwrap();
+        let good1 = client.submit(vec![0.0, 1.0]).unwrap();
+        let r0 = good0.recv().unwrap();
+        assert_eq!(r0.outcome.expect("good co-batched request").class, 0);
+        let rb = bad.recv().unwrap();
+        let err = rb.outcome.expect_err("length mismatch must fail");
+        assert!(err.to_string().contains("input length 4"), "got: {err}");
+        let r1 = good1.recv().unwrap();
+        assert_eq!(r1.outcome.expect("good co-batched request").class, 1);
+        drop(client);
+        let snap = srv.shutdown().unwrap();
+        assert_eq!(snap.requests, 2);
+        assert_eq!(snap.errors, 1);
+        // the rejected request never joins a completed batch
+        assert!((snap.mean_batch - 2.0).abs() < 1e-9, "{}", snap.mean_batch);
+    }
+
+    /// The offender heading the batch must not invert the validation:
+    /// with no declared width the majority length wins, so the lone
+    /// malformed request still fails and the well-formed ones still run.
+    #[test]
+    fn mixed_length_batch_with_offender_first_still_fails_only_offender() {
+        let srv = server(8, 200);
+        let client = srv.client();
+        let bad = client.submit(vec![0.5, 0.5, 0.5, 0.5]).unwrap();
+        let good0 = client.submit(vec![1.0, 0.0]).unwrap();
+        let good1 = client.submit(vec![0.0, 1.0]).unwrap();
+        let rb = bad.recv().unwrap();
+        let err = rb.outcome.expect_err("minority length must fail");
+        assert!(err.to_string().contains("input length 4"), "got: {err}");
+        assert_eq!(good0.recv().unwrap().outcome.unwrap().class, 0);
+        assert_eq!(good1.recv().unwrap().outcome.unwrap().class, 1);
+        drop(client);
+        let snap = srv.shutdown().unwrap();
+        assert_eq!(snap.requests, 2);
+        assert_eq!(snap.errors, 1);
+    }
+
+    /// Regression (silent drop): when engine construction fails, every
+    /// queued request is answered with a construction error — not dropped.
+    #[test]
+    fn failed_factory_answers_instead_of_dropping() {
+        let srv = Server::start(
+            || -> anyhow::Result<Engine<Toy>> { Err(anyhow!("no artifacts on disk")) },
+            ServerConfig {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+                queue_depth: 64,
+                replicas: 1,
+            },
+        );
+        let client = srv.client();
+        for _ in 0..5 {
+            let r = client.infer(vec![1.0, 0.0]).expect("channel stays open");
+            let err = r.outcome.expect_err("construction error must surface");
+            assert!(
+                err.to_string().contains("engine construction failed"),
+                "got: {err}"
+            );
+            assert!(err.to_string().contains("no artifacts"), "got: {err}");
+        }
+        drop(client);
+        let snap = srv.shutdown().unwrap();
+        assert_eq!(snap.requests, 0);
+        assert_eq!(snap.errors, 5);
+    }
+
+    /// Partial construction failure: the failed replica steps aside and
+    /// the healthy sibling serves every request — no spurious
+    /// "engine construction failed" answers while capacity exists.
+    #[test]
+    fn partially_failed_replicas_leave_traffic_to_healthy_ones() {
+        let calls = Arc::new(AtomicUsize::new(0));
+        let calls2 = Arc::clone(&calls);
+        let srv = Server::start(
+            move || {
+                // exactly one of the two replica factory calls fails
+                if calls2.fetch_add(1, Ordering::SeqCst) == 0 {
+                    Err(anyhow!("replica lost the artifact race"))
+                } else {
+                    Ok(toy_engine())
+                }
+            },
+            ServerConfig {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+                queue_depth: 64,
+                replicas: 2,
+            },
+        );
+        let client = srv.client();
+        for _ in 0..12 {
+            let r = client.infer(vec![1.0, 0.0]).unwrap();
+            assert_eq!(r.outcome.expect("healthy replica serves").class, 0);
+        }
+        drop(client);
+        let snap = srv.shutdown().unwrap();
+        assert_eq!(snap.requests, 12);
+        assert_eq!(snap.errors, 0);
+    }
+
+    /// Regression (metrics skew): poisoned batches count as errors and do
+    /// not contribute to mean_batch or requests.
+    #[test]
     fn poisoned_batch_yields_err_not_closed_channel() {
         let srv = server(4, 1);
         let client = srv.client();
@@ -334,8 +731,41 @@ mod tests {
         assert_eq!(ok.outcome.unwrap().class, 0);
         drop(client);
         let snap = srv.shutdown().unwrap();
-        // only the successful request reaches the metrics
+        // only the successful request reaches the metrics...
         assert_eq!(snap.requests, 1);
+        // ...the poisoned one is an error, and only the completed batch
+        // (size 1) enters the batch statistics
+        assert_eq!(snap.errors, 1);
+        assert!((snap.mean_batch - 1.0).abs() < 1e-9, "{}", snap.mean_batch);
+    }
+
+    /// Shutdown under load: requests still queued across multiple replicas
+    /// are all answered before the workers join — no hangs, no drops.
+    #[test]
+    fn shutdown_under_load_answers_every_responder() {
+        for replicas in [1usize, 2, 4] {
+            let srv = server_n(replicas, 4, 1);
+            let client = srv.client();
+            let waiters: Vec<_> = (0..32)
+                .map(|i| {
+                    let v = if i % 2 == 0 {
+                        vec![1.0, 0.0]
+                    } else {
+                        vec![0.0, 1.0]
+                    };
+                    client.submit(v).unwrap()
+                })
+                .collect();
+            // close the queue while requests are still in flight
+            drop(client);
+            let snap = srv.shutdown().unwrap();
+            assert_eq!(snap.requests + snap.errors, 32, "replicas {replicas}");
+            assert_eq!(snap.errors, 0, "replicas {replicas}");
+            for (i, w) in waiters.into_iter().enumerate() {
+                let r = w.recv().expect("answered before join");
+                assert_eq!(r.outcome.unwrap().class, i % 2, "replicas {replicas}");
+            }
+        }
     }
 
     #[test]
@@ -344,6 +774,7 @@ mod tests {
         let (rtx, _rrx) = sc(1);
         tx.send(Request {
             input: vec![0.0],
+            id: 0,
             submitted: Instant::now(),
             resp: rtx,
         })
@@ -359,5 +790,25 @@ mod tests {
         let (tx, rx) = sc::<Request>(1);
         drop(tx);
         assert!(collect_batch(&rx, 4, Duration::from_millis(1)).is_none());
+    }
+
+    #[test]
+    fn admission_ids_are_submission_ordered() {
+        // ids anchor the noise streams, so they must follow submission
+        // order regardless of replica count or which client submits —
+        // all clients share one admission counter
+        let srv = server_n(2, 4, 1);
+        let c1 = srv.client();
+        let c2 = srv.client();
+        for _ in 0..2 {
+            c1.infer(vec![1.0, 0.0]).unwrap();
+            c2.infer(vec![1.0, 0.0]).unwrap();
+        }
+        assert_eq!(c1.next_id.load(Ordering::Relaxed), 4);
+        assert_eq!(c2.next_id.load(Ordering::Relaxed), 4);
+        drop(c1);
+        drop(c2);
+        let snap = srv.shutdown().unwrap();
+        assert_eq!(snap.requests, 4);
     }
 }

@@ -206,7 +206,7 @@ pub fn collect_block_svs<M: crate::coordinator::DynModel + Sync>(
     let per_sample: Vec<Result<Vec<Vec<f32>>>> =
         pool::map(n, pool::max_threads(), |s| {
             let input = data.test_sample(s);
-            let mut state = model.init(input, 1, s as u64)?;
+            let mut state = model.init_seq(input, 1, s as u64)?;
             let mut svs = Vec::with_capacity(blocks);
             for e in 0..blocks {
                 svs.push(model.step(e, &mut state)?);

@@ -4,7 +4,7 @@
 //! memdyn fig <id|all> [--artifacts DIR] [--samples N]   regenerate figures
 //! memdyn tune [--model resnet|pointnet] [--iters N]     TPE threshold tuning
 //! memdyn infer --model resnet --index I [--backend native|xla]
-//! memdyn serve [--requests N] [--rate R] [--max-batch B] [--threads T] [--workload poisson|bursty] [--backend native|xla] [--variant qun|noise|mem]
+//! memdyn serve [--requests N] [--rate R] [--max-batch B] [--replicas N] [--threads T] [--workload poisson|bursty] [--backend native|xla] [--variant qun|noise|mem]
 //! memdyn characterize                                   device statistics
 //! ```
 //!
@@ -56,7 +56,7 @@ fn print_help() {
          USAGE:\n  memdyn fig <id|all> [--artifacts DIR] [--samples N]\n  \
          memdyn tune [--model resnet|pointnet] [--iters N] [--artifacts DIR]\n  \
          memdyn infer --index I [--model resnet] [--backend native|xla]\n  \
-         memdyn serve [--requests N] [--rate R] [--max-batch B] [--wait-ms W] [--threads T] [--workload poisson|bursty] [--backend native|xla] [--variant qun|noise|mem]\n  \
+         memdyn serve [--requests N] [--rate R] [--max-batch B] [--wait-ms W] [--replicas N] [--threads T] [--workload poisson|bursty] [--backend native|xla] [--variant qun|noise|mem]\n  \
          memdyn characterize\n\nFIGURES: {}",
         figures::ALL.join(", ")
     );
@@ -197,6 +197,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let rate = args.get_f64("rate", 500.0);
     let max_batch = args.get_usize("max-batch", 8);
     let wait_ms = args.get_usize("wait-ms", 2);
+    // worker replicas, each owning its own engine and pulling batches
+    // from the shared admission queue (min 1)
+    let replicas = args.get_usize("replicas", 1).max(1);
     // engine fan-out per batch (0 = all cores; MEMDYN_THREADS also applies)
     let threads = args.get_usize("threads", 0);
     // native is the default serving backend; xla serves the digital
@@ -225,10 +228,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
         max_batch,
         max_wait: Duration::from_millis(wait_ms as u64),
         queue_depth: 4096,
+        replicas,
     };
+    // the factory runs once per replica (cloneable, non-consuming body):
+    // each worker thread builds and owns its own engine
     let server = match backend {
         "native" => Server::start(
-            move || figcommon::serving_engine(&dir2, variant, thr_values, 9, threads),
+            move || {
+                figcommon::serving_engine(&dir2, variant, thr_values.clone(), 9, threads)
+            },
             cfg,
         ),
         "xla" => Server::start(
@@ -242,7 +250,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                     &NoiseSpec::Digital,
                     7,
                 )?;
-                Ok(Engine::new(model, memory, thr_values))
+                Ok(Engine::new(model, memory, thr_values.clone()))
             },
             cfg,
         ),
@@ -261,7 +269,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         other => return Err(anyhow!("unknown workload {other} (poisson|bursty)")),
     };
     println!(
-        "[serve] {n_requests} requests, {workload} {rate}/s, max_batch {max_batch}, wait {wait_ms}ms, threads {threads}, backend {backend}"
+        "[serve] {n_requests} requests, {workload} {rate}/s, max_batch {max_batch}, wait {wait_ms}ms, replicas {replicas}, threads {threads}, backend {backend}"
     );
     let t0 = std::time::Instant::now();
     let mut pending = Vec::with_capacity(n_requests);

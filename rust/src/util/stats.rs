@@ -115,6 +115,19 @@ impl Accumulator {
         self.max = self.max.max(v);
     }
 
+    /// Fold another accumulator in, as if its samples had been `add`ed
+    /// here (counts and power sums add, extrema fold).  Keeping this next
+    /// to [`Accumulator::add`] means a future field extension cannot be
+    /// silently dropped by out-of-module mergers (the server aggregates
+    /// per-shard batch statistics through this).
+    pub fn merge(&mut self, o: &Accumulator) {
+        self.n += o.n;
+        self.sum += o.sum;
+        self.sum2 += o.sum2;
+        self.min = self.min.min(o.min);
+        self.max = self.max.max(o.max);
+    }
+
     pub fn mean(&self) -> f64 {
         if self.n == 0 {
             0.0
@@ -167,6 +180,31 @@ mod tests {
         let (edges, counts) = histogram(&xs, 4);
         assert_eq!(edges.len(), 5);
         assert_eq!(counts.iter().sum::<usize>(), xs.len());
+    }
+
+    #[test]
+    fn accumulator_merge_equals_combined_adds() {
+        let mut all = Accumulator::new();
+        let mut a = Accumulator::new();
+        let mut b = Accumulator::new();
+        for v in [1.0, 5.0, 2.0] {
+            all.add(v);
+            a.add(v);
+        }
+        for v in [4.0, 0.5] {
+            all.add(v);
+            b.add(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.n, all.n);
+        assert!((a.sum - all.sum).abs() < 1e-12);
+        assert!((a.sum2 - all.sum2).abs() < 1e-12);
+        assert_eq!(a.min, all.min);
+        assert_eq!(a.max, all.max);
+        // merging an empty accumulator is the identity
+        a.merge(&Accumulator::new());
+        assert_eq!(a.n, all.n);
+        assert_eq!(a.min, all.min);
     }
 
     #[test]

@@ -9,13 +9,23 @@
 //! pool: logits, exit decisions *and CIM energy counters* are
 //! bit-identical at every width, across `MEMDYN_THREADS`, and across a
 //! pool restart within one process.
+//!
+//! The sharded-serving sweep extends the same guarantee across the
+//! replica axis: the same request stream through `Server` at 1, 2 and 4
+//! replicas must reproduce the direct single-engine run bit-for-bit —
+//! outcomes *and* the CIM/CAM energy counters summed over all replica
+//! engines — because request ids are stamped at admission, not by the
+//! shard that happens to win the request.
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 use anyhow::Result;
 
 use memdyn::cam::SemanticMemory;
 use memdyn::coordinator::dynmodel::DynModel;
 use memdyn::coordinator::memory::{ExitMemory, ExitStats};
-use memdyn::coordinator::Engine;
+use memdyn::coordinator::{Engine, Server, ServerConfig};
 use memdyn::crossbar::ConverterConfig;
 use memdyn::device::DeviceConfig;
 use memdyn::nn::weights::{MvmKeys, NoiseSpec, WeightMatrix};
@@ -68,14 +78,12 @@ impl DynModel for XbarToy {
         CLASSES
     }
 
-    fn init(&self, input: &[f32], batch: usize, first_req: u64) -> Result<XbarState> {
+    fn init(&self, input: &[f32], batch: usize, reqs: &[u64]) -> Result<XbarState> {
         Ok(XbarState {
             rows: (0..batch)
                 .map(|i| input[i * DIM..(i + 1) * DIM].to_vec())
                 .collect(),
-            keys: (0..batch as u64)
-                .map(|i| self.key.child(first_req + i))
-                .collect(),
+            keys: reqs.iter().map(|&r| self.key.child(r)).collect(),
         })
     }
 
@@ -317,6 +325,62 @@ fn worker_cap_sweep_is_bit_identical() {
     }
     memdyn::util::pool::set_max_threads(0);
     memdyn::util::pool::restart();
+}
+
+/// The tentpole guarantee of the sharded server: for one submitted
+/// request stream, outcomes and total analogue device usage are
+/// bit-identical at 1, 2 and 4 replicas, and equal to the direct
+/// single-engine run.  Ids are stamped at admission (submission order),
+/// so whichever replica wins a request derives the same noise streams;
+/// each replica's programmed arrays are identical because the factory is
+/// deterministic.  Energy is harvested per replica via the server's
+/// finalizer hook and summed — batching and shard assignment may differ
+/// arbitrarily between runs, the totals must not.
+#[test]
+fn sharded_serving_is_bit_identical_across_replica_counts() {
+    let n = 16;
+    let xs = inputs(n);
+    // reference: a fresh engine allocates ids 0..n, exactly what the
+    // admission counter stamps for n sequential submissions
+    let reference = engine(1);
+    let want = reference.infer_batch(&xs, n).unwrap();
+    assert!(want.iter().any(|o| o.exited_early), "no early exits");
+    assert!(want.iter().any(|o| !o.exited_early), "no head exits");
+    let want_energy = energy(&reference);
+    assert!(want_energy.mvms > 0, "reference run must touch the crossbars");
+
+    for replicas in [1usize, 2, 4] {
+        let sink = Arc::new(Mutex::new(memdyn::cim::CimCounters::default()));
+        let sink2 = Arc::clone(&sink);
+        let srv = Server::start_with_finalizer(
+            move || Ok(engine(1)),
+            move |e: Engine<XbarToy>| sink2.lock().unwrap().add(&energy(&e)),
+            ServerConfig {
+                max_batch: 4,
+                max_wait: Duration::from_millis(2),
+                queue_depth: 64,
+                replicas,
+            },
+        );
+        let client = srv.client();
+        let waiters: Vec<_> = (0..n)
+            .map(|i| client.submit(xs[i * DIM..(i + 1) * DIM].to_vec()).unwrap())
+            .collect();
+        let got: Vec<_> = waiters
+            .into_iter()
+            .map(|w| w.recv().unwrap().outcome.unwrap())
+            .collect();
+        drop(client);
+        let snap = srv.shutdown().unwrap();
+        assert_eq!(snap.requests, n as u64, "{replicas} replicas");
+        assert_eq!(snap.errors, 0, "{replicas} replicas");
+        assert_outcomes_eq(&want, &got, &format!("{replicas} replicas"));
+        let total = *sink.lock().unwrap();
+        assert_eq!(
+            total, want_energy,
+            "{replicas} replicas: CIM/CAM energy counters diverged"
+        );
+    }
 }
 
 #[test]

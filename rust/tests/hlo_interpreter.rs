@@ -775,7 +775,7 @@ fn xla_resnet_parity_with_native_digital_within_1e4() {
     let keys: Vec<StreamKey> = (0..batch as u64).map(|i| StreamKey::root(1).child(i)).collect();
     let (nat_logits, nat_svs) = native.forward(&feat, &keys);
 
-    let mut state = xla.init(input, batch, 0).unwrap();
+    let mut state = xla.init_seq(input, batch, 0).unwrap();
     let mut xla_svs = Vec::new();
     for i in 0..xla.n_blocks() {
         xla_svs.push(xla.step(i, &mut state).unwrap());
@@ -820,7 +820,7 @@ fn xla_resnet_parity_holds_under_row_parallel_kernels() {
     let mut per_fanout: Vec<Vec<f32>> = Vec::new();
     for threads in [1usize, 4] {
         memdyn::hlo::eval::set_linear_fanout(threads);
-        let mut state = xla.init(input, batch, 0).unwrap();
+        let mut state = xla.init_seq(input, batch, 0).unwrap();
         for i in 0..xla.n_blocks() {
             let _ = xla.step(i, &mut state).unwrap();
         }
@@ -850,8 +850,8 @@ fn xla_pointnet_bucket_padding_consistent_within_1e4() {
     let sl = data.sample_len;
     // the same cloud must produce the same search vectors at batch 1
     // (b1 executable) and batch 3 (padded into the b4 executable)
-    let mut s1 = xla.init(&data.x_test[..sl], 1, 0).unwrap();
-    let mut s3 = xla.init(&data.x_test[..3 * sl], 3, 0).unwrap();
+    let mut s1 = xla.init_seq(&data.x_test[..sl], 1, 0).unwrap();
+    let mut s3 = xla.init_seq(&data.x_test[..3 * sl], 3, 0).unwrap();
     for i in 0..2 {
         let sv1 = xla.step(i, &mut s1).unwrap();
         let sv3 = xla.step(i, &mut s3).unwrap();

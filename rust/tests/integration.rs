@@ -99,7 +99,7 @@ fn xla_resnet_matches_native_digital_forward() {
     let (nat_logits, nat_svs) = native.forward(&feat, &keys);
 
     // xla forward through the DynModel interface
-    let mut state = xla.init(input, batch, 0).unwrap();
+    let mut state = xla.init_seq(input, batch, 0).unwrap();
     let mut xla_svs = Vec::new();
     for i in 0..xla.n_blocks() {
         xla_svs.push(xla.step(i, &mut state).unwrap());
@@ -173,8 +173,8 @@ fn xla_resnet_bucket_padding_consistency() {
     let Some(rt) = runtime() else { return };
     let xla = XlaResNetModel::load(&rt, &bundle).unwrap();
     let sl = data.sample_len;
-    let mut s1 = xla.init(&data.x_test[..sl], 1, 0).unwrap();
-    let mut s5 = xla.init(&data.x_test[..5 * sl], 5, 0).unwrap();
+    let mut s1 = xla.init_seq(&data.x_test[..sl], 1, 0).unwrap();
+    let mut s5 = xla.init_seq(&data.x_test[..5 * sl], 5, 0).unwrap();
     let sv1 = xla.step(0, &mut s1).unwrap();
     let sv5 = xla.step(0, &mut s5).unwrap();
     let dim = sv1.len();
@@ -192,7 +192,7 @@ fn xla_pointnet_forward_runs_and_classifies() {
     let xla = XlaPointNetModel::load(&rt, &bundle).unwrap();
     let n = 8usize;
     let input = &data.x_test[..n * data.sample_len];
-    let mut state = xla.init(input, n, 0).unwrap();
+    let mut state = xla.init_seq(input, n, 0).unwrap();
     for i in 0..xla.n_blocks() {
         let svs = xla.step(i, &mut state).unwrap();
         assert_eq!(svs.len(), n * bundle.exit_dims[i], "sv shape at SA {i}");

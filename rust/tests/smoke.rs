@@ -22,6 +22,7 @@ fn server_config_default_collect_batch_roundtrip() {
     let (resp_tx, resp_rx) = sync_channel::<Response>(1);
     tx.send(Request {
         input: vec![0.5, 0.25],
+        id: 0,
         submitted: Instant::now(),
         resp: resp_tx,
     })
@@ -77,7 +78,7 @@ impl DynModel for Identity {
         &self,
         input: &[f32],
         batch: usize,
-        _first_req: u64,
+        _reqs: &[u64],
     ) -> anyhow::Result<Self::State> {
         let w = input.len() / batch;
         Ok((0..batch)

@@ -1,0 +1,165 @@
+#!/usr/bin/env python3
+"""Design-level mirror of the sharded serving layer (PR 5).
+
+The authoring container ships no Rust toolchain, so — as with the HLO
+mirrors (check_hlo_*.py) — this script re-implements the *logic* of
+`rust/src/coordinator/server.rs` in pure stdlib Python and checks the
+invariants the Rust tests assert:
+
+1. admission-stamped ids make outcomes replica-count invariant under
+   arbitrary shard scheduling and batch composition (incl. summed energy);
+2. per-replica base+stride id *allocation* is disjoint across replicas
+   (the `with_id_stream` guarantee for non-serving calls) — and, as the
+   counter-example motivating admission stamping, stride-allocated ids
+   are NOT schedule-invariant;
+3. length validation at batch assembly fails exactly the offenders and
+   preserves the relative order of survivors (`partition` semantics);
+4. the metrics merge is exact: counters add, histograms add elementwise
+   with resize, mean_batch counts completed batches only.
+
+Run: python3 tools/check_shard_serving.py
+"""
+
+import random
+
+
+# --- a stand-in noise model: outcome depends only on (seed, request id) ---
+
+def splitmix(x):
+    x = (x + 0x9E3779B97F4A7C15) & (2**64 - 1)
+    z = x
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & (2**64 - 1)
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & (2**64 - 1)
+    return z ^ (z >> 31)
+
+
+def outcome(seed, req_id, sample):
+    """Deterministic f(seed, id, input) — the engine's contract."""
+    h = splitmix(splitmix(seed) ^ splitmix(req_id) ^ hash(sample) % 2**64)
+    return (h % 7, (h >> 8) % 3)  # (class, exit block)
+
+
+def energy(seed, req_id, sample):
+    """Per-request device usage: depends on the exit depth only."""
+    _, exit_block = outcome(seed, req_id, sample)
+    return (exit_block + 1) * 100  # device reads per block
+
+
+# --- 1 + 2: shard-invariance of admission ids vs stride allocation -------
+
+def serve(samples, replicas, rng, stamp_at_admission):
+    """Simulate the server: ids 0..n in submission order (or per-replica
+    stride allocation), arbitrary batch assembly, arbitrary shard wins."""
+    queue = list(enumerate(samples))  # (admission id, sample)
+    per_replica_counter = [0] * replicas
+    results = {}
+    joules = 0
+    while queue:
+        take = min(len(queue), rng.randint(1, 8))
+        batch, queue = queue[:take], queue[take:]
+        shard = rng.randrange(replicas)  # whichever replica wins the lock
+        for adm_id, sample in batch:
+            if stamp_at_admission:
+                req_id = adm_id
+            else:  # base + k*stride per replica (disjoint but schedule-dep)
+                req_id = shard + per_replica_counter[shard] * replicas
+                per_replica_counter[shard] += 1
+            results[adm_id] = outcome(17, req_id, sample)
+            joules += energy(17, req_id, sample)
+    return [results[i] for i in range(len(samples))], joules
+
+
+def check_invariance():
+    samples = tuple(f"s{i}" for i in range(64))
+    want = [outcome(17, i, s) for i, s in enumerate(samples)]
+    want_joules = sum(energy(17, i, s) for i, s in enumerate(samples))
+    for replicas in (1, 2, 4):
+        for trial in range(20):
+            rng = random.Random(1000 * replicas + trial)
+            got, joules = serve(samples, replicas, rng, True)
+            assert got == want, f"outcomes diverged at replicas={replicas}"
+            assert joules == want_joules, f"energy diverged at replicas={replicas}"
+    # stride allocation: ids stay disjoint across replicas (and, with the
+    # high-bit tag the Rust allocator applies, from admission ids too)...
+    for replicas in (2, 4):
+        seen = set()
+        for r in range(replicas):
+            ids = {(1 << 63) | (r + k * replicas) for k in range(100)}
+            assert not ids & seen, "stride streams collided"
+            assert not ids & set(range(1_000_000)), "collides with admission ids"
+            seen |= ids
+    # ...but outcomes are NOT schedule-invariant (the motivating bug)
+    diverged = False
+    for trial in range(20):
+        rng = random.Random(5000 + trial)
+        got, _ = serve(samples, 2, rng, False)
+        if got != want:
+            diverged = True
+            break
+    assert diverged, "stride ids unexpectedly schedule-invariant"
+    print("ok: admission ids shard-invariant; stride ids disjoint but not")
+
+
+# --- 3: length validation partitions, preserving survivor order ----------
+
+def assemble(batch, declared):
+    if declared is not None:
+        expected = declared
+    else:  # majority length, ties broken by earliest arrival
+        best = (0, 0)
+        for r in batch:
+            count = sum(1 for q in batch if len(q) == len(r))
+            if count > best[0]:
+                best = (count, len(r))
+        expected = best[1]
+    ok = [r for r in batch if len(r) == expected]
+    rejected = [r for r in batch if len(r) != expected]
+    return ok, rejected
+
+
+def check_validation():
+    batch = [(1, 2), (1, 2, 3, 4), (5, 6), (7,), (8, 9)]
+    ok, rejected = assemble(batch, None)
+    assert ok == [(1, 2), (5, 6), (8, 9)], "survivor order broken"
+    assert rejected == [(1, 2, 3, 4), (7,)], "wrong offenders"
+    # the offender arriving first must not invert the vote
+    ok, rejected = assemble([(1, 2, 3, 4), (5, 6), (8, 9)], None)
+    assert ok == [(5, 6), (8, 9)] and rejected == [(1, 2, 3, 4)], "bad-first"
+    # a tie breaks to the earliest arrival
+    ok, _ = assemble([(1, 2), (3, 4, 5, 6)], None)
+    assert ok == [(1, 2)], "tie break"
+    ok, rejected = assemble(batch, 4)
+    assert ok == [(1, 2, 3, 4)] and len(rejected) == 4, "declared width"
+    print("ok: length validation fails exactly the offenders, order kept")
+
+
+# --- 4: metrics merge ----------------------------------------------------
+
+def check_merge():
+    shards = [
+        dict(lat=[100.0], hist=[1, 0], req=1, err=0, batches=[1]),
+        dict(lat=[300.0, 500.0], hist=[0, 2], req=2, err=1, batches=[2]),
+        dict(lat=[], hist=[], req=0, err=3, batches=[]),  # failed factory
+    ]
+    total = dict(lat=[], hist=[], req=0, err=0, batches=[])
+    for s in shards:
+        total["lat"] += s["lat"]
+        if len(total["hist"]) < len(s["hist"]):
+            total["hist"] += [0] * (len(s["hist"]) - len(total["hist"]))
+        for i, v in enumerate(s["hist"]):
+            total["hist"][i] += v
+        total["req"] += s["req"]
+        total["err"] += s["err"]
+        total["batches"] += s["batches"]
+    assert total["req"] == 3 and total["err"] == 4
+    assert total["hist"] == [1, 2]
+    assert sorted(total["lat"])[len(total["lat"]) // 2] == 300.0  # p50
+    assert sum(total["batches"]) / len(total["batches"]) == 1.5  # mean_batch
+    print("ok: metrics merge exact (counters, histogram, p50, mean_batch)")
+
+
+if __name__ == "__main__":
+    check_invariance()
+    check_validation()
+    check_merge()
+    print("check_shard_serving: all invariants hold")
