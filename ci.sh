@@ -8,10 +8,14 @@
 # `cargo test` does not build them), and warning-free docs.
 #
 # Run from the repo root or rust/; artifact-dependent tests skip on a fresh
-# checkout, so this script needs no Python step.  `make artifacts` (or the
-# CI artifact job) activates them.
+# checkout.  The only Python step is the stdlib-only packed-ternary mirror
+# (independent re-derivation of the exact-equality contract); `make
+# artifacts` (or the CI artifact job) activates the artifact tests.
 set -euo pipefail
 cd "$(dirname "$0")"
+
+echo "== packed-ternary mirror (pure stdlib) =="
+python3 tools/check_packed_ternary.py
 
 echo "== cargo fmt --check =="
 cargo fmt --all --check

@@ -104,11 +104,33 @@ fn main() {
                     .report()
             );
         }
+        // ablation: the same lin4 run with the bit-packed ternary dot
+        // kernel switched off, so every ternary-constant dot falls back
+        // to the dense f32 loop.  The lin4-vs-lin4_dense pair is the
+        // §Perf "packed ternary dot" before/after on the serving graph.
+        memdyn::hlo::eval::set_linear_fanout(4);
+        memdyn::cim::packed::set_enabled(false);
+        println!(
+            "{}",
+            quick
+                .run_items(
+                    "ee_infer_xla_interp_50_lin4_dense (samples/s)",
+                    n as f64,
+                    || lin_engine.infer_batch(input, n).unwrap().len()
+                )
+                .report()
+        );
+        memdyn::cim::packed::set_enabled(true);
         memdyn::hlo::eval::set_linear_fanout(0);
         println!(
             "[dynamic-update-slice: {} in-place, {} copied so far this process]",
             memdyn::hlo::eval::dus_in_place_count(),
             memdyn::hlo::eval::dus_copied_count()
+        );
+        println!(
+            "[dot dispatch: {} packed, {} dense so far this process]",
+            memdyn::hlo::eval::dot_packed_count(),
+            memdyn::hlo::eval::dot_dense_count()
         );
     }
 

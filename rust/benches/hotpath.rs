@@ -9,6 +9,7 @@
 
 use std::time::Duration;
 
+use memdyn::cim::packed::PackedTernary;
 use memdyn::cim::CimMatrix;
 use memdyn::coordinator::dynmodel::DynModel;
 use memdyn::coordinator::{Engine, ExitMemory, Server, ServerConfig};
@@ -280,6 +281,33 @@ fn main() {
         )
         .report()
     );
+
+    // --- bit-packed ternary MVM vs the dense f32 kernel -------------------
+    // integer activations, so the packed row takes the AND+popcount plane
+    // path and both rows compute bit-identical outputs — the speedup is
+    // pure kernel (EXPERIMENTS.md §Perf `mvm_packed_vs_dense` series)
+    for (k, n) in [(512usize, 256usize), (2048usize, 1024usize)] {
+        let mut wrng = Pcg64::new(7);
+        let wt: Vec<i8> = (0..k * n).map(|_| [-1i8, 0, 1][wrng.below(3)]).collect();
+        let wf: Vec<f32> = wt.iter().map(|&v| v as f32).collect();
+        let pt = PackedTernary::pack(&wt, k, n);
+        let xi: Vec<f32> = (0..k).map(|i| (i as i64 % 17 - 8) as f32).collect();
+        let macs = (k * n) as f64;
+        println!(
+            "{}",
+            b.run_items(&format!("mvm_packed_{k}x{n} (MACs/s)"), macs, || {
+                pt.matmul(&xi, 1)[0]
+            })
+            .report()
+        );
+        println!(
+            "{}",
+            b.run_items(&format!("mvm_dense_{k}x{n} (MACs/s)"), macs, || {
+                ops::matmul(&xi, &wf, 1, k, n)[0]
+            })
+            .report()
+        );
+    }
 
     // --- CAM search --------------------------------------------------------
     let centers: Vec<i8> = (0..10 * 32).map(|_| [-1i8, 0, 1][rng.below(3)]).collect();

@@ -8,6 +8,8 @@
 //! `python/compile/kernels/ternary_matmul.py` — the two are cross-checked
 //! by integration tests).
 
+pub mod packed;
+
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::crossbar::{ConverterConfig, CrossbarTile, XBAR_LOGICAL_COLS, XBAR_ROWS};
@@ -76,6 +78,11 @@ pub struct CimMatrix {
     row_splits: Vec<usize>,
     col_splits: Vec<usize>,
     counters: AtomicCounters,
+    /// Bit-packed form of the ternary weights, built at program time
+    /// when the device model makes the mean path exact (no write noise,
+    /// no HRS floor — the programmed differential means then equal the
+    /// ternary targets), and used by [`CimMatrix::matmul_mean`].
+    packed: Option<packed::PackedTernary>,
 }
 
 fn splits(total: usize, max: usize) -> Vec<usize> {
@@ -100,7 +107,11 @@ impl CimMatrix {
         rng: &mut Pcg64,
     ) -> Self {
         let f: Vec<f32> = weights.iter().map(|&w| w as f32).collect();
-        Self::program_f32(&f, k, n, dev, conv, rng)
+        let mut m = Self::program_f32(&f, k, n, dev, conv, rng);
+        if dev.write_noise == 0.0 && dev.g_hrs == 0.0 {
+            m.packed = Some(packed::PackedTernary::pack(weights, k, n));
+        }
+        m
     }
 
     /// Program a full-precision matrix with entries normalized to `[-1, 1]`
@@ -144,6 +155,7 @@ impl CimMatrix {
             row_splits,
             col_splits,
             counters: Default::default(),
+            packed: None,
         }
     }
 
@@ -260,7 +272,17 @@ impl CimMatrix {
     }
 
     /// Noise-free matmul over programmed means (verification path).
+    ///
+    /// When the weights were programmed exactly (see
+    /// [`CimMatrix::program`]) this dispatches to the bit-packed ternary
+    /// kernel — same values on integer inputs, word-wide bit ops instead
+    /// of f32 MACs — and never touches the usage counters either way.
     pub fn matmul_mean(&self, x: &[f32], m: usize) -> Vec<f32> {
+        if packed::enabled() {
+            if let Some(pt) = &self.packed {
+                return pt.matmul(x, m);
+            }
+        }
         let mut out = vec![0f32; m * self.n];
         let mut part = vec![0f32; XBAR_LOGICAL_COLS];
         for i in 0..m {
@@ -289,6 +311,11 @@ impl CimMatrix {
 
     pub fn tile_count(&self) -> usize {
         self.tiles.iter().map(|r| r.len()).sum()
+    }
+
+    /// Whether a bit-packed representation was built at program time.
+    pub fn is_packed(&self) -> bool {
+        self.packed.is_some()
     }
 }
 
@@ -455,6 +482,59 @@ mod tests {
         // row 2 computed alone must equal row 2 of the batch
         let alone = cim.matmul_keyed(&x[2 * k..3 * k], &keys[2..3]);
         assert_eq!(&full[2 * n..3 * n], &alone[..]);
+    }
+
+    #[test]
+    fn ideal_programming_builds_packed_mean_path() {
+        // multi-tile in both dimensions, so the packed kernel covers the
+        // full (k, n) extent the tile loop would
+        let (k, n, m) = (700, 300, 2);
+        let w = random_ternary(k, n, 21);
+        let mut rng = Pcg64::new(22);
+        let cim = CimMatrix::program(
+            &w,
+            k,
+            n,
+            &DeviceConfig::ideal(),
+            &ConverterConfig::ideal(),
+            &mut rng,
+        );
+        assert!(cim.is_packed(), "ideal device must build the packed form");
+        // integer activations: packed mean path == exact matmul, bit for bit
+        let x: Vec<f32> = (0..m * k).map(|i| (i as i64 % 9 - 4) as f32).collect();
+        assert_eq!(cim.matmul_mean(&x, m), exact(&w, k, n, &x, m));
+        // and the mean path never bumps usage counters
+        assert_eq!(cim.take_counters(), CimCounters::default());
+    }
+
+    #[test]
+    fn noisy_programming_skips_packing() {
+        let (k, n) = (64, 16);
+        let w = random_ternary(k, n, 23);
+        let mut rng = Pcg64::new(24);
+        let cim = CimMatrix::program(
+            &w,
+            k,
+            n,
+            &DeviceConfig::default(),
+            &ConverterConfig::ideal(),
+            &mut rng,
+        );
+        assert!(
+            !cim.is_packed(),
+            "write noise / HRS floor make the means non-ternary"
+        );
+        // fp-mapped matrices never pack either (program_f32 entry)
+        let wf: Vec<f32> = w.iter().map(|&v| v as f32 * 0.5).collect();
+        let fp = CimMatrix::program_f32(
+            &wf,
+            k,
+            n,
+            &DeviceConfig::ideal(),
+            &ConverterConfig::ideal(),
+            &mut rng,
+        );
+        assert!(!fp.is_packed());
     }
 
     #[test]

@@ -1,0 +1,375 @@
+//! Bit-packed ternary MVM kernels for the digital hot path.
+//!
+//! A ternary `(K, N)` weight matrix carries at most log2(3) bits per
+//! entry, yet the dense paths spend a full f32 multiply-add on each one.
+//! This module packs the matrix **once** (at program/load time) into two
+//! u64 bitplanes per column — a *plus* plane (bit set where `w == +1`)
+//! and a *minus* plane (`w == -1`) — and computes MVMs with word-wide
+//! bit arithmetic instead of scalar FLOPs:
+//!
+//! * **Integer activations** (the exactness contract) are decomposed
+//!   into sign/magnitude bitplanes (`ActivationPlanes`) and each output
+//!   is an AND+popcount reduction:
+//!
+//!   ```text
+//!   y_j = Σ_b 2^b · [ popc(P_j & A⁺_b) − popc(M_j & A⁺_b)
+//!                   − popc(P_j & A⁻_b) + popc(M_j & A⁻_b) ]
+//!   ```
+//!
+//!   where `P_j`/`M_j` are column `j`'s plus/minus planes and `A±_b` is
+//!   bit `b` of the positive/negative activation magnitudes.  The
+//!   accumulator is an i64, so the result is *exact* — and because every
+//!   partial sum of the dense oracle is an integer bounded by
+//!   `K · max|x| ≤ 2^24` (the [`ActivationPlanes::try_pack`] gate), the
+//!   f32 oracle is exact too, in any accumulation order.  Packed output
+//!   therefore equals the dense f32 matmul **bit for bit** on integer
+//!   inputs (`tests/properties.rs` sweeps this with `==`, no tolerance).
+//!
+//! * **General f32 activations** fall back to a multiply-free select
+//!   path: walk `plus | minus` word by word and add or subtract the
+//!   selected activation, in ascending-`k` order — the same value terms
+//!   in the same order as a naive dense loop, so the float path stays
+//!   inside the existing 1e-4 backend-parity gate.
+//!
+//! Tail-word masking: `K % 64 ≠ 0` leaves unused bits in each column's
+//! last word.  Both the weight planes and the activation planes are
+//! built by iterating real indices only, so tail bits are zero *by
+//! construction* on both AND operands and never contribute to a
+//! popcount (the Python mirror `tools/check_packed_ternary.py` asserts
+//! the invariant explicitly).
+//!
+//! The noisy analogue paths ([`crate::cim::CimMatrix::matmul_keyed`] and
+//! friends) keep the f32 implementation: device noise perturbs
+//! *conductances*, which have no bitplane representation.  Packing only
+//! accelerates the exact digital substrate — the ideal/mean CIM path,
+//! the native `nn` dense layers, and the HLO interpreter's `dot` on
+//! ternary constants — and [`set_enabled`] can switch it off process
+//! wide so every caller falls back to the dense f32 kernels (used by the
+//! dispatch-regression tests and the bench ablations).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// Process-wide kill switch for the packed kernels (default on).  When
+/// off, every dispatch site falls back to its dense f32 path; outputs on
+/// integer activations are bit-identical either way (that is the point),
+/// so this only steers which kernel runs.
+static ENABLED: AtomicBool = AtomicBool::new(true);
+
+/// Enable/disable packed-kernel dispatch process-wide (tests, benches).
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Whether packed-kernel dispatch is currently enabled.
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Largest integer such that every partial sum of a qualifying MVM is
+/// exactly representable in f32: with `K · max|x|` bounded by 2^24, any
+/// reordering of the dense accumulation is exact, so packed == dense
+/// holds bit for bit.
+const EXACT_SUM_BOUND: u64 = 1 << 24;
+
+/// A ternary `(K, N)` matrix as two u64 bitplanes per column.
+///
+/// Layout (mirrored by `tools/check_packed_ternary.py`): planes are
+/// column-major — column `j` owns words `[j*words, (j+1)*words)` with
+/// `words = ceil(K/64)`, and row `kk` lives at word `kk / 64`, bit
+/// `kk % 64`.  `plus` has the bit set where `w[kk*N + j] == +1`, `minus`
+/// where it is `-1`; zero weights set neither.
+pub struct PackedTernary {
+    pub k: usize,
+    pub n: usize,
+    words: usize,
+    plus: Vec<u64>,
+    minus: Vec<u64>,
+}
+
+impl PackedTernary {
+    /// Pack row-major ternary weights (entries -1/0/+1).
+    pub fn pack(w: &[i8], k: usize, n: usize) -> Self {
+        assert_eq!(w.len(), k * n);
+        let words = k.div_ceil(64);
+        let mut plus = vec![0u64; n * words];
+        let mut minus = vec![0u64; n * words];
+        for kk in 0..k {
+            let (wi, bit) = (kk / 64, 1u64 << (kk % 64));
+            for (j, &v) in w[kk * n..(kk + 1) * n].iter().enumerate() {
+                match v {
+                    1 => plus[j * words + wi] |= bit,
+                    -1 => minus[j * words + wi] |= bit,
+                    0 => {}
+                    other => panic!("non-ternary weight {other}"),
+                }
+            }
+        }
+        PackedTernary {
+            k,
+            n,
+            words,
+            plus,
+            minus,
+        }
+    }
+
+    /// Pack an f32 matrix whose every entry is exactly -1.0, 0.0 or
+    /// +1.0; `None` if any entry is anything else (the HLO constant
+    /// scan uses this to detect ternary weight matrices at load time).
+    pub fn try_pack_f32(w: &[f32], k: usize, n: usize) -> Option<Self> {
+        if w.len() != k * n || w.iter().any(|&v| v != -1.0 && v != 0.0 && v != 1.0) {
+            return None;
+        }
+        let wi: Vec<i8> = w.iter().map(|&v| v as i8).collect();
+        Some(Self::pack(&wi, k, n))
+    }
+
+    /// Words per column (`ceil(K/64)`).
+    pub fn words(&self) -> usize {
+        self.words
+    }
+
+    /// `y = x @ W` for one activation row (`x: (k,)`, `y: (n,)`).
+    ///
+    /// Integer-valued rows take the AND+popcount plane kernel (exact);
+    /// everything else takes the multiply-free select path.
+    pub fn mvm(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), self.k);
+        assert_eq!(y.len(), self.n);
+        match ActivationPlanes::try_pack(x) {
+            Some(planes) => self.mvm_planes(&planes, y),
+            None => self.mvm_select(x, y),
+        }
+    }
+
+    /// Batched `(m, k) @ (k, n) -> (m, n)`.
+    pub fn matmul(&self, x: &[f32], m: usize) -> Vec<f32> {
+        assert_eq!(x.len(), m * self.k);
+        let mut y = vec![0f32; m * self.n];
+        for i in 0..m {
+            let (xs, ys) = (
+                &x[i * self.k..(i + 1) * self.k],
+                &mut y[i * self.n..(i + 1) * self.n],
+            );
+            self.mvm(xs, ys);
+        }
+        y
+    }
+
+    /// AND+popcount over sign/magnitude activation planes (integer
+    /// exact; see the module docs for the identity).
+    fn mvm_planes(&self, a: &ActivationPlanes, y: &mut [f32]) {
+        debug_assert_eq!(a.words, self.words);
+        let w = self.words;
+        for (j, yj) in y.iter_mut().enumerate() {
+            let p = &self.plus[j * w..(j + 1) * w];
+            let m = &self.minus[j * w..(j + 1) * w];
+            let mut acc = 0i64;
+            for b in 0..a.bits {
+                let ap = &a.pos[b * w..(b + 1) * w];
+                let an = &a.neg[b * w..(b + 1) * w];
+                let mut s = 0i64;
+                for wi in 0..w {
+                    s += (p[wi] & ap[wi]).count_ones() as i64;
+                    s -= (m[wi] & ap[wi]).count_ones() as i64;
+                    s -= (p[wi] & an[wi]).count_ones() as i64;
+                    s += (m[wi] & an[wi]).count_ones() as i64;
+                }
+                acc += s << b;
+            }
+            *yj = acc as f32;
+        }
+    }
+
+    /// Multiply-free general path: add/subtract the activations the
+    /// plus/minus planes select, ascending `k` within each column (the
+    /// same term order as a naive dense loop).
+    fn mvm_select(&self, x: &[f32], y: &mut [f32]) {
+        let w = self.words;
+        for (j, yj) in y.iter_mut().enumerate() {
+            let p = &self.plus[j * w..(j + 1) * w];
+            let m = &self.minus[j * w..(j + 1) * w];
+            let mut acc = 0f32;
+            for wi in 0..w {
+                let mut both = p[wi] | m[wi];
+                let base = wi * 64;
+                while both != 0 {
+                    let t = both.trailing_zeros() as usize;
+                    let v = x[base + t];
+                    if (p[wi] >> t) & 1 == 1 {
+                        acc += v;
+                    } else {
+                        acc -= v;
+                    }
+                    both &= both - 1;
+                }
+            }
+            *yj = acc;
+        }
+    }
+}
+
+/// Sign/magnitude bitplane decomposition of one activation row: plane
+/// `b` of `pos` (resp. `neg`) has bit `kk % 64` of word `kk / 64` set
+/// when activation `kk` is positive (negative) and bit `b` of its
+/// integer magnitude is 1.  Tail bits beyond `k` stay zero, matching the
+/// weight planes.
+pub struct ActivationPlanes {
+    bits: usize,
+    words: usize,
+    pos: Vec<u64>,
+    neg: Vec<u64>,
+}
+
+impl ActivationPlanes {
+    /// Decompose `x` if every entry is integer-valued and the exactness
+    /// bound `len(x) · max|x| ≤ 2^24` holds (so dense f32 accumulation
+    /// is exact in any order); `None` otherwise.
+    pub fn try_pack(x: &[f32]) -> Option<Self> {
+        let mut max_mag = 0u64;
+        for &v in x {
+            if !v.is_finite() || v != v.trunc() || v.abs() >= EXACT_SUM_BOUND as f32 {
+                return None;
+            }
+            max_mag = max_mag.max(v.abs() as u64);
+        }
+        if x.len() as u64 * max_mag > EXACT_SUM_BOUND {
+            return None;
+        }
+        let bits = (64 - max_mag.leading_zeros()) as usize;
+        let words = x.len().div_ceil(64);
+        let mut pos = vec![0u64; bits * words];
+        let mut neg = vec![0u64; bits * words];
+        for (kk, &v) in x.iter().enumerate() {
+            let mag = v.abs() as u64;
+            if mag == 0 {
+                continue;
+            }
+            let planes = if v > 0.0 { &mut pos } else { &mut neg };
+            let (wi, bit) = (kk / 64, 1u64 << (kk % 64));
+            for (b, chunk) in planes.chunks_exact_mut(words).enumerate() {
+                if (mag >> b) & 1 == 1 {
+                    chunk[wi] |= bit;
+                }
+            }
+        }
+        Some(ActivationPlanes {
+            bits,
+            words,
+            pos,
+            neg,
+        })
+    }
+
+    /// Number of magnitude bitplanes (0 for an all-zero row).
+    pub fn bits(&self) -> usize {
+        self.bits
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn dense(w: &[i8], k: usize, n: usize, x: &[f32]) -> Vec<f32> {
+        let mut y = vec![0f32; n];
+        for kk in 0..k {
+            for j in 0..n {
+                y[j] += x[kk] * w[kk * n + j] as f32;
+            }
+        }
+        y
+    }
+
+    fn random_ternary(k: usize, n: usize, seed: u64) -> Vec<i8> {
+        let mut rng = Pcg64::new(seed);
+        (0..k * n).map(|_| [-1i8, 0, 1][rng.below(3)]).collect()
+    }
+
+    #[test]
+    fn integer_inputs_take_plane_path_and_match_dense_exactly() {
+        // k = 70: one full word plus a 6-bit tail
+        let (k, n) = (70, 9);
+        let w = random_ternary(k, n, 1);
+        let pt = PackedTernary::pack(&w, k, n);
+        assert_eq!(pt.words(), 2);
+        let x: Vec<f32> = (0..k).map(|i| (i as i64 % 11 - 5) as f32).collect();
+        let planes = ActivationPlanes::try_pack(&x).expect("integer row must pack");
+        assert!(planes.bits() >= 3);
+        let mut y = vec![0f32; n];
+        pt.mvm(&x, &mut y);
+        assert_eq!(y, dense(&w, k, n, &x));
+    }
+
+    #[test]
+    fn plane_and_select_paths_agree_on_integers() {
+        let (k, n) = (130, 5);
+        let w = random_ternary(k, n, 2);
+        let pt = PackedTernary::pack(&w, k, n);
+        let x: Vec<f32> = (0..k).map(|i| (i as i64 % 7 - 3) as f32).collect();
+        let planes = ActivationPlanes::try_pack(&x).unwrap();
+        let mut a = vec![0f32; n];
+        let mut b = vec![0f32; n];
+        pt.mvm_planes(&planes, &mut a);
+        pt.mvm_select(&x, &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn float_inputs_take_select_path_within_tolerance() {
+        let (k, n) = (100, 8);
+        let w = random_ternary(k, n, 3);
+        let pt = PackedTernary::pack(&w, k, n);
+        let x: Vec<f32> = (0..k).map(|i| (i as f32 * 0.37).sin()).collect();
+        assert!(ActivationPlanes::try_pack(&x).is_none());
+        let mut y = vec![0f32; n];
+        pt.mvm(&x, &mut y);
+        for (a, b) in y.iter().zip(&dense(&w, k, n, &x)) {
+            assert!((a - b).abs() <= 1e-4 * (1.0 + b.abs()), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn empty_and_degenerate_shapes() {
+        // n = 0: no columns, empty output
+        let pt = PackedTernary::pack(&[], 5, 0);
+        assert_eq!(pt.matmul(&[1.0, 2.0, 3.0, 4.0, 5.0], 1), Vec::<f32>::new());
+        // k = 0: zero contraction, all-zero output
+        let pt = PackedTernary::pack(&[], 0, 3);
+        assert_eq!(pt.matmul(&[], 1), vec![0.0; 3]);
+        // all-zero matrix
+        let pt = PackedTernary::pack(&[0i8; 12], 4, 3);
+        assert_eq!(pt.matmul(&[9.0, -3.0, 1.0, 2.0], 1), vec![0.0; 3]);
+    }
+
+    #[test]
+    fn try_pack_f32_rejects_non_ternary() {
+        assert!(PackedTernary::try_pack_f32(&[1.0, -1.0, 0.0, 1.0], 2, 2).is_some());
+        assert!(PackedTernary::try_pack_f32(&[1.0, -1.0, 0.5, 1.0], 2, 2).is_none());
+        assert!(PackedTernary::try_pack_f32(&[1.0, 2.0, 0.0, 1.0], 2, 2).is_none());
+    }
+
+    #[test]
+    fn activation_pack_gates_on_exact_sum_bound() {
+        // magnitudes fine individually but k * max too big to stay exact
+        let big = vec![(1 << 20) as f32; 32];
+        assert!(ActivationPlanes::try_pack(&big).is_none());
+        let ok = vec![(1 << 10) as f32; 32];
+        assert!(ActivationPlanes::try_pack(&ok).is_some());
+        // non-integral and non-finite inputs never plane-pack
+        assert!(ActivationPlanes::try_pack(&[0.5]).is_none());
+        assert!(ActivationPlanes::try_pack(&[f32::NAN]).is_none());
+        // negative zero is integral with magnitude 0
+        assert!(ActivationPlanes::try_pack(&[-0.0, 0.0]).is_some());
+    }
+
+    #[test]
+    fn toggle_roundtrips() {
+        assert!(enabled());
+        set_enabled(false);
+        assert!(!enabled());
+        set_enabled(true);
+        assert!(enabled());
+    }
+}

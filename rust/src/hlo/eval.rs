@@ -43,9 +43,22 @@
 //! large enough to amortize dispatch.  Each row is computed with exactly
 //! the sequential operation order, so results are bit-identical at any
 //! width; [`set_linear_fanout`] pins the width for tests and benches.
+//!
+//! Ternary constants: [`Interpreter::new`] scans the module once for 2-D
+//! `dot`s whose rhs is a constant with every entry in `{-1, 0, +1}` and
+//! pre-packs those into u64 bitplanes (`cim::packed`).  Qualifying dots
+//! then run the bit-packed kernel instead of the dense f32 rows — same
+//! values on integer activations, float parity within the 1e-4 gate.
+//! The kernel choice is made **per dot call, before the row fan-out**,
+//! so chunking can never route rows of one dot to different kernels
+//! ([`dot_packed_count`] / [`dot_dense_count`] expose which ran).
 
+use std::collections::hash_map::Entry;
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
+
+use crate::cim::packed::{self, PackedTernary};
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -112,6 +125,23 @@ pub fn dus_in_place_count() -> u64 {
 /// Process-wide count of copying `dynamic-update-slice` executions.
 pub fn dus_copied_count() -> u64 {
     DUS_COPIED.load(Ordering::Relaxed)
+}
+
+/// 2-D fast-path `dot` executions routed to the bit-packed ternary
+/// kernel (counted once per dot, before the row fan-out).
+static DOT_PACKED: AtomicU64 = AtomicU64::new(0);
+/// 2-D fast-path `dot` executions on the dense f32 row kernel.
+static DOT_DENSE: AtomicU64 = AtomicU64::new(0);
+
+/// Process-wide count of packed-kernel `dot` executions.  Monotone;
+/// tests assert on deltas (other interpreter runs can only increase it).
+pub fn dot_packed_count() -> u64 {
+    DOT_PACKED.load(Ordering::Relaxed)
+}
+
+/// Process-wide count of dense-kernel `dot` executions (2-D fast path).
+pub fn dot_dense_count() -> u64 {
+    DOT_DENSE.load(Ordering::Relaxed)
 }
 
 /// Fan-out override for the `dot`/`convolution` row loops: 0 (default)
@@ -467,6 +497,10 @@ pub struct Interpreter {
     /// instructions scalar-typed, ops in the scalar subset) — true for
     /// every `reduce`/`sort`/`scatter` region the artifacts apply.
     scalar_ok: Vec<bool>,
+    /// Per computation: ternary-valued 2-D constants feeding a `dot`'s
+    /// rhs, pre-packed into bitplanes at load time and keyed by the
+    /// constant's slot (dots sharing a weight matrix share one packing).
+    packed_consts: Vec<HashMap<usize, Arc<PackedTernary>>>,
 }
 
 /// Cap on `while` trip counts so a malformed graph fails instead of
@@ -476,7 +510,12 @@ const MAX_WHILE_ITERS: usize = 10_000_000;
 impl Interpreter {
     pub fn new(module: Module) -> Self {
         let scalar_ok = compute_scalar_ok(&module);
-        Interpreter { module, scalar_ok }
+        let packed_consts = scan_ternary_dot_constants(&module);
+        Interpreter {
+            module,
+            scalar_ok,
+            packed_consts,
+        }
     }
 
     pub fn module(&self) -> &Module {
@@ -513,7 +552,7 @@ impl Interpreter {
         vals.resize_with(c.instrs.len(), || None);
         for (i, ins) in c.instrs.iter().enumerate() {
             let v = self
-                .eval_instr(c, i, ins, &mut vals, &mut args)
+                .eval_instr(ci, c, i, ins, &mut vals, &mut args)
                 .with_context(|| format!("computation {}, {} #{i}", c.name, ins.op.name()))?;
             vals[i] = Some(v);
             for &s in &ins.operands {
@@ -527,6 +566,7 @@ impl Interpreter {
 
     fn eval_instr(
         &self,
+        ci: usize,
         c: &Computation,
         i: usize,
         ins: &Instr,
@@ -865,7 +905,14 @@ impl Interpreter {
             Op::Dot { lhs_contracting, rhs_contracting } => {
                 let a = operand_arr(ins, vals, 0)?;
                 let b = operand_arr(ins, vals, 1)?;
-                eval_dot(a, b, lhs_contracting, rhs_contracting, array_out_dims(ins)?)
+                // kernel choice is per dot call (load-time constant scan +
+                // process-wide toggle), never per fanned-out row chunk
+                let pt = if packed::enabled() {
+                    self.packed_consts[ci].get(&ins.operands[1]).map(Arc::as_ref)
+                } else {
+                    None
+                };
+                eval_dot(a, b, lhs_contracting, rhs_contracting, array_out_dims(ins)?, pt)
                     .map(Value::arr)
             }
             Op::Convolution(cd) => {
@@ -1310,12 +1357,55 @@ fn eval_gather(
     Ok(take(operand, out_shape, &picks))
 }
 
+/// Module-load-time scan: for every 2-D `[m,k] x [k,n]` dot whose rhs
+/// operand is a constant with all entries in `{-1, 0, +1}`, pre-pack
+/// that constant into u64 bitplanes.  Keyed by the constant's slot so
+/// dots sharing one weight matrix share one packing.
+fn scan_ternary_dot_constants(module: &Module) -> Vec<HashMap<usize, Arc<PackedTernary>>> {
+    module
+        .comps
+        .iter()
+        .map(|c| {
+            let mut map: HashMap<usize, Arc<PackedTernary>> = HashMap::new();
+            for ins in &c.instrs {
+                let Op::Dot { lhs_contracting, rhs_contracting } = &ins.op else {
+                    continue;
+                };
+                if ins.operands.len() != 2
+                    || lhs_contracting[..] != [1]
+                    || rhs_contracting[..] != [0]
+                {
+                    continue;
+                }
+                let wi = ins.operands[1];
+                let Op::Constant(lit) = &c.instrs[wi].op else {
+                    continue;
+                };
+                if lit.shape.len() != 2 {
+                    continue;
+                }
+                let Data::F32(w) = &lit.data else {
+                    continue;
+                };
+                if let Entry::Vacant(e) = map.entry(wi) {
+                    let packed = PackedTernary::try_pack_f32(w, lit.shape[0], lit.shape[1]);
+                    if let Some(pt) = packed {
+                        e.insert(Arc::new(pt));
+                    }
+                }
+            }
+            map
+        })
+        .collect()
+}
+
 fn eval_dot(
     a: &ArrayVal,
     b: &ArrayVal,
     lhs_c: &[usize],
     rhs_c: &[usize],
     out_shape: Vec<usize>,
+    packed: Option<&PackedTernary>,
 ) -> Result<ArrayVal> {
     let (x, w) = match (&a.data, &b.data) {
         (Data::F32(x), Data::F32(w)) => (x, w),
@@ -1328,18 +1418,33 @@ fn eval_dot(
         if b.shape[0] != k {
             bail!("dot contraction size mismatch");
         }
+        let packed = packed.filter(|p| p.k == k && p.n == n);
+        if packed.is_some() {
+            DOT_PACKED.fetch_add(1, Ordering::Relaxed);
+        } else {
+            DOT_DENSE.fetch_add(1, Ordering::Relaxed);
+        }
         // each output row is an independent chunk with the exact
         // sequential accumulation order, so the fan-out is bit-identical
         // at any width (inline when nested inside a pool worker)
         let row_block = |r: std::ops::Range<usize>| -> Vec<f32> {
             let mut part = vec![0f32; r.len() * n];
-            for (pi, i) in r.enumerate() {
-                let xrow = &x[i * k..(i + 1) * k];
-                let orow = &mut part[pi * n..(pi + 1) * n];
-                for (kk, &xv) in xrow.iter().enumerate() {
-                    let wrow = &w[kk * n..(kk + 1) * n];
-                    for (o, wv) in orow.iter_mut().zip(wrow) {
-                        *o += xv * wv;
+            match packed {
+                Some(p) => {
+                    for (pi, i) in r.enumerate() {
+                        p.mvm(&x[i * k..(i + 1) * k], &mut part[pi * n..(pi + 1) * n]);
+                    }
+                }
+                None => {
+                    for (pi, i) in r.enumerate() {
+                        let xrow = &x[i * k..(i + 1) * k];
+                        let orow = &mut part[pi * n..(pi + 1) * n];
+                        for (kk, &xv) in xrow.iter().enumerate() {
+                            let wrow = &w[kk * n..(kk + 1) * n];
+                            for (o, wv) in orow.iter_mut().zip(wrow) {
+                                *o += xv * wv;
+                            }
+                        }
                     }
                 }
             }
@@ -1601,6 +1706,41 @@ ENTRY main.5 {
             Data::F32(v) => assert_eq!(v, &vec![6.0, 15.0]),
             other => panic!("expected f32, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn ternary_dot_constant_is_packed_at_load_time() {
+        let text = "HloModule t
+ENTRY main.1 {
+  x.2 = f32[2,3]{1,0} parameter(0)
+  w.3 = f32[3,2]{1,0} constant({ {1, -1}, {0, 1}, {-1, 0} })
+  ROOT d.4 = f32[2,2]{1,0} dot(x.2, w.3), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+";
+        let interp = Interpreter::new(parse(text).unwrap());
+        let pt = interp.packed_consts[0]
+            .get(&1)
+            .expect("ternary constant must pre-pack");
+        assert_eq!((pt.k, pt.n), (3, 2));
+        // integer activations: packed dot == exact matmul, bit for bit
+        let out = run1(text, &[f32_input(&[2, 3], &[2.0, -1.0, 3.0, 0.0, 4.0, -2.0])]);
+        match &out.as_arr().unwrap().data {
+            Data::F32(v) => assert_eq!(v, &vec![-1.0, -3.0, 2.0, 4.0]),
+            other => panic!("expected f32, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn non_ternary_dot_constant_is_not_packed() {
+        let text = "HloModule t
+ENTRY main.1 {
+  x.2 = f32[2,2]{1,0} parameter(0)
+  w.3 = f32[2,2]{1,0} constant({ {0.5, -1}, {0, 1} })
+  ROOT d.4 = f32[2,2]{1,0} dot(x.2, w.3), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+";
+        let interp = Interpreter::new(parse(text).unwrap());
+        assert!(interp.packed_consts[0].is_empty());
     }
 
     #[test]

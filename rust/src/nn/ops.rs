@@ -197,6 +197,19 @@ pub fn matmul(x: &[f32], w: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     y
 }
 
+/// Bit-packed ternary matmul `(m, k) x (k, n)` — the dense-layer entry
+/// point for weights packed at load time (see [`crate::cim::packed`]).
+/// Exactly equals [`matmul`] on integer-valued activations; on general
+/// f32 inputs the two differ only by float accumulation order (covered
+/// by the 1e-4 backend-parity gate).
+pub fn matmul_ternary(
+    x: &[f32],
+    w: &crate::cim::packed::PackedTernary,
+    m: usize,
+) -> Vec<f32> {
+    w.matmul(x, m)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -285,5 +298,16 @@ mod tests {
         let x = vec![1.0f32, 2.0, 3.0, 4.0]; // (2,2)
         let w = vec![1.0f32, 0.0, 0.0, 1.0]; // identity
         assert_eq!(matmul(&x, &w, 2, 2, 2), x);
+    }
+
+    #[test]
+    fn matmul_ternary_equals_dense_on_integers() {
+        let (m, k, n) = (3, 37, 6); // k crosses the 4-wide unroll tail
+        let mut rng = crate::util::rng::Pcg64::new(9);
+        let wi: Vec<i8> = (0..k * n).map(|_| [-1i8, 0, 1][rng.below(3)]).collect();
+        let wf: Vec<f32> = wi.iter().map(|&v| v as f32).collect();
+        let pt = crate::cim::packed::PackedTernary::pack(&wi, k, n);
+        let x: Vec<f32> = (0..m * k).map(|i| (i as i64 % 13 - 6) as f32).collect();
+        assert_eq!(matmul_ternary(&x, &pt, m), matmul(&x, &wf, m, k, n));
     }
 }

@@ -2,6 +2,7 @@
 //! digital path (the `Qun`/`SFP` software rows of Fig. 3e/5e) or on the
 //! simulated analogue crossbar (`EE.Qun+Noise` / `Mem` rows).
 
+use crate::cim::packed::PackedTernary;
 use crate::cim::CimMatrix;
 use crate::crossbar::ConverterConfig;
 use crate::device::DeviceConfig;
@@ -78,6 +79,11 @@ pub enum WeightMatrix {
         k: usize,
         n: usize,
         w: Vec<f32>,
+        /// Bit-packed form, built at load time for ternary-valued
+        /// matrices; [`WeightMatrix::matmul`] dispatches through it
+        /// unless `cim::packed` is disabled.  `w` stays alive as the
+        /// dense f32 oracle (property tests diff the two).
+        packed: Option<PackedTernary>,
     },
     Analog {
         cim: CimMatrix,
@@ -104,6 +110,7 @@ impl WeightMatrix {
                 k,
                 n,
                 w: w.iter().map(|&v| v as f32).collect(),
+                packed: Some(PackedTernary::pack(w, k, n)),
             },
             NoiseSpec::Analog { dev, conv } => WeightMatrix::Analog {
                 cim: CimMatrix::program(w, k, n, dev, conv, rng),
@@ -128,6 +135,10 @@ impl WeightMatrix {
                 k,
                 n,
                 w: w.to_vec(),
+                // fp weights only pack when every entry is already
+                // exactly ternary (e.g. a quantized matrix routed
+                // through the fp loader)
+                packed: PackedTernary::try_pack_f32(w, k, n),
             },
             NoiseSpec::Analog { dev, conv } => {
                 let wmax = w.iter().fold(0f32, |m, &v| m.max(v.abs())).max(1e-9);
@@ -172,7 +183,12 @@ impl WeightMatrix {
     /// `keys.rows()`.
     pub fn matmul(&self, x: &[f32], m: usize, keys: &MvmKeys<'_>) -> Vec<f32> {
         match self {
-            WeightMatrix::Exact { k, n, w } => super::ops::matmul(x, w, m, *k, *n),
+            WeightMatrix::Exact { k, n, w, packed } => match packed {
+                Some(pt) if crate::cim::packed::enabled() => {
+                    super::ops::matmul_ternary(x, pt, m)
+                }
+                _ => super::ops::matmul(x, w, m, *k, *n),
+            },
             WeightMatrix::Analog {
                 cim,
                 scale,
@@ -194,6 +210,15 @@ impl WeightMatrix {
                 }
                 y
             }
+        }
+    }
+
+    /// Whether this matrix carries a bit-packed ternary form (always
+    /// true for digitally loaded ternary weights).
+    pub fn is_packed(&self) -> bool {
+        match self {
+            WeightMatrix::Exact { packed, .. } => packed.is_some(),
+            WeightMatrix::Analog { cim, .. } => cim.is_packed(),
         }
     }
 
@@ -264,6 +289,27 @@ mod tests {
         let d = WeightMatrix::from_ternary(&w, 4, 4, &NoiseSpec::Digital, &mut rng);
         let _ = d.matmul(&[1.0; 4], 1, &mk);
         assert_eq!(d.take_counters().mvms, 0);
+    }
+
+    #[test]
+    fn digital_ternary_packs_and_matches_dense_oracle_exactly() {
+        let (k, n, m) = (130, 12, 3); // two words plus a 2-bit tail
+        let mut rng = Pcg64::new(31);
+        let w: Vec<i8> = (0..k * n).map(|_| [-1i8, 0, 1][rng.below(3)]).collect();
+        let dig = WeightMatrix::from_ternary(&w, k, n, &NoiseSpec::Digital, &mut rng);
+        assert!(dig.is_packed(), "digital ternary weights must pack");
+        let wf: Vec<f32> = w.iter().map(|&v| v as f32).collect();
+        let x: Vec<f32> = (0..m * k).map(|i| (i as i64 % 15 - 7) as f32).collect();
+        let sk = keys_for(m);
+        let mk = MvmKeys::per_sample(&sk);
+        // integer activations: packed dispatch == the f32 dense oracle, ==
+        assert_eq!(dig.matmul(&x, m, &mk), super::super::ops::matmul(&x, &wf, m, k, n));
+        // ternary-valued fp weights auto-pack; general fp weights do not
+        let tf = WeightMatrix::from_f32(&wf, k, n, &NoiseSpec::Digital, &mut rng);
+        assert!(tf.is_packed());
+        let gf: Vec<f32> = wf.iter().map(|&v| v * 0.25).collect();
+        let fp = WeightMatrix::from_f32(&gf, k, n, &NoiseSpec::Digital, &mut rng);
+        assert!(!fp.is_packed());
     }
 
     #[test]

@@ -44,6 +44,14 @@ impl<'a> Gen<'a> {
     pub fn threads(&mut self, max: usize) -> usize {
         1 + self.rng.below(self.dim(max))
     }
+
+    /// Integer-valued f32 vector in `[lo, hi]` — for kernels whose
+    /// exactness contract is integer inputs (the bit-packed ternary MVM).
+    pub fn int_vec(&mut self, n: usize, lo: i64, hi: i64) -> Vec<f32> {
+        (0..n)
+            .map(|_| (lo + self.rng.below((hi - lo + 1) as usize) as i64) as f32)
+            .collect()
+    }
 }
 
 /// Run a property over `cases` random inputs.  Panics with a reproducible

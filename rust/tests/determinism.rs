@@ -384,6 +384,51 @@ fn sharded_serving_is_bit_identical_across_replica_counts() {
 }
 
 #[test]
+fn packed_kernel_toggle_is_invisible_to_outcomes_and_energy() {
+    // The bit-packed ternary kernel lives on the exact/mean paths only;
+    // the noisy analogue substrate (keyed crossbar MVMs + CAM search)
+    // must be untouched by the toggle: outcomes AND CIM energy counters
+    // bit-identical with packing on vs off.
+    let n = 12;
+    let xs = inputs(n);
+    memdyn::cim::packed::set_enabled(true);
+    let on_engine = engine(1);
+    let on = on_engine.infer_batch(&xs, n).unwrap();
+    let on_energy = energy(&on_engine);
+    assert!(on_energy.mvms > 0, "toy model must touch the crossbars");
+    memdyn::cim::packed::set_enabled(false);
+    let off_engine = engine(1);
+    let off = off_engine.infer_batch(&xs, n).unwrap();
+    let off_energy = energy(&off_engine);
+    memdyn::cim::packed::set_enabled(true);
+    assert_outcomes_eq(&on, &off, "packing off");
+    assert_eq!(on_energy, off_energy, "packing toggled the energy counters");
+
+    // And on a surface where packing IS active (ideal-device mean path):
+    // same bits with the kernel on and off — integer activations make
+    // both the popcount kernel and the tile loop exact — and zero
+    // counter deltas either way (the mean path is free by construction).
+    let mut rng = Pcg64::new(55);
+    let w: Vec<i8> = (0..DIM * DIM).map(|_| [-1i8, 0, 1][rng.below(3)]).collect();
+    let cim = memdyn::cim::CimMatrix::program(
+        &w,
+        DIM,
+        DIM,
+        &DeviceConfig::ideal(),
+        &ConverterConfig::ideal(),
+        &mut rng,
+    );
+    assert!(cim.is_packed(), "ideal device must build the packed form");
+    let x: Vec<f32> = (0..2 * DIM).map(|i| (i as i64 % 5 - 2) as f32).collect();
+    let y_on = cim.matmul_mean(&x, 2);
+    memdyn::cim::packed::set_enabled(false);
+    let y_off = cim.matmul_mean(&x, 2);
+    memdyn::cim::packed::set_enabled(true);
+    assert_eq!(y_on, y_off, "mean-path bits changed with the packing toggle");
+    assert_eq!(cim.take_counters(), memdyn::cim::CimCounters::default());
+}
+
+#[test]
 fn batch_split_does_not_change_outcomes() {
     // the same samples inferred one-by-one (fresh engine, same ids) match
     // the batched run: noise is per-request, not per-batch-composition

@@ -691,6 +691,133 @@ ENTRY main.1 {
 }
 
 // ---------------------------------------------------------------------------
+// bit-packed ternary dot dispatch (cim::packed via the load-time scan)
+// ---------------------------------------------------------------------------
+
+/// Serializes the tests that toggle `cim::packed::set_enabled` or assert
+/// on the `dot_packed_count`/`dot_dense_count` dispatch counters, so a
+/// concurrently running toggle can't flip another test's kernel choice
+/// mid-assert.  Survives poisoning (counter asserts are monotone).
+static PACKED_GATE: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn packed_gate() -> std::sync::MutexGuard<'static, ()> {
+    PACKED_GATE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Module with a `(m,k) x (k,n)` dot over an inline ternary constant.
+fn ternary_dot_module(m: usize, k: usize, n: usize, w: &[i8]) -> String {
+    let rows: Vec<String> = (0..k)
+        .map(|kk| {
+            let row: Vec<String> = (0..n).map(|j| w[kk * n + j].to_string()).collect();
+            format!("{{ {} }}", row.join(", "))
+        })
+        .collect();
+    format!(
+        "HloModule p\nENTRY main.1 {{\n  \
+         x.2 = f32[{m},{k}] parameter(0)\n  \
+         w.3 = f32[{k},{n}] constant({{ {} }})\n  \
+         ROOT d.4 = f32[{m},{n}] dot(x.2, w.3), \
+         lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}\n}}\n",
+        rows.join(", ")
+    )
+}
+
+fn ternary_weights(k: usize, n: usize, seed: u64) -> Vec<i8> {
+    let mut rng = Pcg64::new(seed);
+    (0..k * n).map(|_| [-1i8, 0, 1][rng.below(3)]).collect()
+}
+
+fn dense_dot(x: &[f32], w: &[i8], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut y = vec![0f32; m * n];
+    for i in 0..m {
+        for kk in 0..k {
+            for j in 0..n {
+                y[i * n + j] += x[i * k + kk] * w[kk * n + j] as f32;
+            }
+        }
+    }
+    y
+}
+
+#[test]
+fn dot_ternary_constant_dispatches_packed_and_matches_dense_exactly() {
+    let _g = packed_gate();
+    let (m, k, n) = (4usize, 70usize, 6usize); // k = one word + 6-bit tail
+    let w = ternary_weights(k, n, 51);
+    let text = ternary_dot_module(m, k, n, &w);
+    let x: Vec<f32> = (0..m * k).map(|i| (i as i64 % 17 - 8) as f32).collect();
+    let want = dense_dot(&x, &w, m, k, n);
+
+    let packed_before = memdyn::hlo::eval::dot_packed_count();
+    let got = out_f32(&run(&text, &[vf32(&[m, k], x.clone())]));
+    assert_eq!(got, want, "packed dot != dense oracle on integer inputs");
+    assert!(
+        memdyn::hlo::eval::dot_packed_count() - packed_before >= 1,
+        "ternary-constant dot must take the packed kernel"
+    );
+
+    // disabled: same module re-routes to the dense kernel, same bits
+    memdyn::cim::packed::set_enabled(false);
+    let dense_before = memdyn::hlo::eval::dot_dense_count();
+    let dense = out_f32(&run(&text, &[vf32(&[m, k], x)]));
+    memdyn::cim::packed::set_enabled(true);
+    assert_eq!(dense, want, "dense fallback diverged");
+    assert!(
+        memdyn::hlo::eval::dot_dense_count() - dense_before >= 1,
+        "disabled packing must fall back to the dense kernel"
+    );
+}
+
+#[test]
+fn dot_packed_dispatch_is_fanout_invariant() {
+    // 32x70 @ 70x40 = 89600 MACs, above the fan-out threshold, so the
+    // rows really chunk across the pool at fanout 4; the kernel choice
+    // is made before chunking, so every width must (a) still dispatch
+    // packed and (b) produce bit-identical output
+    let _g = packed_gate();
+    let (m, k, n) = (32usize, 70usize, 40usize);
+    let w = ternary_weights(k, n, 52);
+    let text = ternary_dot_module(m, k, n, &w);
+    let x: Vec<f32> = (0..m * k).map(|i| (i as i64 % 23 - 11) as f32).collect();
+    let want = dense_dot(&x, &w, m, k, n);
+    let mut outs = Vec::new();
+    for threads in [1usize, 4] {
+        memdyn::hlo::eval::set_linear_fanout(threads);
+        let before = memdyn::hlo::eval::dot_packed_count();
+        outs.push(out_f32(&run(&text, &[vf32(&[m, k], x.clone())])));
+        assert!(
+            memdyn::hlo::eval::dot_packed_count() - before >= 1,
+            "fanout {threads} changed the kernel a dot takes"
+        );
+    }
+    memdyn::hlo::eval::set_linear_fanout(0);
+    assert_eq!(outs[0], want, "packed dot != dense oracle");
+    assert_eq!(outs[0], outs[1], "packed dot diverged between fanout 1 and 4");
+}
+
+#[test]
+fn dot_packed_dispatch_is_bucket_invariant_b1_vs_b8() {
+    // the same ternary constant traced at bucket sizes 1 and 8 (separate
+    // modules, as the artifact buckets are): both must dispatch packed,
+    // and the shared row must come out bit-identical
+    let _g = packed_gate();
+    let (k, n) = (70usize, 12usize);
+    let w = ternary_weights(k, n, 53);
+    let t1 = ternary_dot_module(1, k, n, &w);
+    let t8 = ternary_dot_module(8, k, n, &w);
+    let x8: Vec<f32> = (0..8 * k).map(|i| (i as i64 % 19 - 9) as f32).collect();
+    let before = memdyn::hlo::eval::dot_packed_count();
+    let y1 = out_f32(&run(&t1, &[vf32(&[1, k], x8[..k].to_vec())]));
+    let y8 = out_f32(&run(&t8, &[vf32(&[8, k], x8.clone())]));
+    assert!(
+        memdyn::hlo::eval::dot_packed_count() - before >= 2,
+        "both bucket modules must dispatch the packed kernel"
+    );
+    assert_eq!(y1[..], y8[..n], "row 0 diverged between b1 and b8");
+    assert_eq!(y8, dense_dot(&x8, &w, 8, k, n), "b8 != dense oracle");
+}
+
+// ---------------------------------------------------------------------------
 // artifact census + end-to-end conformance (need `make artifacts`)
 // ---------------------------------------------------------------------------
 
@@ -838,6 +965,47 @@ fn xla_resnet_parity_holds_under_row_parallel_kernels() {
         per_fanout[0], per_fanout[1],
         "interpreter logits diverged between fanout 1 and 4"
     );
+}
+
+#[test]
+fn xla_resnet_parity_holds_with_packing_toggled() {
+    // the 1e-4 xla-vs-native gate re-run with the bit-packed ternary
+    // kernel explicitly on and explicitly off: tolerance must hold in
+    // both states (the packed path reorders f32 accumulation, so the
+    // two runs need not be bit-identical — only both within the gate)
+    let Some(dir) = artifacts() else { return };
+    let _g = packed_gate();
+    let bundle = ModelBundle::load(&dir, "resnet").unwrap();
+    let data = DatasetBundle::load(&dir, "mnist").unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let xla = XlaResNetModel::load(&rt, &bundle).unwrap();
+    let mut rng = Pcg64::new(1);
+    let native =
+        NativeResNet::build(&bundle, WeightSource::Ternary, &NoiseSpec::Digital, &mut rng)
+            .unwrap();
+
+    let batch = 2usize;
+    let input = &data.x_test[..batch * data.sample_len];
+    let feat = memdyn::nn::resnet::image_feature(input, batch, 28).unwrap();
+    let keys: Vec<StreamKey> =
+        (0..batch as u64).map(|i| StreamKey::root(1).child(i)).collect();
+    let (nat_logits, _) = native.forward(&feat, &keys);
+
+    for on in [true, false] {
+        memdyn::cim::packed::set_enabled(on);
+        let mut state = xla.init_seq(input, batch, 0).unwrap();
+        for i in 0..xla.n_blocks() {
+            let _ = xla.step(i, &mut state).unwrap();
+        }
+        let logits = xla.finish(&state).unwrap();
+        for (a, b) in logits.iter().zip(&nat_logits) {
+            assert!(
+                close(*a, *b, 1e-4),
+                "packing {on}: xla {a} vs native {b}"
+            );
+        }
+    }
+    memdyn::cim::packed::set_enabled(true);
 }
 
 #[test]

@@ -4,6 +4,7 @@
 
 use memdyn::budget::BudgetModel;
 use memdyn::cam::CamBank;
+use memdyn::cim::packed::{ActivationPlanes, PackedTernary};
 use memdyn::cim::CimMatrix;
 use memdyn::crossbar::ConverterConfig;
 use memdyn::device::DeviceConfig;
@@ -151,6 +152,178 @@ fn prop_ideal_crossbar_mvm_equals_exact_matmul() {
                 if (a - b).abs() > 1e-2 {
                     return Err(format!("mvm {a} != exact {b}"));
                 }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// bit-packed ternary MVM: exact (==) against the f32 dense oracle
+// ---------------------------------------------------------------------------
+
+/// The f32 dense oracle for the packed kernel — column-ascending
+/// accumulation, no zero skipping, the simplest possible reference.
+fn dense_oracle(w: &[i8], k: usize, n: usize, x: &[f32], m: usize) -> Vec<f32> {
+    let mut y = vec![0f32; m * n];
+    for i in 0..m {
+        for kk in 0..k {
+            for j in 0..n {
+                y[i * n + j] += x[i * k + kk] * w[kk * n + j] as f32;
+            }
+        }
+    }
+    y
+}
+
+#[test]
+fn prop_packed_mvm_equals_dense_oracle_bit_for_bit() {
+    // random shapes spanning the word-size corners: K < 64, K % 64 != 0,
+    // multi-word K, empty matrices (k = 0 and n = 0), all-zero rows and
+    // columns — integer activations, compared with ==, no tolerance
+    forall(
+        41,
+        60,
+        |g| {
+            let k = g.dim0(200);
+            let n = g.dim0(48);
+            let m = 1 + g.rng.below(4);
+            let mut w: Vec<f32> = g.ternary_vec(k * n);
+            if k > 0 && n > 0 {
+                // force an all-zero row and an all-zero column
+                let zr = g.rng.below(k);
+                let zc = g.rng.below(n);
+                for j in 0..n {
+                    w[zr * n + j] = 0.0;
+                }
+                for kk in 0..k {
+                    w[kk * n + zc] = 0.0;
+                }
+            }
+            let x = g.int_vec(m * k, -20, 20);
+            (k, n, m, w, x)
+        },
+        |(k, n, m, w, x)| {
+            let wi: Vec<i8> = w.iter().map(|&v| v as i8).collect();
+            let pt = PackedTernary::pack(&wi, *k, *n);
+            let got = pt.matmul(x, *m);
+            let want = dense_oracle(&wi, *k, *n, x, *m);
+            if got != want {
+                return Err(format!("packed != dense oracle: {got:?} vs {want:?}"));
+            }
+            // the production dense kernel (4-wide unroll, zero skipping)
+            // is an equally exact oracle on integer inputs
+            if got != ops::matmul(x, w, *m, *k, *n) {
+                return Err("packed != ops::matmul".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn packed_kernel_k_boundary_sweep_is_exact() {
+    // deterministic sweep of the tail-masking corners around the u64
+    // word size, plus the degenerate shapes
+    let mut rng = Pcg64::new(42);
+    for &k in &[0usize, 1, 3, 63, 64, 65, 127, 128, 129, 200] {
+        for &n in &[0usize, 1, 7] {
+            let wi: Vec<i8> = (0..k * n).map(|_| [-1i8, 0, 1][rng.below(3)]).collect();
+            let pt = PackedTernary::pack(&wi, k, n);
+            let x: Vec<f32> = (0..k).map(|_| (rng.below(31) as i64 - 15) as f32).collect();
+            let mut y = vec![0f32; n];
+            pt.mvm(&x, &mut y);
+            assert_eq!(y, dense_oracle(&wi, k, n, &x, 1), "k={k} n={n}");
+        }
+    }
+}
+
+#[test]
+fn prop_packed_integer_rows_take_the_popcount_path() {
+    // the sign/magnitude plane decomposition must accept exactly the
+    // rows the exactness contract covers, and the AND+popcount result
+    // must match the select path and the oracle
+    forall(
+        43,
+        40,
+        |g| {
+            let k = g.dim(180);
+            let n = g.dim(24);
+            (k, n, g.ternary_vec(k * n), g.int_vec(k, -100, 100))
+        },
+        |(k, n, w, x)| {
+            if ActivationPlanes::try_pack(x).is_none() {
+                return Err("integer row rejected by plane packing".into());
+            }
+            let wi: Vec<i8> = w.iter().map(|&v| v as i8).collect();
+            let pt = PackedTernary::pack(&wi, *k, *n);
+            let mut y = vec![0f32; *n];
+            pt.mvm(x, &mut y);
+            if y != dense_oracle(&wi, *k, *n, x, 1) {
+                return Err("popcount path != dense oracle".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_packed_float_path_stays_within_parity_tolerance() {
+    // general f32 activations take the select path: not bit-exact by
+    // contract, but inside the 1e-4 backend-parity envelope that gates
+    // the xla-vs-native suite
+    forall(
+        44,
+        40,
+        |g| {
+            let k = g.dim(180);
+            let n = g.dim(24);
+            (k, n, g.ternary_vec(k * n), g.f32_vec(k, -2.0, 2.0))
+        },
+        |(k, n, w, x)| {
+            let wi: Vec<i8> = w.iter().map(|&v| v as i8).collect();
+            let pt = PackedTernary::pack(&wi, *k, *n);
+            let mut y = vec![0f32; *n];
+            pt.mvm(x, &mut y);
+            let want = dense_oracle(&wi, *k, *n, x, 1);
+            for (a, b) in y.iter().zip(&want) {
+                if (a - b).abs() > 1e-4 * (1.0 + b.abs()) {
+                    return Err(format!("float path {a} vs {b}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_ideal_cim_mean_path_is_packed_and_exact() {
+    // the CIM mean path on an ideal device dispatches through the packed
+    // kernel and still equals the exact matmul bit for bit on integers
+    forall(
+        45,
+        20,
+        |g| {
+            let k = g.dim(600);
+            let n = g.dim(300);
+            (k, n, g.ternary_vec(k * n), g.int_vec(k, -10, 10))
+        },
+        |(k, n, w, x)| {
+            let wi: Vec<i8> = w.iter().map(|&v| v as i8).collect();
+            let mut rng = Pcg64::new(107);
+            let cim = CimMatrix::program(
+                &wi,
+                *k,
+                *n,
+                &DeviceConfig::ideal(),
+                &ConverterConfig::ideal(),
+                &mut rng,
+            );
+            if !cim.is_packed() {
+                return Err("ideal programming must build the packed form".into());
+            }
+            if cim.matmul_mean(x, 1) != dense_oracle(&wi, *k, *n, x, 1) {
+                return Err("packed mean path != dense oracle".into());
             }
             Ok(())
         },
