@@ -8,14 +8,18 @@
 # `cargo test` does not build them), and warning-free docs.
 #
 # Run from the repo root or rust/; artifact-dependent tests skip on a fresh
-# checkout.  The only Python step is the stdlib-only packed-ternary mirror
-# (independent re-derivation of the exact-equality contract); `make
-# artifacts` (or the CI artifact job) activates the artifact tests.
+# checkout.  The only Python steps are the stdlib-only mirrors (packed
+# ternary exact-equality; serving-layer determinism + back-fill schedule
+# purity); `make artifacts` (or the CI artifact job) activates the
+# artifact tests.
 set -euo pipefail
 cd "$(dirname "$0")"
 
 echo "== packed-ternary mirror (pure stdlib) =="
 python3 tools/check_packed_ternary.py
+
+echo "== shard-serving mirror (pure stdlib) =="
+python3 tools/check_shard_serving.py
 
 echo "== cargo fmt --check =="
 cargo fmt --all --check
@@ -35,8 +39,10 @@ cargo build --release --benches --examples
 # Both execution paths must stay green: the analogue crossbar simulation
 # (native) and the HLO-interpreter digital path (xla), single-shot and
 # through the sharded serving layer (2 replicas exercises the shared
-# admission queue + per-replica engines). Needs artifacts; skipped on a
-# fresh checkout, exercised by the CI artifact job.
+# admission queue + per-replica engines; the bursty run exercises
+# continuous-batching back-fill with a bounded queue, and the
+# --backfill 0 run covers the hold-until-done ablation path). Needs
+# artifacts; skipped on a fresh checkout, exercised by the CI artifact job.
 echo "== backend smoke matrix (native + xla, infer + sharded serve) =="
 if [ -f artifacts/index.json ]; then
     cargo run --release --quiet -- infer --index 0 --backend native
@@ -45,6 +51,12 @@ if [ -f artifacts/index.json ]; then
         --max-batch 8 --wait-ms 2 --replicas 2 --backend native
     cargo run --release --quiet -- serve --requests 40 --rate 2000 \
         --max-batch 8 --wait-ms 2 --replicas 2 --backend xla
+    cargo run --release --quiet -- serve --requests 40 --rate 2000 \
+        --max-batch 4 --wait-ms 2 --replicas 2 --workload bursty \
+        --queue-cap 64 --backfill 1 --backend native
+    cargo run --release --quiet -- serve --requests 40 --rate 2000 \
+        --max-batch 4 --wait-ms 2 --replicas 2 --workload bursty \
+        --queue-cap 64 --backfill 0 --backend native
 else
     echo "skipped: no artifacts (run \`make artifacts\` to activate)"
 fi

@@ -220,8 +220,9 @@ fn main() {
             ServerConfig {
                 max_batch: 8,
                 max_wait: Duration::from_millis(1),
-                queue_depth: 1024,
+                queue_cap: 1024,
                 replicas,
+                ..Default::default()
             },
         );
         let client = srv.client();

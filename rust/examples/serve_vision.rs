@@ -51,8 +51,9 @@ fn main() -> Result<()> {
         let cfg = ServerConfig {
             max_batch,
             max_wait: Duration::from_millis(wait_ms),
-            queue_depth: 4096,
+            queue_cap: 4096,
             replicas,
+            ..Default::default()
         };
         // cloneable factories: one call per replica, each on its own thread
         let server = match backend.as_str() {

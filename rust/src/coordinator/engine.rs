@@ -41,6 +41,50 @@ pub struct Outcome {
     pub similarity: f32,
 }
 
+/// One batch of requests advancing through the backbone together, one
+/// block per [`Engine::advance_cohort`] call.
+///
+/// A cohort is the continuous-batching server's unit of work: because
+/// per-block feature geometry differs (a ResNet block changes h/w/c), a
+/// model state can only hold rows at one depth — so the server runs one
+/// cohort per admission round instead of merging new arrivals into a
+/// running state.  Every cohort advances one block per scheduling round,
+/// which keeps all in-flight cohorts at pairwise distinct depths without
+/// any state-merge operation.  Within a cohort the semantics are exactly
+/// [`Engine::infer_batch_keyed`]'s: `infer_span` is itself implemented as
+/// `begin_cohort` + `advance_cohort` to exhaustion, so the two paths
+/// cannot diverge.
+pub struct Cohort<S> {
+    state: S,
+    /// `alive[row]` = original position (in the admitted batch) of the
+    /// state's row `row`; shrinks as requests exit.
+    alive: Vec<usize>,
+    ids: Vec<u64>,
+    depth: usize,
+    done: bool,
+}
+
+impl<S> Cohort<S> {
+    /// Requests still occupying a slot (not yet exited or finished).
+    pub fn live(&self) -> usize {
+        if self.done {
+            0
+        } else {
+            self.alive.len()
+        }
+    }
+
+    /// Blocks already executed (0 for a freshly admitted cohort).
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// True once every member has an outcome (all slots vacated).
+    pub fn is_done(&self) -> bool {
+        self.done
+    }
+}
+
 pub struct Engine<M: DynModel> {
     pub model: M,
     pub memory: ExitMemory,
@@ -174,51 +218,108 @@ impl<M: DynModel + Sync> Engine<M> {
         Ok(out)
     }
 
-    /// Sequential early-exit loop over one span of requests (`ids[i]` is
-    /// sample `i`'s request id).
-    fn infer_span(&self, input: &[f32], batch: usize, ids: &[u64]) -> Result<Vec<Outcome>> {
+    /// Admit one batch as a [`Cohort`] at depth 0.  `ids[i]` is sample
+    /// `i`'s request id — the anchor of its noise streams, so outcomes are
+    /// a function of (id, input, model) regardless of what else shares the
+    /// cohort or when it was admitted.  `batch == 0` is an error: models
+    /// are entitled to divide by the batch size in `init`.
+    pub fn begin_cohort(
+        &self,
+        input: &[f32],
+        batch: usize,
+        ids: &[u64],
+    ) -> Result<Cohort<M::State>> {
+        if batch == 0 {
+            return Err(anyhow::anyhow!("begin_cohort: empty batch"));
+        }
+        if ids.len() != batch {
+            return Err(anyhow::anyhow!(
+                "begin_cohort: {} ids for batch {batch}",
+                ids.len()
+            ));
+        }
+        Ok(Cohort {
+            state: self.model.init(input, batch, ids)?,
+            alive: (0..batch).collect(),
+            ids: ids.to_vec(),
+            depth: 0,
+            done: false,
+        })
+    }
+
+    /// Advance a cohort one block: step, CAM search, exit test, and state
+    /// compaction for survivors.  Returns the requests resolved at this
+    /// boundary as `(original_row, outcome)` pairs — each vacates its slot
+    /// the moment it is returned, which is the continuous batcher's
+    /// re-batch point.  After the last block the survivors run the head
+    /// and the cohort is done.  Calling on a done cohort returns empty.
+    pub fn advance_cohort(&self, c: &mut Cohort<M::State>) -> Result<Vec<(usize, Outcome)>> {
+        if c.done {
+            return Ok(Vec::new());
+        }
         let blocks = self.model.n_blocks();
-        let mut state = self.model.init(input, batch, ids)?;
-        // alive[i] = original position of row i
-        let mut alive: Vec<usize> = (0..batch).collect();
-        let mut outcomes: Vec<Option<Outcome>> = vec![None; batch];
-        for e in 0..blocks {
-            if alive.is_empty() {
-                break;
-            }
-            let svs = self.model.step(e, &mut state)?;
-            let dim = svs.len() / alive.len();
-            let mut keep: Vec<usize> = Vec::with_capacity(alive.len());
-            for (row, &orig) in alive.iter().enumerate() {
-                let sv = &svs[row * dim..(row + 1) * dim];
-                let m = self.memory.search(e, sv, ids[orig]);
-                if self.policy.should_exit(&m, self.thresholds[e]) {
-                    outcomes[orig] = Some(Outcome {
+        let e = c.depth;
+        let mut resolved = Vec::new();
+        let svs = self.model.step(e, &mut c.state)?;
+        let dim = svs.len() / c.alive.len();
+        let mut keep: Vec<usize> = Vec::with_capacity(c.alive.len());
+        for (row, &orig) in c.alive.iter().enumerate() {
+            let sv = &svs[row * dim..(row + 1) * dim];
+            let m = self.memory.search(e, sv, c.ids[orig]);
+            if self.policy.should_exit(&m, self.thresholds[e]) {
+                resolved.push((
+                    orig,
+                    Outcome {
                         class: m.class,
                         exit: e,
                         exited_early: true,
                         similarity: m.similarity,
-                    });
-                } else {
-                    keep.push(row);
-                }
-            }
-            if keep.len() != alive.len() {
-                state = self.model.select(&state, &keep);
-                alive = keep.into_iter().map(|r| alive[r]).collect();
+                    },
+                ));
+            } else {
+                keep.push(row);
             }
         }
-        if !alive.is_empty() {
-            let logits = self.model.finish(&state)?;
+        if keep.len() != c.alive.len() {
+            let compacted = self.model.select(&c.state, &keep);
+            let remapped: Vec<usize> = keep.into_iter().map(|r| c.alive[r]).collect();
+            c.state = compacted;
+            c.alive = remapped;
+        }
+        c.depth += 1;
+        if c.depth == blocks && !c.alive.is_empty() {
+            let logits = self.model.finish(&c.state)?;
             let classes = self.model.classes();
-            for (row, &orig) in alive.iter().enumerate() {
+            for (row, &orig) in c.alive.iter().enumerate() {
                 let lrow = &logits[row * classes..(row + 1) * classes];
-                outcomes[orig] = Some(Outcome {
-                    class: argmax(lrow).unwrap_or(0),
-                    exit: blocks - 1,
-                    exited_early: false,
-                    similarity: f32::NAN,
-                });
+                resolved.push((
+                    orig,
+                    Outcome {
+                        class: argmax(lrow).unwrap_or(0),
+                        exit: blocks - 1,
+                        exited_early: false,
+                        similarity: f32::NAN,
+                    },
+                ));
+            }
+            c.alive.clear();
+        }
+        if c.depth == blocks || c.alive.is_empty() {
+            c.done = true;
+        }
+        Ok(resolved)
+    }
+
+    /// Sequential early-exit loop over one span of requests (`ids[i]` is
+    /// sample `i`'s request id).  Implemented as a cohort run to
+    /// exhaustion, so the batched path and the continuous-batching server
+    /// share one early-exit implementation and cannot diverge.
+    fn infer_span(&self, input: &[f32], batch: usize, ids: &[u64]) -> Result<Vec<Outcome>> {
+        let mut cohort = self.begin_cohort(input, batch, ids)?;
+        let mut outcomes: Vec<Option<Outcome>> = vec![None; batch];
+        while !cohort.is_done() {
+            for (orig, out) in self.advance_cohort(&mut cohort)? {
+                outcomes[orig] = Some(out);
             }
         }
         Ok(outcomes.into_iter().map(|o| o.expect("all resolved")).collect())
@@ -504,6 +605,43 @@ mod tests {
             assert_eq!(a.class, b.class);
             assert_eq!(a.exit, b.exit);
         }
+    }
+
+    #[test]
+    fn cohort_steps_match_infer_batch() {
+        // driving a cohort block-by-block (the continuous batcher's view)
+        // resolves the same outcomes as the one-shot batched call
+        let input = vec![
+            1.0, 0.0, 0.0, 0.0, // exits at block 0
+            0.5, 0.45, 0.5, 0.5, // runs to the head
+            0.0, 1.0, 0.0, 0.0, // exits at block 0, class 1
+        ];
+        let e = engine(vec![0.95, 0.95, 0.95]);
+        let want = e.infer_batch_keyed(&input, 3, &[10, 11, 12]).unwrap();
+        let mut cohort = e.begin_cohort(&input, 3, &[10, 11, 12]).unwrap();
+        assert_eq!(cohort.live(), 3);
+        assert_eq!(cohort.depth(), 0);
+        let mut got: Vec<Option<Outcome>> = vec![None; 3];
+        let mut rounds = 0;
+        while !cohort.is_done() {
+            for (orig, out) in e.advance_cohort(&mut cohort).unwrap() {
+                got[orig] = Some(out);
+            }
+            rounds += 1;
+        }
+        assert_eq!(rounds, 3);
+        assert_eq!(cohort.live(), 0);
+        for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+            let b = b.expect("resolved");
+            assert_eq!(a.class, b.class, "sample {i}");
+            assert_eq!(a.exit, b.exit, "sample {i}");
+            assert_eq!(a.exited_early, b.exited_early, "sample {i}");
+        }
+        // a done cohort stays done and resolves nothing further
+        assert!(e.advance_cohort(&mut cohort).unwrap().is_empty());
+        // empty cohorts and id miscounts are errors, not panics
+        assert!(e.begin_cohort(&[], 0, &[]).is_err());
+        assert!(e.begin_cohort(&input, 3, &[1]).is_err());
     }
 
     #[test]

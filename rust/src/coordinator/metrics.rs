@@ -21,6 +21,19 @@ pub struct Metrics {
     /// or failed in the engine).  Disjoint from `requests`, which counts
     /// completed inferences only.
     pub errors: u64,
+    /// Requests admitted into a vacated slot while their worker already
+    /// had cohorts in flight (the continuous-batching path).
+    pub backfills: u64,
+    /// Requests answered `EngineError::DeadlineExceeded` at the admission
+    /// check (each also counts in `errors`).
+    pub deadline_misses: u64,
+    /// Submissions rejected at admission (`AdmissionError::QueueFull`).
+    /// Counted client-side in the shared cell — `Server::shutdown` folds
+    /// the total into the merged record; per-shard values stay 0.
+    pub shed: u64,
+    /// Per-scheduling-round slot occupancy (live requests / max_batch),
+    /// sampled after admission each round a worker has work in flight.
+    pub occupancy: Accumulator,
     started: Option<Instant>,
     pub finished_at: Option<Instant>,
 }
@@ -67,6 +80,22 @@ impl Metrics {
         self.finished_at = Some(Instant::now());
     }
 
+    /// Record `n` requests admitted into vacated slots mid-flight.
+    pub fn record_backfills(&mut self, n: u64) {
+        self.backfills += n;
+    }
+
+    /// Record one request answered past its deadline (also call
+    /// [`Metrics::record_error`] for the error answer itself).
+    pub fn record_deadline_miss(&mut self) {
+        self.deadline_misses += 1;
+    }
+
+    /// Record one scheduling round's slot occupancy in `[0, 1]`.
+    pub fn record_occupancy(&mut self, frac: f64) {
+        self.occupancy.add(frac);
+    }
+
     /// Fold another shard's record into this one: latencies and batch
     /// statistics concatenate, counters add, the exit histogram adds
     /// elementwise, and the serving window spans min(start)..max(finish).
@@ -82,6 +111,10 @@ impl Metrics {
         self.requests += o.requests;
         self.early_exits += o.early_exits;
         self.errors += o.errors;
+        self.backfills += o.backfills;
+        self.deadline_misses += o.deadline_misses;
+        self.shed += o.shed;
+        self.occupancy.merge(&o.occupancy);
         self.started = match (self.started, o.started) {
             (Some(a), Some(b)) => Some(a.min(b)),
             (a, b) => a.or(b),
@@ -115,6 +148,10 @@ impl Metrics {
                 0.0
             },
             mean_batch: self.batch_sizes.mean(),
+            backfills: self.backfills,
+            shed: self.shed,
+            deadline_misses: self.deadline_misses,
+            occupancy: self.occupancy.mean(),
             exit_hist: self.exit_hist.clone(),
         }
     }
@@ -133,6 +170,19 @@ pub struct Snapshot {
     pub mean_us: f64,
     pub throughput_rps: f64,
     pub mean_batch: f64,
+    /// Requests admitted into slots vacated mid-flight by early exits
+    /// (continuous batching).  Scheduling-dependent: may vary with
+    /// timing even when outcomes are bit-identical.
+    pub backfills: u64,
+    /// Submissions rejected at admission with `AdmissionError::QueueFull`.
+    pub shed: u64,
+    /// Requests answered `EngineError::DeadlineExceeded` (subset of
+    /// `errors`).
+    pub deadline_misses: u64,
+    /// Mean per-round slot occupancy in `[0, 1]` (live requests over
+    /// `max_batch`, sampled each round a worker had work in flight);
+    /// `0.0` when no round was sampled.
+    pub occupancy: f64,
     pub exit_hist: Vec<u64>,
 }
 
@@ -141,6 +191,7 @@ impl Snapshot {
         format!(
             "requests={} errors={} early_exit={:.1}% p50={:.0}us p95={:.0}us \
              p99={:.0}us mean={:.0}us throughput={:.1} req/s mean_batch={:.2}\n  \
+             backfills={} shed={} deadline_misses={} occupancy={:.2}\n  \
              exits: {:?}",
             self.requests,
             self.errors,
@@ -151,6 +202,10 @@ impl Snapshot {
             self.mean_us,
             self.throughput_rps,
             self.mean_batch,
+            self.backfills,
+            self.shed,
+            self.deadline_misses,
+            self.occupancy,
             self.exit_hist
         )
     }
@@ -203,6 +258,33 @@ mod tests {
         // merged percentiles come from the concatenated latency vector
         assert!((s.p50_us - 300.0).abs() < 1.0);
         assert!(s.throughput_rps > 0.0);
+    }
+
+    #[test]
+    fn serving_counters_merge_and_surface() {
+        let mut a = Metrics::new(2);
+        a.start();
+        a.record(Duration::from_micros(100), 0, true);
+        a.record_backfills(2);
+        a.record_occupancy(0.5);
+        let mut b = Metrics::new(2);
+        b.start();
+        b.record_error();
+        b.record_deadline_miss();
+        b.record_backfills(1);
+        b.record_occupancy(1.0);
+        a.merge(b);
+        // shed folds in at shutdown via the shared cell, modelled here
+        a.shed = 3;
+        let s = a.snapshot();
+        assert_eq!(s.backfills, 3);
+        assert_eq!(s.deadline_misses, 1);
+        assert_eq!(s.shed, 3);
+        assert!((s.occupancy - 0.75).abs() < 1e-9);
+        let r = s.report();
+        assert!(r.contains("backfills=3"), "{r}");
+        assert!(r.contains("shed=3"), "{r}");
+        assert!(r.contains("deadline_misses=1"), "{r}");
     }
 
     #[test]

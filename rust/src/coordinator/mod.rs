@@ -6,9 +6,9 @@
 //! * [`engine`] — block -> search-vector -> CAM -> exit-or-continue control
 //!   flow, with per-sample early exit inside a batch;
 //! * [`policy`] — exit decision rules;
-//! * [`server`] — sharded multi-replica dynamic-batching front-end
-//!   (admission-stamped request ids keep outcomes replica-count
-//!   invariant);
+//! * [`server`] — sharded multi-replica continuous-batching front-end
+//!   with bounded admission (admission-stamped request ids keep outcomes
+//!   replica-count and back-fill invariant; see docs/SERVING.md);
 //! * [`thresholds`] — tuned-threshold persistence;
 //! * [`metrics`] — per-shard latency/throughput/exit/error accounting,
 //!   merged at shutdown.
@@ -22,8 +22,8 @@ pub mod server;
 pub mod thresholds;
 
 pub use dynmodel::DynModel;
-pub use engine::{Engine, Outcome};
+pub use engine::{Cohort, Engine, Outcome};
 pub use memory::{CenterSource, ExitMemory};
 pub use policy::ExitPolicy;
-pub use server::{Client, EngineError, Server, ServerConfig};
+pub use server::{AdmissionError, Client, EngineError, Server, ServerConfig, Ticket};
 pub use thresholds::ThresholdConfig;

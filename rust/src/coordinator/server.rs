@@ -1,6 +1,36 @@
-//! Sharded serving front-end: N replica workers, each owning its own
-//! early-exit engine, all batching from one shared admission queue
-//! (std threads + mpsc — the vendored crate set has no tokio).
+//! Sharded, continuously-batched serving front-end: N replica workers,
+//! each owning its own early-exit engine, all admitting from one shared
+//! bounded queue (std threads + mpsc — the vendored crate set has no
+//! tokio).  The end-to-end request lifecycle, with timelines, lives in
+//! `docs/SERVING.md`.
+//!
+//! # Continuous batching
+//!
+//! The paper's premise is *dynamic* depth: most requests exit early at a
+//! CAM match.  A batcher that forms a batch at admission and holds every
+//! slot until the slowest member finishes throws that advantage away — an
+//! early exit would free compute that nothing reclaims.  Each worker
+//! therefore schedules [`Cohort`]s: an admitted batch advances **one
+//! block per scheduling round**, requests that exit are answered at that
+//! block boundary and vacate their slots immediately, and freed slots are
+//! back-filled from the queue as a *new* cohort at depth 0 (per-block
+//! feature geometry differs, so rows at different depths cannot share one
+//! model state; advancing every cohort once per round keeps all in-flight
+//! cohorts at pairwise distinct depths instead).  The worker never blocks
+//! on admission while work is in flight: back-fill uses `try_lock` +
+//! `try_recv` only, bounded by the free-slot count, so total live slots
+//! never exceed `max_batch`.
+//!
+//! # Bounded admission
+//!
+//! [`Client::submit`] sheds load instead of queueing unboundedly: a
+//! submission beyond [`ServerConfig::queue_cap`] is rejected with
+//! [`AdmissionError::QueueFull`] (counted in [`Snapshot::shed`]), and
+//! with a configured [`ServerConfig::deadline`] a request that is already
+//! past it when a worker picks it up is answered
+//! [`EngineError::DeadlineExceeded`] rather than occupying a slot it can
+//! no longer use.  Rejections are always typed errors — never silent
+//! drops.
 //!
 //! # Sharding model
 //!
@@ -8,7 +38,7 @@
 //! [`Engine`] from the cloneable factory (engines stay thread-local:
 //! backend handles need not be `Send`, and the crossbar state is
 //! replicated the way a multi-macro deployment replicates arrays).  All
-//! replicas pull batches from a **single shared queue** behind
+//! replicas pull from a **single shared queue** behind
 //! `Arc<Mutex<Receiver<Request>>>` rather than per-shard channels with a
 //! dispatcher, because the shared queue is:
 //!
@@ -18,65 +48,99 @@
 //!   thread plus a load signal, and still guesses wrong under early-exit
 //!   latency variance);
 //! * **drain-correct at shutdown** — closing the one queue ends every
-//!   worker's `collect_batch` loop only after the queue is empty, so no
-//!   queued request can be orphaned in a private shard channel;
+//!   worker's admission loop only after the queue is empty, so no queued
+//!   request can be orphaned in a private shard channel;
 //! * **batching-compatible** — batch assembly is inherently serial (the
-//!   assembler must see consecutive arrivals), so one replica holding
-//!   the receiver lock while it blocks for the first arrival and then
-//!   fills for at most `max_wait` costs nothing that a dispatcher would
-//!   not: the holder is exactly the replica that will take the next
-//!   batch, and everyone it blocks is idle by definition.  Inference —
-//!   the expensive part — runs outside the lock, in parallel across
-//!   replicas.  (Corollary: never take this lock from a non-worker path;
-//!   an idle collector may hold it until the next request arrives.)
+//!   assembler must see consecutive arrivals), so one *idle* replica
+//!   holding the receiver lock while it blocks for the first arrival and
+//!   then fills for at most `max_wait` costs nothing: the holder is
+//!   exactly the replica that will take the next batch, and everyone it
+//!   blocks is idle by definition.  Inference — the expensive part — runs
+//!   outside the lock, in parallel across replicas.  (Corollary: never
+//!   take this lock *blocking* from a path that has live work; back-fill
+//!   therefore only `try_lock`s, stepping aside when an idle collector
+//!   holds the mutex.)
 //!
 //! # Determinism
 //!
 //! Request ids anchor every analogue noise stream (PR 2's `StreamKey`
 //! seed→request derivation), so ids must not depend on scheduling.  The
 //! server therefore stamps ids **at admission**: one shared counter in
-//! submission order, carried through [`Request::id`] into
-//! [`Engine::infer_batch_keyed`].  A given request stream thus reproduces
-//! bit-identically at any replica count — whichever shard wins a request,
-//! it computes the same bits (`tests/determinism.rs` sweeps replicas
-//! 1/2/4 including the CIM/CAM energy counters).  Each replica engine is
-//! additionally striped via [`Engine::with_id_stream`]`(r, n)` so ids it
-//! allocates *itself* (direct `infer_batch` calls outside the serving
-//! path) stay disjoint across replicas — and, via the allocator's
-//! high-bit tag, disjoint from the admission id space.  Per-replica
-//! base+stride alone
-//! would keep streams disjoint, but which id a request gets would depend
-//! on which shard won it — admission stamping is what makes outcomes
-//! shard-invariant.
-//!
-//! # Batching policy
-//!
-//! Collect up to `max_batch` requests, waiting at most `max_wait` after
-//! the first arrival (classic dynamic batching: the latency/throughput
-//! knob of the serving benches).  A request whose input length does not
-//! match the model's declared width is answered `Err` at assembly and
-//! never joins a batch, so one malformed client cannot poison co-batched
-//! requests.  Workers dispatch onto the persistent `util::pool`
-//! (pre-warmed to the engine's width), so the per-batch cost on the hot
-//! path is a channel send, not a thread spawn+join.
+//! submission order ([`Client::stamp`]), carried through [`Request::id`]
+//! into [`Engine::begin_cohort`].  A given request stream thus reproduces
+//! bit-identically at any replica count, with back-fill on or off, and
+//! across arrival-order shuffles of the same (id, input) bindings —
+//! whichever shard wins a request, whatever cohort it lands in, it
+//! computes the same bits (`tests/determinism.rs` sweeps replicas 1/2/4
+//! including the CIM/CAM energy counters and a back-fill-heavy workload).
+//! Each replica engine is additionally striped via
+//! [`Engine::with_id_stream`]`(r, n)` so ids it allocates *itself*
+//! (direct `infer_batch` calls outside the serving path) stay disjoint
+//! across replicas — and, via the allocator's high-bit tag, disjoint from
+//! the admission id space.  Scheduling-born *counters*
+//! ([`Snapshot::backfills`], `mean_batch`, occupancy, shed,
+//! deadline_misses) are the one surface allowed to vary with timing; the
+//! invariants table in `docs/SERVING.md` draws that line precisely.
+
+#![warn(missing_docs)]
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
-use std::sync::{Arc, Mutex, MutexGuard};
+use std::sync::mpsc::{
+    sync_channel, Receiver, RecvTimeoutError, SyncSender, TryRecvError, TrySendError,
+};
+use std::sync::{Arc, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
 use super::dynmodel::DynModel;
-use super::engine::{Engine, Outcome};
+use super::engine::{Cohort, Engine, Outcome};
 use super::metrics::{Metrics, Snapshot};
 
+/// Serving-loop configuration: batching, admission control, and sharding.
+///
+/// ```
+/// use std::time::Duration;
+/// use memdyn::coordinator::ServerConfig;
+///
+/// // bounded admission with a 50ms deadline, otherwise defaults
+/// let cfg = ServerConfig {
+///     max_batch: 16,
+///     queue_cap: 256,
+///     deadline: Some(Duration::from_millis(50)),
+///     ..Default::default()
+/// };
+/// assert!(cfg.backfill, "continuous batching is on by default");
+/// assert_eq!(cfg.replicas, 1);
+/// assert!(cfg.max_wait > Duration::ZERO);
+/// ```
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
+    /// Slot budget per worker: the cap on *live* requests across all of a
+    /// worker's in-flight cohorts, and the assembly cap for one batch.
     pub max_batch: usize,
+    /// Batch window: how long an idle worker fills a forming batch after
+    /// the first arrival (classic dynamic batching).
     pub max_wait: Duration,
-    pub queue_depth: usize,
+    /// Bound on queued-but-unserved submissions.  A submission beyond the
+    /// cap is rejected with [`AdmissionError::QueueFull`] — load is shed
+    /// at admission, never silently dropped.  `0` rejects every
+    /// submission (drain/maintenance mode).
+    pub queue_cap: usize,
+    /// Per-request deadline, measured from [`Client::stamp`] time.  A
+    /// request already past it when a worker would admit it is answered
+    /// [`EngineError::DeadlineExceeded`] instead of occupying a slot.
+    /// `None` (the default) disables deadline enforcement — determinism
+    /// tests use `None`, since what a deadline cuts off is inherently
+    /// timing-dependent.
+    pub deadline: Option<Duration>,
+    /// Continuous batching: back-fill slots vacated by early exits from
+    /// the queue at the next block boundary.  `false` restores
+    /// admit-only-when-idle batching (the ablation baseline; see
+    /// EXPERIMENTS.md §Serving).  Outcomes are bit-identical either way —
+    /// the toggle may only move latency/occupancy.
+    pub backfill: bool,
     /// Number of worker replicas, each owning one engine (min 1).
     pub replicas: usize,
 }
@@ -86,47 +150,134 @@ impl Default for ServerConfig {
         ServerConfig {
             max_batch: 8,
             max_wait: Duration::from_millis(2),
-            queue_depth: 1024,
+            queue_cap: 1024,
+            deadline: None,
+            backfill: true,
             replicas: 1,
         }
     }
 }
 
+/// One admitted request travelling from the queue to a worker slot.
 pub struct Request {
+    /// The flattened input sample.
     pub input: Vec<f32>,
-    /// Admission-order id (stamped by [`Client::submit`]); the anchor of
+    /// Admission-order id (stamped by [`Client::stamp`]); the anchor of
     /// this request's noise streams on every backend.
     pub id: u64,
+    /// Stamp time — deadlines and reported latency measure from here.
     pub submitted: Instant,
+    /// Responder the serving worker answers exactly once.
     pub resp: SyncSender<Response>,
 }
 
-/// What a client receives for one request.  `outcome` is `Err` when the
-/// server rejected or failed this request (malformed input, engine batch
-/// failure, or engine construction failure) — the responder channel
-/// itself stays intact, so clients can distinguish "server answered Err"
-/// from "server is gone".
+/// What a client receives for one request.
 #[derive(Clone, Debug)]
 pub struct Response {
+    /// The inference outcome, or a typed error when the server rejected
+    /// or failed this request (malformed input, deadline, engine batch
+    /// failure, or engine construction failure).  The responder channel
+    /// itself stays intact, so clients can distinguish "server answered
+    /// Err" from "server is gone".
     pub outcome: Result<Outcome, EngineError>,
+    /// Stamp-to-answer latency as measured by the serving worker.
     pub latency: Duration,
 }
 
-/// A request-level engine failure, cloned to every affected client.
-#[derive(Clone, Debug)]
-pub struct EngineError(pub String);
+/// A typed request-level failure, cloned to every affected client.
+/// `Display` gives the operator-facing message.
+#[derive(Clone, Debug, PartialEq)]
+pub enum EngineError {
+    /// The request never joined a cohort: its input failed validation at
+    /// batch assembly (e.g. a length mismatch).
+    BadInput(String),
+    /// The engine rejected or failed the cohort this request was part of.
+    Failed(String),
+    /// No replica could construct an engine; the queued request is
+    /// answered with the construction failure instead of being dropped.
+    Construction(String),
+    /// The request was past [`ServerConfig::deadline`] when a worker
+    /// would have admitted it, and was answered instead of batched.
+    DeadlineExceeded {
+        /// The configured per-request deadline.
+        deadline: Duration,
+        /// How long the request had already waited at the admission check.
+        waited: Duration,
+    },
+}
 
 impl std::fmt::Display for EngineError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        f.write_str(&self.0)
+        match self {
+            EngineError::BadInput(msg) | EngineError::Failed(msg) => f.write_str(msg),
+            EngineError::Construction(msg) => {
+                write!(f, "engine construction failed: {msg}")
+            }
+            EngineError::DeadlineExceeded { deadline, waited } => write!(
+                f,
+                "deadline exceeded: waited {waited:?} against a {deadline:?} deadline"
+            ),
+        }
     }
 }
 
 impl std::error::Error for EngineError {}
 
+/// A submission the server refused to queue.  Admission rejections are
+/// *synchronous* (the error comes back from [`Client::submit`] itself,
+/// there is no responder to wait on) and always typed — the bounded
+/// queue sheds load, it never silently drops it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdmissionError {
+    /// The queue already held [`ServerConfig::queue_cap`] submissions (or
+    /// the cap is 0, which rejects everything).  Counted in
+    /// [`Snapshot::shed`].
+    QueueFull {
+        /// The configured queue capacity at the time of rejection.
+        cap: usize,
+    },
+    /// The server has shut down; no further submissions are accepted.
+    Closed,
+}
+
+impl std::fmt::Display for AdmissionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AdmissionError::QueueFull { cap } => {
+                write!(f, "admission queue full (cap {cap}): submission shed")
+            }
+            AdmissionError::Closed => f.write_str("server is shut down"),
+        }
+    }
+}
+
+impl std::error::Error for AdmissionError {}
+
+/// An admission stamp: the request id (noise-stream anchor) plus the
+/// instant deadlines measure from.  [`Client::stamp`] draws ids from the
+/// shared counter in call order; [`Client::submit_ticket`] then binds the
+/// ticket to an input.  Separating the two models the real multi-client
+/// race — stamp order and queue order may differ — and is what the
+/// arrival-order-shuffle determinism test drives: outcomes follow the
+/// ticket id, never the enqueue order.  Tickets are single-use by move.
+#[derive(Debug)]
+pub struct Ticket {
+    id: u64,
+    submitted: Instant,
+}
+
+impl Ticket {
+    /// The admission id this ticket will stamp onto its request.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+}
+
 /// Collect one batch from the queue: blocking on the first request, then
 /// draining until `max_batch` or `max_wait` elapses.  Returns None when the
-/// channel is closed and drained.
+/// channel is closed and drained.  This is the *idle* worker's admission
+/// path; a worker with live cohorts back-fills via non-blocking drains
+/// instead (see the module docs).
 pub fn collect_batch(
     rx: &Receiver<Request>,
     max_batch: usize,
@@ -149,10 +300,37 @@ pub fn collect_batch(
     Some(batch)
 }
 
+/// Non-blocking drain of up to `limit` already-queued requests — the
+/// back-fill admission path.  Never waits: an empty queue yields an empty
+/// vec and the caller's in-flight cohorts advance immediately.
+fn drain_ready(rx: &Receiver<Request>, limit: usize) -> Vec<Request> {
+    let mut out = Vec::new();
+    while out.len() < limit {
+        match rx.try_recv() {
+            Ok(r) => out.push(r),
+            Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+        }
+    }
+    out
+}
+
 /// Lock the shared admission queue, surviving a sibling worker's panic
 /// (the receiver holds no invariants a panic could corrupt).
 fn admission(rx: &Mutex<Receiver<Request>>) -> MutexGuard<'_, Receiver<Request>> {
     rx.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// Try to lock the shared admission queue without blocking.  `None` means
+/// a sibling holds it — almost always an *idle* collector camped inside a
+/// blocking `recv`, which would stall a back-filling worker's live
+/// cohorts indefinitely if it waited.  Skipping is correct: the camped
+/// sibling is idle and will itself serve whatever stays queued.
+fn try_admission(rx: &Mutex<Receiver<Request>>) -> Option<MutexGuard<'_, Receiver<Request>>> {
+    match rx.try_lock() {
+        Ok(g) => Some(g),
+        Err(std::sync::TryLockError::Poisoned(p)) => Some(p.into_inner()),
+        Err(std::sync::TryLockError::WouldBlock) => None,
+    }
 }
 
 /// Answer one request with an error outcome.
@@ -164,15 +342,38 @@ fn respond_err(req: Request, err: &EngineError, metrics: &mut Metrics) {
     });
 }
 
+/// State shared between the server handle and every [`Client`]: the
+/// admission sender (taken at shutdown so late submissions see
+/// [`AdmissionError::Closed`] even while clients are alive), the id
+/// counter, and the shed count.
+struct Shared {
+    tx: RwLock<Option<SyncSender<Request>>>,
+    next_id: AtomicU64,
+    shed: AtomicU64,
+    queue_cap: usize,
+}
+
+fn read_tx(shared: &Shared) -> RwLockReadGuard<'_, Option<SyncSender<Request>>> {
+    shared.tx.read().unwrap_or_else(|p| p.into_inner())
+}
+
+fn write_tx(shared: &Shared) -> RwLockWriteGuard<'_, Option<SyncSender<Request>>> {
+    shared.tx.write().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Handle to a running replica fleet.  Mint [`Client`]s with
+/// [`Server::client`]; stop and collect the merged [`Snapshot`] with
+/// [`Server::shutdown`].
 pub struct Server {
-    tx: SyncSender<Request>,
-    next_id: Arc<AtomicU64>,
+    shared: Arc<Shared>,
     handles: Vec<JoinHandle<Metrics>>,
 }
 
+/// Cheap, cloneable-by-[`Server::client`] submission handle.  All clients
+/// share one admission id counter (ids are stamped in submission order —
+/// the determinism anchor) and one bounded queue.
 pub struct Client {
-    tx: SyncSender<Request>,
-    next_id: Arc<AtomicU64>,
+    shared: Arc<Shared>,
 }
 
 impl Server {
@@ -186,8 +387,7 @@ impl Server {
     /// sibling came up, the failed replica steps aside and the healthy
     /// replicas serve everything; if *no* replica came up, the failed
     /// workers answer every queued request with
-    /// `Err("engine construction failed: …")` instead of silently
-    /// dropping it.
+    /// [`EngineError::Construction`] instead of silently dropping it.
     pub fn start<M, F>(factory: F, cfg: ServerConfig) -> Server
     where
         M: DynModel + Sync + 'static,
@@ -207,7 +407,10 @@ impl Server {
         F: Fn() -> anyhow::Result<Engine<M>> + Clone + Send + 'static,
         D: Fn(Engine<M>) + Clone + Send + 'static,
     {
-        let (tx, rx) = sync_channel::<Request>(cfg.queue_depth);
+        // cap 0 still builds a 1-slot channel (a rendezvous channel would
+        // block senders); Client::submit rejects everything before the
+        // channel is ever reached, so nothing is enqueued
+        let (tx, rx) = sync_channel::<Request>(cfg.queue_cap.max(1));
         let shared_rx = Arc::new(Mutex::new(rx));
         let replicas = cfg.replicas.max(1);
         // construction census: how many replicas finished building their
@@ -238,16 +441,20 @@ impl Server {
             })
             .collect();
         Server {
-            tx,
-            next_id: Arc::new(AtomicU64::new(0)),
+            shared: Arc::new(Shared {
+                tx: RwLock::new(Some(tx)),
+                next_id: AtomicU64::new(0),
+                shed: AtomicU64::new(0),
+                queue_cap: cfg.queue_cap,
+            }),
             handles,
         }
     }
 
+    /// Mint a submission handle sharing this server's admission counter.
     pub fn client(&self) -> Client {
         Client {
-            tx: self.tx.clone(),
-            next_id: Arc::clone(&self.next_id),
+            shared: Arc::clone(&self.shared),
         }
     }
 
@@ -255,10 +462,11 @@ impl Server {
     /// snapshot.  Workers keep answering until the queue is drained, so
     /// every request admitted before shutdown receives a response.
     ///
-    /// All [`Client`] handles must be dropped first — each holds a sender
-    /// clone that keeps the admission queue alive.
+    /// The admission sender lives in the shared cell and is *taken* here,
+    /// so the queue closes even while [`Client`] handles are still alive —
+    /// a client that submits afterwards gets [`AdmissionError::Closed`].
     pub fn shutdown(self) -> Result<Snapshot> {
-        drop(self.tx);
+        *write_tx(&self.shared) = None;
         let mut total = Metrics::new(0);
         let mut panicked = 0usize;
         for h in self.handles {
@@ -270,6 +478,9 @@ impl Server {
         if panicked > 0 {
             return Err(anyhow!("{panicked} worker(s) panicked"));
         }
+        // shed rejections happen client-side (they never reach a worker),
+        // so the count folds in from the shared cell at the end
+        total.shed = self.shared.shed.load(Ordering::SeqCst);
         Ok(total.snapshot())
     }
 }
@@ -285,7 +496,16 @@ impl Drop for CensusTick<'_> {
     }
 }
 
-/// One replica: build the engine, then batch-serve until the queue closes.
+/// One admitted cohort plus the responders of its still-unanswered
+/// members (`reqs[orig]` is taken the moment row `orig` resolves).
+struct Inflight<S> {
+    cohort: Cohort<S>,
+    reqs: Vec<Option<Request>>,
+}
+
+/// One replica: build the engine, then serve until the queue closes —
+/// admitting when idle, back-filling freed slots at block boundaries
+/// while cohorts are in flight.
 fn worker_loop<M, F, D>(
     replica: u64,
     replicas: u64,
@@ -333,7 +553,7 @@ where
             }
             // no replica came up: answer — don't drop — every queued
             // request, so clients see *why* instead of a dead responder
-            let err = EngineError(format!("engine construction failed: {e:#}"));
+            let err = EngineError::Construction(format!("{e:#}"));
             metrics.start();
             loop {
                 // like collect_batch, this holds the admission lock
@@ -351,24 +571,85 @@ where
     crate::util::pool::prewarm(engine.threads());
     let mut metrics = Metrics::new(engine.model.n_blocks());
     metrics.start();
+    let mut inflight: Vec<Inflight<M::State>> = Vec::new();
     loop {
-        let batch = {
-            let rx = admission(rx);
-            collect_batch(&rx, cfg.max_batch, cfg.max_wait)
-        };
-        let Some(batch) = batch else { break };
-        serve_batch(&engine, batch, &mut metrics);
+        let live: usize = inflight.iter().map(|c| c.cohort.live()).sum();
+        let free = cfg.max_batch.saturating_sub(live);
+        let mut fresh = Vec::new();
+        if inflight.is_empty() {
+            // idle: classic dynamic batching — block for the first
+            // arrival, then fill for at most max_wait
+            let batch = {
+                let rx = admission(rx);
+                collect_batch(&rx, cfg.max_batch, cfg.max_wait)
+            };
+            match batch {
+                Some(b) => fresh = b,
+                None => break, // queue closed and drained
+            }
+        } else if free > 0 && cfg.backfill {
+            // the continuous-batching re-batch point: slots vacated by
+            // early exits take already-queued requests, without ever
+            // blocking in-flight work (see try_admission)
+            if let Some(rx) = try_admission(rx) {
+                fresh = drain_ready(&rx, free);
+            }
+        }
+        let backfilling = !inflight.is_empty();
+        let admitted = screen(&engine, fresh, cfg, &mut metrics);
+        if !admitted.is_empty() {
+            if let Some(inf) = start_cohort(&engine, admitted, &mut metrics) {
+                if backfilling {
+                    metrics.record_backfills(inf.cohort.live() as u64);
+                }
+                inflight.push(inf);
+            }
+        }
+        if !inflight.is_empty() {
+            let occupied: usize = inflight.iter().map(|c| c.cohort.live()).sum();
+            metrics.record_occupancy(occupied as f64 / cfg.max_batch.max(1) as f64);
+        }
+        // advance every in-flight cohort one block (oldest first),
+        // answering each request at the boundary where it resolves
+        inflight.retain_mut(|inf| advance_and_respond(&engine, inf, &mut metrics));
     }
     finalize(engine);
     metrics
 }
 
-/// Validate, flatten, infer, and answer one assembled batch.
-fn serve_batch<M: DynModel + Sync>(
+/// Admission screening for one pulled batch: deadline enforcement first
+/// (an expired request must not occupy a slot), then input-length
+/// validation.  Offenders are answered with typed errors; survivors are
+/// returned in arrival order, all the same length.
+fn screen<M: DynModel + Sync>(
     engine: &Engine<M>,
     batch: Vec<Request>,
+    cfg: &ServerConfig,
     metrics: &mut Metrics,
-) {
+) -> Vec<Request> {
+    let batch: Vec<Request> = match cfg.deadline {
+        Some(deadline) => batch
+            .into_iter()
+            .filter_map(|req| {
+                let waited = req.submitted.elapsed();
+                if waited >= deadline {
+                    respond_err(
+                        req,
+                        &EngineError::DeadlineExceeded { deadline, waited },
+                        metrics,
+                    );
+                    metrics.record_deadline_miss();
+                    None
+                } else {
+                    Some(req)
+                }
+            })
+            .collect(),
+        None => batch,
+    };
+    if batch.is_empty() {
+        return batch;
+    }
     // length validation at assembly: against the model's declared input
     // width when it has one (every production model declares one), else
     // against the plurality length of the batch, so a lone malformed
@@ -395,65 +676,145 @@ fn serve_batch<M: DynModel + Sync>(
         }
         best.1
     });
-    let (batch, rejected): (Vec<Request>, Vec<Request>) = batch
-        .into_iter()
-        .partition(|r| r.input.len() == expected);
+    let (batch, rejected): (Vec<Request>, Vec<Request>) =
+        batch.into_iter().partition(|r| r.input.len() == expected);
     for req in rejected {
-        let err = EngineError(format!(
+        let err = EngineError::BadInput(format!(
             "input length {} does not match the model's expected {expected}",
             req.input.len()
         ));
         respond_err(req, &err, metrics);
     }
-    if batch.is_empty() {
-        return;
-    }
-    let mut flat = Vec::with_capacity(batch.len() * expected);
+    batch
+}
+
+/// Flatten a screened batch and admit it as a depth-0 cohort.  On engine
+/// rejection (e.g. `init` failure) every member is answered with the
+/// failure and the batch never enters the batch statistics.
+fn start_cohort<M: DynModel + Sync>(
+    engine: &Engine<M>,
+    batch: Vec<Request>,
+    metrics: &mut Metrics,
+) -> Option<Inflight<M::State>> {
+    let mut flat = Vec::with_capacity(batch.len() * batch[0].input.len());
     for r in &batch {
         flat.extend_from_slice(&r.input);
     }
     let ids: Vec<u64> = batch.iter().map(|r| r.id).collect();
-    match engine.infer_batch_keyed(&flat, batch.len(), &ids) {
-        Ok(outcomes) => {
-            // completed batches only: failed ones must not skew mean_batch
+    match engine.begin_cohort(&flat, batch.len(), &ids) {
+        Ok(cohort) => {
+            // admitted cohorts only: rejected ones must not skew mean_batch
             metrics.record_batch(batch.len());
-            for (req, out) in batch.into_iter().zip(outcomes) {
-                let latency = req.submitted.elapsed();
-                metrics.record(latency, out.exit, out.exited_early);
-                let _ = req.resp.send(Response {
-                    outcome: Ok(out),
-                    latency,
-                });
-            }
+            Some(Inflight {
+                cohort,
+                reqs: batch.into_iter().map(Some).collect(),
+            })
         }
         Err(e) => {
             // surface the engine error to every client in the batch
             // instead of dropping the responders
             eprintln!("[server] batch failed: {e:#}");
-            let err = EngineError(format!("{e:#}"));
+            let err = EngineError::Failed(format!("{e:#}"));
             for req in batch {
                 respond_err(req, &err, metrics);
             }
+            None
+        }
+    }
+}
+
+/// Advance one cohort one block and answer everything that resolved at
+/// the boundary.  Returns whether the cohort stays in flight.  A
+/// mid-flight engine failure answers the cohort's remaining live members
+/// (already-answered ones keep their outcomes) and retires it.
+fn advance_and_respond<M: DynModel + Sync>(
+    engine: &Engine<M>,
+    inf: &mut Inflight<M::State>,
+    metrics: &mut Metrics,
+) -> bool {
+    match engine.advance_cohort(&mut inf.cohort) {
+        Ok(resolved) => {
+            for (orig, out) in resolved {
+                if let Some(req) = inf.reqs[orig].take() {
+                    let latency = req.submitted.elapsed();
+                    metrics.record(latency, out.exit, out.exited_early);
+                    let _ = req.resp.send(Response {
+                        outcome: Ok(out),
+                        latency,
+                    });
+                }
+            }
+            !inf.cohort.is_done()
+        }
+        Err(e) => {
+            eprintln!(
+                "[server] cohort failed at block {}: {e:#}",
+                inf.cohort.depth()
+            );
+            let err = EngineError::Failed(format!("{e:#}"));
+            for req in inf.reqs.iter_mut().filter_map(|r| r.take()) {
+                respond_err(req, &err, metrics);
+            }
+            false
         }
     }
 }
 
 impl Client {
-    /// Submit one sample; returns the response receiver.  The request is
-    /// stamped with the next admission id — the submission-order anchor of
-    /// its noise streams, independent of which replica serves it.
-    pub fn submit(&self, input: Vec<f32>) -> Result<Receiver<Response>> {
+    /// Draw the next admission id and stamp the clock.  Ids are issued in
+    /// `stamp` call order from the counter shared by every client of this
+    /// server — the submission-order anchor of each request's noise
+    /// streams, independent of which replica (or cohort) serves it.
+    pub fn stamp(&self) -> Ticket {
+        Ticket {
+            id: self.shared.next_id.fetch_add(1, Ordering::Relaxed),
+            submitted: Instant::now(),
+        }
+    }
+
+    /// Bind a stamped ticket to an input and enqueue it.  Non-blocking:
+    /// over-capacity submissions are shed with
+    /// [`AdmissionError::QueueFull`] (the ticket's id is consumed either
+    /// way — ids may have gaps under shed, each served request still
+    /// keeps its own).  Returns the response receiver on admission.
+    pub fn submit_ticket(
+        &self,
+        ticket: Ticket,
+        input: Vec<f32>,
+    ) -> Result<Receiver<Response>, AdmissionError> {
+        if self.shared.queue_cap == 0 {
+            // drain/maintenance mode: deterministically reject before the
+            // channel (whose minimum real capacity is 1) is ever reached
+            self.shared.shed.fetch_add(1, Ordering::SeqCst);
+            return Err(AdmissionError::QueueFull { cap: 0 });
+        }
         let (resp_tx, resp_rx) = sync_channel(1);
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        self.tx
-            .send(Request {
-                input,
-                id,
-                submitted: Instant::now(),
-                resp: resp_tx,
-            })
-            .map_err(|_| anyhow!("server is down"))?;
-        Ok(resp_rx)
+        let req = Request {
+            input,
+            id: ticket.id,
+            submitted: ticket.submitted,
+            resp: resp_tx,
+        };
+        let guard = read_tx(&self.shared);
+        let Some(tx) = guard.as_ref() else {
+            return Err(AdmissionError::Closed);
+        };
+        match tx.try_send(req) {
+            Ok(()) => Ok(resp_rx),
+            Err(TrySendError::Full(_)) => {
+                self.shared.shed.fetch_add(1, Ordering::SeqCst);
+                Err(AdmissionError::QueueFull {
+                    cap: self.shared.queue_cap,
+                })
+            }
+            Err(TrySendError::Disconnected(_)) => Err(AdmissionError::Closed),
+        }
+    }
+
+    /// Stamp and submit one sample; returns the response receiver.
+    /// Equivalent to [`Client::stamp`] + [`Client::submit_ticket`].
+    pub fn submit(&self, input: Vec<f32>) -> Result<Receiver<Response>, AdmissionError> {
+        self.submit_ticket(self.stamp(), input)
     }
 
     /// Submit and block for the result.
@@ -468,6 +829,7 @@ impl Client {
 mod tests {
     use super::*;
     use crate::coordinator::memory::ExitMemory;
+    use std::sync::atomic::AtomicBool;
     use std::sync::mpsc::sync_channel as sc;
 
     // Reuse the Toy model from engine tests via a local copy.
@@ -529,14 +891,31 @@ mod tests {
             ServerConfig {
                 max_batch,
                 max_wait: Duration::from_millis(wait_ms),
-                queue_depth: 256,
+                queue_cap: 256,
                 replicas,
+                ..Default::default()
             },
         )
     }
 
     fn server(max_batch: usize, wait_ms: u64) -> Server {
         server_n(1, max_batch, wait_ms)
+    }
+
+    /// A factory gated on a flag: the worker parks in construction until
+    /// the test releases it, so the admission queue's state is fully
+    /// deterministic while the gate is down (nothing consumes it).
+    fn gated_server(gate: &Arc<AtomicBool>, cfg: ServerConfig) -> Server {
+        let gate = Arc::clone(gate);
+        Server::start(
+            move || {
+                while !gate.load(Ordering::SeqCst) {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                Ok(toy_engine())
+            },
+            cfg,
+        )
     }
 
     #[test]
@@ -622,13 +1001,14 @@ mod tests {
         let rb = bad.recv().unwrap();
         let err = rb.outcome.expect_err("length mismatch must fail");
         assert!(err.to_string().contains("input length 4"), "got: {err}");
+        assert!(matches!(err, EngineError::BadInput(_)), "got: {err:?}");
         let r1 = good1.recv().unwrap();
         assert_eq!(r1.outcome.expect("good co-batched request").class, 1);
         drop(client);
         let snap = srv.shutdown().unwrap();
         assert_eq!(snap.requests, 2);
         assert_eq!(snap.errors, 1);
-        // the rejected request never joins a completed batch
+        // the rejected request never joins an admitted cohort
         assert!((snap.mean_batch - 2.0).abs() < 1e-9, "{}", snap.mean_batch);
     }
 
@@ -662,8 +1042,9 @@ mod tests {
             ServerConfig {
                 max_batch: 4,
                 max_wait: Duration::from_millis(1),
-                queue_depth: 64,
+                queue_cap: 64,
                 replicas: 1,
+                ..Default::default()
             },
         );
         let client = srv.client();
@@ -675,6 +1056,7 @@ mod tests {
                 "got: {err}"
             );
             assert!(err.to_string().contains("no artifacts"), "got: {err}");
+            assert!(matches!(err, EngineError::Construction(_)), "got: {err:?}");
         }
         drop(client);
         let snap = srv.shutdown().unwrap();
@@ -701,8 +1083,9 @@ mod tests {
             ServerConfig {
                 max_batch: 4,
                 max_wait: Duration::from_millis(1),
-                queue_depth: 64,
+                queue_cap: 64,
                 replicas: 2,
+                ..Default::default()
             },
         );
         let client = srv.client();
@@ -726,6 +1109,7 @@ mod tests {
         let r = client.infer(vec![f32::NAN, 0.0]).expect("channel stays open");
         let err = r.outcome.expect_err("engine error must surface");
         assert!(err.to_string().contains("non-finite"), "got: {err}");
+        assert!(matches!(err, EngineError::Failed(_)), "got: {err:?}");
         // the worker survives a poisoned batch and keeps serving
         let ok = client.infer(vec![1.0, 0.0]).unwrap();
         assert_eq!(ok.outcome.unwrap().class, 0);
@@ -733,7 +1117,7 @@ mod tests {
         let snap = srv.shutdown().unwrap();
         // only the successful request reaches the metrics...
         assert_eq!(snap.requests, 1);
-        // ...the poisoned one is an error, and only the completed batch
+        // ...the poisoned one is an error, and only the admitted cohort
         // (size 1) enters the batch statistics
         assert_eq!(snap.errors, 1);
         assert!((snap.mean_batch - 1.0).abs() < 1e-9, "{}", snap.mean_batch);
@@ -804,11 +1188,240 @@ mod tests {
             c1.infer(vec![1.0, 0.0]).unwrap();
             c2.infer(vec![1.0, 0.0]).unwrap();
         }
-        assert_eq!(c1.next_id.load(Ordering::Relaxed), 4);
-        assert_eq!(c2.next_id.load(Ordering::Relaxed), 4);
+        assert_eq!(c1.shared.next_id.load(Ordering::Relaxed), 4);
+        assert_eq!(c2.shared.next_id.load(Ordering::Relaxed), 4);
         drop(c1);
         drop(c2);
         let snap = srv.shutdown().unwrap();
         assert_eq!(snap.requests, 4);
+    }
+
+    /// Continuous batching: with the queue pre-loaded (factory gated until
+    /// every request is enqueued), the first cohort's early exits at
+    /// block 0 must vacate slots that queued requests back-fill before the
+    /// cohort's head requests finish — observable via Snapshot.backfills.
+    #[test]
+    fn backfill_fills_vacated_slots_mid_flight() {
+        let gate = Arc::new(AtomicBool::new(false));
+        let srv = gated_server(
+            &gate,
+            ServerConfig {
+                max_batch: 2,
+                max_wait: Duration::from_millis(20),
+                queue_cap: 64,
+                replicas: 1,
+                ..Default::default()
+            },
+        );
+        let client = srv.client();
+        // alternating: even requests exit at block 0 (unit axis), odd run
+        // to the head (ambiguous) — every cohort of 2 frees a slot at the
+        // first boundary while the queue is still non-empty
+        let waiters: Vec<_> = (0..12)
+            .map(|i| {
+                let v = if i % 2 == 0 {
+                    vec![1.0, 0.0]
+                } else {
+                    vec![0.6, 0.55]
+                };
+                client.submit(v).unwrap()
+            })
+            .collect();
+        gate.store(true, Ordering::SeqCst);
+        for (i, w) in waiters.into_iter().enumerate() {
+            let out = w.recv().unwrap().outcome.unwrap();
+            assert_eq!(out.class, 0, "request {i}");
+            assert_eq!(out.exited_early, i % 2 == 0, "request {i}");
+        }
+        drop(client);
+        let snap = srv.shutdown().unwrap();
+        assert_eq!(snap.requests, 12);
+        assert_eq!(snap.errors, 0);
+        assert!(
+            snap.backfills >= 1,
+            "pre-loaded queue with early exits must back-fill: {snap:?}"
+        );
+        assert!(snap.occupancy > 0.0, "occupancy unrecorded: {snap:?}");
+    }
+
+    /// The ablation switch: the identical workload with `backfill: false`
+    /// serves everything but never back-fills (admit-only-when-idle).
+    #[test]
+    fn backfill_disabled_never_backfills() {
+        let gate = Arc::new(AtomicBool::new(false));
+        let srv = gated_server(
+            &gate,
+            ServerConfig {
+                max_batch: 2,
+                max_wait: Duration::from_millis(20),
+                queue_cap: 64,
+                replicas: 1,
+                backfill: false,
+                ..Default::default()
+            },
+        );
+        let client = srv.client();
+        let waiters: Vec<_> = (0..12)
+            .map(|i| {
+                let v = if i % 2 == 0 {
+                    vec![1.0, 0.0]
+                } else {
+                    vec![0.6, 0.55]
+                };
+                client.submit(v).unwrap()
+            })
+            .collect();
+        gate.store(true, Ordering::SeqCst);
+        for w in waiters {
+            w.recv().unwrap().outcome.unwrap();
+        }
+        drop(client);
+        let snap = srv.shutdown().unwrap();
+        assert_eq!(snap.requests, 12);
+        assert_eq!(snap.backfills, 0, "{snap:?}");
+    }
+
+    /// Admission edge case: submitting after shutdown returns the typed
+    /// Closed error — even from a Client created before shutdown (the
+    /// sender lives in the shared cell and is taken at shutdown).
+    #[test]
+    fn submit_after_shutdown_returns_closed() {
+        let srv = server(4, 1);
+        let client = srv.client();
+        client.infer(vec![1.0, 0.0]).unwrap().outcome.unwrap();
+        let snap = srv.shutdown().unwrap();
+        assert_eq!(snap.requests, 1);
+        match client.submit(vec![1.0, 0.0]) {
+            Err(AdmissionError::Closed) => {}
+            other => panic!("expected Closed, got {other:?}"),
+        }
+    }
+
+    /// Admission edge case: queue-cap 0 (drain mode) deterministically
+    /// sheds every submission with the typed QueueFull error.
+    #[test]
+    fn queue_cap_zero_sheds_every_submission() {
+        let srv = Server::start(
+            move || Ok(toy_engine()),
+            ServerConfig {
+                queue_cap: 0,
+                ..Default::default()
+            },
+        );
+        let client = srv.client();
+        for _ in 0..5 {
+            match client.submit(vec![1.0, 0.0]) {
+                Err(AdmissionError::QueueFull { cap: 0 }) => {}
+                other => panic!("expected QueueFull{{cap: 0}}, got {other:?}"),
+            }
+        }
+        drop(client);
+        let snap = srv.shutdown().unwrap();
+        assert_eq!(snap.shed, 5);
+        assert_eq!(snap.requests, 0);
+    }
+
+    /// Admission edge case: a request already past its deadline when the
+    /// worker picks it up is answered with the typed error — it never
+    /// occupies a slot, and the miss is counted (as an error too).
+    #[test]
+    fn expired_deadline_is_answered_with_typed_error() {
+        let srv = Server::start(
+            move || Ok(toy_engine()),
+            ServerConfig {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+                queue_cap: 64,
+                deadline: Some(Duration::ZERO), // expired at admission
+                replicas: 1,
+                ..Default::default()
+            },
+        );
+        let client = srv.client();
+        let r = client.infer(vec![1.0, 0.0]).expect("channel stays open");
+        let err = r.outcome.expect_err("expired deadline must fail");
+        assert!(
+            matches!(err, EngineError::DeadlineExceeded { .. }),
+            "got: {err:?}"
+        );
+        assert!(err.to_string().contains("deadline exceeded"), "got: {err}");
+        drop(client);
+        let snap = srv.shutdown().unwrap();
+        assert_eq!(snap.deadline_misses, 1);
+        assert_eq!(snap.errors, 1, "a miss is also an error answer");
+        assert_eq!(snap.requests, 0);
+    }
+
+    /// Shed-under-burst regression: with the worker parked in (gated)
+    /// construction, exactly queue_cap submissions are admitted and every
+    /// rejection is counted — Snapshot.shed matches the client-observed
+    /// rejections exactly, and the admitted ones are all served.
+    #[test]
+    fn shed_under_burst_matches_rejected_submissions_exactly() {
+        let gate = Arc::new(AtomicBool::new(false));
+        let srv = gated_server(
+            &gate,
+            ServerConfig {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+                queue_cap: 4,
+                replicas: 1,
+                ..Default::default()
+            },
+        );
+        let client = srv.client();
+        let mut admitted = Vec::new();
+        let mut rejected = 0u64;
+        for _ in 0..10 {
+            match client.submit(vec![1.0, 0.0]) {
+                Ok(rx) => admitted.push(rx),
+                Err(AdmissionError::QueueFull { cap }) => {
+                    assert_eq!(cap, 4);
+                    rejected += 1;
+                }
+                Err(e) => panic!("unexpected {e:?}"),
+            }
+        }
+        assert_eq!(admitted.len(), 4, "exactly queue_cap admitted");
+        assert_eq!(rejected, 6);
+        gate.store(true, Ordering::SeqCst);
+        for rx in admitted {
+            rx.recv().unwrap().outcome.unwrap();
+        }
+        drop(client);
+        let snap = srv.shutdown().unwrap();
+        assert_eq!(snap.shed, rejected, "shed must match rejections exactly");
+        assert_eq!(snap.requests, 4);
+        assert_eq!(snap.errors, 0);
+    }
+
+    /// Tickets decouple stamp order from enqueue order: submitting in
+    /// reverse still answers each request by its own (id, input) binding.
+    #[test]
+    fn out_of_order_ticket_submission_serves_by_binding() {
+        let srv = server(4, 5);
+        let client = srv.client();
+        let tickets: Vec<Ticket> = (0..4).map(|_| client.stamp()).collect();
+        for (i, t) in tickets.iter().enumerate() {
+            assert_eq!(t.id(), i as u64);
+        }
+        // enqueue in reverse stamp order; class alternates by stamp index
+        let mut waiters: Vec<Option<Receiver<Response>>> = (0..4).map(|_| None).collect();
+        for (k, t) in tickets.into_iter().enumerate().rev() {
+            let v = if k % 2 == 0 {
+                vec![1.0, 0.0]
+            } else {
+                vec![0.0, 1.0]
+            };
+            waiters[k] = Some(client.submit_ticket(t, v).unwrap());
+        }
+        for (k, w) in waiters.into_iter().enumerate() {
+            let r = w.unwrap().recv().unwrap();
+            assert_eq!(r.outcome.unwrap().class, k % 2, "stamp {k}");
+        }
+        drop(client);
+        let snap = srv.shutdown().unwrap();
+        assert_eq!(snap.requests, 4);
+        assert_eq!(snap.errors, 0);
     }
 }

@@ -200,6 +200,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // worker replicas, each owning its own engine and pulling batches
     // from the shared admission queue (min 1)
     let replicas = args.get_usize("replicas", 1).max(1);
+    // bounded admission: submissions beyond the cap are shed with a typed
+    // error (counted in the final report), never queued unboundedly
+    let queue_cap = args.get_usize("queue-cap", 4096);
+    // per-request deadline (0 = none): a request past it when a worker
+    // picks it up is answered Err(DeadlineExceeded) instead of batched
+    let deadline_ms = args.get_usize("deadline-ms", 0);
+    // continuous batching: back-fill slots vacated by early exits from the
+    // queue at block boundaries (--backfill 0 restores hold-until-done
+    // batching, the EXPERIMENTS.md §Serving ablation baseline)
+    let backfill = args.get_usize("backfill", 1) != 0;
     // engine fan-out per batch (0 = all cores; MEMDYN_THREADS also applies)
     let threads = args.get_usize("threads", 0);
     // native is the default serving backend; xla serves the digital
@@ -227,7 +237,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = ServerConfig {
         max_batch,
         max_wait: Duration::from_millis(wait_ms as u64),
-        queue_depth: 4096,
+        queue_cap,
+        deadline: if deadline_ms > 0 {
+            Some(Duration::from_millis(deadline_ms as u64))
+        } else {
+            None
+        },
+        backfill,
         replicas,
     };
     // the factory runs once per replica (cloneable, non-consuming body):
@@ -269,32 +285,56 @@ fn cmd_serve(args: &Args) -> Result<()> {
         other => return Err(anyhow!("unknown workload {other} (poisson|bursty)")),
     };
     println!(
-        "[serve] {n_requests} requests, {workload} {rate}/s, max_batch {max_batch}, wait {wait_ms}ms, replicas {replicas}, threads {threads}, backend {backend}"
+        "[serve] {n_requests} requests, {workload} {rate}/s, max_batch {max_batch}, wait {wait_ms}ms, \
+         replicas {replicas}, threads {threads}, backend {backend}, queue_cap {queue_cap}, \
+         deadline {deadline_ms}ms, backfill {backfill}"
     );
     let t0 = std::time::Instant::now();
     let mut pending = Vec::with_capacity(n_requests);
     let mut labels = Vec::with_capacity(n_requests);
+    let mut shed = 0usize;
     for a in &stream {
         let due = Duration::from_micros(a.at_us);
         if let Some(sleep) = due.checked_sub(t0.elapsed()) {
             std::thread::sleep(sleep);
         }
-        pending.push(client.submit(dataset.test_sample(a.sample).to_vec())?);
-        labels.push(dataset.y_test[a.sample]);
+        // under --queue-cap pressure the server sheds instead of queueing;
+        // count the typed rejections rather than aborting the run
+        match client.submit(dataset.test_sample(a.sample).to_vec()) {
+            Ok(rx) => {
+                pending.push(rx);
+                labels.push(dataset.y_test[a.sample]);
+            }
+            Err(memdyn::coordinator::AdmissionError::QueueFull { .. }) => shed += 1,
+            Err(e) => return Err(anyhow!("submit failed: {e}")),
+        }
     }
     let mut correct = 0usize;
+    let mut answered_err = 0usize;
+    let admitted = pending.len();
     for (rx, label) in pending.into_iter().zip(labels) {
         let r = rx.recv().map_err(|_| anyhow!("request dropped"))?;
-        let outcome = r.outcome.map_err(|e| anyhow!("engine error: {e}"))?;
-        if outcome.class == label as usize {
-            correct += 1;
+        // Err outcomes (deadline misses, engine failures) are part of the
+        // report, not fatal to the driver
+        match r.outcome {
+            Ok(outcome) => {
+                if outcome.class == label as usize {
+                    correct += 1;
+                }
+            }
+            Err(_) => answered_err += 1,
         }
     }
     drop(client);
     let snap = server.shutdown()?;
+    let answered_ok = admitted - answered_err;
     println!(
-        "[serve] accuracy {:.2}%",
-        100.0 * correct as f64 / n_requests as f64
+        "[serve] accuracy {:.2}% ({answered_ok}/{admitted} answered ok, {answered_err} err, {shed} shed)",
+        if answered_ok > 0 {
+            100.0 * correct as f64 / answered_ok as f64
+        } else {
+            0.0
+        }
     );
     println!("[serve] {}", snap.report());
     Ok(())

@@ -16,7 +16,16 @@
 //! outcomes *and* the CIM/CAM energy counters summed over all replica
 //! engines — because request ids are stamped at admission, not by the
 //! shard that happens to win the request.
+//!
+//! The continuous-batching sweeps extend it across the *scheduling* axis:
+//! a back-fill-heavy pre-loaded workload (early exits vacate slots
+//! mid-flight, queued requests back-fill them — asserted via
+//! `Snapshot.backfills`) and arrival-order shuffles of the same
+//! (ticket id, input) bindings must both reproduce the reference run
+//! bit-for-bit.  What cohort a request lands in is timing; what it
+//! computes is (id, input, model).  See docs/SERVING.md.
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
@@ -358,8 +367,9 @@ fn sharded_serving_is_bit_identical_across_replica_counts() {
             ServerConfig {
                 max_batch: 4,
                 max_wait: Duration::from_millis(2),
-                queue_depth: 64,
+                queue_cap: 64,
                 replicas,
+                ..Default::default()
             },
         );
         let client = srv.client();
@@ -379,6 +389,139 @@ fn sharded_serving_is_bit_identical_across_replica_counts() {
         assert_eq!(
             total, want_energy,
             "{replicas} replicas: CIM/CAM energy counters diverged"
+        );
+    }
+}
+
+/// The continuous-batching headline test: a back-fill-heavy workload —
+/// the whole stream pre-loaded while workers are parked in a gated
+/// factory, so every block-0 early exit is guaranteed to find queued
+/// requests to back-fill its slot with — reproduces the reference run
+/// bit-for-bit (outcomes and summed energy) at 1, 2 and 4 replicas, and
+/// the single-replica run provably back-fills (`Snapshot.backfills`).
+/// Back-fill changes *when* a request runs and *what cohort* it shares;
+/// admission-stamped ids mean it must never change what it computes.
+#[test]
+fn backfill_heavy_serving_is_bit_identical_and_actually_backfills() {
+    let n = 24;
+    let xs = inputs(n);
+    let reference = engine(1);
+    let want = reference.infer_batch(&xs, n).unwrap();
+    assert!(want.iter().any(|o| o.exited_early), "no early exits");
+    assert!(want.iter().any(|o| !o.exited_early), "no head exits");
+    let want_energy = energy(&reference);
+
+    for replicas in [1usize, 2, 4] {
+        let sink = Arc::new(Mutex::new(memdyn::cim::CimCounters::default()));
+        let sink2 = Arc::clone(&sink);
+        let gate = Arc::new(AtomicBool::new(false));
+        let gate2 = Arc::clone(&gate);
+        let srv = Server::start_with_finalizer(
+            move || {
+                // park until the test has pre-loaded the queue
+                while !gate2.load(Ordering::SeqCst) {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                Ok(engine(1))
+            },
+            move |e: Engine<XbarToy>| sink2.lock().unwrap().add(&energy(&e)),
+            ServerConfig {
+                max_batch: 4,
+                max_wait: Duration::from_millis(2),
+                queue_cap: 64,
+                replicas,
+                ..Default::default()
+            },
+        );
+        let client = srv.client();
+        let waiters: Vec<_> = (0..n)
+            .map(|i| client.submit(xs[i * DIM..(i + 1) * DIM].to_vec()).unwrap())
+            .collect();
+        gate.store(true, Ordering::SeqCst);
+        let got: Vec<_> = waiters
+            .into_iter()
+            .map(|w| w.recv().unwrap().outcome.unwrap())
+            .collect();
+        drop(client);
+        let snap = srv.shutdown().unwrap();
+        assert_eq!(snap.requests, n as u64, "{replicas} replicas");
+        assert_eq!(snap.errors, 0, "{replicas} replicas");
+        assert_outcomes_eq(&want, &got, &format!("backfill, {replicas} replicas"));
+        let total = *sink.lock().unwrap();
+        assert_eq!(
+            total, want_energy,
+            "{replicas} replicas: CIM/CAM energy counters diverged under back-fill"
+        );
+        if replicas == 1 {
+            // single worker, queue pre-loaded with 24, max_batch 4, and
+            // the even samples exit at block 0 by construction: the free
+            // slots MUST be back-filled (no timing assumption — the
+            // worker's try_lock admission cannot contend with anyone)
+            assert!(
+                snap.backfills >= 1,
+                "pre-loaded early-exit workload did not back-fill: {snap:?}"
+            );
+        }
+    }
+}
+
+/// Arrival-order invariance: stamp tickets in id order, enqueue them in a
+/// shuffled order (ticket i always bound to input i), and the outcomes
+/// collected per ticket id — plus the energy totals — must reproduce the
+/// reference run exactly.  This is the determinism line drawn precisely:
+/// queue order, batch composition, and shard assignment all change under
+/// the shuffle; every computed bit must not.
+#[test]
+fn arrival_order_shuffle_preserves_outcomes_and_energy() {
+    let n = 16;
+    let xs = inputs(n);
+    let reference = engine(1);
+    let want = reference.infer_batch(&xs, n).unwrap();
+    let want_energy = energy(&reference);
+    let mut rng = Pcg64::new(4242);
+
+    for trial in 0..3 {
+        let sink = Arc::new(Mutex::new(memdyn::cim::CimCounters::default()));
+        let sink2 = Arc::clone(&sink);
+        let srv = Server::start_with_finalizer(
+            move || Ok(engine(1)),
+            move |e: Engine<XbarToy>| sink2.lock().unwrap().add(&energy(&e)),
+            ServerConfig {
+                max_batch: 4,
+                max_wait: Duration::from_millis(2),
+                queue_cap: 64,
+                replicas: 2,
+                ..Default::default()
+            },
+        );
+        let client = srv.client();
+        let mut tickets: Vec<Option<memdyn::coordinator::Ticket>> =
+            (0..n).map(|_| Some(client.stamp())).collect();
+        let mut order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut order);
+        let mut waiters: Vec<Option<_>> = (0..n).map(|_| None).collect();
+        for &i in &order {
+            let t = tickets[i].take().unwrap();
+            assert_eq!(t.id(), i as u64, "stamp order is id order");
+            waiters[i] = Some(
+                client
+                    .submit_ticket(t, xs[i * DIM..(i + 1) * DIM].to_vec())
+                    .unwrap(),
+            );
+        }
+        let got: Vec<_> = waiters
+            .into_iter()
+            .map(|w| w.unwrap().recv().unwrap().outcome.unwrap())
+            .collect();
+        drop(client);
+        let snap = srv.shutdown().unwrap();
+        assert_eq!(snap.requests, n as u64, "trial {trial}");
+        assert_eq!(snap.errors, 0, "trial {trial}");
+        assert_outcomes_eq(&want, &got, &format!("shuffle trial {trial}"));
+        let total = *sink.lock().unwrap();
+        assert_eq!(
+            total, want_energy,
+            "trial {trial}: CIM/CAM energy counters diverged under shuffle"
         );
     }
 }

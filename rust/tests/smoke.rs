@@ -15,10 +15,13 @@ use memdyn::coordinator::{Engine, ExitMemory, ServerConfig};
 fn server_config_default_collect_batch_roundtrip() {
     let cfg = ServerConfig::default();
     assert!(cfg.max_batch >= 1);
-    assert!(cfg.queue_depth >= 1);
+    assert!(cfg.queue_cap >= 1);
     assert!(cfg.max_wait > Duration::ZERO);
+    // admission-control defaults: no deadline, continuous batching on
+    assert!(cfg.deadline.is_none());
+    assert!(cfg.backfill);
 
-    let (tx, rx) = sync_channel::<Request>(cfg.queue_depth);
+    let (tx, rx) = sync_channel::<Request>(cfg.queue_cap);
     let (resp_tx, resp_rx) = sync_channel::<Response>(1);
     tx.send(Request {
         input: vec![0.5, 0.25],

@@ -15,7 +15,14 @@ invariants the Rust tests assert:
 3. length validation at batch assembly fails exactly the offenders and
    preserves the relative order of survivors (`partition` semantics);
 4. the metrics merge is exact: counters add, histograms add elementwise
-   with resize, mean_batch counts completed batches only.
+   with resize, mean_batch counts completed batches only;
+5. (PR 7, continuous batching) the back-fill slot schedule is pure in
+   (request id, exit depth): across arrival-order shuffles, replica
+   counts and back-fill on/off, every request's outcome and the number
+   of blocks it occupies a slot for are invariant, total slot-rounds
+   equal sum(exit_depth + 1) (no slot is ever held past its request's
+   exit — work conservation), live slots never exceed max_batch, and
+   in-flight cohorts sit at pairwise distinct depths.
 
 Run: python3 tools/check_shard_serving.py
 """
@@ -100,6 +107,102 @@ def check_invariance():
     print("ok: admission ids shard-invariant; stride ids disjoint but not")
 
 
+# --- 5: continuous batching — back-fill schedule purity -------------------
+
+BLOCKS = 3
+
+
+def exit_depth(seed, req_id, sample):
+    """Blocks a request runs before exiting — pure in (id, input), like
+    the engine's CAM-driven exit (the stand-in outcome's exit block)."""
+    _, e = outcome(seed, req_id, sample)
+    return min(e, BLOCKS - 1)
+
+
+def serve_continuous(arrivals, replicas, max_batch, rng, backfill=True):
+    """Block-synchronous continuous batcher, mirroring worker_loop:
+
+    each tick one replica runs a scheduling round — admit (blocking-style
+    when idle, non-blocking back-fill into free slots otherwise), then
+    advance every in-flight cohort one block, answering exits at the
+    boundary.  Returns (results by admission id, backfills, slot_rounds).
+    """
+    queue = list(arrivals)  # (admission id, sample), enqueue order
+    inflight = [[] for _ in range(replicas)]  # per replica: cohorts
+    results = {}
+    backfills = 0
+    slot_rounds = 0
+    while queue or any(inflight):
+        r = rng.randrange(replicas)
+        cohorts = inflight[r]
+        live = sum(len(c["members"]) for c in cohorts)
+        if not cohorts:
+            fresh, queue = queue[:max_batch], queue[max_batch:]
+        elif backfill and live < max_batch and queue:
+            free = max_batch - live
+            fresh, queue = queue[:free], queue[free:]
+            backfills += len(fresh)
+        else:
+            fresh = []
+        if fresh:
+            cohorts.append({
+                "depth": 0,
+                "members": [(i, s, exit_depth(17, i, s)) for i, s in fresh],
+            })
+        for c in cohorts:
+            slot_rounds += len(c["members"])  # every member occupies a slot
+            d = c["depth"]
+            still = []
+            for i, s, e in c["members"]:
+                if e == d or d == BLOCKS - 1:  # CAM exit, or head
+                    results[i] = outcome(17, i, s)
+                else:
+                    still.append((i, s, e))
+            c["members"] = still
+            c["depth"] += 1
+        inflight[r] = [c for c in cohorts if c["members"]]
+        assert sum(len(c["members"]) for c in inflight[r]) <= max_batch, \
+            "live slots exceeded max_batch"
+        depths = [c["depth"] for c in inflight[r]]
+        assert len(depths) == len(set(depths)), \
+            "in-flight cohorts share a depth"
+    return results, backfills, slot_rounds
+
+
+def check_backfill():
+    samples = tuple(f"s{i}" for i in range(48))
+    n = len(samples)
+    stamped = list(enumerate(samples))  # stamp order = id order
+    want = [outcome(17, i, s) for i, s in enumerate(samples)]
+    # work conservation target: a request holds a slot for exactly the
+    # blocks it runs — exit_depth + 1 rounds, nothing more
+    want_work = sum(exit_depth(17, i, s) + 1 for i, s in enumerate(samples))
+    saw_backfill = False
+    for replicas in (1, 2, 4):
+        for trial in range(10):
+            rng = random.Random(9000 * replicas + trial)
+            shuffled = stamped[:]
+            rng.shuffle(shuffled)  # enqueue order != stamp order
+            results, backfills, slot_rounds = serve_continuous(
+                shuffled, replicas, 4, rng)
+            got = [results[i] for i in range(n)]
+            assert got == want, \
+                f"back-fill scheduling changed outcomes (replicas={replicas})"
+            assert slot_rounds == want_work, \
+                "a slot was held past its request's exit"
+            saw_backfill |= backfills > 0
+    assert saw_backfill, "pre-loaded queue never back-filled"
+    # the ablation switch: same outcomes and the same per-request slot
+    # cost with back-fill off — only throughput/occupancy may change
+    rng = random.Random(77)
+    results, backfills, slot_rounds = serve_continuous(
+        stamped, 2, 4, rng, backfill=False)
+    assert [results[i] for i in range(n)] == want
+    assert backfills == 0 and slot_rounds == want_work
+    print("ok: back-fill slot schedule pure in (request id, exit depth); "
+          "work-conserving, cap respected")
+
+
 # --- 3: length validation partitions, preserving survivor order ----------
 
 def assemble(batch, declared):
@@ -160,6 +263,7 @@ def check_merge():
 
 if __name__ == "__main__":
     check_invariance()
+    check_backfill()
     check_validation()
     check_merge()
     print("check_shard_serving: all invariants hold")
