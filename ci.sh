@@ -36,6 +36,14 @@ cargo test -q
 echo "== cargo build --release --benches --examples =="
 cargo build --release --benches --examples
 
+# Observability round-trip: serve a synthetic analogue toy with tracing +
+# live metrics on, then replay the emitted JSON-lines through the stdlib
+# checker (span nesting, rounds == exit+1, per-request energy sums ==
+# snapshot totals).  Artifact-free, so it always runs.
+echo "== obs trace round-trip (trace_demo -> check_obs_trace.py) =="
+cargo run --release --quiet --example trace_demo -- target/trace_demo.jsonl
+python3 tools/check_obs_trace.py target/trace_demo.jsonl
+
 # Both execution paths must stay green: the analogue crossbar simulation
 # (native) and the HLO-interpreter digital path (xla), single-shot and
 # through the sharded serving layer (2 replicas exercises the shared
@@ -53,7 +61,9 @@ if [ -f artifacts/index.json ]; then
         --max-batch 8 --wait-ms 2 --replicas 2 --backend xla
     cargo run --release --quiet -- serve --requests 40 --rate 2000 \
         --max-batch 4 --wait-ms 2 --replicas 2 --workload bursty \
-        --queue-cap 64 --backfill 1 --backend native
+        --queue-cap 64 --backfill 1 --backend native \
+        --trace-out target/serve_trace.jsonl --metrics-interval 0.05
+    python3 tools/check_obs_trace.py target/serve_trace.jsonl
     cargo run --release --quiet -- serve --requests 40 --rate 2000 \
         --max-batch 4 --wait-ms 2 --replicas 2 --workload bursty \
         --queue-cap 64 --backfill 0 --backend native

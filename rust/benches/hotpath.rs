@@ -4,7 +4,8 @@
 //! Covers the L3 request path end to end: crossbar MVM (the Mem backend's
 //! inner loop), the pooled keyed batch MVM, pool-vs-scoped dispatch
 //! overhead (`spawn_overhead` rows), the sharded server at replicas
-//! 1/2/4 (`serve_toy_r{1,2,4}` rows), im2col, GroupNorm, the dense
+//! 1/2/4 (`serve_toy_r{1,2,4}` rows) and with observability on vs off
+//! (`serve_toy_obs_{on,off}` rows), im2col, GroupNorm, the dense
 //! digital matmul, and CAM search.
 
 use std::time::Duration;
@@ -239,6 +240,53 @@ fn main() {
                         .into_iter()
                         .map(|w| w.recv().unwrap().outcome.unwrap().class)
                         .sum::<usize>()
+                }
+            )
+            .report()
+        );
+        drop(client);
+        srv.shutdown().unwrap();
+    }
+
+    // --- observability overhead: same burst with tracing + interim
+    // snapshots on vs everything off — the obs_on/obs_off delta is the
+    // whole cost of per-request traces (ring pushes, per-round cost
+    // attribution) plus the live emitter, and is the §Perf row that keeps
+    // "observes, never influences" honest on the throughput axis too.
+    for (tag, trace) in [("off", false), ("on", true)] {
+        let srv = Server::start(
+            || Ok(bench_toy_engine()),
+            ServerConfig {
+                max_batch: 8,
+                max_wait: Duration::from_millis(1),
+                queue_cap: 1024,
+                replicas: 1,
+                trace,
+                metrics_interval: trace.then(|| Duration::from_millis(100)),
+                ..Default::default()
+            },
+        );
+        let client = srv.client();
+        let ring = srv.trace_ring();
+        println!(
+            "{}",
+            b.run_items(
+                &format!("serve_toy_obs_{tag} (requests/s)"),
+                burst as f64,
+                || {
+                    let waiters: Vec<_> = (0..burst)
+                        .map(|_| client.submit(sample.clone()).unwrap())
+                        .collect();
+                    let sum = waiters
+                        .into_iter()
+                        .map(|w| w.recv().unwrap().outcome.unwrap().class)
+                        .sum::<usize>();
+                    // drain between iterations so the ring never saturates
+                    // (a full ring would short-circuit the push path)
+                    if let Some(r) = &ring {
+                        let _ = r.drain();
+                    }
+                    sum
                 }
             )
             .report()

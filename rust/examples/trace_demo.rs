@@ -1,0 +1,231 @@
+//! Observability demo: serve a fully synthetic analogue toy model (no
+//! artifacts needed) with per-request tracing and live interim metrics
+//! on, then write the traces as JSON-lines — the file
+//! `tools/check_obs_trace.py` validates in CI.
+//!
+//! The toy mirrors the determinism suite's crossbar toy: each block emits
+//! the current feature row as its CAM search vector, then pushes it
+//! through one noisy analogue `(DIM, DIM)` layer.  `row_cost` exposes the
+//! analytic per-row tile cost, so every trace carries per-round CIM/CAM
+//! energy spans and the final snapshot's energy totals equal the sum over
+//! successful requests.
+//!
+//! ```bash
+//! cargo run --release --example trace_demo -- target/trace_demo.jsonl
+//! python3 tools/check_obs_trace.py target/trace_demo.jsonl
+//! ```
+
+use std::time::Duration;
+
+use anyhow::Result;
+use memdyn::cam::SemanticMemory;
+use memdyn::cim::CimCounters;
+use memdyn::coordinator::dynmodel::DynModel;
+use memdyn::coordinator::memory::{ExitMemory, ExitStats};
+use memdyn::coordinator::{Server, ServerConfig};
+use memdyn::crossbar::ConverterConfig;
+use memdyn::device::DeviceConfig;
+use memdyn::energy::EnergyModel;
+use memdyn::nn::weights::{MvmKeys, NoiseSpec, WeightMatrix};
+use memdyn::obs;
+use memdyn::util::rng::{str_id, Pcg64, StreamKey};
+
+const DIM: usize = 24;
+const BLOCKS: usize = 3;
+const CLASSES: usize = 4;
+
+struct Toy {
+    layers: Vec<WeightMatrix>,
+    key: StreamKey,
+}
+
+struct ToyState {
+    rows: Vec<Vec<f32>>,
+    keys: Vec<StreamKey>,
+}
+
+impl Toy {
+    fn build(seed: u64) -> Self {
+        let mut rng = Pcg64::new(seed);
+        let spec = NoiseSpec::paper_default();
+        let layers = (0..BLOCKS)
+            .map(|i| {
+                let w: Vec<i8> =
+                    (0..DIM * DIM).map(|_| [-1i8, 0, 1][rng.below(3)]).collect();
+                WeightMatrix::from_ternary(&w, DIM, DIM, &spec, &mut rng)
+                    .with_stream_id(str_id(&format!("trace_demo.{i}")))
+            })
+            .collect();
+        Toy {
+            layers,
+            key: StreamKey::root(seed ^ 0xabcd),
+        }
+    }
+}
+
+impl DynModel for Toy {
+    type State = ToyState;
+
+    fn n_blocks(&self) -> usize {
+        BLOCKS
+    }
+
+    fn classes(&self) -> usize {
+        CLASSES
+    }
+
+    fn input_len(&self) -> Option<usize> {
+        // declared width: the malformed demo request is rejected at
+        // screening no matter which batch it lands in
+        Some(DIM)
+    }
+
+    fn init(&self, input: &[f32], batch: usize, reqs: &[u64]) -> Result<ToyState> {
+        Ok(ToyState {
+            rows: (0..batch)
+                .map(|i| input[i * DIM..(i + 1) * DIM].to_vec())
+                .collect(),
+            keys: reqs.iter().map(|&r| self.key.child(r)).collect(),
+        })
+    }
+
+    fn step(&self, i: usize, state: &mut ToyState) -> Result<Vec<f32>> {
+        let mut svs = Vec::with_capacity(state.rows.len() * DIM);
+        for (row, key) in state.rows.iter_mut().zip(&state.keys) {
+            svs.extend_from_slice(row);
+            let sample_keys = [*key];
+            let y = self.layers[i].matmul(row, 1, &MvmKeys::per_sample(&sample_keys));
+            *row = y.iter().map(|v| v.clamp(-4.0, 4.0) * 0.5).collect();
+        }
+        Ok(svs)
+    }
+
+    fn batch_of(&self, state: &ToyState) -> usize {
+        state.rows.len()
+    }
+
+    fn select(&self, state: &ToyState, keep: &[usize]) -> ToyState {
+        ToyState {
+            rows: keep.iter().map(|&r| state.rows[r].clone()).collect(),
+            keys: keep.iter().map(|&r| state.keys[r]).collect(),
+        }
+    }
+
+    fn finish(&self, state: &ToyState) -> Result<Vec<f32>> {
+        Ok(state
+            .rows
+            .iter()
+            .flat_map(|r| r[..CLASSES].to_vec())
+            .collect())
+    }
+
+    fn row_cost(&self, block: usize) -> CimCounters {
+        // one MVM through this block's layer per live row per round
+        self.layers[block].mvm_cost()
+    }
+}
+
+fn exit_centers(exit: u64) -> Vec<i8> {
+    let mut rng = Pcg64::new(1000 + exit);
+    let mut c: Vec<i8> = (0..CLASSES * DIM)
+        .map(|_| [-1i8, 0, 1][rng.below(3)])
+        .collect();
+    for cc in 0..CLASSES {
+        c[cc * DIM] = 1; // no all-zero centers
+    }
+    c
+}
+
+fn analog_memory(seed: u64) -> ExitMemory {
+    let mut rng = Pcg64::new(seed);
+    let exits: Vec<(Vec<i8>, usize, usize)> = (0..BLOCKS)
+        .map(|e| (exit_centers(e as u64), CLASSES, DIM))
+        .collect();
+    let mem = SemanticMemory::program(
+        &exits,
+        &DeviceConfig::default(),
+        &ConverterConfig::default(),
+        &mut rng,
+    );
+    ExitMemory::Analog {
+        mem,
+        stats: (0..BLOCKS).map(|_| ExitStats::identity(DIM)).collect(),
+        key: StreamKey::root(seed ^ 0x5eed),
+    }
+}
+
+/// Even samples sit on an exit-0 center (guaranteed early exit); odd
+/// samples are uniform random (they run to the head).
+fn inputs(n: usize) -> Vec<f32> {
+    let centers = exit_centers(0);
+    let mut rng = Pcg64::new(7);
+    let mut xs = Vec::with_capacity(n * DIM);
+    for i in 0..n {
+        if i % 2 == 0 {
+            let class = (i / 2) % CLASSES;
+            xs.extend(
+                centers[class * DIM..(class + 1) * DIM]
+                    .iter()
+                    .map(|&v| v as f32),
+            );
+        } else {
+            xs.extend((0..DIM).map(|_| rng.uniform_in(-1.0, 1.0) as f32));
+        }
+    }
+    xs
+}
+
+fn main() -> Result<()> {
+    let out = std::env::args()
+        .nth(1)
+        .unwrap_or_else(|| "target/trace_demo.jsonl".into());
+    let n = 32usize;
+    let xs = inputs(n);
+    let srv = Server::start(
+        move || {
+            Ok(memdyn::coordinator::Engine::new(
+                Toy::build(99),
+                analog_memory(31),
+                vec![0.7; BLOCKS],
+            ))
+        },
+        ServerConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(2),
+            queue_cap: 256,
+            replicas: 2,
+            trace: true,
+            metrics_interval: Some(Duration::from_millis(25)),
+            ..Default::default()
+        },
+    );
+    let client = srv.client();
+    let mut waiters = Vec::with_capacity(n + 1);
+    for i in 0..n {
+        waiters.push(client.submit(xs[i * DIM..(i + 1) * DIM].to_vec())?);
+    }
+    // one malformed request so the trace file carries an error line too
+    waiters.push(client.submit(vec![0.5; DIM + 3])?);
+    for w in waiters {
+        let _ = w.recv()?; // Err outcomes are part of the demo
+    }
+    drop(client);
+    let ring = srv.trace_ring().expect("tracing is on");
+    let snap = srv.shutdown().map_err(|e| anyhow::anyhow!(e))?;
+    let (traces, dropped) = ring.drain();
+    let file = std::fs::File::create(&out)?;
+    let mut w = std::io::BufWriter::new(file);
+    obs::trace::write_jsonl(
+        &mut w,
+        &traces,
+        &EnergyModel::default(),
+        snap.to_json(),
+        dropped,
+    )?;
+    std::io::Write::flush(&mut w)?;
+    println!(
+        "[trace_demo] wrote {} trace line(s) ({dropped} dropped) to {out}"
+    );
+    println!("[trace_demo] {}", snap.report());
+    Ok(())
+}

@@ -137,6 +137,13 @@ impl CamBank {
         self.matrix.take_counters()
     }
 
+    /// The exact [`CimCounters`] delta one search adds (a search is one
+    /// MVM on the transposed center matrix) — pure tile-geometry math,
+    /// used for per-request energy attribution in the serving traces.
+    pub fn search_cost(&self) -> CimCounters {
+        self.matrix.mvm_cost()
+    }
+
     /// Stored (programmed-mean) value map for Fig. 4g — what the write
     /// noise did to the intended ternary pattern.
     pub fn stored_value_map(&self) -> Vec<f32> {
@@ -192,6 +199,12 @@ impl SemanticMemory {
             total.add(&b.take_counters());
         }
         total
+    }
+
+    /// Analytic cost of one search against `exit`'s bank (see
+    /// [`CamBank::search_cost`]).
+    pub fn search_cost(&self, exit: usize) -> CimCounters {
+        self.banks[exit].search_cost()
     }
 }
 
@@ -344,6 +357,25 @@ mod tests {
             ideal.search_keyed(&sv, key).class,
             crate::util::stats::argmax(&sims).unwrap()
         );
+    }
+
+    #[test]
+    fn search_cost_matches_one_measured_search() {
+        let (c, d) = (10, 32);
+        let centers = random_centers(c, d, 41);
+        let mut rng = Pcg64::new(42);
+        let bank = CamBank::program(
+            &centers,
+            c,
+            d,
+            &DeviceConfig::default(),
+            &ConverterConfig::default(),
+            &mut rng,
+        );
+        bank.take_counters(); // drop programming-time noise reads, if any
+        let sv: Vec<f32> = (0..d).map(|i| (i as f32 * 0.11).sin()).collect();
+        bank.search_keyed(&sv, StreamKey::root(9).child(1));
+        assert_eq!(bank.take_counters(), bank.search_cost());
     }
 
     #[test]

@@ -69,6 +69,33 @@ impl AtomicCounters {
     }
 }
 
+/// Process-wide MVM totals across every `CimMatrix` in the process,
+/// never reset — the backing store for the `cim.process.*` probes in
+/// `obs::registry`.  Per-matrix counters (below) stay drainable via
+/// [`CimMatrix::take_counters`]; these statics only ever grow.
+static PROCESS_MVMS: AtomicU64 = AtomicU64::new(0);
+static PROCESS_DEVICE_READS: AtomicU64 = AtomicU64::new(0);
+static PROCESS_DAC: AtomicU64 = AtomicU64::new(0);
+static PROCESS_ADC: AtomicU64 = AtomicU64::new(0);
+
+fn process_add(c: &CimCounters) {
+    PROCESS_MVMS.fetch_add(c.mvms, Ordering::Relaxed);
+    PROCESS_DEVICE_READS.fetch_add(c.device_reads, Ordering::Relaxed);
+    PROCESS_DAC.fetch_add(c.dac_conversions, Ordering::Relaxed);
+    PROCESS_ADC.fetch_add(c.adc_conversions, Ordering::Relaxed);
+}
+
+/// Monotone process-wide counter totals (non-draining peek; see the
+/// statics above).  `obs::registry` exposes these as `cim.process.*`.
+pub fn process_totals() -> CimCounters {
+    CimCounters {
+        mvms: PROCESS_MVMS.load(Ordering::Relaxed),
+        device_reads: PROCESS_DEVICE_READS.load(Ordering::Relaxed),
+        dac_conversions: PROCESS_DAC.load(Ordering::Relaxed),
+        adc_conversions: PROCESS_ADC.load(Ordering::Relaxed),
+    }
+}
+
 /// A ternary weight matrix programmed across crossbar tiles.
 pub struct CimMatrix {
     pub k: usize,
@@ -219,6 +246,28 @@ impl CimMatrix {
             }
         }
         self.counters.add(&counters);
+        process_add(&counters);
+    }
+
+    /// The exact [`CimCounters`] delta one `mvm`/`mvm_keyed` call adds —
+    /// a pure function of the programmed tile geometry (no crossbar
+    /// state is touched).  This is what per-request energy attribution
+    /// in the serving trace layer is built on: summing `mvm_cost()` over
+    /// the MVMs a request triggered reproduces the measured counters
+    /// bit-identically.
+    pub fn mvm_cost(&self) -> CimCounters {
+        let mut c = CimCounters::default();
+        for (ri, row_tiles) in self.tiles.iter().enumerate() {
+            let (r0, r1) = (self.row_splits[ri], self.row_splits[ri + 1]);
+            for (ci, tile) in row_tiles.iter().enumerate() {
+                let (c0, c1) = (self.col_splits[ci], self.col_splits[ci + 1]);
+                c.mvms += 1;
+                c.device_reads += tile.device_reads() as u64;
+                c.dac_conversions += (r1 - r0) as u64;
+                c.adc_conversions += (c1 - c0) as u64;
+            }
+        }
+        c
     }
 
     /// Batched matmul: `(m, k) @ (k, n) -> (m, n)` (noisy per row).
@@ -397,6 +446,34 @@ mod tests {
         assert_eq!(c.dac_conversions, 2 * k as u64);
         assert_eq!(c.adc_conversions, 2 * n as u64);
         assert_eq!(cim.take_counters().mvms, 0); // reset on take
+    }
+
+    #[test]
+    fn mvm_cost_matches_measured_counters_and_process_totals_grow() {
+        let (k, n) = (700, 300); // multi-tile in both dimensions
+        let w = random_ternary(k, n, 33);
+        let mut rng = Pcg64::new(34);
+        let cim = CimMatrix::program(
+            &w,
+            k,
+            n,
+            &DeviceConfig::ideal(),
+            &ConverterConfig::ideal(),
+            &mut rng,
+        );
+        let cost = cim.mvm_cost();
+        let before = process_totals();
+        let x = vec![0.5f32; k];
+        let mut y = vec![0f32; n];
+        cim.mvm(&x, &mut y, &mut rng);
+        assert_eq!(cim.take_counters(), cost, "analytic cost == one measured MVM");
+        // Process totals are global and other tests may bump them
+        // concurrently, so assert growth by at least this MVM's cost.
+        let after = process_totals();
+        assert!(after.mvms >= before.mvms + cost.mvms);
+        assert!(after.device_reads >= before.device_reads + cost.device_reads);
+        assert!(after.dac_conversions >= before.dac_conversions + cost.dac_conversions);
+        assert!(after.adc_conversions >= before.adc_conversions + cost.adc_conversions);
     }
 
     #[test]

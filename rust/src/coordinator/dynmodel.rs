@@ -72,6 +72,21 @@ pub trait DynModel {
 
     /// Run the final head on the surviving rows -> logits `(batch x classes)`.
     fn finish(&self, state: &Self::State) -> Result<Vec<f32>>;
+
+    /// Analytic analogue cost ONE live row adds when `step(block)` runs —
+    /// a pure function of programmed tile geometry (see
+    /// `cim::CimMatrix::mvm_cost`), never of data or noise draws.  The
+    /// serving layer multiplies this by each round's live rows to
+    /// attribute CIM energy to individual requests; summed with the
+    /// exit-memory's `search_cost` it reproduces the measured counters
+    /// exactly for models whose per-row work is geometry-determined.
+    ///
+    /// Defaults to zero (digital backends and models that have not opted
+    /// into per-request attribution — their traces carry zero energy
+    /// spans, which downstream sum-invariants still satisfy).
+    fn row_cost(&self, _block: usize) -> crate::cim::CimCounters {
+        Default::default()
+    }
 }
 
 // ---------------------------------------------------------------------------

@@ -83,6 +83,18 @@ impl<S> Cohort<S> {
     pub fn is_done(&self) -> bool {
         self.done
     }
+
+    /// Original batch positions of the rows still live, in state-row
+    /// order.  The serving layer uses this to attribute each scheduling
+    /// round's per-row analogue cost (and trace spans) to the individual
+    /// requests that were live when the round ran.
+    pub fn alive_rows(&self) -> &[usize] {
+        if self.done {
+            &[]
+        } else {
+            &self.alive
+        }
+    }
 }
 
 pub struct Engine<M: DynModel> {

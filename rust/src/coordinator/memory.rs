@@ -185,6 +185,17 @@ impl ExitMemory {
         }
     }
 
+    /// Analytic counter delta of one [`ExitMemory::search`] at `exit`:
+    /// zero for the exact (digital) memory, one CAM-bank MVM for the
+    /// analogue one.  Pure geometry — drives per-request energy
+    /// attribution in the serving traces without touching the crossbar.
+    pub fn search_cost(&self, exit: usize) -> crate::cim::CimCounters {
+        match self {
+            ExitMemory::Exact { .. } => Default::default(),
+            ExitMemory::Analog { mem, .. } => mem.search_cost(exit),
+        }
+    }
+
     pub fn make_spec(dev: DeviceConfig, conv: ConverterConfig) -> NoiseSpec {
         NoiseSpec::Analog { dev, conv }
     }

@@ -82,13 +82,28 @@
 //! deadline_misses) are the one surface allowed to vary with timing; the
 //! invariants table in `docs/SERVING.md` draws that line precisely.
 
+//! # Observability
+//!
+//! Each replica owns one [`Metrics`] shard (lock-free; see
+//! `coordinator::metrics`), merged at shutdown — or periodically by the
+//! live emitter thread when [`ServerConfig::metrics_interval`] is set,
+//! which prints interim merged snapshots without pausing workers.  With
+//! [`ServerConfig::trace`] on, every request additionally leaves a
+//! [`RequestTrace`] (queue wait, admission, per-round cohort spans with
+//! analytic CIM/CAM cost, exit decision) in a bounded [`TraceRing`]
+//! reachable via [`Server::trace_ring`]; `docs/OBSERVABILITY.md` has the
+//! span schema and the registry naming scheme.  All of it observes
+//! without influencing: per-round costs are computed analytically from
+//! tile geometry, so outcomes and energy counters stay bit-identical
+//! with tracing on or off (`tests/determinism.rs` sweeps both).
+
 #![warn(missing_docs)]
 
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{
     sync_channel, Receiver, RecvTimeoutError, SyncSender, TryRecvError, TrySendError,
 };
-use std::sync::{Arc, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock, RwLock, RwLockReadGuard, RwLockWriteGuard};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -97,6 +112,8 @@ use anyhow::{anyhow, Result};
 use super::dynmodel::DynModel;
 use super::engine::{Cohort, Engine, Outcome};
 use super::metrics::{Metrics, Snapshot};
+use crate::cim::CimCounters;
+use crate::obs::trace::{ExitSpan, RequestTrace, TraceRing};
 
 /// Serving-loop configuration: batching, admission control, and sharding.
 ///
@@ -143,6 +160,18 @@ pub struct ServerConfig {
     pub backfill: bool,
     /// Number of worker replicas, each owning one engine (min 1).
     pub replicas: usize,
+    /// Record a [`RequestTrace`] for every request into the server's
+    /// [`TraceRing`] (see [`Server::trace_ring`]).  Off by default; purely
+    /// observational — outcomes and energy counters are bit-identical
+    /// either way.
+    pub trace: bool,
+    /// Capacity of the trace ring (oldest traces are evicted and counted
+    /// once it fills).  Ignored unless `trace` is on.
+    pub trace_cap: usize,
+    /// When set, a background emitter thread prints a merged interim
+    /// [`Snapshot`] (`[metrics] …` on stderr) every interval, reading the
+    /// live shards without pausing workers.  `None` (default) disables it.
+    pub metrics_interval: Option<Duration>,
 }
 
 impl Default for ServerConfig {
@@ -154,6 +183,9 @@ impl Default for ServerConfig {
             deadline: None,
             backfill: true,
             replicas: 1,
+            trace: false,
+            trace_cap: 4096,
+            metrics_interval: None,
         }
     }
 }
@@ -333,12 +365,46 @@ fn try_admission(rx: &Mutex<Receiver<Request>>) -> Option<MutexGuard<'_, Receive
     }
 }
 
-/// Answer one request with an error outcome.
-fn respond_err(req: Request, err: &EngineError, metrics: &mut Metrics) {
-    metrics.record_error();
+/// Per-worker observability bundle threaded through the serving helpers:
+/// the replica's metrics shard plus, when tracing, the shared trace ring.
+struct WorkerObs<'a> {
+    metrics: &'a Metrics,
+    ring: Option<&'a TraceRing>,
+    replica: usize,
+}
+
+impl WorkerObs<'_> {
+    /// True when per-request traces are being recorded.
+    fn tracing(&self) -> bool {
+        self.ring.is_some()
+    }
+
+    /// Push a finished trace (no-op when tracing is off).
+    fn push_trace(&self, t: RequestTrace) {
+        if let Some(ring) = self.ring {
+            ring.push(t);
+        }
+    }
+}
+
+/// Answer one request with an error outcome (a request that never joined
+/// a cohort — screening rejections and construction failures; cohort
+/// members that fail mid-flight carry their admitted trace instead, see
+/// [`advance_and_respond`]).
+fn respond_err(req: Request, err: &EngineError, obs: &WorkerObs<'_>) {
+    obs.metrics.record_error();
+    let waited = req.submitted.elapsed();
+    if obs.tracing() {
+        obs.push_trace(RequestTrace::rejected(
+            req.id,
+            obs.replica,
+            waited.as_secs_f64() * 1e6,
+            err.to_string(),
+        ));
+    }
     let _ = req.resp.send(Response {
         outcome: Err(err.clone()),
-        latency: req.submitted.elapsed(),
+        latency: waited,
     });
 }
 
@@ -366,7 +432,12 @@ fn write_tx(shared: &Shared) -> RwLockWriteGuard<'_, Option<SyncSender<Request>>
 /// [`Server::shutdown`].
 pub struct Server {
     shared: Arc<Shared>,
-    handles: Vec<JoinHandle<Metrics>>,
+    handles: Vec<JoinHandle<()>>,
+    /// One metrics shard per replica, shared with the worker threads so
+    /// the emitter (and shutdown) can merge them while workers record.
+    shards: Vec<Arc<Metrics>>,
+    ring: Option<Arc<TraceRing>>,
+    emitter: Option<(JoinHandle<()>, Arc<AtomicBool>)>,
 }
 
 /// Cheap, cloneable-by-[`Server::client`] submission handle.  All clients
@@ -418,37 +489,80 @@ impl Server {
         // decide whether healthy siblings own the queue (see worker_loop)
         let built = Arc::new(AtomicUsize::new(0));
         let healthy = Arc::new(AtomicUsize::new(0));
-        let handles = (0..replicas)
-            .map(|r| {
+        let ring = cfg.trace.then(|| Arc::new(TraceRing::new(cfg.trace_cap)));
+        let shards: Vec<Arc<Metrics>> =
+            (0..replicas).map(|_| Arc::new(Metrics::new(0))).collect();
+        let handles = shards
+            .iter()
+            .enumerate()
+            .map(|(r, shard)| {
                 let rx = Arc::clone(&shared_rx);
                 let built = Arc::clone(&built);
                 let healthy = Arc::clone(&healthy);
+                let metrics = Arc::clone(shard);
+                let ring = ring.clone();
                 let factory = factory.clone();
                 let finalize = finalize.clone();
                 let cfg = cfg.clone();
                 std::thread::spawn(move || {
-                    worker_loop(
-                        r as u64,
-                        replicas as u64,
-                        factory,
-                        finalize,
-                        &rx,
-                        &cfg,
-                        &built,
-                        &healthy,
-                    )
+                    let ctx = WorkerCtx {
+                        replica: r as u64,
+                        replicas: replicas as u64,
+                        rx: &rx,
+                        cfg: &cfg,
+                        built: &built,
+                        healthy: &healthy,
+                        metrics: &metrics,
+                        ring: ring.as_deref(),
+                    };
+                    worker_loop(&ctx, factory, finalize)
                 })
             })
             .collect();
+        let shared = Arc::new(Shared {
+            tx: RwLock::new(Some(tx)),
+            next_id: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            queue_cap: cfg.queue_cap,
+        });
+        let emitter = cfg.metrics_interval.map(|interval| {
+            let stop = Arc::new(AtomicBool::new(false));
+            let flag = Arc::clone(&stop);
+            let shards = shards.clone();
+            let shared = Arc::clone(&shared);
+            // poll in short steps so shutdown never waits a full interval
+            let step = Duration::from_millis(20).min(interval.max(Duration::from_millis(1)));
+            let handle = std::thread::spawn(move || {
+                let mut last = Instant::now();
+                while !flag.load(Ordering::SeqCst) {
+                    std::thread::sleep(step);
+                    if last.elapsed() >= interval {
+                        last = Instant::now();
+                        let total = Metrics::new(0);
+                        for s in &shards {
+                            total.merge(s);
+                        }
+                        total.set_shed(shared.shed.load(Ordering::SeqCst));
+                        eprintln!("[metrics] {}", total.snapshot().report());
+                    }
+                }
+            });
+            (handle, stop)
+        });
         Server {
-            shared: Arc::new(Shared {
-                tx: RwLock::new(Some(tx)),
-                next_id: AtomicU64::new(0),
-                shed: AtomicU64::new(0),
-                queue_cap: cfg.queue_cap,
-            }),
+            shared,
             handles,
+            shards,
+            ring,
+            emitter,
         }
+    }
+
+    /// The shared trace ring when [`ServerConfig::trace`] is on, `None`
+    /// otherwise.  Drain it (live, or after [`Server::shutdown`]) and
+    /// serialize with [`crate::obs::trace::write_jsonl`].
+    pub fn trace_ring(&self) -> Option<Arc<TraceRing>> {
+        self.ring.clone()
     }
 
     /// Mint a submission handle sharing this server's admission counter.
@@ -467,20 +581,26 @@ impl Server {
     /// a client that submits afterwards gets [`AdmissionError::Closed`].
     pub fn shutdown(self) -> Result<Snapshot> {
         *write_tx(&self.shared) = None;
-        let mut total = Metrics::new(0);
         let mut panicked = 0usize;
         for h in self.handles {
-            match h.join() {
-                Ok(m) => total.merge(m),
-                Err(_) => panicked += 1,
+            if h.join().is_err() {
+                panicked += 1;
             }
+        }
+        if let Some((handle, stop)) = self.emitter {
+            stop.store(true, Ordering::SeqCst);
+            let _ = handle.join();
         }
         if panicked > 0 {
             return Err(anyhow!("{panicked} worker(s) panicked"));
         }
+        let total = Metrics::new(0);
+        for shard in &self.shards {
+            total.merge(shard);
+        }
         // shed rejections happen client-side (they never reach a worker),
         // so the count folds in from the shared cell at the end
-        total.shed = self.shared.shed.load(Ordering::SeqCst);
+        total.set_shed(self.shared.shed.load(Ordering::SeqCst));
         Ok(total.snapshot())
     }
 }
@@ -501,120 +621,135 @@ impl Drop for CensusTick<'_> {
 struct Inflight<S> {
     cohort: Cohort<S>,
     reqs: Vec<Option<Request>>,
+    /// Per original row: accumulated analytic (CIM, CAM) cost over the
+    /// rounds the row stayed live — recorded into the metrics shard (and
+    /// the trace's energy span) when the row resolves.
+    energy: Vec<(CimCounters, CimCounters)>,
+    /// Per original row: the in-progress trace (`Some` iff tracing).
+    traces: Vec<Option<RequestTrace>>,
+}
+
+/// Everything a worker borrows from the server: identity, the shared
+/// admission queue, config, the construction census, and observability.
+struct WorkerCtx<'a> {
+    replica: u64,
+    replicas: u64,
+    rx: &'a Mutex<Receiver<Request>>,
+    cfg: &'a ServerConfig,
+    built: &'a AtomicUsize,
+    healthy: &'a AtomicUsize,
+    metrics: &'a Metrics,
+    ring: Option<&'a TraceRing>,
 }
 
 /// One replica: build the engine, then serve until the queue closes —
 /// admitting when idle, back-filling freed slots at block boundaries
 /// while cohorts are in flight.
-fn worker_loop<M, F, D>(
-    replica: u64,
-    replicas: u64,
-    factory: F,
-    finalize: D,
-    rx: &Mutex<Receiver<Request>>,
-    cfg: &ServerConfig,
-    built: &AtomicUsize,
-    healthy: &AtomicUsize,
-) -> Metrics
+fn worker_loop<M, F, D>(ctx: &WorkerCtx<'_>, factory: F, finalize: D)
 where
     M: DynModel + Sync + 'static,
     F: Fn() -> anyhow::Result<Engine<M>>,
     D: Fn(Engine<M>),
 {
+    // stamp the serving window at worker start, not first completion:
+    // queue wait and engine construction ahead of the first answer are
+    // real serving time and belong inside the throughput window
+    ctx.metrics.start();
+    let obs = WorkerObs {
+        metrics: ctx.metrics,
+        ring: ctx.ring,
+        replica: ctx.replica as usize,
+    };
     let constructed = {
-        let census = CensusTick(built);
+        let census = CensusTick(ctx.built);
         let result = factory();
         if result.is_ok() {
             // publish health before the census tick (guard drop), so a
             // failed sibling that observes built == replicas also sees us
-            healthy.fetch_add(1, Ordering::SeqCst);
+            ctx.healthy.fetch_add(1, Ordering::SeqCst);
         }
         drop(census);
         result
     };
     let engine = match constructed {
-        Ok(e) => e.with_id_stream(replica, replicas),
+        Ok(e) => e.with_id_stream(ctx.replica, ctx.replicas),
         Err(e) => {
             eprintln!("[server] engine construction failed: {e:#}");
             // wait for every sibling's construction verdict (bounded by
             // the slowest factory call, which is running concurrently;
             // CensusTick guarantees a tick even from a panicked factory)
-            while built.load(Ordering::SeqCst) < replicas as usize {
+            while ctx.built.load(Ordering::SeqCst) < ctx.replicas as usize {
                 std::thread::sleep(Duration::from_millis(1));
             }
-            let mut metrics = Metrics::new(0);
-            if healthy.load(Ordering::SeqCst) > 0 {
+            if ctx.healthy.load(Ordering::SeqCst) > 0 {
                 // healthy siblings own the queue: exit without pulling,
                 // otherwise this replica — always instantly back on the
                 // admission lock while siblings are busy inferring —
                 // would error-fail traffic that healthy capacity can
                 // serve
-                return metrics;
+                return;
             }
             // no replica came up: answer — don't drop — every queued
             // request, so clients see *why* instead of a dead responder
             let err = EngineError::Construction(format!("{e:#}"));
-            metrics.start();
             loop {
                 // like collect_batch, this holds the admission lock
                 // across the blocking recv (only failed siblings can
                 // contend here — every healthy path exited above)
-                let req = admission(rx).recv();
+                let req = admission(ctx.rx).recv();
                 let Ok(req) = req else { break };
-                respond_err(req, &err, &mut metrics);
+                respond_err(req, &err, &obs);
             }
-            return metrics;
+            return;
         }
     };
     // spawn the engine's pool lanes before the first request so no client
     // pays the lazy worker spawn in its latency
     crate::util::pool::prewarm(engine.threads());
-    let mut metrics = Metrics::new(engine.model.n_blocks());
-    metrics.start();
     let mut inflight: Vec<Inflight<M::State>> = Vec::new();
     loop {
         let live: usize = inflight.iter().map(|c| c.cohort.live()).sum();
-        let free = cfg.max_batch.saturating_sub(live);
+        let free = ctx.cfg.max_batch.saturating_sub(live);
         let mut fresh = Vec::new();
         if inflight.is_empty() {
             // idle: classic dynamic batching — block for the first
             // arrival, then fill for at most max_wait
             let batch = {
-                let rx = admission(rx);
-                collect_batch(&rx, cfg.max_batch, cfg.max_wait)
+                let rx = admission(ctx.rx);
+                collect_batch(&rx, ctx.cfg.max_batch, ctx.cfg.max_wait)
             };
             match batch {
                 Some(b) => fresh = b,
                 None => break, // queue closed and drained
             }
-        } else if free > 0 && cfg.backfill {
+        } else if free > 0 && ctx.cfg.backfill {
             // the continuous-batching re-batch point: slots vacated by
             // early exits take already-queued requests, without ever
             // blocking in-flight work (see try_admission)
-            if let Some(rx) = try_admission(rx) {
+            if let Some(rx) = try_admission(ctx.rx) {
                 fresh = drain_ready(&rx, free);
             }
         }
         let backfilling = !inflight.is_empty();
-        let admitted = screen(&engine, fresh, cfg, &mut metrics);
+        let admitted = screen(&engine, fresh, ctx.cfg, &obs);
         if !admitted.is_empty() {
-            if let Some(inf) = start_cohort(&engine, admitted, &mut metrics) {
+            if let Some(inf) = start_cohort(&engine, admitted, backfilling, &obs) {
                 if backfilling {
-                    metrics.record_backfills(inf.cohort.live() as u64);
+                    ctx.metrics.record_backfills(inf.cohort.live() as u64);
                 }
                 inflight.push(inf);
             }
         }
         if !inflight.is_empty() {
             let occupied: usize = inflight.iter().map(|c| c.cohort.live()).sum();
-            metrics.record_occupancy(occupied as f64 / cfg.max_batch.max(1) as f64);
+            ctx.metrics
+                .record_occupancy(occupied as f64 / ctx.cfg.max_batch.max(1) as f64);
         }
         // advance every in-flight cohort one block (oldest first),
         // answering each request at the boundary where it resolves
-        inflight.retain_mut(|inf| advance_and_respond(&engine, inf, &mut metrics));
+        inflight.retain_mut(|inf| advance_and_respond(&engine, inf, &obs));
     }
     finalize(engine);
-    metrics
 }
 
 /// Admission screening for one pulled batch: deadline enforcement first
@@ -625,7 +760,7 @@ fn screen<M: DynModel + Sync>(
     engine: &Engine<M>,
     batch: Vec<Request>,
     cfg: &ServerConfig,
-    metrics: &mut Metrics,
+    obs: &WorkerObs<'_>,
 ) -> Vec<Request> {
     let batch: Vec<Request> = match cfg.deadline {
         Some(deadline) => batch
@@ -636,9 +771,9 @@ fn screen<M: DynModel + Sync>(
                     respond_err(
                         req,
                         &EngineError::DeadlineExceeded { deadline, waited },
-                        metrics,
+                        obs,
                     );
-                    metrics.record_deadline_miss();
+                    obs.metrics.record_deadline_miss();
                     None
                 } else {
                     Some(req)
@@ -683,7 +818,7 @@ fn screen<M: DynModel + Sync>(
             "input length {} does not match the model's expected {expected}",
             req.input.len()
         ));
-        respond_err(req, &err, metrics);
+        respond_err(req, &err, obs);
     }
     batch
 }
@@ -694,7 +829,8 @@ fn screen<M: DynModel + Sync>(
 fn start_cohort<M: DynModel + Sync>(
     engine: &Engine<M>,
     batch: Vec<Request>,
-    metrics: &mut Metrics,
+    backfilling: bool,
+    obs: &WorkerObs<'_>,
 ) -> Option<Inflight<M::State>> {
     let mut flat = Vec::with_capacity(batch.len() * batch[0].input.len());
     for r in &batch {
@@ -704,9 +840,24 @@ fn start_cohort<M: DynModel + Sync>(
     match engine.begin_cohort(&flat, batch.len(), &ids) {
         Ok(cohort) => {
             // admitted cohorts only: rejected ones must not skew mean_batch
-            metrics.record_batch(batch.len());
+            obs.metrics.record_batch(batch.len());
+            let traces = batch
+                .iter()
+                .map(|r| {
+                    obs.tracing().then(|| {
+                        RequestTrace::admitted(
+                            r.id,
+                            obs.replica,
+                            r.submitted.elapsed().as_secs_f64() * 1e6,
+                            backfilling,
+                        )
+                    })
+                })
+                .collect();
             Some(Inflight {
                 cohort,
+                energy: vec![Default::default(); batch.len()],
+                traces,
                 reqs: batch.into_iter().map(Some).collect(),
             })
         }
@@ -716,7 +867,7 @@ fn start_cohort<M: DynModel + Sync>(
             eprintln!("[server] batch failed: {e:#}");
             let err = EngineError::Failed(format!("{e:#}"));
             for req in batch {
-                respond_err(req, &err, metrics);
+                respond_err(req, &err, obs);
             }
             None
         }
@@ -730,14 +881,43 @@ fn start_cohort<M: DynModel + Sync>(
 fn advance_and_respond<M: DynModel + Sync>(
     engine: &Engine<M>,
     inf: &mut Inflight<M::State>,
-    metrics: &mut Metrics,
+    obs: &WorkerObs<'_>,
 ) -> bool {
+    // attribute this round's analytic per-row cost to every row still
+    // live, *before* advancing — the costs are pure functions of tile
+    // geometry (no crossbar is touched), so a row that resolves this
+    // round is charged for it, matching the engine's actual work
+    let block = inf.cohort.depth();
+    let row_cim = engine.model.row_cost(block);
+    let row_cam = engine.memory.search_cost(block);
+    let alive = inf.cohort.alive_rows();
+    let n_live = alive.len();
+    for &orig in alive {
+        inf.energy[orig].0.add(&row_cim);
+        inf.energy[orig].1.add(&row_cam);
+        if let Some(t) = inf.traces[orig].as_mut() {
+            t.push_round(block, n_live, row_cim, row_cam);
+        }
+    }
     match engine.advance_cohort(&mut inf.cohort) {
         Ok(resolved) => {
             for (orig, out) in resolved {
                 if let Some(req) = inf.reqs[orig].take() {
                     let latency = req.submitted.elapsed();
-                    metrics.record(latency, out.exit, out.exited_early);
+                    obs.metrics.record(latency, out.exit, out.exited_early);
+                    let (cim, cam) = inf.energy[orig];
+                    obs.metrics.record_energy(&cim, &cam);
+                    if let Some(mut t) = inf.traces[orig].take() {
+                        t.finish(
+                            ExitSpan {
+                                block: out.exit,
+                                early: out.exited_early,
+                                class: out.class,
+                            },
+                            latency.as_secs_f64() * 1e6,
+                        );
+                        obs.push_trace(t);
+                    }
                     let _ = req.resp.send(Response {
                         outcome: Ok(out),
                         latency,
@@ -752,12 +932,37 @@ fn advance_and_respond<M: DynModel + Sync>(
                 inf.cohort.depth()
             );
             let err = EngineError::Failed(format!("{e:#}"));
-            for req in inf.reqs.iter_mut().filter_map(|r| r.take()) {
-                respond_err(req, &err, metrics);
+            for (slot, tr) in inf.reqs.iter_mut().zip(inf.traces.iter_mut()) {
+                if let Some(req) = slot.take() {
+                    let latency = req.submitted.elapsed();
+                    obs.metrics.record_error();
+                    // failed cohort members keep their admitted trace
+                    // (rounds already charged) and resolve with an error
+                    // span; no energy is recorded into the shard, so the
+                    // snapshot totals stay the sum over *successful*
+                    // requests
+                    if let Some(mut t) = tr.take() {
+                        t.fail(err.to_string(), latency.as_secs_f64() * 1e6);
+                        obs.push_trace(t);
+                    }
+                    let _ = req.resp.send(Response {
+                        outcome: Err(err.clone()),
+                        latency,
+                    });
+                }
             }
             false
         }
     }
+}
+
+/// Mirror a shed rejection into the process-wide registry as
+/// `serve.shed`.  [`Snapshot::shed`] stays the merge-time source of
+/// truth; the registry copy keeps the counter visible in
+/// [`crate::obs::registry::dump`] alongside the other `serve.*` names.
+fn reg_shed() {
+    static C: OnceLock<crate::obs::registry::Counter> = OnceLock::new();
+    C.get_or_init(|| crate::obs::registry::counter("serve.shed")).inc();
 }
 
 impl Client {
@@ -786,6 +991,7 @@ impl Client {
             // drain/maintenance mode: deterministically reject before the
             // channel (whose minimum real capacity is 1) is ever reached
             self.shared.shed.fetch_add(1, Ordering::SeqCst);
+            reg_shed();
             return Err(AdmissionError::QueueFull { cap: 0 });
         }
         let (resp_tx, resp_rx) = sync_channel(1);
@@ -803,6 +1009,7 @@ impl Client {
             Ok(()) => Ok(resp_rx),
             Err(TrySendError::Full(_)) => {
                 self.shared.shed.fetch_add(1, Ordering::SeqCst);
+                reg_shed();
                 Err(AdmissionError::QueueFull {
                     cap: self.shared.queue_cap,
                 })

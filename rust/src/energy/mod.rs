@@ -87,6 +87,13 @@ impl EnergyModel {
         (mem, conv)
     }
 
+    /// Total analogue energy (memory reads + conversions) of a counter
+    /// set in pJ — the scalar the per-request trace energy spans carry.
+    pub fn counters_pj(&self, c: &CimCounters) -> f64 {
+        let (mem, conv) = self.cim_energy(c);
+        mem + conv
+    }
+
     /// Hybrid-system energy for one inference:
     /// * `cim` / `cam` — analogue usage counters,
     /// * `digital_ops` — activation/pooling/norm op count,

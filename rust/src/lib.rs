@@ -45,6 +45,7 @@ pub mod opt;
 pub mod tsne;
 pub mod model;
 pub mod nn;
+pub mod obs;
 pub mod cim;
 pub mod crossbar;
 pub mod device;

@@ -4,7 +4,7 @@
 //! memdyn fig <id|all> [--artifacts DIR] [--samples N]   regenerate figures
 //! memdyn tune [--model resnet|pointnet] [--iters N]     TPE threshold tuning
 //! memdyn infer --model resnet --index I [--backend native|xla]
-//! memdyn serve [--requests N] [--rate R] [--max-batch B] [--replicas N] [--threads T] [--workload poisson|bursty] [--backend native|xla] [--variant qun|noise|mem]
+//! memdyn serve [--requests N] [--rate R] [--max-batch B] [--replicas N] [--threads T] [--workload poisson|bursty] [--backend native|xla] [--variant qun|noise|mem] [--trace-out FILE] [--metrics-interval SECS] [--counters]
 //! memdyn characterize                                   device statistics
 //! ```
 //!
@@ -56,7 +56,7 @@ fn print_help() {
          USAGE:\n  memdyn fig <id|all> [--artifacts DIR] [--samples N]\n  \
          memdyn tune [--model resnet|pointnet] [--iters N] [--artifacts DIR]\n  \
          memdyn infer --index I [--model resnet] [--backend native|xla]\n  \
-         memdyn serve [--requests N] [--rate R] [--max-batch B] [--wait-ms W] [--replicas N] [--threads T] [--workload poisson|bursty] [--backend native|xla] [--variant qun|noise|mem]\n  \
+         memdyn serve [--requests N] [--rate R] [--max-batch B] [--wait-ms W] [--replicas N] [--threads T] [--workload poisson|bursty] [--backend native|xla] [--variant qun|noise|mem] [--trace-out FILE] [--metrics-interval SECS] [--counters]\n  \
          memdyn characterize\n\nFIGURES: {}",
         figures::ALL.join(", ")
     );
@@ -225,6 +225,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "mem" => figcommon::Variant::Mem,
         other => return Err(anyhow!("unknown variant {other} (qun|noise|mem)")),
     };
+    // per-request tracing: drain the ring into this JSON-lines file at
+    // shutdown (span schema in docs/OBSERVABILITY.md)
+    let trace_out = args.get("trace-out").map(std::path::PathBuf::from);
+    // live merged-metrics emission period in seconds (0 = off)
+    let metrics_interval = args.get_f64("metrics-interval", 0.0);
+    // print the process-wide obs::registry dump after the final report
+    let counters = args.get_bool("counters");
     let bundle = ModelBundle::load(&dir, "resnet")?;
     let dataset = DatasetBundle::load(&dir, "mnist")?;
     let thr = ThresholdConfig::load_or_default(
@@ -245,6 +252,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         },
         backfill,
         replicas,
+        trace: trace_out.is_some(),
+        metrics_interval: (metrics_interval > 0.0)
+            .then(|| Duration::from_secs_f64(metrics_interval)),
+        ..Default::default()
     };
     // the factory runs once per replica (cloneable, non-consuming body):
     // each worker thread builds and owns its own engine
@@ -326,7 +337,29 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
     }
     drop(client);
+    let ring = server.trace_ring();
     let snap = server.shutdown()?;
+    if let Some(path) = &trace_out {
+        let (traces, dropped) = ring
+            .as_ref()
+            .expect("ring exists when --trace-out is set")
+            .drain();
+        let file = std::fs::File::create(path)?;
+        let mut w = std::io::BufWriter::new(file);
+        memdyn::obs::trace::write_jsonl(
+            &mut w,
+            &traces,
+            &memdyn::energy::EnergyModel::default(),
+            snap.to_json(),
+            dropped,
+        )?;
+        std::io::Write::flush(&mut w)?;
+        println!(
+            "[serve] wrote {} trace line(s) ({dropped} dropped) to {}",
+            traces.len() + 1,
+            path.display()
+        );
+    }
     let answered_ok = admitted - answered_err;
     println!(
         "[serve] accuracy {:.2}% ({answered_ok}/{admitted} answered ok, {answered_err} err, {shed} shed)",
@@ -337,6 +370,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
     );
     println!("[serve] {}", snap.report());
+    if counters {
+        for (name, v) in memdyn::obs::registry::dump() {
+            println!("[counters] {name} = {v}");
+        }
+    }
     Ok(())
 }
 

@@ -229,6 +229,17 @@ impl WeightMatrix {
             WeightMatrix::Analog { cim, .. } => cim.take_counters(),
         }
     }
+
+    /// Analytic counter delta of one MVM through this matrix: zero on
+    /// the digital path, the programmed tile-geometry cost on the
+    /// analogue one (see [`CimMatrix::mvm_cost`]).  Multiply by a
+    /// matmul's row count to get that call's exact counter delta.
+    pub fn mvm_cost(&self) -> crate::cim::CimCounters {
+        match self {
+            WeightMatrix::Exact { .. } => Default::default(),
+            WeightMatrix::Analog { cim, .. } => cim.mvm_cost(),
+        }
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,354 @@
+//! Bounded log-scaled histograms for latency-style measurements.
+//!
+//! [`LogHistogram`] replaces unbounded `Vec<f64>` latency logs on the
+//! serving hot path: memory is O(buckets) regardless of traffic volume,
+//! recording is a handful of relaxed atomic adds (safe from `&self`, so
+//! shards can be snapshotted live without pausing workers), and merging
+//! two histograms is elementwise bucket addition — commutative and
+//! associative, so shard merge order never changes a quantile.
+//!
+//! # Bucket layout and error bound
+//!
+//! Samples are recorded in integer nanoseconds. Values below 32 ns get
+//! one bucket each (exact). Above that, every power-of-two octave
+//! `[2^k, 2^(k+1))` is split into 32 equal sub-buckets, indexed with pure
+//! bit arithmetic (no float `log`). A quantile is reported as the
+//! midpoint of the bucket holding the nearest-rank sample, clamped to
+//! the exact tracked `[min, max]`, so:
+//!
+//! * the **relative error of any quantile is at most 1/64 ≈ 1.6 %**
+//!   (bucket width ≤ lo/32, midpoint error ≤ half that), plus ±0.5 ns
+//!   from the microsecond→nanosecond rounding;
+//! * quantiles of a constant stream are exact (the clamp collapses the
+//!   bucket midpoint onto the tracked extremum).
+//!
+//! The property tests at the bottom of this module check both claims
+//! against an exact nearest-rank oracle over random latency
+//! distributions spanning six orders of magnitude.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Sub-buckets per power-of-two octave (32 ⇒ ≤ 1/64 relative error).
+const SUBDIV: usize = 32;
+/// log2(SUBDIV); octaves below this are exact singleton buckets.
+const SUBDIV_BITS: u32 = 5;
+/// Octaves 5..=63 at 32 sub-buckets each, after the 32 exact singletons.
+const N_BUCKETS: usize = (64 - SUBDIV_BITS as usize) * SUBDIV + SUBDIV;
+
+/// Index of the bucket covering `ns` (≥ 1).
+fn bucket_of(ns: u64) -> usize {
+    debug_assert!(ns >= 1);
+    if ns < SUBDIV as u64 {
+        return ns as usize;
+    }
+    let k = 63 - ns.leading_zeros(); // ns ∈ [2^k, 2^(k+1)), k ≥ 5
+    let sub = ((ns >> (k - SUBDIV_BITS)) & (SUBDIV as u64 - 1)) as usize;
+    (k as usize - SUBDIV_BITS as usize + 1) * SUBDIV + sub
+}
+
+/// Midpoint (in ns, as f64 to dodge u64 overflow at the top octave) of
+/// bucket `idx`.
+fn bucket_mid_ns(idx: usize) -> f64 {
+    if idx < SUBDIV {
+        return idx as f64;
+    }
+    let k = (idx / SUBDIV) as u32 + SUBDIV_BITS - 1;
+    let sub = (idx % SUBDIV) as u64;
+    let width = 1u64 << (k - SUBDIV_BITS);
+    let lo = (SUBDIV as u64 + sub) << (k - SUBDIV_BITS);
+    lo as f64 + width as f64 * 0.5
+}
+
+/// Bounded log-scaled histogram over microsecond samples.
+///
+/// All recording methods take `&self` (relaxed atomics), so one instance
+/// can be shared between a recording worker and a live snapshot reader.
+#[derive(Debug)]
+pub struct LogHistogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+    min_ns: AtomicU64,
+    max_ns: AtomicU64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LogHistogram {
+    /// An empty histogram (allocates the full fixed bucket array).
+    pub fn new() -> Self {
+        LogHistogram {
+            buckets: (0..N_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+            min_ns: AtomicU64::new(u64::MAX),
+            max_ns: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one sample, given in microseconds.
+    ///
+    /// Non-finite and sub-nanosecond inputs clamp to 1 ns; the histogram
+    /// never panics on hostile latencies.
+    pub fn record(&self, us: f64) {
+        let ns_f = us * 1_000.0;
+        let ns = if ns_f.is_finite() && ns_f >= 1.0 {
+            if ns_f >= u64::MAX as f64 {
+                u64::MAX
+            } else {
+                ns_f.round() as u64
+            }
+        } else {
+            1
+        };
+        self.record_ns(ns);
+    }
+
+    fn record_ns(&self, ns: u64) {
+        let ns = ns.max(1);
+        self.buckets[bucket_of(ns)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.min_ns.fetch_min(ns, Ordering::Relaxed);
+        self.max_ns.fetch_max(ns, Ordering::Relaxed);
+    }
+
+    /// Number of recorded samples.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// True when no samples have been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.count() == 0
+    }
+
+    /// Mean of all samples in microseconds (0.0 when empty).
+    pub fn mean_us(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        self.sum_ns.load(Ordering::Relaxed) as f64 / n as f64 / 1_000.0
+    }
+
+    /// Largest recorded sample in microseconds (0.0 when empty).
+    pub fn max_us(&self) -> f64 {
+        self.max_ns.load(Ordering::Relaxed) as f64 / 1_000.0
+    }
+
+    /// Nearest-rank quantile in microseconds, `q` ∈ [0, 1].
+    ///
+    /// Returns the midpoint of the bucket holding the ⌈q·n⌉-th smallest
+    /// sample, clamped to the exact recorded `[min, max]`; relative
+    /// error ≤ 1/64 (see module docs). 0.0 when empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * n as f64).ceil() as u64).clamp(1, n);
+        let mut seen = 0u64;
+        for (idx, b) in self.buckets.iter().enumerate() {
+            let c = b.load(Ordering::Relaxed);
+            if c == 0 {
+                continue;
+            }
+            seen += c;
+            if seen >= rank {
+                let lo = self.min_ns.load(Ordering::Relaxed) as f64;
+                let hi = self.max_ns.load(Ordering::Relaxed) as f64;
+                return bucket_mid_ns(idx).clamp(lo, hi) / 1_000.0;
+            }
+        }
+        // Unreachable when count > 0; fall back to the tracked max.
+        self.max_us()
+    }
+
+    /// Fold `o` into `self`: elementwise bucket addition plus min/max and
+    /// count/sum folds. Commutative — `merge(a, b)` and `merge(b, a)`
+    /// produce identical histograms (tested below).
+    pub fn merge(&self, o: &LogHistogram) {
+        for (mine, theirs) in self.buckets.iter().zip(o.buckets.iter()) {
+            let c = theirs.load(Ordering::Relaxed);
+            if c > 0 {
+                mine.fetch_add(c, Ordering::Relaxed);
+            }
+        }
+        let n = o.count.load(Ordering::Relaxed);
+        if n == 0 {
+            return;
+        }
+        self.count.fetch_add(n, Ordering::Relaxed);
+        self.sum_ns
+            .fetch_add(o.sum_ns.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.min_ns
+            .fetch_min(o.min_ns.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.max_ns
+            .fetch_max(o.max_ns.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::forall;
+
+    /// Exact nearest-rank quantile over raw samples — the oracle the
+    /// histogram's documented error bound is checked against. (Not
+    /// `util::stats::quantile`, which linearly interpolates and can sit
+    /// far from any recorded value on sparse data.)
+    fn nearest_rank(xs: &[f64], q: f64) -> f64 {
+        let mut s: Vec<f64> = xs.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = s.len();
+        let rank = ((q * n as f64).ceil() as usize).clamp(1, n);
+        s[rank - 1]
+    }
+
+    fn hist_of(xs: &[f64]) -> LogHistogram {
+        let h = LogHistogram::new();
+        for &x in xs {
+            h.record(x);
+        }
+        h
+    }
+
+    #[test]
+    fn empty_histogram_is_zero_everywhere() {
+        let h = LogHistogram::new();
+        assert!(h.is_empty());
+        assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!(h.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn constant_stream_quantiles_are_exact() {
+        let h = hist_of(&[200.0; 17]);
+        for q in [0.0, 0.5, 0.95, 0.99, 1.0] {
+            assert!((h.quantile(q) - 200.0).abs() < 1e-3, "q={q}");
+        }
+        assert!((h.mean_us() - 200.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn small_nanosecond_values_are_exact() {
+        // Below 32 ns every value has its own bucket.
+        let h = hist_of(&[0.001, 0.005, 0.031]); // 1, 5, 31 ns
+        assert_eq!(h.count(), 3);
+        assert!((h.quantile(0.5) - 0.005).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bucket_of_is_monotone_and_in_range() {
+        let mut prev = 0usize;
+        for k in 0..64u32 {
+            for v in [1u64 << k, (1u64 << k) | ((1u64 << k) >> 1), (1u64 << k) + 1] {
+                let idx = bucket_of(v.max(1));
+                assert!(idx < N_BUCKETS, "v={v} idx={idx}");
+                assert!(idx >= prev || v <= 1, "v={v} not monotone");
+                prev = prev.max(idx);
+            }
+        }
+        // The top of u64 range still lands in the last octave.
+        assert_eq!(bucket_of(u64::MAX), N_BUCKETS - 1);
+    }
+
+    #[test]
+    fn quantiles_stay_within_documented_error_bound() {
+        // Random latency distributions spanning 1 µs .. 1e6 µs (log-uniform).
+        forall(
+            0xB0B5,
+            60,
+            |g| {
+                let n = g.dim(400);
+                g.f32_vec(n, 0.0, 6.0)
+                    .into_iter()
+                    .map(|e| 10f64.powf(e as f64))
+                    .collect::<Vec<f64>>()
+            },
+            |xs| {
+                let h = hist_of(xs);
+                for q in [0.5, 0.95, 0.99] {
+                    let exact = nearest_rank(xs, q);
+                    let got = h.quantile(q);
+                    // Documented bound: 1/64 relative + ns-rounding slack.
+                    let tol = exact * (1.0 / 64.0) + 2e-3;
+                    if (got - exact).abs() > tol {
+                        return Err(format!(
+                            "p{} off: got {got}, exact {exact}, tol {tol}",
+                            (q * 100.0) as u32
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn merge_is_commutative() {
+        forall(
+            0xCAFE,
+            40,
+            |g| {
+                let n = g.dim(120);
+                let m = g.dim(120);
+                let a: Vec<f64> = g
+                    .f32_vec(n, 0.0, 5.0)
+                    .into_iter()
+                    .map(|e| 10f64.powf(e as f64))
+                    .collect();
+                let b: Vec<f64> = g
+                    .f32_vec(m, 0.0, 5.0)
+                    .into_iter()
+                    .map(|e| 10f64.powf(e as f64))
+                    .collect();
+                (a, b)
+            },
+            |(a, b)| {
+                let ab = hist_of(a);
+                ab.merge(&hist_of(b));
+                let ba = hist_of(b);
+                ba.merge(&hist_of(a));
+                for (x, y) in ab.buckets.iter().zip(ba.buckets.iter()) {
+                    if x.load(Ordering::Relaxed) != y.load(Ordering::Relaxed) {
+                        return Err("bucket mismatch".into());
+                    }
+                }
+                let same = ab.count() == ba.count()
+                    && ab.sum_ns.load(Ordering::Relaxed) == ba.sum_ns.load(Ordering::Relaxed)
+                    && ab.min_ns.load(Ordering::Relaxed) == ba.min_ns.load(Ordering::Relaxed)
+                    && ab.max_ns.load(Ordering::Relaxed) == ba.max_ns.load(Ordering::Relaxed);
+                if !same {
+                    return Err("summary mismatch".into());
+                }
+                for q in [0.5, 0.95, 0.99] {
+                    if ab.quantile(q) != ba.quantile(q) {
+                        return Err(format!("quantile {q} mismatch"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn merge_matches_recording_everything_into_one() {
+        let a = [100.0, 250.0, 900.0];
+        let b = [10.0, 10_000.0];
+        let merged = hist_of(&a);
+        merged.merge(&hist_of(&b));
+        let mut all = a.to_vec();
+        all.extend_from_slice(&b);
+        let one = hist_of(&all);
+        assert_eq!(merged.count(), one.count());
+        for q in [0.5, 0.95, 0.99] {
+            assert_eq!(merged.quantile(q), one.quantile(q), "q={q}");
+        }
+    }
+}

@@ -1,0 +1,26 @@
+//! End-to-end observability: counter registry, per-request traces, and
+//! bounded histograms.
+//!
+//! Three building blocks, threaded through the serving stack by
+//! `coordinator::{server,metrics}` and exposed through `memdyn serve
+//! --trace-out` / `--metrics-interval` (see `docs/OBSERVABILITY.md`):
+//!
+//! * [`registry`] — process-wide counter/gauge registry under stable
+//!   dotted names with a single [`registry::dump`].
+//! * [`trace`] — per-request span traces in a bounded ring buffer,
+//!   exportable as JSON-lines.
+//! * [`hist`] — bounded log-scaled latency histograms with documented
+//!   quantile error bounds and commutative merge.
+//!
+//! Everything here **observes** and never influences: recording uses
+//! relaxed atomics or short mutexes on data nothing reads back into the
+//! computation, so the serving determinism sweeps hold bit-identically
+//! with observability on or off.
+
+pub mod hist;
+pub mod registry;
+pub mod trace;
+
+pub use hist::LogHistogram;
+pub use registry::Counter;
+pub use trace::{ExitSpan, RequestTrace, TraceRing};

@@ -1,0 +1,211 @@
+//! Process-wide hierarchical counter/gauge registry.
+//!
+//! The serving stack accumulates observables in many places: CIM/CAM
+//! energy counters inside `cim`, `dus_in_place/copied` and
+//! `DOT_PACKED/DOT_DENSE` inside `hlo::eval`, `workers_alive` inside
+//! `util::pool`, admission shed inside `coordinator::server`. This
+//! module unifies them under stable dotted names (`cim.process.mvms`,
+//! `hlo.eval.dot_packed`, `serve.shed`, …) with a single [`dump`].
+//!
+//! Two kinds of entries:
+//!
+//! * **Counters** — owned by the registry, bumped lock-free through a
+//!   cloned [`Counter`] handle (one relaxed `fetch_add`; the registry
+//!   mutex is touched only at registration time).
+//! * **Probes** — read-only closures over atomics that already live
+//!   elsewhere (the `hlo::eval` op counters, the pool census, the CIM
+//!   process totals). Registered once, evaluated at [`dump`] time.
+//!
+//! Naming scheme (see `docs/OBSERVABILITY.md`): lowercase dotted paths,
+//! `<subsystem>.<scope>.<what>`; plural names count events, singular
+//! names are gauges. Probes must not call back into the registry (the
+//! dump holds the registry lock while evaluating them).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, Once};
+
+enum Entry {
+    Counter(Arc<AtomicU64>),
+    Probe(Box<dyn Fn() -> u64 + Send + Sync>),
+}
+
+static REGISTRY: Mutex<BTreeMap<String, Entry>> = Mutex::new(BTreeMap::new());
+
+fn lock() -> MutexGuard<'static, BTreeMap<String, Entry>> {
+    REGISTRY.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Cloneable lock-free handle to a registered counter.
+///
+/// Obtained from [`counter`]; bumping is a single relaxed `fetch_add`
+/// on a shared atomic — safe on the serving hot path.
+#[derive(Clone)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    /// Add `n` to the counter.
+    pub fn add(&self, n: u64) {
+        if n > 0 {
+            self.0.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    /// Increment the counter by one.
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Get-or-create the counter registered under `name`.
+///
+/// All callers asking for the same name share one atomic. If the name
+/// was previously registered as a probe, the counter replaces it (last
+/// registration wins — names are unique by convention, see the module
+/// docs for the scheme).
+pub fn counter(name: &str) -> Counter {
+    let mut reg = lock();
+    let entry = reg
+        .entry(name.to_string())
+        .or_insert_with(|| Entry::Counter(Arc::new(AtomicU64::new(0))));
+    if matches!(entry, Entry::Probe(_)) {
+        *entry = Entry::Counter(Arc::new(AtomicU64::new(0)));
+    }
+    match entry {
+        Entry::Counter(c) => Counter(Arc::clone(c)),
+        Entry::Probe(_) => unreachable!("probe replaced above"),
+    }
+}
+
+/// Register a read-only gauge evaluated at [`dump`] time.
+///
+/// Replaces any previous entry under `name`. The closure must be cheap
+/// and must not call back into this registry.
+pub fn register_probe<F>(name: &str, probe: F)
+where
+    F: Fn() -> u64 + Send + Sync + 'static,
+{
+    lock().insert(name.to_string(), Entry::Probe(Box::new(probe)));
+}
+
+/// Install the probes for observables that predate the registry.
+///
+/// Called automatically by [`dump`]; idempotent. Kept public so tests
+/// and tools can force installation without dumping.
+pub fn install_default_probes() {
+    static INIT: Once = Once::new();
+    INIT.call_once(|| {
+        register_probe("hlo.eval.dus_in_place", crate::hlo::eval::dus_in_place_count);
+        register_probe("hlo.eval.dus_copied", crate::hlo::eval::dus_copied_count);
+        register_probe("hlo.eval.dot_packed", crate::hlo::eval::dot_packed_count);
+        register_probe("hlo.eval.dot_dense", crate::hlo::eval::dot_dense_count);
+        register_probe("pool.workers_alive", || {
+            crate::util::pool::workers_alive() as u64
+        });
+        register_probe("cim.process.mvms", || crate::cim::process_totals().mvms);
+        register_probe("cim.process.device_reads", || {
+            crate::cim::process_totals().device_reads
+        });
+        register_probe("cim.process.dac_conversions", || {
+            crate::cim::process_totals().dac_conversions
+        });
+        register_probe("cim.process.adc_conversions", || {
+            crate::cim::process_totals().adc_conversions
+        });
+    });
+}
+
+/// Snapshot every registered observable as `(name, value)`, sorted by
+/// name (the registry is a BTree, so ordering is stable across calls).
+pub fn dump() -> Vec<(String, u64)> {
+    install_default_probes();
+    lock()
+        .iter()
+        .map(|(name, entry)| {
+            let v = match entry {
+                Entry::Counter(c) => c.load(Ordering::Relaxed),
+                Entry::Probe(f) => f(),
+            };
+            (name.clone(), v)
+        })
+        .collect()
+}
+
+/// [`dump`] rendered as one JSON object keyed by dotted name.
+///
+/// Values are JSON numbers (f64), exact for counters below 2^53 —
+/// plenty for any realistic run.
+pub fn dump_json() -> String {
+    let pairs = dump();
+    crate::util::json::obj(
+        pairs
+            .iter()
+            .map(|(k, v)| (k.as_str(), crate::util::json::Json::Num(*v as f64)))
+            .collect(),
+    )
+    .to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The registry is process-global and tests run concurrently: every
+    // test uses names under its own `test.<case>.` prefix.
+
+    #[test]
+    fn counter_handles_share_one_atomic() {
+        let a = counter("test.share.hits");
+        let b = counter("test.share.hits");
+        a.add(3);
+        b.inc();
+        assert_eq!(counter("test.share.hits").get(), 4);
+    }
+
+    #[test]
+    fn probe_reflects_live_value() {
+        use std::sync::atomic::AtomicU64;
+        static GAUGE: AtomicU64 = AtomicU64::new(0);
+        register_probe("test.probe.gauge", || GAUGE.load(Ordering::Relaxed));
+        GAUGE.store(7, Ordering::Relaxed);
+        let snap = dump();
+        let got = snap.iter().find(|(k, _)| k == "test.probe.gauge").unwrap().1;
+        assert_eq!(got, 7);
+    }
+
+    #[test]
+    fn dump_is_sorted_and_includes_defaults() {
+        counter("test.sorted.z").inc();
+        counter("test.sorted.a").inc();
+        let snap = dump();
+        let names: Vec<&str> = snap.iter().map(|(k, _)| k.as_str()).collect();
+        let mut sorted = names.clone();
+        sorted.sort_unstable();
+        assert_eq!(names, sorted, "dump must be name-sorted");
+        assert!(names.contains(&"pool.workers_alive"));
+        assert!(names.contains(&"cim.process.mvms"));
+        assert!(names.contains(&"hlo.eval.dot_packed"));
+    }
+
+    #[test]
+    fn counter_replaces_probe_of_same_name() {
+        register_probe("test.clobber.x", || 99);
+        let c = counter("test.clobber.x");
+        c.add(2);
+        let snap = dump();
+        let got = snap.iter().find(|(k, _)| k == "test.clobber.x").unwrap().1;
+        assert_eq!(got, 2);
+    }
+
+    #[test]
+    fn dump_json_parses_back() {
+        counter("test.json.n").add(5);
+        let j = crate::util::json::Json::parse(&dump_json()).unwrap();
+        assert_eq!(j.get("test.json.n").and_then(|v| v.as_f64()), Some(5.0));
+    }
+}

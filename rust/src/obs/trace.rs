@@ -1,0 +1,414 @@
+//! Per-request traces: typed spans in a bounded ring buffer.
+//!
+//! A [`RequestTrace`] records one request's path through the serving
+//! stack as an ordered list of spans — queue wait, admission (with the
+//! backfill flag), one `round` span per cohort scheduling round the
+//! request stayed live for, the exit decision, and the per-request
+//! CIM/CAM energy delta. Workers push finished traces into a
+//! [`TraceRing`] (bounded; oldest traces are dropped and counted), and
+//! `memdyn serve --trace-out` drains the ring into a JSON-lines file
+//! whose last line is the final `Snapshot`.
+//!
+//! Traces observe, never influence: the per-round energy deltas are
+//! computed analytically from tile geometry
+//! ([`CimMatrix::mvm_cost`](crate::cim::CimMatrix::mvm_cost)), so
+//! recording a trace touches no crossbar state and the determinism
+//! sweeps hold bit-identically with tracing on or off.
+//!
+//! Span schema (one JSON object per request, `spans` in order):
+//!
+//! ```json
+//! {"type":"request","id":3,"replica":0,"latency_us":812.4,"spans":[
+//!   {"span":"queue_wait","us":55.0},
+//!   {"span":"admitted","backfill":false,"live":4},
+//!   {"span":"round","block":0,"live":4,
+//!    "cim":{"mvms":1,"device_reads":1152,"dac_conversions":24,"adc_conversions":24},
+//!    "cam":{"mvms":1,"device_reads":192,"dac_conversions":24,"adc_conversions":4}},
+//!   {"span":"round","block":1,"live":3, ...},
+//!   {"span":"exit","block":1,"early":true,"class":2},
+//!   {"span":"energy","cim":{...},"cam":{...},"cim_pj":612.4,"cam_pj":101.3}]}
+//! ```
+//!
+//! Invariants (enforced by `tools/check_obs_trace.py`): round blocks are
+//! consecutive from 0; a finished request has exactly `exit.block + 1`
+//! rounds; the `energy` span equals the elementwise sum of its round
+//! counters; and when no traces were dropped, per-request energy sums to
+//! the final `Snapshot` totals.
+
+use crate::cim::CimCounters;
+use crate::energy::EnergyModel;
+use crate::util::json::{obj, Json};
+use std::collections::VecDeque;
+use std::io::{self, Write};
+use std::sync::Mutex;
+
+/// One cohort scheduling round a request stayed live for.
+#[derive(Clone, Copy, Debug)]
+pub struct RoundSpan {
+    /// Backbone block index advanced this round.
+    pub block: usize,
+    /// Cohort live-row count entering the round.
+    pub live: usize,
+    /// Analytic CIM cost attributed to this request for the round.
+    pub cim: CimCounters,
+    /// Analytic CAM (exit-memory search) cost for the round.
+    pub cam: CimCounters,
+}
+
+/// The exit decision that resolved a request.
+#[derive(Clone, Copy, Debug)]
+pub struct ExitSpan {
+    /// Block the request exited at.
+    pub block: usize,
+    /// True for an early (semantic-memory) exit, false for the head.
+    pub early: bool,
+    /// Predicted class.
+    pub class: usize,
+}
+
+/// One request's full path through the serving stack.
+#[derive(Debug)]
+pub struct RequestTrace {
+    /// Admission-stamped request id.
+    pub id: u64,
+    /// Replica (worker) that served the request.
+    pub replica: usize,
+    /// Time between submission and cohort admission (or rejection).
+    pub queue_wait_us: f64,
+    /// True when the request back-filled a vacated slot mid-cohort.
+    pub backfill: bool,
+    /// False when the request was rejected before entering a cohort.
+    pub admitted: bool,
+    /// One span per scheduling round the request stayed live for.
+    pub rounds: Vec<RoundSpan>,
+    /// Exit decision; `None` until resolved (or on error).
+    pub exit: Option<ExitSpan>,
+    /// Error message when the request failed instead of exiting.
+    pub error: Option<String>,
+    /// End-to-end latency (submission to response).
+    pub latency_us: f64,
+}
+
+impl RequestTrace {
+    /// Trace for a request admitted into a cohort.
+    pub fn admitted(id: u64, replica: usize, queue_wait_us: f64, backfill: bool) -> Self {
+        RequestTrace {
+            id,
+            replica,
+            queue_wait_us,
+            backfill,
+            admitted: true,
+            rounds: Vec::new(),
+            exit: None,
+            error: None,
+            latency_us: 0.0,
+        }
+    }
+
+    /// Trace for a request rejected at screening (never entered a cohort).
+    pub fn rejected(id: u64, replica: usize, queue_wait_us: f64, error: String) -> Self {
+        RequestTrace {
+            id,
+            replica,
+            queue_wait_us,
+            backfill: false,
+            admitted: false,
+            rounds: Vec::new(),
+            exit: None,
+            error: Some(error),
+            latency_us: queue_wait_us,
+        }
+    }
+
+    /// Append one scheduling round.
+    pub fn push_round(&mut self, block: usize, live: usize, cim: CimCounters, cam: CimCounters) {
+        self.rounds.push(RoundSpan {
+            block,
+            live,
+            cim,
+            cam,
+        });
+    }
+
+    /// Resolve the trace with an exit decision.
+    pub fn finish(&mut self, exit: ExitSpan, latency_us: f64) {
+        self.exit = Some(exit);
+        self.latency_us = latency_us;
+    }
+
+    /// Resolve the trace with an error.
+    pub fn fail(&mut self, error: String, latency_us: f64) {
+        self.error = Some(error);
+        self.latency_us = latency_us;
+    }
+
+    /// Elementwise sum of the per-round CIM costs.
+    pub fn cim_total(&self) -> CimCounters {
+        let mut t = CimCounters::default();
+        for r in &self.rounds {
+            t.add(&r.cim);
+        }
+        t
+    }
+
+    /// Elementwise sum of the per-round CAM costs.
+    pub fn cam_total(&self) -> CimCounters {
+        let mut t = CimCounters::default();
+        for r in &self.rounds {
+            t.add(&r.cam);
+        }
+        t
+    }
+
+    /// Render as one JSON object following the module-level span schema.
+    pub fn to_json(&self, em: &EnergyModel) -> Json {
+        let mut spans = vec![obj(vec![
+            ("span", Json::Str("queue_wait".into())),
+            ("us", Json::Num(self.queue_wait_us)),
+        ])];
+        if self.admitted {
+            let live0 = self.rounds.first().map(|r| r.live).unwrap_or(0);
+            spans.push(obj(vec![
+                ("span", Json::Str("admitted".into())),
+                ("backfill", Json::Bool(self.backfill)),
+                ("live", Json::Num(live0 as f64)),
+            ]));
+        }
+        for r in &self.rounds {
+            spans.push(obj(vec![
+                ("span", Json::Str("round".into())),
+                ("block", Json::Num(r.block as f64)),
+                ("live", Json::Num(r.live as f64)),
+                ("cim", counters_json(&r.cim)),
+                ("cam", counters_json(&r.cam)),
+            ]));
+        }
+        if let Some(e) = &self.exit {
+            spans.push(obj(vec![
+                ("span", Json::Str("exit".into())),
+                ("block", Json::Num(e.block as f64)),
+                ("early", Json::Bool(e.early)),
+                ("class", Json::Num(e.class as f64)),
+            ]));
+            let cim = self.cim_total();
+            let cam = self.cam_total();
+            spans.push(obj(vec![
+                ("span", Json::Str("energy".into())),
+                ("cim", counters_json(&cim)),
+                ("cam", counters_json(&cam)),
+                ("cim_pj", Json::Num(em.counters_pj(&cim))),
+                ("cam_pj", Json::Num(em.counters_pj(&cam))),
+            ]));
+        }
+        if let Some(err) = &self.error {
+            spans.push(obj(vec![
+                ("span", Json::Str("error".into())),
+                ("message", Json::Str(err.clone())),
+            ]));
+        }
+        obj(vec![
+            ("type", Json::Str("request".into())),
+            ("id", Json::Num(self.id as f64)),
+            ("replica", Json::Num(self.replica as f64)),
+            ("latency_us", Json::Num(self.latency_us)),
+            ("spans", Json::Arr(spans)),
+        ])
+    }
+}
+
+/// [`CimCounters`] as a JSON object (integer-valued fields).
+pub fn counters_json(c: &CimCounters) -> Json {
+    obj(vec![
+        ("mvms", Json::Num(c.mvms as f64)),
+        ("device_reads", Json::Num(c.device_reads as f64)),
+        ("dac_conversions", Json::Num(c.dac_conversions as f64)),
+        ("adc_conversions", Json::Num(c.adc_conversions as f64)),
+    ])
+}
+
+struct RingInner {
+    buf: VecDeque<RequestTrace>,
+    dropped: u64,
+}
+
+/// Bounded MPSC-ish ring of finished traces.
+///
+/// Workers [`push`](TraceRing::push) under a short mutex; when full the
+/// oldest trace is evicted and counted in `dropped` (surfaced in the
+/// trace file's snapshot line so downstream sum-invariants know when
+/// they no longer hold).
+pub struct TraceRing {
+    cap: usize,
+    inner: Mutex<RingInner>,
+}
+
+impl TraceRing {
+    /// Ring holding at most `cap` traces (minimum 1).
+    pub fn new(cap: usize) -> Self {
+        TraceRing {
+            cap: cap.max(1),
+            inner: Mutex::new(RingInner {
+                buf: VecDeque::new(),
+                dropped: 0,
+            }),
+        }
+    }
+
+    /// Append a finished trace, evicting the oldest when full.
+    pub fn push(&self, t: RequestTrace) {
+        let mut g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        if g.buf.len() == self.cap {
+            g.buf.pop_front();
+            g.dropped += 1;
+        }
+        g.buf.push_back(t);
+    }
+
+    /// Take every buffered trace plus the drop count (both reset).
+    pub fn drain(&self) -> (Vec<RequestTrace>, u64) {
+        let mut g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        let dropped = std::mem::take(&mut g.dropped);
+        (std::mem::take(&mut g.buf).into(), dropped)
+    }
+
+    /// Number of currently buffered traces.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner()).buf.len()
+    }
+
+    /// True when no traces are buffered.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Write traces as JSON-lines followed by a final snapshot line.
+///
+/// `snapshot` is the serving `Snapshot` as JSON (see
+/// `coordinator::metrics::Snapshot::to_json`); this helper stamps it
+/// with `"type":"snapshot"` and the ring's `trace_dropped` count so
+/// `tools/check_obs_trace.py` can decide which sum-invariants apply.
+pub fn write_jsonl<W: Write>(
+    w: &mut W,
+    traces: &[RequestTrace],
+    em: &EnergyModel,
+    mut snapshot: Json,
+    dropped: u64,
+) -> io::Result<()> {
+    for t in traces {
+        writeln!(w, "{}", t.to_json(em))?;
+    }
+    if let Json::Obj(m) = &mut snapshot {
+        m.insert("type".into(), Json::Str("snapshot".into()));
+        m.insert("trace_dropped".into(), Json::Num(dropped as f64));
+    }
+    writeln!(w, "{snapshot}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cost(mvms: u64, reads: u64, dac: u64, adc: u64) -> CimCounters {
+        CimCounters {
+            mvms,
+            device_reads: reads,
+            dac_conversions: dac,
+            adc_conversions: adc,
+        }
+    }
+
+    fn demo_trace() -> RequestTrace {
+        let mut t = RequestTrace::admitted(7, 1, 55.0, true);
+        t.push_round(0, 4, cost(1, 1152, 24, 24), cost(1, 192, 24, 4));
+        t.push_round(1, 3, cost(1, 1152, 24, 24), cost(1, 192, 24, 4));
+        t.finish(
+            ExitSpan {
+                block: 1,
+                early: true,
+                class: 2,
+            },
+            812.5,
+        );
+        t
+    }
+
+    #[test]
+    fn round_count_matches_exit_depth_plus_one() {
+        let t = demo_trace();
+        assert_eq!(t.rounds.len(), t.exit.unwrap().block + 1);
+        assert_eq!(t.cim_total().device_reads, 2304);
+        assert_eq!(t.cam_total().mvms, 2);
+    }
+
+    #[test]
+    fn to_json_emits_span_sequence() {
+        let t = demo_trace();
+        let j = Json::parse(&t.to_json(&EnergyModel::default()).to_string()).unwrap();
+        assert_eq!(j.get("type").and_then(|v| v.as_str()), Some("request"));
+        assert_eq!(j.get("id").and_then(|v| v.as_usize()), Some(7));
+        let spans = j.get("spans").and_then(|v| v.as_arr()).unwrap();
+        let kinds: Vec<&str> = spans
+            .iter()
+            .map(|s| s.get("span").and_then(|v| v.as_str()).unwrap())
+            .collect();
+        assert_eq!(
+            kinds,
+            ["queue_wait", "admitted", "round", "round", "exit", "energy"]
+        );
+        let energy = spans.last().unwrap();
+        assert_eq!(
+            energy.path(&["cim", "device_reads"]).and_then(|v| v.as_usize()),
+            Some(2304)
+        );
+        assert!(energy.get("cim_pj").and_then(|v| v.as_f64()).unwrap() > 0.0);
+    }
+
+    #[test]
+    fn rejected_trace_is_queue_wait_then_error() {
+        let t = RequestTrace::rejected(9, 0, 12.0, "deadline exceeded".into());
+        let j = Json::parse(&t.to_json(&EnergyModel::default()).to_string()).unwrap();
+        let spans = j.get("spans").and_then(|v| v.as_arr()).unwrap();
+        let kinds: Vec<&str> = spans
+            .iter()
+            .map(|s| s.get("span").and_then(|v| v.as_str()).unwrap())
+            .collect();
+        assert_eq!(kinds, ["queue_wait", "error"]);
+    }
+
+    #[test]
+    fn ring_bounds_and_counts_drops() {
+        let ring = TraceRing::new(2);
+        for i in 0..5u64 {
+            ring.push(RequestTrace::admitted(i, 0, 0.0, false));
+        }
+        assert_eq!(ring.len(), 2);
+        let (traces, dropped) = ring.drain();
+        assert_eq!(dropped, 3);
+        let ids: Vec<u64> = traces.iter().map(|t| t.id).collect();
+        assert_eq!(ids, [3, 4]);
+        assert!(ring.is_empty());
+        let (_, dropped2) = ring.drain();
+        assert_eq!(dropped2, 0, "drain resets the drop count");
+    }
+
+    #[test]
+    fn write_jsonl_stamps_snapshot_line() {
+        let mut out = Vec::new();
+        let snap = obj(vec![("requests", Json::Num(1.0))]);
+        write_jsonl(
+            &mut out,
+            &[demo_trace()],
+            &EnergyModel::default(),
+            snap,
+            0,
+        )
+        .unwrap();
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let last = Json::parse(lines[1]).unwrap();
+        assert_eq!(last.get("type").and_then(|v| v.as_str()), Some("snapshot"));
+        assert_eq!(last.get("trace_dropped").and_then(|v| v.as_usize()), Some(0));
+    }
+}

@@ -127,6 +127,14 @@ impl DynModel for XbarToy {
             .flat_map(|r| r[..CLASSES].to_vec())
             .collect())
     }
+
+    fn row_cost(&self, block: usize) -> memdyn::cim::CimCounters {
+        // each live row does exactly one MVM through this block's layer
+        // per round, so the analytic per-row cost is the layer's tile
+        // geometry — the serving trace/snapshot energy attribution must
+        // then sum to the *harvested* crossbar counters exactly
+        self.layers[block].mvm_cost()
+    }
 }
 
 /// Ternary centers for one exit, shared between the CAM and the test
@@ -361,6 +369,9 @@ fn sharded_serving_is_bit_identical_across_replica_counts() {
     for replicas in [1usize, 2, 4] {
         let sink = Arc::new(Mutex::new(memdyn::cim::CimCounters::default()));
         let sink2 = Arc::clone(&sink);
+        // observability must observe without influencing: run the whole
+        // sweep with per-request tracing AND live interim snapshots on —
+        // outcomes and energy counters must still be bit-identical
         let srv = Server::start_with_finalizer(
             move || Ok(engine(1)),
             move |e: Engine<XbarToy>| sink2.lock().unwrap().add(&energy(&e)),
@@ -369,6 +380,8 @@ fn sharded_serving_is_bit_identical_across_replica_counts() {
                 max_wait: Duration::from_millis(2),
                 queue_cap: 64,
                 replicas,
+                trace: true,
+                metrics_interval: Some(Duration::from_millis(25)),
                 ..Default::default()
             },
         );
@@ -381,6 +394,7 @@ fn sharded_serving_is_bit_identical_across_replica_counts() {
             .map(|w| w.recv().unwrap().outcome.unwrap())
             .collect();
         drop(client);
+        let ring = srv.trace_ring().expect("tracing is on");
         let snap = srv.shutdown().unwrap();
         assert_eq!(snap.requests, n as u64, "{replicas} replicas");
         assert_eq!(snap.errors, 0, "{replicas} replicas");
@@ -390,6 +404,29 @@ fn sharded_serving_is_bit_identical_across_replica_counts() {
             total, want_energy,
             "{replicas} replicas: CIM/CAM energy counters diverged"
         );
+        // the snapshot's analytic per-request attribution (row_cost +
+        // search_cost per live row per round) must equal the harvested
+        // crossbar counters exactly: every MVM the engines actually ran
+        // is charged to exactly one request
+        let mut attributed = snap.cim_energy;
+        attributed.add(&snap.cam_energy);
+        assert_eq!(
+            attributed, total,
+            "{replicas} replicas: analytic energy attribution diverged from harvested counters"
+        );
+        // every request left exactly one trace, each with exit+1 rounds
+        let (traces, dropped) = ring.drain();
+        assert_eq!(dropped, 0, "{replicas} replicas: ring overflowed");
+        assert_eq!(traces.len(), n, "{replicas} replicas: trace count");
+        for t in &traces {
+            let exit = t.exit.as_ref().expect("finished trace has an exit").block;
+            assert_eq!(
+                t.rounds.len(),
+                exit + 1,
+                "{replicas} replicas: request {} round count",
+                t.id
+            );
+        }
     }
 }
 
@@ -430,6 +467,10 @@ fn backfill_heavy_serving_is_bit_identical_and_actually_backfills() {
                 max_wait: Duration::from_millis(2),
                 queue_cap: 64,
                 replicas,
+                // tracing on for the back-fill-heavy path too: the
+                // admitted spans of back-filled requests carry
+                // backfill=true, and none of it may perturb the bits
+                trace: true,
                 ..Default::default()
             },
         );
@@ -443,6 +484,7 @@ fn backfill_heavy_serving_is_bit_identical_and_actually_backfills() {
             .map(|w| w.recv().unwrap().outcome.unwrap())
             .collect();
         drop(client);
+        let ring = srv.trace_ring().expect("tracing is on");
         let snap = srv.shutdown().unwrap();
         assert_eq!(snap.requests, n as u64, "{replicas} replicas");
         assert_eq!(snap.errors, 0, "{replicas} replicas");
@@ -452,6 +494,15 @@ fn backfill_heavy_serving_is_bit_identical_and_actually_backfills() {
             total, want_energy,
             "{replicas} replicas: CIM/CAM energy counters diverged under back-fill"
         );
+        let mut attributed = snap.cim_energy;
+        attributed.add(&snap.cam_energy);
+        assert_eq!(
+            attributed, total,
+            "{replicas} replicas: analytic attribution diverged under back-fill"
+        );
+        let (traces, dropped) = ring.drain();
+        assert_eq!(dropped, 0, "{replicas} replicas: ring overflowed");
+        assert_eq!(traces.len(), n, "{replicas} replicas: trace count");
         if replicas == 1 {
             // single worker, queue pre-loaded with 24, max_batch 4, and
             // the even samples exit at block 0 by construction: the free
@@ -460,6 +511,11 @@ fn backfill_heavy_serving_is_bit_identical_and_actually_backfills() {
             assert!(
                 snap.backfills >= 1,
                 "pre-loaded early-exit workload did not back-fill: {snap:?}"
+            );
+            // ...and the back-filled requests' traces say so
+            assert!(
+                traces.iter().any(|t| t.backfill),
+                "back-fills happened but no trace carries backfill=true"
             );
         }
     }

@@ -1,0 +1,171 @@
+"""Validate a `--trace-out` JSON-lines file (see docs/OBSERVABILITY.md).
+
+Usage: python3 tools/check_obs_trace.py <trace.jsonl>
+
+Checks, per request line:
+  * every line parses as JSON; the last line is the snapshot
+    (`type == "snapshot"`, with `trace_dropped`);
+  * span nesting: `queue_wait` first; then either a terminal `error`
+    (screening rejection) or `admitted` -> `round`* -> (`exit` + `energy`
+    | `error`);
+  * round blocks are consecutive from 0, and a finished request has
+    exactly `exit.block + 1` rounds;
+  * the `energy` span equals the elementwise integer sum of the round
+    counters.
+
+And across the file, when `trace_dropped == 0` (every request left a
+trace, so the sums are closed):
+  * successful request lines == snapshot `requests`, error lines ==
+    snapshot `errors`;
+  * per-request energy sums equal the snapshot CIM/CAM totals exactly;
+  * exit blocks histogram to the snapshot `exit_hist`.
+"""
+import json
+import sys
+
+COUNTER_KEYS = ("mvms", "device_reads", "dac_conversions", "adc_conversions")
+
+
+def die(msg):
+    print(f"check_obs_trace: FAIL: {msg}")
+    sys.exit(1)
+
+
+def counters(obj, where):
+    if not isinstance(obj, dict):
+        die(f"{where}: counters must be an object, got {type(obj).__name__}")
+    for k in COUNTER_KEYS:
+        v = obj.get(k)
+        if not isinstance(v, (int, float)) or v != int(v) or v < 0:
+            die(f"{where}: counter {k} must be a non-negative integer, got {v!r}")
+    return {k: int(obj[k]) for k in COUNTER_KEYS}
+
+
+def add(a, b):
+    return {k: a[k] + b[k] for k in COUNTER_KEYS}
+
+
+ZERO = {k: 0 for k in COUNTER_KEYS}
+
+
+def check_request(line_no, req):
+    """Validate one request line; returns (ok, exit_block, cim, cam)
+    where ok is False for an error-resolved request (energy excluded
+    from the snapshot sums by construction)."""
+    where = f"line {line_no} (request id {req.get('id')})"
+    for key in ("id", "replica", "latency_us", "spans"):
+        if key not in req:
+            die(f"{where}: missing key {key!r}")
+    spans = req["spans"]
+    if not spans or spans[0].get("span") != "queue_wait":
+        die(f"{where}: first span must be queue_wait")
+    kinds = [s.get("span") for s in spans]
+    if kinds[-1] == "error":
+        if "admitted" not in kinds:
+            # screening rejection: queue_wait then error, nothing else
+            if kinds != ["queue_wait", "error"]:
+                die(f"{where}: rejected request has spans {kinds}")
+            return False, None, ZERO, ZERO
+        # admitted but failed mid-cohort: rounds allowed, no exit/energy
+        if "exit" in kinds or "energy" in kinds:
+            die(f"{where}: error request carries exit/energy spans")
+        return False, None, ZERO, ZERO
+    if kinds[1] != "admitted":
+        die(f"{where}: expected admitted after queue_wait, got {kinds[1]!r}")
+    rounds = [s for s in spans if s.get("span") == "round"]
+    exits = [s for s in spans if s.get("span") == "exit"]
+    energies = [s for s in spans if s.get("span") == "energy"]
+    if len(exits) != 1 or len(energies) != 1:
+        die(f"{where}: expected exactly one exit and one energy span, got {kinds}")
+    want = ["queue_wait", "admitted"] + ["round"] * len(rounds) + ["exit", "energy"]
+    if kinds != want:
+        die(f"{where}: span order {kinds} != {want}")
+    for i, r in enumerate(rounds):
+        if r.get("block") != i:
+            die(f"{where}: round {i} has block {r.get('block')} (not consecutive)")
+    exit_block = exits[0].get("block")
+    if len(rounds) != exit_block + 1:
+        die(
+            f"{where}: {len(rounds)} rounds but exit at block {exit_block} "
+            f"(want exit+1 == {exit_block + 1})"
+        )
+    cim = ZERO
+    cam = ZERO
+    for i, r in enumerate(rounds):
+        cim = add(cim, counters(r.get("cim"), f"{where} round {i} cim"))
+        cam = add(cam, counters(r.get("cam"), f"{where} round {i} cam"))
+    e = energies[0]
+    if counters(e.get("cim"), f"{where} energy cim") != cim:
+        die(f"{where}: energy.cim != sum of round cim counters")
+    if counters(e.get("cam"), f"{where} energy cam") != cam:
+        die(f"{where}: energy.cam != sum of round cam counters")
+    return True, exit_block, cim, cam
+
+
+def main(path):
+    with open(path) as f:
+        lines = [ln for ln in f.read().splitlines() if ln.strip()]
+    if not lines:
+        die("empty trace file")
+    parsed = []
+    for i, ln in enumerate(lines, 1):
+        try:
+            parsed.append(json.loads(ln))
+        except json.JSONDecodeError as e:
+            die(f"line {i}: invalid JSON: {e}")
+    snap = parsed[-1]
+    if snap.get("type") != "snapshot":
+        die("last line must be the snapshot")
+    if "trace_dropped" not in snap:
+        die("snapshot line missing trace_dropped")
+    requests = parsed[:-1]
+    ok_count = err_count = 0
+    cim_sum = ZERO
+    cam_sum = ZERO
+    exit_hist = {}
+    for i, req in enumerate(requests, 1):
+        if req.get("type") != "request":
+            die(f"line {i}: type must be 'request', got {req.get('type')!r}")
+        ok, exit_block, cim, cam = check_request(i, req)
+        if ok:
+            ok_count += 1
+            cim_sum = add(cim_sum, cim)
+            cam_sum = add(cam_sum, cam)
+            exit_hist[exit_block] = exit_hist.get(exit_block, 0) + 1
+        else:
+            err_count += 1
+    dropped = int(snap["trace_dropped"])
+    if dropped == 0:
+        # closed sums: every request left a trace
+        if ok_count != int(snap.get("requests", -1)):
+            die(
+                f"{ok_count} successful trace(s) but snapshot.requests == "
+                f"{snap.get('requests')}"
+            )
+        if err_count != int(snap.get("errors", -1)):
+            die(f"{err_count} error trace(s) but snapshot.errors == {snap.get('errors')}")
+        snap_cim = counters(snap.get("cim"), "snapshot cim")
+        snap_cam = counters(snap.get("cam"), "snapshot cam")
+        if cim_sum != snap_cim:
+            die(f"per-request CIM sum {cim_sum} != snapshot {snap_cim}")
+        if cam_sum != snap_cam:
+            die(f"per-request CAM sum {cam_sum} != snapshot {snap_cam}")
+        got_hist = [int(v) for v in snap.get("exit_hist", [])]
+        if exit_hist and max(exit_hist) >= len(got_hist):
+            die(
+                f"trace exit block {max(exit_hist)} outside snapshot "
+                f"exit_hist of length {len(got_hist)}"
+            )
+        want_hist = [exit_hist.get(e, 0) for e in range(len(got_hist))]
+        if got_hist != want_hist:
+            die(f"trace exit histogram {want_hist} != snapshot exit_hist {got_hist}")
+    print(
+        f"check_obs_trace: OK: {ok_count} request(s), {err_count} error(s), "
+        f"{dropped} dropped, CIM {cim_sum}, CAM {cam_sum}"
+    )
+
+
+if __name__ == "__main__":
+    if len(sys.argv) != 2:
+        die("usage: python3 tools/check_obs_trace.py <trace.jsonl>")
+    main(sys.argv[1])
