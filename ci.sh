@@ -21,6 +21,14 @@ python3 tools/check_packed_ternary.py
 echo "== shard-serving mirror (pure stdlib) =="
 python3 tools/check_shard_serving.py
 
+# Plan-vs-tree cross-validation: the stdlib HLO evaluator now carries a
+# mirror of hlo::plan (movable bits, drop lists, InPlace/Fresh tags,
+# arena regions).  Section 0 is synthetic and always runs; the artifact
+# sections re-run the b1 module variants through BOTH evaluators and
+# demand bit-level agreement.
+echo "== HLO eval mirror: planned vs tree walk (pure stdlib) =="
+python3 tools/check_hlo_eval.py
+
 echo "== cargo fmt --check =="
 cargo fmt --all --check
 

@@ -6,7 +6,8 @@
 //! overhead (`spawn_overhead` rows), the sharded server at replicas
 //! 1/2/4 (`serve_toy_r{1,2,4}` rows) and with observability on vs off
 //! (`serve_toy_obs_{on,off}` rows), im2col, GroupNorm, the dense
-//! digital matmul, and CAM search.
+//! digital matmul, the HLO interpreter's compiled step program vs the
+//! tree walk (`hlo_while_dus_192_{planned,tree}` rows), and CAM search.
 
 use std::time::Duration;
 
@@ -357,6 +358,59 @@ fn main() {
             .report()
         );
     }
+
+    // --- compiled step program vs tree walk (hlo::plan) -------------------
+    // a DUS-heavy 192-iteration loop — the shape the plan targets: per-
+    // instruction movable/drop decisions are precomputed once instead of
+    // recomputed every iteration (EXPERIMENTS.md §Perf `hlo_while_dus`
+    // series); both rows compute identical bits (parity-gated in tests)
+    let loop_text = "HloModule bench_loop
+cond.1 {
+  p.2 = (f32[256], s32[]) parameter(0)
+  i.3 = s32[] get-tuple-element(p.2), index=1
+  c.4 = s32[] constant(192)
+  ROOT lt.5 = pred[] compare(i.3, c.4), direction=LT
+}
+body.6 {
+  p.7 = (f32[256], s32[]) parameter(0)
+  b.8 = f32[256] get-tuple-element(p.7), index=0
+  i.9 = s32[] get-tuple-element(p.7), index=1
+  u.10 = f32[8] constant({1, 2, 3, 4, 5, 6, 7, 8})
+  d.11 = f32[256] dynamic-update-slice(b.8, u.10, i.9)
+  c.12 = s32[] constant(1)
+  ni.13 = s32[] add(i.9, c.12)
+  ROOT t.14 = (f32[256], s32[]) tuple(d.11, ni.13)
+}
+ENTRY main.15 {
+  x.16 = f32[256] parameter(0)
+  z.17 = s32[] constant(0)
+  t.18 = (f32[256], s32[]) tuple(x.16, z.17)
+  w.19 = (f32[256], s32[]) while(t.18), condition=cond.1, body=body.6
+  ROOT g.20 = f32[256] get-tuple-element(w.19), index=0
+}
+";
+    let module = memdyn::hlo::parse(loop_text).expect("bench module parses");
+    let interp = memdyn::hlo::Interpreter::new(module);
+    let loop_arg = [memdyn::hlo::Value::arr(memdyn::hlo::ArrayVal {
+        shape: vec![256],
+        data: memdyn::hlo::Data::F32(vec![0.0; 256]),
+    })];
+    for (tag, on) in [("planned", true), ("tree", false)] {
+        memdyn::hlo::plan::set_enabled(on);
+        println!(
+            "{}",
+            b.run_items(
+                &format!("hlo_while_dus_192_{tag} (iters/s)"),
+                192.0,
+                || {
+                    let v = interp.run_entry(&loop_arg).unwrap();
+                    v.as_arr().unwrap().elements()
+                }
+            )
+            .report()
+        );
+    }
+    memdyn::hlo::plan::set_enabled(true);
 
     // --- CAM search --------------------------------------------------------
     let centers: Vec<i8> = (0..10 * 32).map(|_| [-1i8, 0, 1][rng.below(3)]).collect();

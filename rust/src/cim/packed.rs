@@ -233,8 +233,12 @@ impl ActivationPlanes {
             }
             max_mag = max_mag.max(v.abs() as u64);
         }
-        if x.len() as u64 * max_mag > EXACT_SUM_BOUND {
-            return None;
+        // checked: a pathological row length could overflow the u64
+        // product before the comparison — treat overflow as over-bound
+        // (dense fallback) rather than wrapping into a false "exact"
+        match (x.len() as u64).checked_mul(max_mag) {
+            Some(prod) if prod <= EXACT_SUM_BOUND => {}
+            _ => return None,
         }
         let bits = (64 - max_mag.leading_zeros()) as usize;
         let words = x.len().div_ceil(64);
@@ -362,6 +366,24 @@ mod tests {
         assert!(ActivationPlanes::try_pack(&[f32::NAN]).is_none());
         // negative zero is integral with magnitude 0
         assert!(ActivationPlanes::try_pack(&[-0.0, 0.0]).is_some());
+    }
+
+    #[test]
+    fn long_rows_with_large_magnitudes_gate_exactly_at_the_bound() {
+        // len * max on the bound is still exact and must pack...
+        let mut at_bound = vec![1.0f32; 1 << 12];
+        at_bound[0] = (1 << 12) as f32; // 2^12 * 2^12 = 2^24 = bound
+        assert!(ActivationPlanes::try_pack(&at_bound).is_some());
+        // ...one magnitude doubling past it must not
+        let mut over = vec![1.0f32; 1 << 12];
+        over[0] = (1 << 13) as f32; // 2^12 * 2^13 = 2^25 > bound
+        assert!(ActivationPlanes::try_pack(&over).is_none());
+        // the product is computed with checked_mul, so a row long
+        // enough to wrap u64 routes dense instead of falsely "exact"
+        // (unallocatable to test directly; the gate above plus the
+        // property sweep in tests/properties.rs pin the behavior)
+        let long = vec![(EXACT_SUM_BOUND - 1) as f32; 4];
+        assert!(ActivationPlanes::try_pack(&long).is_none());
     }
 
     #[test]

@@ -210,6 +210,12 @@ pub(crate) fn pick_bucket<'a>(
 }
 
 impl XlaResNetModel {
+    /// Load every (stage, bucket) artifact through the runtime's per-path
+    /// executable cache.  Each load also compiles the module's flat step
+    /// program + buffer plan (`hlo::plan`) exactly once: bucket variants
+    /// are distinct artifact paths, so a model with B buckets and N
+    /// blocks holds (N + 2) * B cached plans keyed by (path, bucket) and
+    /// never re-plans on the serving hot path.
     pub fn load(rt: &Runtime, bundle: &ModelBundle) -> Result<Self> {
         let buckets = bundle.buckets.clone();
         let mut stem = Vec::new();

@@ -657,6 +657,46 @@ mod tests {
     }
 
     #[test]
+    fn done_cohort_is_frozen_past_completion() {
+        // the continuous batcher polls cohorts it may already have drained;
+        // past completion advance_cohort must be a no-op: empty resolutions,
+        // depth frozen, no live rows — on both completion paths
+        let e = engine(vec![0.95, 0.95, 0.95]);
+
+        // path 1: everyone exits early, cohort finishes before the head
+        let confident = vec![1.0, 0.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0];
+        let mut c = e.begin_cohort(&confident, 2, &[0, 1]).unwrap();
+        assert_eq!(e.advance_cohort(&mut c).unwrap().len(), 2);
+        assert!(c.is_done());
+        let frozen_depth = c.depth();
+        assert_eq!(frozen_depth, 1, "done the moment the last row vacated");
+        for _ in 0..3 {
+            assert!(e.advance_cohort(&mut c).unwrap().is_empty());
+            assert_eq!(c.depth(), frozen_depth, "depth must not keep advancing");
+            assert_eq!(c.live(), 0);
+            assert!(c.alive_rows().is_empty());
+            assert!(c.is_done());
+        }
+
+        // path 2: nobody exits early, the survivors run the classifier head
+        let ambiguous = vec![0.5, 0.45, 0.5, 0.5];
+        let mut c = e.begin_cohort(&ambiguous, 1, &[2]).unwrap();
+        let mut rounds = 0;
+        while !c.is_done() {
+            e.advance_cohort(&mut c).unwrap();
+            rounds += 1;
+        }
+        assert_eq!(rounds, 3, "head exit completes at full depth");
+        assert_eq!(c.depth(), 3);
+        for _ in 0..3 {
+            assert!(e.advance_cohort(&mut c).unwrap().is_empty());
+            assert_eq!(c.depth(), 3);
+            assert_eq!(c.live(), 0);
+            assert!(c.alive_rows().is_empty());
+        }
+    }
+
+    #[test]
     fn batch_consistency_single_vs_batched() {
         let e = engine(vec![0.95, 0.9, 0.85]);
         let samples: Vec<Vec<f32>> = vec![

@@ -137,6 +137,17 @@ impl ExitMemory {
                 let (centers, classes, dim) = &banks[exit];
                 debug_assert_eq!(sv.len(), *dim);
                 let svn: f32 = sv.iter().map(|v| v * v).sum::<f32>().sqrt();
+                if svn <= 1e-9 {
+                    // degenerate (all-zero) query: cosine similarity is
+                    // undefined, so answer -inf — every finite exit
+                    // threshold rejects it — instead of a plausible
+                    // similarity-0 "match" on class 0
+                    return Match {
+                        class: 0,
+                        similarity: f32::NEG_INFINITY,
+                        margin: 0.0,
+                    };
+                }
                 let mut best = Match {
                     class: 0,
                     similarity: f32::NEG_INFINITY,
@@ -147,11 +158,9 @@ impl ExitMemory {
                     let row = &centers[c * dim..(c + 1) * dim];
                     let dot: f32 = row.iter().zip(sv).map(|(a, b)| a * b).sum();
                     let cn: f32 = row.iter().map(|v| v * v).sum::<f32>().sqrt();
-                    let sim = if svn > 1e-9 && cn > 1e-9 {
-                        dot / (svn * cn)
-                    } else {
-                        0.0
-                    };
+                    // a zero-norm *center* row stays at similarity 0:
+                    // the row is simply never preferred over a real one
+                    let sim = if cn > 1e-9 { dot / (svn * cn) } else { 0.0 };
                     if sim > best.similarity {
                         second = best.similarity;
                         best = Match {
@@ -224,10 +233,50 @@ mod tests {
     }
 
     #[test]
-    fn exact_zero_vector_is_safe() {
+    fn exact_zero_query_is_rejected_not_matched() {
+        // a degenerate all-zero semantic vector used to come back as a
+        // confident-looking (class 0, similarity 0) match; it must be
+        // -inf so any finite exit threshold rejects it
         let m = ExitMemory::exact(vec![(vec![1.0, 0.0, 0.0, 1.0], 2, 2)]);
         let hit = m.search(0, &[0.0, 0.0], 0);
-        assert!(hit.similarity.is_finite());
+        assert_eq!(hit.similarity, f32::NEG_INFINITY);
+        assert_eq!(hit.margin, 0.0);
+        assert!(
+            !(hit.similarity >= -1.0),
+            "every finite threshold must reject the degenerate query"
+        );
+    }
+
+    #[test]
+    fn exact_zero_center_row_stays_at_zero() {
+        // class 0's center is all-zero: it keeps similarity 0 and loses
+        // to any real center, but a zero row never poisons the query
+        let banks = vec![(
+            vec![
+                0.0f32, 0.0, // class 0 (degenerate center)
+                0.0, 1.0, // class 1
+            ],
+            2,
+            2,
+        )];
+        let m = ExitMemory::exact(banks);
+        let hit = m.search(0, &[0.1, 0.9], 0);
+        assert_eq!(hit.class, 1);
+        assert!(hit.similarity > 0.9);
+        // runner-up is the zero row at exactly similarity 0
+        assert!((hit.margin - hit.similarity).abs() < 1e-6);
+    }
+
+    #[test]
+    fn exact_single_class_margin_collapses_to_zero() {
+        // classes == 1: `second` stays -inf, so the margin silently
+        // collapses to 0 — pin that contract (margin thresholds treat
+        // a one-class bank as "no separation evidence")
+        let m = ExitMemory::exact(vec![(vec![1.0, 0.0, 0.0, 0.0], 1, 4)]);
+        let hit = m.search(0, &[0.9, 0.1, 0.0, 0.0], 0);
+        assert_eq!(hit.class, 0);
+        assert!(hit.similarity > 0.9);
+        assert_eq!(hit.margin, 0.0);
     }
 
     #[test]

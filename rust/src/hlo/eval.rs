@@ -52,6 +52,16 @@
 //! The kernel choice is made **per dot call, before the row fan-out**,
 //! so chunking can never route rows of one dot to different kernels
 //! ([`dot_packed_count`] / [`dot_dense_count`] expose which ran).
+//!
+//! Planned execution: [`Interpreter::new`] additionally lowers the
+//! module once through [`super::plan`] into a flat step program — the
+//! movability, drop-list and `dynamic-update-slice` in-place decisions
+//! above become compile-time tags instead of per-call recomputation,
+//! and the packed-ternary dispatch rides on the `dot` step.  By default
+//! [`Interpreter::run_entry`] executes over the plan
+//! (`plan::set_enabled(false)` is the kill switch);
+//! [`Interpreter::run_entry_tree`] always takes the tree walk, which is
+//! kept bit-for-bit equivalent and serves as the parity oracle.
 
 use std::collections::hash_map::Entry;
 use std::collections::HashMap;
@@ -66,6 +76,7 @@ use super::ir::{
     ArrayVal, BinOp, Computation, ConvDims, Data, Dir, DType, GatherDims, Instr, Module, Op,
     ScatterDims, Type,
 };
+use super::plan::{self, ModulePlan, Step, WriteMode};
 
 /// A runtime value: a tensor or a tuple of values. Tensors are behind an
 /// `Arc`, so tuple plumbing (`get-tuple-element`, `while` carries) is a
@@ -334,8 +345,9 @@ fn array_out_dtype(ins: &Instr) -> Result<DType> {
 /// slot table: this instruction is the slot's final consumer and the
 /// slot appears only once in the operand list (so no earlier/later read
 /// of the same instruction is invalidated).  The root is never movable
-/// (`last_use[root] == instrs.len()`).
-fn operand_movable(c: &Computation, i: usize, ins: &Instr, k: usize) -> bool {
+/// (`last_use[root] == instrs.len()`).  `super::plan` evaluates the
+/// same rule at compile time; this stays the single source of truth.
+pub(crate) fn operand_movable(c: &Computation, i: usize, ins: &Instr, k: usize) -> bool {
     match ins.operands.get(k) {
         Some(&slot) => {
             c.last_use[slot] == i && ins.operands.iter().filter(|&&s| s == slot).count() == 1
@@ -352,6 +364,17 @@ fn take_operand(vals: &mut [Option<Value>], ins: &Instr, k: usize) -> Result<Val
         .ok_or_else(|| anyhow!("operand {k} already dropped"))
 }
 
+/// Movability of operand `k`: read from the precomputed plan step on
+/// the bytecode path, recomputed from `last_use` on the tree walk.
+/// Both answers come from [`operand_movable`], so the paths agree by
+/// construction.
+fn step_movable(c: &Computation, i: usize, ins: &Instr, k: usize, step: Option<&Step>) -> bool {
+    match step {
+        Some(s) => s.movable.get(k).copied().unwrap_or(false),
+        None => operand_movable(c, i, ins, k),
+    }
+}
+
 /// Operand `k` by value: moved when this is its final use, cloned
 /// (refcount bump) otherwise.
 fn move_or_clone_operand(
@@ -360,8 +383,9 @@ fn move_or_clone_operand(
     ins: &Instr,
     vals: &mut [Option<Value>],
     k: usize,
+    step: Option<&Step>,
 ) -> Result<Value> {
-    if operand_movable(c, i, ins, k) {
+    if step_movable(c, i, ins, k, step) {
         take_operand(vals, ins, k)
     } else {
         Ok(operand_val(ins, vals, k)?.clone())
@@ -501,6 +525,12 @@ pub struct Interpreter {
     /// rhs, pre-packed into bitplanes at load time and keyed by the
     /// constant's slot (dots sharing a weight matrix share one packing).
     packed_consts: Vec<HashMap<usize, Arc<PackedTernary>>>,
+    /// The module lowered once into flat step programs with the buffer
+    /// plan (movability, drop lists, `WriteMode` tags, packed `dot`
+    /// dispatch).  Lives inside `runtime::Executable`, so it is cached
+    /// per artifact path — bucket variants are distinct paths, making
+    /// the effective cache key `(path, bucket)`.
+    plan: ModulePlan,
 }
 
 /// Cap on `while` trip counts so a malformed graph fails instead of
@@ -511,10 +541,12 @@ impl Interpreter {
     pub fn new(module: Module) -> Self {
         let scalar_ok = compute_scalar_ok(&module);
         let packed_consts = scan_ternary_dot_constants(&module);
+        let plan = plan::compile(&module, &packed_consts);
         Interpreter {
             module,
             scalar_ok,
             packed_consts,
+            plan,
         }
     }
 
@@ -522,14 +554,69 @@ impl Interpreter {
         &self.module
     }
 
-    /// Evaluate the ENTRY computation.
+    /// The compiled step programs (one per computation).
+    pub fn plan(&self) -> &ModulePlan {
+        &self.plan
+    }
+
+    /// Evaluate the ENTRY computation — over the compiled plan by
+    /// default, or on the tree walk when `plan::set_enabled(false)`.
     pub fn run_entry(&self, args: &[Value]) -> Result<Value> {
+        if plan::enabled() {
+            self.eval_comp_planned(self.module.entry, args)
+        } else {
+            self.eval_comp(self.module.entry, args)
+        }
+    }
+
+    /// Evaluate the ENTRY computation on the tree walk unconditionally —
+    /// the oracle the planned path is parity-gated against.
+    pub fn run_entry_tree(&self, args: &[Value]) -> Result<Value> {
         self.eval_comp(self.module.entry, args)
     }
 
     /// Evaluate a computation on borrowed arguments (clones each one).
     fn eval_comp(&self, ci: usize, args: &[Value]) -> Result<Value> {
         self.eval_comp_owned(ci, args.iter().cloned().map(Some).collect())
+    }
+
+    /// Planned-path twin of [`Self::eval_comp`].
+    fn eval_comp_planned(&self, ci: usize, args: &[Value]) -> Result<Value> {
+        self.eval_comp_planned_owned(ci, args.iter().cloned().map(Some).collect())
+    }
+
+    /// Execution loop over the compiled step program: identical to
+    /// [`Self::eval_comp_owned`] except every liveness decision comes
+    /// from the plan — per-operand movability bits, the post-step drop
+    /// list, and the `dynamic-update-slice` `WriteMode` tag — instead of
+    /// being rederived from `last_use` on every call.  Nested `while` /
+    /// `call` bodies stay on the planned path (their computations have
+    /// their own step programs).
+    fn eval_comp_planned_owned(&self, ci: usize, mut args: Vec<Option<Value>>) -> Result<Value> {
+        plan::note_run();
+        let c = &self.module.comps[ci];
+        let p = &self.plan.comps[ci];
+        if args.len() != c.params.len() {
+            bail!(
+                "computation {}: {} arguments, expected {}",
+                c.name,
+                args.len(),
+                c.params.len()
+            );
+        }
+        let mut vals: Vec<Option<Value>> = Vec::with_capacity(c.instrs.len());
+        vals.resize_with(c.instrs.len(), || None);
+        for (i, ins) in c.instrs.iter().enumerate() {
+            let step = &p.steps[i];
+            let v = self
+                .eval_instr(ci, c, i, ins, &mut vals, &mut args, Some(step))
+                .with_context(|| format!("computation {}, {} #{i}", c.name, ins.op.name()))?;
+            vals[i] = Some(v);
+            for &s in &step.drops {
+                vals[s] = None;
+            }
+        }
+        Ok(vals[c.root].take().expect("root value"))
     }
 
     /// Evaluate a computation on **owned** arguments: parameter
@@ -552,7 +639,7 @@ impl Interpreter {
         vals.resize_with(c.instrs.len(), || None);
         for (i, ins) in c.instrs.iter().enumerate() {
             let v = self
-                .eval_instr(ci, c, i, ins, &mut vals, &mut args)
+                .eval_instr(ci, c, i, ins, &mut vals, &mut args, None)
                 .with_context(|| format!("computation {}, {} #{i}", c.name, ins.op.name()))?;
             vals[i] = Some(v);
             for &s in &ins.operands {
@@ -564,6 +651,9 @@ impl Interpreter {
         Ok(vals[c.root].take().expect("root value"))
     }
 
+    /// `step` is `Some` on the planned path (precomputed decisions) and
+    /// `None` on the tree walk (decisions rederived per call); nested
+    /// computations are dispatched on the same path as their caller.
     fn eval_instr(
         &self,
         ci: usize,
@@ -572,6 +662,7 @@ impl Interpreter {
         ins: &Instr,
         vals: &mut [Option<Value>],
         args: &mut [Option<Value>],
+        step: Option<&Step>,
     ) -> Result<Value> {
         match &ins.op {
             Op::Parameter(o) => args
@@ -796,29 +887,45 @@ impl Interpreter {
                 };
                 let x_shape = operand_arr(ins, vals, 0)?.shape.clone();
                 let starts = dyn_starts(ins, vals, 2, &x_shape, &u.shape)?;
-                let x: Arc<ArrayVal> = match move_or_clone_operand(c, i, ins, vals, 0)? {
-                    Value::Arr(a) => a,
-                    Value::Tuple(_) => bail!("dynamic-update-slice on tuple"),
+                // the plan tags the write statically: InPlace iff the
+                // operand is movable (its final, sole use); the tree
+                // walk rederives the same predicate per call
+                let take_owned = match step {
+                    Some(s) => matches!(s.write, Some(WriteMode::InPlace)),
+                    None => operand_movable(c, i, ins, 0),
                 };
-                // in place when this was the only live handle (the
-                // loop-carried steady state); full copy otherwise — a
-                // buffer still referenced anywhere keeps refcount > 1,
-                // so live data is never mutated
-                let mut out = match Arc::try_unwrap(x) {
-                    Ok(owned) => {
-                        DUS_IN_PLACE.fetch_add(1, Ordering::Relaxed);
-                        owned
+                let mut out = if take_owned {
+                    let x: Arc<ArrayVal> = match take_operand(vals, ins, 0)? {
+                        Value::Arr(a) => a,
+                        Value::Tuple(_) => bail!("dynamic-update-slice on tuple"),
+                    };
+                    // in place when this was the only live handle (the
+                    // loop-carried steady state); the refcount stays the
+                    // runtime safety gate — a buffer still shared (e.g.
+                    // externally owned state entering a loop's first
+                    // iteration) keeps refcount > 1 and is copied, so
+                    // live data is never mutated
+                    match Arc::try_unwrap(x) {
+                        Ok(owned) => {
+                            DUS_IN_PLACE.fetch_add(1, Ordering::Relaxed);
+                            owned
+                        }
+                        Err(shared) => {
+                            DUS_COPIED.fetch_add(1, Ordering::Relaxed);
+                            (*shared).clone()
+                        }
                     }
-                    Err(shared) => {
-                        DUS_COPIED.fetch_add(1, Ordering::Relaxed);
-                        (*shared).clone()
-                    }
+                } else {
+                    // Fresh: the operand stays live past this
+                    // instruction, so the copy is unconditional
+                    DUS_COPIED.fetch_add(1, Ordering::Relaxed);
+                    operand_arr(ins, vals, 0)?.clone()
                 };
                 write_block(&mut out, &u, &starts)?;
                 Ok(Value::arr(out))
             }
             Op::GetTupleElement { index } => {
-                if operand_movable(c, i, ins, 0) {
+                if step_movable(c, i, ins, 0, step) {
                     // final use of the tuple: move the element out, so a
                     // loop result's buffer keeps a unique Arc
                     match take_operand(vals, ins, 0)? {
@@ -837,20 +944,29 @@ impl Interpreter {
             }
             Op::Tuple => {
                 let parts: Vec<Value> = (0..ins.operands.len())
-                    .map(|k| move_or_clone_operand(c, i, ins, vals, k))
+                    .map(|k| move_or_clone_operand(c, i, ins, vals, k, step))
                     .collect::<Result<_>>()?;
                 Ok(Value::Tuple(parts))
             }
             Op::Call { comp } => {
                 let cargs: Vec<Option<Value>> = (0..ins.operands.len())
-                    .map(|k| move_or_clone_operand(c, i, ins, vals, k).map(Some))
+                    .map(|k| move_or_clone_operand(c, i, ins, vals, k, step).map(Some))
                     .collect::<Result<_>>()?;
-                self.eval_comp_owned(*comp, cargs)
+                if step.is_some() {
+                    self.eval_comp_planned_owned(*comp, cargs)
+                } else {
+                    self.eval_comp_owned(*comp, cargs)
+                }
             }
             Op::While { cond, body } => {
-                let mut state = move_or_clone_operand(c, i, ins, vals, 0)?;
+                let planned = step.is_some();
+                let mut state = move_or_clone_operand(c, i, ins, vals, 0, step)?;
                 for _ in 0..MAX_WHILE_ITERS {
-                    let cv = self.eval_comp(*cond, std::slice::from_ref(&state))?;
+                    let cv = if planned {
+                        self.eval_comp_planned(*cond, std::slice::from_ref(&state))?
+                    } else {
+                        self.eval_comp(*cond, std::slice::from_ref(&state))?
+                    };
                     let keep = match &cv.as_arr()?.data {
                         Data::Pred(v) => v[0],
                         _ => bail!("while condition is not pred"),
@@ -861,7 +977,11 @@ impl Interpreter {
                     // hand the carried state to the body by value: the
                     // body's parameter takes it, so buffers the previous
                     // iteration produced stay uniquely held
-                    state = self.eval_comp_owned(*body, vec![Some(state)])?;
+                    state = if planned {
+                        self.eval_comp_planned_owned(*body, vec![Some(state)])?
+                    } else {
+                        self.eval_comp_owned(*body, vec![Some(state)])?
+                    };
                 }
                 bail!("while loop exceeded {MAX_WHILE_ITERS} iterations")
             }
@@ -906,11 +1026,16 @@ impl Interpreter {
                 let a = operand_arr(ins, vals, 0)?;
                 let b = operand_arr(ins, vals, 1)?;
                 // kernel choice is per dot call (load-time constant scan +
-                // process-wide toggle), never per fanned-out row chunk
-                let pt = if packed::enabled() {
-                    self.packed_consts[ci].get(&ins.operands[1]).map(Arc::as_ref)
-                } else {
+                // process-wide toggle), never per fanned-out row chunk;
+                // the plan carries the packing on the step itself, the
+                // tree walk looks it up by the rhs constant's slot
+                let pt = if !packed::enabled() {
                     None
+                } else {
+                    match step {
+                        Some(s) => s.packed.as_deref(),
+                        None => self.packed_consts[ci].get(&ins.operands[1]).map(Arc::as_ref),
+                    }
                 };
                 eval_dot(a, b, lhs_contracting, rhs_contracting, array_out_dims(ins)?, pt)
                     .map(Value::arr)
@@ -1003,7 +1128,12 @@ impl Interpreter {
         inputs: &[&ArrayVal],
         inits: &[&ArrayVal],
     ) -> Result<Value> {
+        // typed error, not a panic: a malformed module can reach here
+        // with an empty operand list
         let n_in = inputs.len();
+        if n_in == 0 || inits.len() != n_in {
+            bail!("reduce requires at least one input with a matching init");
+        }
         let in_shape = inputs[0].shape.clone();
         let rank = in_shape.len();
         let keep: Vec<usize> = (0..rank).filter(|d| !dims.contains(d)).collect();
@@ -1046,16 +1176,27 @@ impl Interpreter {
             })
             .collect();
         if n_in == 1 {
-            Ok(parts.pop().unwrap())
+            parts
+                .pop()
+                .ok_or_else(|| anyhow!("reduce produced no outputs"))
         } else {
             Ok(Value::Tuple(parts))
         }
     }
 
     fn eval_sort(&self, dim: usize, comp: usize, inputs: &[&ArrayVal]) -> Result<Value> {
+        // typed errors, not panics: the parser accepts a zero-operand
+        // sort and an out-of-range dimension, so the worker must reject
+        // the module instead of indexing out of bounds
         let n_in = inputs.len();
+        if n_in == 0 {
+            bail!("sort requires at least one operand");
+        }
         let shape = inputs[0].shape.clone();
         let rank = shape.len();
+        if dim >= rank {
+            bail!("sort dimension {dim} out of range for rank {rank}");
+        }
         let strides = strides_of(&shape);
         let len = shape[dim];
         let stride_d = strides[dim];
@@ -1121,7 +1262,9 @@ impl Interpreter {
             })
             .collect();
         if n_in == 1 {
-            Ok(parts.pop().unwrap())
+            parts
+                .pop()
+                .ok_or_else(|| anyhow!("sort produced no outputs"))
         } else {
             Ok(Value::Tuple(parts))
         }
@@ -1360,8 +1503,11 @@ fn eval_gather(
 /// Module-load-time scan: for every 2-D `[m,k] x [k,n]` dot whose rhs
 /// operand is a constant with all entries in `{-1, 0, +1}`, pre-pack
 /// that constant into u64 bitplanes.  Keyed by the constant's slot so
-/// dots sharing one weight matrix share one packing.
-fn scan_ternary_dot_constants(module: &Module) -> Vec<HashMap<usize, Arc<PackedTernary>>> {
+/// dots sharing one weight matrix share one packing (`super::plan`
+/// copies the packing onto the qualifying `dot` step).
+pub(crate) fn scan_ternary_dot_constants(
+    module: &Module,
+) -> Vec<HashMap<usize, Arc<PackedTernary>>> {
     module
         .comps
         .iter()
@@ -1756,6 +1902,127 @@ ENTRY main.1 {
         match &out.as_arr().unwrap().data {
             Data::F32(v) => assert_eq!(v, &vec![3.0, 4.0]),
             other => panic!("expected f32, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn planned_and_tree_walk_agree_on_loops_and_dus() {
+        // 4-iteration while loop writing a 2-wide window one slot to
+        // the right each round: exercises the planned loop's nested
+        // body dispatch, the InPlace write tag, and the drop lists
+        let text = "HloModule wd
+cond.1 {
+  p.2 = (f32[8]{0}, s32[]) parameter(0)
+  i.3 = s32[] get-tuple-element(p.2), index=1
+  c.4 = s32[] constant(4)
+  ROOT lt.5 = pred[] compare(i.3, c.4), direction=LT
+}
+body.6 {
+  p.7 = (f32[8]{0}, s32[]) parameter(0)
+  b.8 = f32[8]{0} get-tuple-element(p.7), index=0
+  i.9 = s32[] get-tuple-element(p.7), index=1
+  u.10 = f32[2]{0} constant({1, 2})
+  d.11 = f32[8]{0} dynamic-update-slice(b.8, u.10, i.9)
+  o.12 = s32[] constant(1)
+  n.13 = s32[] add(i.9, o.12)
+  ROOT t.14 = (f32[8]{0}, s32[]) tuple(d.11, n.13)
+}
+ENTRY main.15 {
+  z.16 = f32[] constant(0)
+  b.17 = f32[8]{0} broadcast(z.16), dimensions={}
+  i.18 = s32[] constant(0)
+  t.19 = (f32[8]{0}, s32[]) tuple(b.17, i.18)
+  w.20 = (f32[8]{0}, s32[]) while(t.19), condition=cond.1, body=body.6
+  ROOT g.21 = f32[8]{0} get-tuple-element(w.20), index=0
+}
+";
+        let interp = Interpreter::new(parse(text).unwrap());
+        let runs_before = plan::run_count();
+        let planned = interp.eval_comp_planned(interp.module.entry, &[]).unwrap();
+        assert!(plan::run_count() > runs_before, "planned loop must run");
+        let tree = interp.run_entry_tree(&[]).unwrap();
+        let want = vec![1.0, 1.0, 1.0, 1.0, 2.0, 0.0, 0.0, 0.0];
+        for out in [planned, tree] {
+            match &out.as_arr().unwrap().data {
+                Data::F32(v) => assert_eq!(v, &want),
+                other => panic!("expected f32, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn malformed_zero_operand_sort_errors_on_both_paths() {
+        // the parser accepts an empty operand list; the evaluator must
+        // answer with a typed error, not an index panic, on both paths
+        let text = "HloModule m
+cmp.1 {
+  a.2 = f32[] parameter(0)
+  b.3 = f32[] parameter(1)
+  ROOT lt.4 = pred[] compare(a.2, b.3), direction=LT
+}
+ENTRY main.5 {
+  ROOT s.6 = f32[4]{0} sort(), dimensions={0}, to_apply=cmp.1
+}
+";
+        let interp = Interpreter::new(parse(text).unwrap());
+        let planned = interp.eval_comp_planned(interp.module.entry, &[]);
+        let tree = interp.run_entry_tree(&[]);
+        for res in [planned, tree] {
+            let err = res.expect_err("zero-operand sort must be rejected");
+            let msg = format!("{err:#}");
+            assert!(
+                msg.contains("sort requires at least one operand"),
+                "unexpected error: {msg}"
+            );
+        }
+    }
+
+    #[test]
+    fn malformed_zero_operand_reduce_errors_on_both_paths() {
+        let text = "HloModule m
+add.1 {
+  a.2 = f32[] parameter(0)
+  b.3 = f32[] parameter(1)
+  ROOT s.4 = f32[] add(a.2, b.3)
+}
+ENTRY main.5 {
+  ROOT r.6 = f32[2]{0} reduce(), dimensions={1}, to_apply=add.1
+}
+";
+        let interp = Interpreter::new(parse(text).unwrap());
+        let planned = interp.eval_comp_planned(interp.module.entry, &[]);
+        let tree = interp.run_entry_tree(&[]);
+        for res in [planned, tree] {
+            let err = res.expect_err("zero-operand reduce must be rejected");
+            let msg = format!("{err:#}");
+            assert!(
+                msg.contains("reduce expects inputs + matching inits"),
+                "unexpected error: {msg}"
+            );
+        }
+    }
+
+    #[test]
+    fn sort_dimension_out_of_range_is_a_typed_error() {
+        let text = "HloModule m
+cmp.1 {
+  a.2 = f32[] parameter(0)
+  b.3 = f32[] parameter(1)
+  ROOT lt.4 = pred[] compare(a.2, b.3), direction=LT
+}
+ENTRY main.5 {
+  x.6 = f32[4]{0} parameter(0)
+  ROOT s.7 = f32[4]{0} sort(x.6), dimensions={1}, to_apply=cmp.1
+}
+";
+        let interp = Interpreter::new(parse(text).unwrap());
+        let arg = f32_input(&[4], &[3.0, 1.0, 2.0, 4.0]);
+        let planned = interp.eval_comp_planned(interp.module.entry, &[arg.clone()]);
+        let tree = interp.run_entry_tree(&[arg]);
+        for res in [planned, tree] {
+            let err = res.expect_err("out-of-range sort dim must be rejected");
+            let msg = format!("{err:#}");
+            assert!(msg.contains("out of range for rank"), "unexpected error: {msg}");
         }
     }
 }

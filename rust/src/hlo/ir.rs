@@ -277,6 +277,17 @@ pub struct Computation {
     pub last_use: Vec<usize>,
 }
 
+impl Computation {
+    /// Definition-order lifetime of slot `s`: live from its defining
+    /// instruction through `last_use[s]` inclusive (a never-read slot
+    /// dies where it is defined; the root stays live to `instrs.len()`).
+    /// `hlo::plan` packs slots with disjoint lifetimes into shared arena
+    /// regions.
+    pub fn live_range(&self, s: usize) -> (usize, usize) {
+        (s, self.last_use[s])
+    }
+}
+
 /// A parsed HLO module.
 #[derive(Clone, Debug)]
 pub struct Module {

@@ -9,7 +9,9 @@
 //! XLA reimplementation.
 //!
 //! Pipeline: [`lexer`] (tokens) -> [`parser`] (resolved [`ir::Module`])
-//! -> [`eval::Interpreter`] (values). `crate::runtime` wraps this behind
+//! -> [`plan`] (flat step programs + buffer plan, compiled once per
+//! module) -> [`eval::Interpreter`] (values; the tree walk stays as the
+//! parity oracle). `crate::runtime` wraps this behind
 //! the `Runtime`/`Executable` facade the coordinator consumes, and keeps
 //! the role the ROADMAP assigned it: a software-exact digital reference
 //! beside the analogue crossbar model, in the same binary, so the two
@@ -25,6 +27,7 @@ pub mod eval;
 pub mod ir;
 pub mod lexer;
 pub mod parser;
+pub mod plan;
 
 pub use eval::{Interpreter, Value};
 pub use ir::{ArrayVal, Data, DType, Module, Type};

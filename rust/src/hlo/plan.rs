@@ -1,0 +1,434 @@
+//! Compile-time lowering of a parsed HLO [`Module`] into a flat step
+//! program with a precomputed buffer-assignment plan.
+//!
+//! The tree-walking evaluator re-derives three decisions on every call,
+//! for every request, on artifacts that never change after load:
+//!
+//! * which operands can be **moved** out of the slot table (final use,
+//!   single occurrence — the [`operand_movable`] rule);
+//! * which slots to **drop** after each instruction (the per-instruction
+//!   scan over `last_use`);
+//! * whether a `dynamic-update-slice` may reuse its operand buffer **in
+//!   place** (the PR-4 `Arc::try_unwrap` refcount check).
+//!
+//! All three are pure functions of the IR — `last_use` liveness is
+//! already computed by the parser — so [`compile`] runs them **once per
+//! module** and records the answers as one [`Step`] per instruction, in
+//! definition order, with operands already resolved to slot indices by
+//! the parser.  The in-place decision becomes a static
+//! [`WriteMode::InPlace`]/[`WriteMode::Fresh`] tag (the runtime
+//! `Arc::try_unwrap` stays as a safety gate on the `InPlace` path, so a
+//! buffer that is still shared at runtime — e.g. the externally owned
+//! state entering a loop's first iteration — still falls back to the
+//! copy).  Ternary-constant `dot` dispatch is a plan-level op too: the
+//! pre-packed bitplanes ride on the step instead of being looked up in a
+//! map per call.
+//!
+//! The plan also assigns every slot to an **arena region**: a greedy
+//! linear scan over the definition-order lifetimes `[def, last_use]`
+//! reuses a region as soon as its previous occupant is dead, so
+//! `n_regions` is the peak number of simultaneously live slots.  Two
+//! slots share a region only when their lifetimes are disjoint — the
+//! invariant the in-file tests and the Python mirror
+//! (`tools/check_hlo_eval.py`) both re-derive independently.
+//!
+//! Plans are compiled eagerly in `Interpreter::new`, so they live inside
+//! `runtime::Executable` and are cached per artifact path by
+//! `Runtime::load` — bucket variants (`block_00_b1` vs `block_00_b8`)
+//! are distinct paths, which makes the effective cache key
+//! `(path, bucket)`.  [`set_enabled`]`(false)` is the process-wide kill
+//! switch (the tree walk is kept as the oracle); the `hlo.plan.*`
+//! counters in `obs::registry` expose compile/run/tag statistics.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::cim::packed::PackedTernary;
+
+use super::eval::operand_movable;
+use super::ir::{Computation, Module, Op};
+
+/// Compile-time answer to "may this instruction write into operand 0's
+/// buffer?" — the static form of the PR-4 runtime refcount check.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WriteMode {
+    /// Operand 0 is statically movable (final use, single occurrence):
+    /// take the slot and write in place when the buffer is uniquely
+    /// held at runtime.
+    InPlace,
+    /// Operand 0 stays live past this instruction: always copy.
+    Fresh,
+}
+
+/// One instruction's precomputed execution decisions.
+#[derive(Clone, Debug)]
+pub struct Step {
+    /// Per operand: may the value be moved out of the slot table.
+    pub movable: Vec<bool>,
+    /// Slots whose final consumer is this instruction (deduplicated,
+    /// ascending) — cleared after the step runs.
+    pub drops: Vec<usize>,
+    /// `dynamic-update-slice` only: the static in-place/fresh tag.
+    pub write: Option<WriteMode>,
+    /// `dot` only: the pre-packed ternary rhs constant, when the
+    /// load-time scan qualified it.
+    pub packed: Option<Arc<PackedTernary>>,
+}
+
+/// The flat step program for one computation.
+#[derive(Clone, Debug)]
+pub struct CompPlan {
+    /// One step per instruction, definition order.
+    pub steps: Vec<Step>,
+    /// Arena region assigned to each slot.
+    pub region_of: Vec<usize>,
+    /// Number of regions = peak simultaneously live slots.
+    pub n_regions: usize,
+}
+
+/// Per-module plan: one [`CompPlan`] per computation (while/call bodies
+/// are computations, so nested control flow compiles to nested
+/// programs).
+#[derive(Clone, Debug)]
+pub struct ModulePlan {
+    /// Indexed like `Module::comps`.
+    pub comps: Vec<CompPlan>,
+}
+
+// ---------------------------------------------------------------------------
+// observability: compile/run/tag counters and the process-wide toggle
+// ---------------------------------------------------------------------------
+
+static PLAN_ENABLED: AtomicBool = AtomicBool::new(true);
+/// Modules lowered by [`compile`] (one per `Interpreter::new`).
+static PLAN_COMPILED: AtomicU64 = AtomicU64::new(0);
+/// Planned computation executions (entry, call and while bodies each
+/// count one per run).
+static PLAN_RUNS: AtomicU64 = AtomicU64::new(0);
+/// `dynamic-update-slice` steps tagged [`WriteMode::InPlace`] at
+/// compile time.
+static PLAN_IN_PLACE_TAGS: AtomicU64 = AtomicU64::new(0);
+/// `dynamic-update-slice` steps tagged [`WriteMode::Fresh`].
+static PLAN_FRESH_TAGS: AtomicU64 = AtomicU64::new(0);
+
+/// Process-wide toggle for the planned execution loop (default on).
+/// Off, every `run_entry` takes the tree-walk oracle instead — tests
+/// and bench ablations flip this exactly like `cim::packed::set_enabled`.
+pub fn set_enabled(on: bool) {
+    PLAN_ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// True when `run_entry` executes over the compiled plan.
+pub fn enabled() -> bool {
+    PLAN_ENABLED.load(Ordering::Relaxed)
+}
+
+/// Process-wide count of modules lowered to plans.  Monotone; tests
+/// assert on deltas.
+pub fn compiled_count() -> u64 {
+    PLAN_COMPILED.load(Ordering::Relaxed)
+}
+
+/// Process-wide count of planned computation executions.  Monotone.
+pub fn run_count() -> u64 {
+    PLAN_RUNS.load(Ordering::Relaxed)
+}
+
+/// Process-wide count of `dynamic-update-slice` steps statically tagged
+/// in-place.  Monotone.
+pub fn in_place_tag_count() -> u64 {
+    PLAN_IN_PLACE_TAGS.load(Ordering::Relaxed)
+}
+
+/// Process-wide count of `dynamic-update-slice` steps statically tagged
+/// fresh (copy).  Monotone.
+pub fn fresh_tag_count() -> u64 {
+    PLAN_FRESH_TAGS.load(Ordering::Relaxed)
+}
+
+pub(crate) fn note_run() {
+    PLAN_RUNS.fetch_add(1, Ordering::Relaxed);
+}
+
+// ---------------------------------------------------------------------------
+// lowering
+// ---------------------------------------------------------------------------
+
+/// Lower every computation of `module` once.  `packed_consts` is the
+/// load-time ternary-constant scan result (keyed by constant slot, one
+/// map per computation) — qualifying `dot` steps carry their packing.
+pub fn compile(
+    module: &Module,
+    packed_consts: &[HashMap<usize, Arc<PackedTernary>>],
+) -> ModulePlan {
+    let comps = module
+        .comps
+        .iter()
+        .enumerate()
+        .map(|(ci, c)| compile_comp(c, &packed_consts[ci]))
+        .collect();
+    PLAN_COMPILED.fetch_add(1, Ordering::Relaxed);
+    ModulePlan { comps }
+}
+
+fn compile_comp(c: &Computation, packed: &HashMap<usize, Arc<PackedTernary>>) -> CompPlan {
+    let steps = c
+        .instrs
+        .iter()
+        .enumerate()
+        .map(|(i, ins)| {
+            let movable: Vec<bool> = (0..ins.operands.len())
+                .map(|k| operand_movable(c, i, ins, k))
+                .collect();
+            let mut drops: Vec<usize> = ins
+                .operands
+                .iter()
+                .copied()
+                .filter(|&s| c.last_use[s] == i)
+                .collect();
+            drops.sort_unstable();
+            drops.dedup();
+            let write = match &ins.op {
+                Op::DynamicUpdateSlice => {
+                    if movable.first().copied().unwrap_or(false) {
+                        PLAN_IN_PLACE_TAGS.fetch_add(1, Ordering::Relaxed);
+                        Some(WriteMode::InPlace)
+                    } else {
+                        PLAN_FRESH_TAGS.fetch_add(1, Ordering::Relaxed);
+                        Some(WriteMode::Fresh)
+                    }
+                }
+                _ => None,
+            };
+            let packed_rhs = match &ins.op {
+                Op::Dot { .. } => ins.operands.get(1).and_then(|s| packed.get(s)).cloned(),
+                _ => None,
+            };
+            Step {
+                movable,
+                drops,
+                write,
+                packed: packed_rhs,
+            }
+        })
+        .collect();
+    let (region_of, n_regions) = assign_regions(c);
+    CompPlan {
+        steps,
+        region_of,
+        n_regions,
+    }
+}
+
+/// Greedy arena assignment over slot lifetimes: walk slots in
+/// definition order and reuse the first region whose occupant's
+/// `last_use` precedes the new slot's definition.  Slots sharing a
+/// region therefore have disjoint lifetimes, and the region count is
+/// the peak number of simultaneously live slots.
+fn assign_regions(c: &Computation) -> (Vec<usize>, usize) {
+    let n = c.instrs.len();
+    let mut region_of = vec![0usize; n];
+    // per region: last_use of the current occupant
+    let mut region_end: Vec<usize> = Vec::new();
+    for i in 0..n {
+        let (def, end) = c.live_range(i);
+        let reuse = region_end.iter().position(|&e| e < def);
+        region_of[i] = match reuse {
+            Some(r) => {
+                region_end[r] = end;
+                r
+            }
+            None => {
+                region_end.push(end);
+                region_end.len() - 1
+            }
+        };
+    }
+    (region_of, region_end.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hlo::eval::scan_ternary_dot_constants;
+    use crate::hlo::parser::parse;
+
+    /// 4-iteration while loop carrying `(f32[8], s32[])`, updating the
+    /// buffer via dynamic-update-slice each round — the loop-carried
+    /// steady state the in-place tag exists for.
+    const WHILE_DUS: &str = "HloModule wd
+cond.1 {
+  p.2 = (f32[8]{0}, s32[]) parameter(0)
+  i.3 = s32[] get-tuple-element(p.2), index=1
+  c.4 = s32[] constant(4)
+  ROOT lt.5 = pred[] compare(i.3, c.4), direction=LT
+}
+body.6 {
+  p.7 = (f32[8]{0}, s32[]) parameter(0)
+  b.8 = f32[8]{0} get-tuple-element(p.7), index=0
+  i.9 = s32[] get-tuple-element(p.7), index=1
+  u.10 = f32[2]{0} constant({1, 2})
+  d.11 = f32[8]{0} dynamic-update-slice(b.8, u.10, i.9)
+  o.12 = s32[] constant(1)
+  n.13 = s32[] add(i.9, o.12)
+  ROOT t.14 = (f32[8]{0}, s32[]) tuple(d.11, n.13)
+}
+ENTRY main.15 {
+  z.16 = f32[] constant(0)
+  b.17 = f32[8]{0} broadcast(z.16), dimensions={}
+  i.18 = s32[] constant(0)
+  t.19 = (f32[8]{0}, s32[]) tuple(b.17, i.18)
+  w.20 = (f32[8]{0}, s32[]) while(t.19), condition=cond.1, body=body.6
+  ROOT g.21 = f32[8]{0} get-tuple-element(w.20), index=0
+}
+";
+
+    fn plan_of(text: &str) -> (crate::hlo::ir::Module, ModulePlan) {
+        let module = parse(text).unwrap();
+        let packed = scan_ternary_dot_constants(&module);
+        let plan = compile(&module, &packed);
+        (module, plan)
+    }
+
+    #[test]
+    fn dus_write_modes_are_tagged_statically() {
+        let before = in_place_tag_count();
+        let (module, plan) = plan_of(WHILE_DUS);
+        assert!(in_place_tag_count() > before, "tag counter must advance");
+        // the body's dynamic-update-slice consumes the loop-carried
+        // buffer at its final use: statically in place
+        let body = module
+            .comps
+            .iter()
+            .position(|c| c.name.starts_with("body"))
+            .unwrap();
+        let dus = module.comps[body]
+            .instrs
+            .iter()
+            .position(|ins| matches!(ins.op, Op::DynamicUpdateSlice))
+            .unwrap();
+        assert_eq!(plan.comps[body].steps[dus].write, Some(WriteMode::InPlace));
+        // every non-DUS step carries no write tag
+        for (ci, cp) in plan.comps.iter().enumerate() {
+            for (i, step) in cp.steps.iter().enumerate() {
+                let is_dus =
+                    matches!(module.comps[ci].instrs[i].op, Op::DynamicUpdateSlice);
+                assert_eq!(step.write.is_some(), is_dus, "comp {ci} step {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn fresh_tag_when_the_buffer_stays_live() {
+        // the updated buffer is read again after the update, so the
+        // plan must tag the write Fresh
+        let text = "HloModule f
+ENTRY main.1 {
+  x.2 = f32[4]{0} parameter(0)
+  u.3 = f32[2]{0} constant({5, 6})
+  s.4 = s32[] constant(0)
+  d.5 = f32[4]{0} dynamic-update-slice(x.2, u.3, s.4)
+  ROOT a.6 = f32[4]{0} add(d.5, x.2)
+}
+";
+        let before = fresh_tag_count();
+        let (module, plan) = plan_of(text);
+        assert!(fresh_tag_count() > before, "tag counter must advance");
+        let dus = module.comps[module.entry]
+            .instrs
+            .iter()
+            .position(|ins| matches!(ins.op, Op::DynamicUpdateSlice))
+            .unwrap();
+        assert_eq!(
+            plan.comps[module.entry].steps[dus].write,
+            Some(WriteMode::Fresh)
+        );
+    }
+
+    #[test]
+    fn movable_bits_and_drops_match_the_runtime_rule() {
+        let (module, plan) = plan_of(WHILE_DUS);
+        for (ci, c) in module.comps.iter().enumerate() {
+            for (i, ins) in c.instrs.iter().enumerate() {
+                let step = &plan.comps[ci].steps[i];
+                assert_eq!(step.movable.len(), ins.operands.len());
+                for k in 0..ins.operands.len() {
+                    assert_eq!(
+                        step.movable[k],
+                        operand_movable(c, i, ins, k),
+                        "comp {ci} instr {i} operand {k}"
+                    );
+                }
+                let mut want: Vec<usize> = ins
+                    .operands
+                    .iter()
+                    .copied()
+                    .filter(|&s| c.last_use[s] == i)
+                    .collect();
+                want.sort_unstable();
+                want.dedup();
+                assert_eq!(step.drops, want, "comp {ci} instr {i} drops");
+            }
+        }
+    }
+
+    #[test]
+    fn regions_share_only_disjoint_lifetimes() {
+        let (module, plan) = plan_of(WHILE_DUS);
+        for (ci, c) in module.comps.iter().enumerate() {
+            let cp = &plan.comps[ci];
+            assert_eq!(cp.region_of.len(), c.instrs.len());
+            assert!(cp.n_regions <= c.instrs.len().max(1));
+            for a in 0..c.instrs.len() {
+                for b in (a + 1)..c.instrs.len() {
+                    if cp.region_of[a] != cp.region_of[b] {
+                        continue;
+                    }
+                    let (da, ea) = c.live_range(a);
+                    let (db, eb) = c.live_range(b);
+                    assert!(
+                        ea < db || eb < da,
+                        "comp {ci}: slots {a} and {b} share region {} with \
+                         overlapping lifetimes [{da},{ea}] vs [{db},{eb}]",
+                        cp.region_of[a]
+                    );
+                }
+            }
+            // the region count actually compacts: the body threads a
+            // long chain, so some region must be reused
+            if c.instrs.len() > 4 {
+                assert!(cp.n_regions < c.instrs.len(), "comp {ci} never reused");
+            }
+        }
+    }
+
+    #[test]
+    fn ternary_dot_rhs_is_a_plan_level_packed_op() {
+        let text = "HloModule t
+ENTRY main.1 {
+  x.2 = f32[2,3]{1,0} parameter(0)
+  w.3 = f32[3,2]{1,0} constant({ {1, -1}, {0, 1}, {-1, 0} })
+  ROOT d.4 = f32[2,2]{1,0} dot(x.2, w.3), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+";
+        let (module, plan) = plan_of(text);
+        let entry = &plan.comps[module.entry];
+        let dot = module.comps[module.entry]
+            .instrs
+            .iter()
+            .position(|ins| matches!(ins.op, Op::Dot { .. }))
+            .unwrap();
+        let pt = entry.steps[dot]
+            .packed
+            .as_ref()
+            .expect("ternary rhs must ride on the dot step");
+        assert_eq!((pt.k, pt.n), (3, 2));
+        // non-dot steps carry no packing
+        for (i, step) in entry.steps.iter().enumerate() {
+            if i != dot {
+                assert!(step.packed.is_none(), "step {i}");
+            }
+        }
+    }
+}

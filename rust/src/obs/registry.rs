@@ -104,6 +104,10 @@ pub fn install_default_probes() {
         register_probe("hlo.eval.dus_copied", crate::hlo::eval::dus_copied_count);
         register_probe("hlo.eval.dot_packed", crate::hlo::eval::dot_packed_count);
         register_probe("hlo.eval.dot_dense", crate::hlo::eval::dot_dense_count);
+        register_probe("hlo.plan.compiled", crate::hlo::plan::compiled_count);
+        register_probe("hlo.plan.runs", crate::hlo::plan::run_count);
+        register_probe("hlo.plan.in_place_tags", crate::hlo::plan::in_place_tag_count);
+        register_probe("hlo.plan.fresh_tags", crate::hlo::plan::fresh_tag_count);
         register_probe("pool.workers_alive", || {
             crate::util::pool::workers_alive() as u64
         });
@@ -190,6 +194,10 @@ mod tests {
         assert!(names.contains(&"pool.workers_alive"));
         assert!(names.contains(&"cim.process.mvms"));
         assert!(names.contains(&"hlo.eval.dot_packed"));
+        assert!(names.contains(&"hlo.plan.compiled"));
+        assert!(names.contains(&"hlo.plan.runs"));
+        assert!(names.contains(&"hlo.plan.in_place_tags"));
+        assert!(names.contains(&"hlo.plan.fresh_tags"));
     }
 
     #[test]

@@ -14,7 +14,13 @@
 //!   paths ([`XlaResNetModel`], [`XlaPointNetModel`], `--backend xla`)
 //!   are live again;
 //! * [`Runtime::load`] parses + validates an artifact and caches one
-//!   [`Executable`] per path, preserving the original caching contract;
+//!   [`Executable`] per path, preserving the original caching contract.
+//!   Parsing also lowers the module once into its flat step program +
+//!   buffer plan (`hlo::plan`, held inside the interpreter), so the plan
+//!   cache rides this same per-path map — bucket variants are distinct
+//!   artifact paths (`block_00_b8.hlo.txt` vs `block_00_b1.hlo.txt`),
+//!   which makes the effective plan cache key `(path, bucket)` with no
+//!   extra bookkeeping;
 //! * [`Executable::run`] validates input shapes against the entry
 //!   computation's declared parameter types, evaluates, and returns each
 //!   tuple element as a flat `Vec<f32>`.
@@ -51,6 +57,9 @@ pub struct Runtime {
 /// Construction happens only through [`Runtime::load`], exactly as when a
 /// backend-private executable handle lived here — so swapping the
 /// execution engine stays a drop-in change confined to this module.
+/// The contained interpreter carries the module's compiled step program
+/// and buffer plan (`hlo::plan::ModulePlan`), built exactly once here and
+/// reused by every subsequent `run`.
 pub struct Executable {
     /// Path of the HLO-text artifact this executable was parsed from.
     pub path: PathBuf,
@@ -233,6 +242,40 @@ ENTRY main.5 {
         let exe =
             Executable::parse_text(MATMUL, PathBuf::from("inline.hlo.txt")).unwrap();
         assert_eq!(exe.n_outputs, 1);
+        let out = exe
+            .run(&[TensorIn {
+                data: &[1.0, 2.0, 3.0, 4.0],
+                shape: &[2, 2],
+            }])
+            .unwrap();
+        assert_eq!(out, vec![vec![1.0, 4.0, 3.0, 8.0]]);
+    }
+
+    #[test]
+    fn plan_is_compiled_once_and_rides_the_path_cache() {
+        // parse_text lowers the module into its step program eagerly …
+        let before = crate::hlo::plan::compiled_count();
+        let exe =
+            Executable::parse_text(MATMUL, PathBuf::from("inline.hlo.txt")).unwrap();
+        assert!(
+            crate::hlo::plan::compiled_count() >= before + 1,
+            "parsing must compile the plan"
+        );
+        // … and the plan sits inside the per-path executable cache: a
+        // second load of the same path is the same Arc, so the plan is
+        // never rebuilt for a cached artifact (bucket variants are
+        // distinct paths, giving the (path, bucket) cache key for free)
+        let dir = std::env::temp_dir().join("memdyn_runtime_plan_cache_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("inline.hlo.txt");
+        std::fs::write(&path, MATMUL).unwrap();
+        let rt = Runtime::cpu().unwrap();
+        let a = rt.load(&path).unwrap();
+        let b = rt.load(&path).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "second load must hit the cache");
+        assert_eq!(rt.cached_count(), 1);
+        // the planned path and the tree-walk oracle agree on the cached
+        // executable's module
         let out = exe
             .run(&[TensorIn {
                 data: &[1.0, 2.0, 3.0, 4.0],

@@ -628,6 +628,69 @@ fn packed_kernel_toggle_is_invisible_to_outcomes_and_energy() {
 }
 
 #[test]
+fn plan_toggle_is_invisible_to_outcomes_and_energy() {
+    // The compiled step program (hlo::plan) is an execution strategy for
+    // the digital interpreter only; the analogue substrate never sees it.
+    // Outcomes and CIM/CAM energy counters must be bit-identical with the
+    // plan on vs off — same invariant the packed-kernel toggle holds.
+    let n = 12;
+    let xs = inputs(n);
+    memdyn::hlo::plan::set_enabled(true);
+    let on_engine = engine(1);
+    let on = on_engine.infer_batch(&xs, n).unwrap();
+    let on_energy = energy(&on_engine);
+    assert!(on_energy.mvms > 0, "toy model must touch the crossbars");
+    memdyn::hlo::plan::set_enabled(false);
+    let off_engine = engine(1);
+    let off = off_engine.infer_batch(&xs, n).unwrap();
+    let off_energy = energy(&off_engine);
+    memdyn::hlo::plan::set_enabled(true);
+    assert_outcomes_eq(&on, &off, "plan off");
+    assert_eq!(on_energy, off_energy, "plan toggled the energy counters");
+
+    // And on a surface the plan DOES drive — an interpreter module with
+    // a loop-carried buffer — the two strategies must agree bit-for-bit.
+    let text = "HloModule t
+cond.1 {
+  p.2 = (f32[4], s32[]) parameter(0)
+  i.3 = s32[] get-tuple-element(p.2), index=1
+  c.4 = s32[] constant(3)
+  ROOT lt.5 = pred[] compare(i.3, c.4), direction=LT
+}
+body.6 {
+  p.7 = (f32[4], s32[]) parameter(0)
+  b.8 = f32[4] get-tuple-element(p.7), index=0
+  i.9 = s32[] get-tuple-element(p.7), index=1
+  s.10 = f32[4] add(b.8, b.8)
+  c.11 = s32[] constant(1)
+  ni.12 = s32[] add(i.9, c.11)
+  ROOT t.13 = (f32[4], s32[]) tuple(s.10, ni.12)
+}
+ENTRY main.14 {
+  x.15 = f32[4] parameter(0)
+  z.16 = s32[] constant(0)
+  t.17 = (f32[4], s32[]) tuple(x.15, z.16)
+  w.18 = (f32[4], s32[]) while(t.17), condition=cond.1, body=body.6
+  ROOT g.19 = f32[4] get-tuple-element(w.18), index=0
+}
+";
+    let m = memdyn::hlo::parse(text).unwrap();
+    let interp = memdyn::hlo::Interpreter::new(m);
+    let arg = [memdyn::hlo::Value::arr(memdyn::hlo::ArrayVal {
+        shape: vec![4],
+        data: memdyn::hlo::Data::F32(vec![1.0, -2.0, 0.5, 3.0]),
+    })];
+    let planned = interp.run_entry(&arg).unwrap();
+    let oracle = interp.run_entry_tree(&arg).unwrap();
+    let get = |v: &memdyn::hlo::Value| match &v.as_arr().unwrap().data {
+        memdyn::hlo::Data::F32(d) => d.clone(),
+        other => panic!("expected f32, got {other:?}"),
+    };
+    assert_eq!(get(&planned), vec![8.0, -16.0, 4.0, 24.0]);
+    assert_eq!(get(&planned), get(&oracle), "planned != tree-walk oracle");
+}
+
+#[test]
 fn batch_split_does_not_change_outcomes() {
     // the same samples inferred one-by-one (fresh engine, same ids) match
     // the batched run: noise is per-request, not per-batch-composition

@@ -818,6 +818,90 @@ fn dot_packed_dispatch_is_bucket_invariant_b1_vs_b8() {
 }
 
 // ---------------------------------------------------------------------------
+// compiled step programs (hlo::plan): planned execution vs tree-walk oracle
+// ---------------------------------------------------------------------------
+
+#[test]
+fn planned_execution_matches_tree_walk_oracle_bit_for_bit() {
+    // the compiled step program must reproduce the tree walk exactly on
+    // the aliasing-heavy shape (while + dynamic-update-slice), reached
+    // three ways: planned (default), tree via the toggle, and the
+    // explicit run_entry_tree oracle
+    let _g = packed_gate(); // serializes all global-toggle tests
+    let m = parse(WHILE_DUS_TEXT).expect("module should parse");
+    let interp = Interpreter::new(m);
+    let args = [vf32(&[8], vec![0.0; 8])];
+    let want = vec![1.0, 1.0, 1.0, 1.0, 0.0, 0.0, 0.0, 0.0];
+
+    let runs_before = memdyn::hlo::plan::run_count();
+    memdyn::hlo::plan::set_enabled(true);
+    let planned = interp.run_entry(&args).unwrap();
+    assert!(
+        memdyn::hlo::plan::run_count() - runs_before >= 1,
+        "enabled plan must execute through the step program"
+    );
+    memdyn::hlo::plan::set_enabled(false);
+    let tree = interp.run_entry(&args).unwrap();
+    memdyn::hlo::plan::set_enabled(true);
+    let oracle = interp.run_entry_tree(&args).unwrap();
+
+    assert_eq!(out_f32(&planned), want);
+    assert_eq!(out_f32(&planned), out_f32(&oracle), "planned != oracle");
+    assert_eq!(out_f32(&tree), out_f32(&oracle), "toggle-off != oracle");
+}
+
+#[test]
+fn planned_packed_dot_is_exact_and_fanout_invariant() {
+    // acceptance gate: the bytecode path stays exact on the packed
+    // integer route and bit-identical across row fan-out {1, 4}, in both
+    // plan states
+    let _g = packed_gate();
+    let (m, k, n) = (4usize, 70usize, 6usize);
+    let w = ternary_weights(k, n, 54);
+    let text = ternary_dot_module(m, k, n, &w);
+    let x: Vec<f32> = (0..m * k).map(|i| (i as i64 % 17 - 8) as f32).collect();
+    let want = dense_dot(&x, &w, m, k, n);
+
+    for planned in [true, false] {
+        memdyn::hlo::plan::set_enabled(planned);
+        let mut outs = Vec::new();
+        for threads in [1usize, 4] {
+            memdyn::hlo::eval::set_linear_fanout(threads);
+            let before = memdyn::hlo::eval::dot_packed_count();
+            outs.push(out_f32(&run(&text, &[vf32(&[m, k], x.clone())])));
+            assert!(
+                memdyn::hlo::eval::dot_packed_count() - before >= 1,
+                "plan={planned}, fanout {threads}: dot must stay packed"
+            );
+        }
+        memdyn::hlo::eval::set_linear_fanout(0);
+        assert_eq!(outs[0], want, "plan={planned}: packed dot != dense oracle");
+        assert_eq!(
+            outs[0], outs[1],
+            "plan={planned}: diverged between fanout 1 and 4"
+        );
+    }
+    memdyn::hlo::plan::set_enabled(true);
+}
+
+#[test]
+fn planned_dus_discipline_matches_tree_walk_counters() {
+    // the plan's static InPlace/Fresh tags must drive the same counter
+    // deltas the runtime check produces: >= 3 in-place updates for the
+    // 4-iteration loop (iteration 1 copies, the caller still holds the
+    // input buffer)
+    let _g = packed_gate();
+    memdyn::hlo::plan::set_enabled(true);
+    let in_place_before = memdyn::hlo::eval::dus_in_place_count();
+    let got = out_f32(&run(WHILE_DUS_TEXT, &[vf32(&[8], vec![0.0; 8])]));
+    assert_eq!(got, vec![1.0, 1.0, 1.0, 1.0, 0.0, 0.0, 0.0, 0.0]);
+    assert!(
+        memdyn::hlo::eval::dus_in_place_count() - in_place_before >= 3,
+        "planned path lost the in-place dynamic-update-slice discipline"
+    );
+}
+
+// ---------------------------------------------------------------------------
 // artifact census + end-to-end conformance (need `make artifacts`)
 // ---------------------------------------------------------------------------
 
@@ -1006,6 +1090,50 @@ fn xla_resnet_parity_holds_with_packing_toggled() {
         }
     }
     memdyn::cim::packed::set_enabled(true);
+}
+
+#[test]
+fn xla_resnet_parity_holds_with_plan_toggled() {
+    // the compiled step program on the shipped artifacts: logits must be
+    // bit-identical between the planned path and the tree-walk oracle
+    // (the two share every kernel; only the decision source differs) and
+    // within the 1e-4 gate of the native digital forward in both states
+    let Some(dir) = artifacts() else { return };
+    let _g = packed_gate();
+    let bundle = ModelBundle::load(&dir, "resnet").unwrap();
+    let data = DatasetBundle::load(&dir, "mnist").unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let xla = XlaResNetModel::load(&rt, &bundle).unwrap();
+    let mut rng = Pcg64::new(1);
+    let native =
+        NativeResNet::build(&bundle, WeightSource::Ternary, &NoiseSpec::Digital, &mut rng)
+            .unwrap();
+
+    let batch = 2usize;
+    let input = &data.x_test[..batch * data.sample_len];
+    let feat = memdyn::nn::resnet::image_feature(input, batch, 28).unwrap();
+    let keys: Vec<StreamKey> =
+        (0..batch as u64).map(|i| StreamKey::root(1).child(i)).collect();
+    let (nat_logits, _) = native.forward(&feat, &keys);
+
+    let mut per_state: Vec<Vec<f32>> = Vec::new();
+    for planned in [true, false] {
+        memdyn::hlo::plan::set_enabled(planned);
+        let mut state = xla.init_seq(input, batch, 0).unwrap();
+        for i in 0..xla.n_blocks() {
+            let _ = xla.step(i, &mut state).unwrap();
+        }
+        let logits = xla.finish(&state).unwrap();
+        for (a, b) in logits.iter().zip(&nat_logits) {
+            assert!(close(*a, *b, 1e-4), "plan={planned}: xla {a} vs native {b}");
+        }
+        per_state.push(logits);
+    }
+    memdyn::hlo::plan::set_enabled(true);
+    assert_eq!(
+        per_state[0], per_state[1],
+        "planned artifacts diverged from the tree walk"
+    );
 }
 
 #[test]

@@ -268,6 +268,49 @@ fn prop_packed_integer_rows_take_the_popcount_path() {
 }
 
 #[test]
+fn prop_packed_exactness_gate_is_overflow_safe_and_conservative() {
+    // long rows x large magnitudes: the len * max|x| product is computed
+    // with checked_mul, and whenever the gate accepts, the popcount path
+    // must still equal the dense oracle bit for bit; whenever len * max
+    // exceeds the 2^24 bound the row must route dense (try_pack None)
+    forall(
+        46,
+        30,
+        |g| {
+            let k = 512 + g.rng.below(3584); // long rows: 512..4096
+            let n = 1 + g.rng.below(8);
+            let mag_bits = 8 + g.rng.below(16); // magnitudes up to 2^23
+            let mag = 1i64 << mag_bits;
+            let mut x = g.int_vec(k, -3, 3);
+            // plant one entry at the big magnitude so max|x| is known
+            let at = g.rng.below(k);
+            x[at] = mag as f32;
+            (k, n, g.ternary_vec(k * n), x, mag)
+        },
+        |(k, n, w, x, mag)| {
+            let packs = ActivationPlanes::try_pack(x).is_some();
+            let over = match (*k as u64).checked_mul(*mag as u64) {
+                Some(p) => p > 1 << 24,
+                None => true,
+            };
+            if packs == over {
+                return Err(format!(
+                    "gate mismatch: k={k} max={mag} packed={packs} over_bound={over}"
+                ));
+            }
+            let wi: Vec<i8> = w.iter().map(|&v| v as i8).collect();
+            let pt = PackedTernary::pack(&wi, *k, *n);
+            let mut y = vec![0f32; *n];
+            pt.mvm(x, &mut y);
+            if packs && y != dense_oracle(&wi, *k, *n, x, 1) {
+                return Err("accepted row diverged from the dense oracle".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prop_packed_float_path_stays_within_parity_tolerance() {
     // general f32 activations take the select path: not bit-exact by
     // contract, but inside the 1e-4 backend-parity envelope that gates

@@ -1,16 +1,35 @@
 """Full mirror of rust/src/hlo/eval.rs (all 33 ops), transcribed 1:1 from
-the Rust implementations, run on REAL artifacts:
+the Rust implementations, plus a mirror of rust/src/hlo/plan.rs (the
+compiled step program: last_use liveness, movable bits, eager drops,
+static InPlace/Fresh write tags, arena region assignment).
+
+Always runs (no artifacts needed):
+
+  0. synthetic plan-vs-tree self-check on two temp-file modules — a
+     while/dynamic-update-slice loop (the planned evaluator must really
+     mutate the buffer in place, counted) and an aliasing module where
+     the loop input stays live after the loop (in-place must back off);
+     region disjointness is validated for every compiled computation
+
+With REAL artifacts present, additionally:
 
   1. resnet stem_b1 vs stem_b8 on the same image (conv, groupnorm
-     reduces, rsqrt, transpose, pad, while-matmul ...)
-  2. resnet block_00_b1 forward: shape + finiteness + second output
+     reduces, rsqrt, transpose, pad, while-matmul ...) — stem_b1 also
+     cross-validated planned-vs-tree
+  2. resnet block_00_b1 forward: shape + finiteness + second output,
+     cross-validated planned-vs-tree
   3. pointnet sa_0_b1 vs sa_0_b4 on the same cloud (sort with
      interpreted comparator, gather w/ batching dims, scatter, variadic
-     argmax reduce, concatenate, iota, FPS while loop)
+     argmax reduce, concatenate, iota, FPS while loop) — sa_0_b1 also
+     cross-validated planned-vs-tree
 
 Cross-bucket agreement is a strong semantic check: the b1/b4/b8 graphs
 are separately traced (different broadcasts/reshapes/batching dims), so
-they only agree if the op semantics are right.
+they only agree if the op semantics are right.  The planned evaluator is
+a strong aliasing check: it drops slots the moment last_use passes and
+mutates uniquely-held buffers in place, so a wrong movable bit, drop
+index, or write tag corrupts a later read and diverges from the tree
+walk instead of hiding.
 """
 import math
 from functools import cmp_to_key
@@ -426,20 +445,323 @@ class Ev:
             i += 3
         return pairs
 
+class Planned(Ev):
+    """Mirror of rust/src/hlo/plan.rs executed for real: per-instruction
+    movable bits and drop lists from the same last_use rule, static
+    InPlace/Fresh tags for dynamic-update-slice, and greedy first-fit
+    arena regions (validated for lifetime disjointness at compile time).
+
+    Execution takes the tags seriously — slots are dropped eagerly the
+    moment last_use passes, parameters/while-states/call-args are taken
+    out of their frames, and an InPlace update mutates the operand's
+    data list (guarded by the uniquely-held check that Arc::try_unwrap
+    performs in Rust, here an identity scan over every live frame plus
+    the caller-held inputs).  A wrong plan therefore corrupts a later
+    read and diverges from the tree walk instead of hiding."""
+
+    def __init__(self, comps, entry):
+        super().__init__(comps, entry)
+        self.plans = {c: self.compile_comp(c) for c in comps}
+        self.frames = []
+        self.external = []
+        self.in_place = 0
+        self.copied = 0
+
+    def compile_comp(self, cname):
+        instrs, slot_of, root = self.comps[cname]
+        n = len(instrs)
+        # a never-read slot dies where it is defined; the root is pinned
+        # past the end (same rule as Computation::last_use in ir.rs)
+        lu = list(range(n))
+        for i, (op, ops, _ty, _at, _lit) in enumerate(instrs):
+            if op == "parameter":
+                continue
+            for o in ops:
+                s = slot_of.get(o)
+                if s is not None:
+                    lu[s] = max(lu[s], i)
+        lu[root] = n
+        movable, drops, write = [], [], []
+        for i, (op, ops, _ty, _at, _lit) in enumerate(instrs):
+            if op == "parameter":
+                slots = []
+            else:
+                slots = [slot_of[o] for o in ops if o in slot_of]
+            mv = [lu[s] == i and slots.count(s) == 1 for s in slots]
+            movable.append(mv)
+            drops.append(sorted({s for s in slots if lu[s] == i}))
+            w = None
+            if op == "dynamic-update-slice":
+                w = "in_place" if mv and mv[0] else "fresh"
+            write.append(w)
+        region_of, n_regions = self.assign_regions(lu)
+        self.check_regions(cname, lu, region_of, n_regions)
+        return (lu, movable, drops, write)
+
+    @staticmethod
+    def assign_regions(lu):
+        # greedy first-fit over [def, last_use] lifetimes, as in plan.rs
+        region_of, region_end = [], []
+        for s, end in enumerate(lu):
+            for r in range(len(region_end)):
+                if region_end[r] < s:
+                    region_of.append(r)
+                    region_end[r] = end
+                    break
+            else:
+                region_of.append(len(region_end))
+                region_end.append(end)
+        return region_of, len(region_end)
+
+    @staticmethod
+    def check_regions(cname, lu, region_of, n_regions):
+        # first-fit assigns in definition order, so within a region the
+        # consecutive-pair check proves pairwise lifetime disjointness
+        last = [None] * n_regions
+        for s, r in enumerate(region_of):
+            if last[r] is not None:
+                assert lu[last[r]] < s, (
+                    f"{cname}: region {r} slots {last[r]} and {s} overlap"
+                )
+            last[r] = s
+
+    @staticmethod
+    def pairs_in(v):
+        out = []
+        def go(x):
+            if x is None:
+                return
+            if isinstance(x, tuple) and len(x) == 2 and isinstance(x[0], list):
+                out.append(x)
+            elif isinstance(x, (tuple, list)):
+                for e in x:
+                    go(e)
+        go(v)
+        return out
+
+    def holders(self, data):
+        n = sum(1 for lst in self.external if lst is data)
+        for vals, args in self.frames:
+            for v in vals:
+                n += sum(1 for p in self.pairs_in(v) if p[1] is data)
+            for a in args:
+                n += sum(1 for p in self.pairs_in(a) if p[1] is data)
+        return n
+
+    def run(self, args):
+        # the caller keeps its references, exactly like run_entry taking
+        # &[Value]: input buffers are never uniquely held by the frames
+        self.external = [p[1] for p in self.pairs_in(args)]
+        return self.eval(self.entry, list(args))
+
+    def eval(self, cname, args):
+        instrs, slot_of, root = self.comps[cname]
+        _lu, movable, drops, write = self.plans[cname]
+        vals = [None] * len(instrs)
+        self.frames.append((vals, args))
+        try:
+            for i, (op, ops, ty, attrs, lit) in enumerate(instrs):
+                slots = [slot_of.get(o) for o in ops]
+                try:
+                    vals[i] = self.step(
+                        op, slots, ops, ty, attrs, lit, vals, args,
+                        movable[i], write[i],
+                    )
+                except AssertionError:
+                    raise
+                except Exception as e:
+                    raise AssertionError(
+                        f"planned {cname} instr {i} ({op}): {e}"
+                    ) from e
+                for s in drops[i]:
+                    vals[s] = None
+            out = vals[root]
+            vals[root] = None
+            return out
+        finally:
+            self.frames.pop()
+
+    def step(self, op, slots, opnames, ty, attrs, lit, vals, args, mv, wr):
+        if op == "parameter":
+            k = int(opnames[0])
+            v = args[k]
+            args[k] = None  # take: mirrors the owned-arg threading
+            return v
+        if op == "while":
+            state = vals[slots[0]]
+            if mv[0]:
+                vals[slots[0]] = None
+            cond, body = attrs["condition"], attrs["body"]
+            for _ in range(10_000_000):
+                _, cdata = self.eval(cond, [state])
+                if not cdata[0]:
+                    return state
+                ba = [state]
+                state = None  # the loop must be the only holder
+                state = self.eval(body, ba)
+            raise AssertionError("while overflow")
+        if op == "call":
+            cargs = []
+            for k, s in enumerate(slots):
+                cargs.append(vals[s])
+                if mv[k]:
+                    vals[s] = None
+            return self.eval(attrs["to_apply"], cargs)
+        if op == "dynamic-update-slice":
+            ss, src = vals[slots[0]]
+            us, upd = vals[slots[1]]
+            starts = []
+            for d in range(len(ss)):
+                _, sv = vals[slots[2 + d]]
+                starts.append(max(0, min(sv[0], ss[d] - us[d])))
+            if wr == "in_place" and self.holders(src) == 1:
+                out = src  # true aliasing: a wrong tag corrupts a reader
+                vals[slots[0]] = None
+                self.in_place += 1
+            else:
+                out = list(src)
+                self.copied += 1
+            st = strides_of(ss)
+            idx = [0] * len(us)
+            for k in range(nelem(us)):
+                out[sum((starts[d] + idx[d]) * st[d] for d in range(len(ss)))] = upd[k]
+                inc(idx, us)
+            return (ss, out)
+        return self.instr(op, slots, opnames, ty, attrs, lit, vals, args)
+
 def load(path):
     comps, entry = parse_module_ir(path)
     return Ev(comps, entry)
+
+def flat(v):
+    out = []
+    def go(x):
+        if isinstance(x, tuple) and len(x) == 2 and isinstance(x[0], list):
+            out.append((tuple(x[0]), tuple(x[1])))
+        else:
+            for e in x:
+                go(e)
+    go(v)
+    return out
+
+def run_both(path, args_builder):
+    """Run a module through the tree walk AND the planned evaluator on
+    independently built inputs; assert exact (bit-level) agreement and
+    return the tree-walk result."""
+    comps, entry = parse_module_ir(path)
+    tree = Ev(comps, entry).run(args_builder())
+    planned = Planned(comps, entry).run(args_builder())
+    assert flat(tree) == flat(planned), f"{path}: planned != tree walk"
+    return tree
 
 def maxdiff(a, b):
     return max(abs(x - y) for x, y in zip(a, b))
 
 import os
+import sys
+import tempfile
 A = os.environ.get("MEMDYN_ARTIFACTS") or os.path.join(os.path.dirname(__file__), "..", "artifacts")
 
+# --- 0. synthetic plan-vs-tree self-check (always runs, no artifacts) ----
+SYN_LOOP = """HloModule syn_loop
+cond.1 {
+  p.2 = (f32[8], s32[]) parameter(0)
+  i.3 = s32[] get-tuple-element(p.2), index=1
+  c.4 = s32[] constant(4)
+  ROOT lt.5 = pred[] compare(i.3, c.4), direction=LT
+}
+body.6 {
+  p.7 = (f32[8], s32[]) parameter(0)
+  buf.8 = f32[8] get-tuple-element(p.7), index=0
+  i.9 = s32[] get-tuple-element(p.7), index=1
+  one.10 = f32[1] constant({1})
+  upd.11 = f32[8] dynamic-update-slice(buf.8, one.10, i.9)
+  c.12 = s32[] constant(1)
+  ni.13 = s32[] add(i.9, c.12)
+  ROOT t.14 = (f32[8], s32[]) tuple(upd.11, ni.13)
+}
+ENTRY main.15 {
+  z.16 = f32[8] parameter(0)
+  c.17 = s32[] constant(0)
+  t.18 = (f32[8], s32[]) tuple(z.16, c.17)
+  w.19 = (f32[8], s32[]) while(t.18), condition=cond.1, body=body.6
+  ROOT g.20 = f32[8] get-tuple-element(w.19), index=0
+}
+"""
+
+SYN_ALIAS = """HloModule syn_alias
+cond.1 {
+  p.2 = (f32[4], s32[]) parameter(0)
+  i.3 = s32[] get-tuple-element(p.2), index=1
+  c.4 = s32[] constant(4)
+  ROOT lt.5 = pred[] compare(i.3, c.4), direction=LT
+}
+body.6 {
+  p.7 = (f32[4], s32[]) parameter(0)
+  buf.8 = f32[4] get-tuple-element(p.7), index=0
+  i.9 = s32[] get-tuple-element(p.7), index=1
+  nine.10 = f32[1] constant({9})
+  upd.11 = f32[4] dynamic-update-slice(buf.8, nine.10, i.9)
+  c.12 = s32[] constant(1)
+  ni.13 = s32[] add(i.9, c.12)
+  ROOT t.14 = (f32[4], s32[]) tuple(upd.11, ni.13)
+}
+ENTRY main.15 {
+  z.16 = f32[4] parameter(0)
+  c.17 = s32[] constant(0)
+  t.18 = (f32[4], s32[]) tuple(z.16, c.17)
+  w.19 = (f32[4], s32[]) while(t.18), condition=cond.1, body=body.6
+  wb.20 = f32[4] get-tuple-element(w.19), index=0
+  ROOT s.21 = f32[4] add(wb.20, z.16)
+}
+"""
+
+def syn_check(name, text, args_builder, want):
+    with tempfile.NamedTemporaryFile(
+        "w", suffix=".hlo.txt", delete=False
+    ) as f:
+        f.write(text)
+        path = f.name
+    try:
+        comps, entry = parse_module_ir(path)
+        tree = Ev(comps, entry).run(args_builder())
+        pl = Planned(comps, entry)
+        got = pl.run(args_builder())
+        assert flat(tree) == flat(got), f"{name}: planned != tree walk"
+        _, td = tree
+        assert td == want, f"{name}: {td} != {want}"
+        return pl
+    finally:
+        os.unlink(path)
+
+pl = syn_check(
+    "syn_loop", SYN_LOOP, lambda: [([8], [0.0] * 8)], [1.0] * 4 + [0.0] * 4
+)
+# the mirror must have really updated in place: iteration 1 copies (the
+# caller still holds the input buffer), iterations 2-4 reuse — the same
+# split the Rust dus_in_place/dus_copied counters pin down
+assert pl.in_place >= 3, f"planned mirror never went in place ({pl.in_place})"
+assert pl.copied >= 1, "iteration 1 must copy the caller-held buffer"
+pl2 = syn_check(
+    "syn_alias",
+    SYN_ALIAS,
+    lambda: [([4], [1.0, 2.0, 3.0, 4.0])],
+    [10.0, 11.0, 12.0, 13.0],
+)
+print(
+    f"synthetic plan-vs-tree self-check passed "
+    f"(in_place={pl.in_place}, copied={pl.copied + pl2.copied})"
+)
+
+if not os.path.exists(f"{A}/resnet/stem_b1.hlo.txt"):
+    print(f"SKIP artifact cross-checks: no artifacts at {A}")
+    sys.exit(0)
+
 # --- 1. resnet stem b1 vs b8 --------------------------------------------
+# b1 variants run through BOTH evaluators (planned vs tree walk, exact
+# agreement); the big-batch variants stay tree-only for runtime's sake.
 img = [((i * 37 % 97) / 96.0) for i in range(28 * 28)]
-stem1 = load(f"{A}/resnet/stem_b1.hlo.txt")
-r1 = stem1.run([([1, 28, 28, 1], img)])
+r1 = run_both(f"{A}/resnet/stem_b1.hlo.txt", lambda: [([1, 28, 28, 1], list(img))])
 r1 = r1 if isinstance(r1, tuple) else (r1,)
 (s1, o1), = r1
 assert s1 == [1, 28, 28, 16], s1
@@ -455,8 +777,7 @@ print(f"stem b1-vs-b8 max diff: {d:.2e}")
 assert d < 1e-4
 
 # --- 2. resnet block_00_b1 ----------------------------------------------
-blk = load(f"{A}/resnet/block_00_b1.hlo.txt")
-rb = blk.run([(s1, o1)])
+rb = run_both(f"{A}/resnet/block_00_b1.hlo.txt", lambda: [(list(s1), list(o1))])
 (bs, bo), (vs_, vo) = rb
 assert bs == [1, 28, 28, 16] and vs_ == [1, 16], (bs, vs_)
 assert all(math.isfinite(v) for v in bo + vo)
@@ -466,8 +787,7 @@ print("block_00_b1: shapes ok, outputs finite, sv:", [round(v, 4) for v in vo[:4
 import random
 random.seed(7)
 cloud = [random.uniform(-1, 1) for _ in range(256 * 3)]
-sa1 = load(f"{A}/pointnet/sa_0_b1.hlo.txt")
-p1 = sa1.run([([1, 256, 3], cloud)])
+p1 = run_both(f"{A}/pointnet/sa_0_b1.hlo.txt", lambda: [([1, 256, 3], list(cloud))])
 (x1s, x1), (f1s, f1), (v1s, v1) = p1
 assert x1s == [1, 128, 3] and f1s == [1, 128, 24] and v1s == [1, 24], (x1s, f1s, v1s)
 sa4 = load(f"{A}/pointnet/sa_0_b4.hlo.txt")

@@ -205,28 +205,32 @@ class Ev:
             idx[d] = 0
 
 import os
-A = os.environ.get("MEMDYN_ARTIFACTS") or os.path.join(os.path.dirname(__file__), "..", "artifacts")
-comps, entry = parse_module_ir(os.path.join(A, "kernels", "cim_smoke.hlo.txt"))
-ev = Ev(comps, entry)
-m, k = 16, 128
-x = [(((i % 7) - 3.0) / 3.0) for i in range(m*k)]
-res = ev.run([([m, k], x)])
-(oshape, out), = (res,) if not isinstance(res, tuple) else res
-# reference: plain matmul against the constant weight in the ENTRY
-instrs, slot_of, root = comps[entry]
-wconst = None
-for op, ops, ty, attrs, lit in instrs:
-    if op == "constant" and ty[2] == [128, 32]:
-        wconst = [fnum(w) for w in lit]
-assert wconst is not None
-n = 32
-want = [0.0]*(m*n)
-for i in range(m):
-    for kk in range(k):
-        for j in range(n):
-            want[i*n+j] += x[i*k+kk] * wconst[kk*n+j]
-assert oshape == [16, 32], oshape
-bad = [(a, b) for a, b in zip(out, want) if abs(a-b) > 1e-3]
-assert not bad, bad[:5]
-print("OK: cim_smoke tiled while-loop matmul == plain matmul (16x128x32), max err",
-      max(abs(a-b) for a, b in zip(out, want)))
+
+# Guarded like check_hlo_parse: importers (check_hlo_eval) only need the
+# parser + Ev helpers and must not require an artifact tree.
+if __name__ == "__main__":
+    A = os.environ.get("MEMDYN_ARTIFACTS") or os.path.join(os.path.dirname(__file__), "..", "artifacts")
+    comps, entry = parse_module_ir(os.path.join(A, "kernels", "cim_smoke.hlo.txt"))
+    ev = Ev(comps, entry)
+    m, k = 16, 128
+    x = [(((i % 7) - 3.0) / 3.0) for i in range(m*k)]
+    res = ev.run([([m, k], x)])
+    (oshape, out), = (res,) if not isinstance(res, tuple) else res
+    # reference: plain matmul against the constant weight in the ENTRY
+    instrs, slot_of, root = comps[entry]
+    wconst = None
+    for op, ops, ty, attrs, lit in instrs:
+        if op == "constant" and ty[2] == [128, 32]:
+            wconst = [fnum(w) for w in lit]
+    assert wconst is not None
+    n = 32
+    want = [0.0]*(m*n)
+    for i in range(m):
+        for kk in range(k):
+            for j in range(n):
+                want[i*n+j] += x[i*k+kk] * wconst[kk*n+j]
+    assert oshape == [16, 32], oshape
+    bad = [(a, b) for a, b in zip(out, want) if abs(a-b) > 1e-3]
+    assert not bad, bad[:5]
+    print("OK: cim_smoke tiled while-loop matmul == plain matmul (16x128x32), max err",
+          max(abs(a-b) for a, b in zip(out, want)))
