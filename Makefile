@@ -4,10 +4,11 @@
 #                    block to HLO text under artifacts/ (needs python+jax);
 #                    activates the artifact-gated Rust tests and figures
 #   make ci          the full tier-1 + hygiene gate (what CI runs)
+#   make lint        the determinism/hygiene source lint (selftest first)
 #   make test        cargo test only
 #   make bench       the figure/hotpath bench binaries (release)
 
-.PHONY: artifacts ci test bench clean-artifacts
+.PHONY: artifacts ci lint test bench clean-artifacts
 
 ARTIFACTS_DIR := artifacts
 
@@ -16,6 +17,10 @@ artifacts:
 
 ci:
 	./ci.sh
+
+lint:
+	python3 tools/lint_invariants.py --selftest
+	python3 tools/lint_invariants.py
 
 test:
 	cargo test -q

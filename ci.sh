@@ -29,6 +29,14 @@ python3 tools/check_shard_serving.py
 echo "== HLO eval mirror: planned vs tree walk (pure stdlib) =="
 python3 tools/check_hlo_eval.py
 
+# Determinism + hygiene lint: wall-clock/RNG/HashMap-order isolation,
+# counter-name drift against docs/OBSERVABILITY.md, every mirror wired
+# into this script, missing_docs kept on.  The selftest seeds one
+# violation per rule class first, so the linter itself is gated.
+echo "== determinism lint (selftest, then the tree) =="
+python3 tools/lint_invariants.py --selftest
+python3 tools/lint_invariants.py
+
 echo "== cargo fmt --check =="
 cargo fmt --all --check
 
@@ -61,6 +69,9 @@ python3 tools/check_obs_trace.py target/trace_demo.jsonl
 # artifacts; skipped on a fresh checkout, exercised by the CI artifact job.
 echo "== backend smoke matrix (native + xla, infer + sharded serve) =="
 if [ -f artifacts/index.json ]; then
+    echo "== HLO grammar + smoke mirrors (pure stdlib, artifact-gated) =="
+    python3 tools/check_hlo_parse.py
+    python3 tools/check_hlo_smoke.py
     cargo run --release --quiet -- infer --index 0 --backend native
     cargo run --release --quiet -- infer --index 0 --backend xla
     cargo run --release --quiet -- serve --requests 40 --rate 2000 \

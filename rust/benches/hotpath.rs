@@ -390,7 +390,7 @@ ENTRY main.15 {
 }
 ";
     let module = memdyn::hlo::parse(loop_text).expect("bench module parses");
-    let interp = memdyn::hlo::Interpreter::new(module);
+    let interp = memdyn::hlo::Interpreter::new(module).expect("bench module verifies");
     let loop_arg = [memdyn::hlo::Value::arr(memdyn::hlo::ArrayVal {
         shape: vec![256],
         data: memdyn::hlo::Data::F32(vec![0.0; 256]),
@@ -411,6 +411,27 @@ ENTRY main.15 {
         );
     }
     memdyn::hlo::plan::set_enabled(true);
+
+    // --- load-time static verification (hlo::verify) ----------------------
+    // full load path (parse + verify + plan compile) with the verifier on
+    // vs off — the explicit cost of the two static passes.  Load rides the
+    // per-path executable cache, so on the serve path this amortizes to
+    // zero; the steady-state serve rows above must stay within noise of
+    // each other regardless of this toggle (asserted by the determinism
+    // sweep, measured here).
+    for (tag, on) in [("on", true), ("off", false)] {
+        memdyn::hlo::verify::set_enabled(on);
+        println!(
+            "{}",
+            b.run(&format!("hlo_load_verify_{tag}"), || {
+                let m = memdyn::hlo::parse(loop_text).expect("bench module parses");
+                let i = memdyn::hlo::Interpreter::new(m).expect("bench module verifies");
+                i.module().comps.len()
+            })
+            .report()
+        );
+    }
+    memdyn::hlo::verify::set_enabled(true);
 
     // --- CAM search --------------------------------------------------------
     let centers: Vec<i8> = (0..10 * 32).map(|_| [-1i8, 0, 1][rng.below(3)]).collect();

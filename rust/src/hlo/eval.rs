@@ -77,6 +77,7 @@ use super::ir::{
     ScatterDims, Type,
 };
 use super::plan::{self, ModulePlan, Step, WriteMode};
+use super::verify::{self, VerifyError};
 
 /// A runtime value: a tensor or a tuple of values. Tensors are behind an
 /// `Arc`, so tuple plumbing (`get-tuple-element`, `while` carries) is a
@@ -538,7 +539,37 @@ pub struct Interpreter {
 const MAX_WHILE_ITERS: usize = 10_000_000;
 
 impl Interpreter {
-    pub fn new(module: Module) -> Self {
+    /// Build the executable form of a parsed module, running both
+    /// static-verification passes (`hlo::verify`) before any execution:
+    /// the module pass ahead of plan compilation (the planner indexes by
+    /// operand slot, so it must only see resolved references) and the
+    /// plan pass on the compiled step programs.  `verify::set_enabled
+    /// (false)` skips both — the bench ablation switch.  The verifier
+    /// rides the per-path executable cache, so its cost amortizes to
+    /// zero on the serve path.
+    pub fn new(module: Module) -> std::result::Result<Self, VerifyError> {
+        if verify::enabled() {
+            verify::verify_module(&module)?;
+        }
+        let scalar_ok = compute_scalar_ok(&module);
+        let packed_consts = scan_ternary_dot_constants(&module);
+        let plan = plan::compile(&module, &packed_consts);
+        if verify::enabled() {
+            verify::verify_plan(&module, &plan)?;
+        }
+        Ok(Interpreter {
+            module,
+            scalar_ok,
+            packed_consts,
+            plan,
+        })
+    }
+
+    /// Build without the load-time verifier, regardless of the toggle.
+    /// Defense-in-depth tests use this to reach the eval-time guards a
+    /// verified module can never trip (the evaluator keeps its own
+    /// checks — rejection at load does not replace them).
+    pub fn new_unverified(module: Module) -> Self {
         let scalar_ok = compute_scalar_ok(&module);
         let packed_consts = scan_ternary_dot_constants(&module);
         let plan = plan::compile(&module, &packed_consts);
@@ -1788,7 +1819,7 @@ mod tests {
     use crate::hlo::parser::parse;
 
     fn run1(text: &str, inputs: &[Value]) -> Value {
-        let interp = Interpreter::new(parse(text).unwrap());
+        let interp = Interpreter::new(parse(text).unwrap()).unwrap();
         interp.run_entry(inputs).unwrap()
     }
 
@@ -1843,7 +1874,7 @@ ENTRY main.5 {
   ROOT r.8 = f32[2]{0} reduce(x.6, z.7), dimensions={1}, to_apply=add.1
 }
 ";
-        let interp = Interpreter::new(parse(text).unwrap());
+        let interp = Interpreter::new(parse(text).unwrap()).unwrap();
         assert!(interp.scalar_ok[0], "add region should be scalar-evaluable");
         let out = interp
             .run_entry(&[f32_input(&[2, 3], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0])])
@@ -1863,7 +1894,7 @@ ENTRY main.1 {
   ROOT d.4 = f32[2,2]{1,0} dot(x.2, w.3), lhs_contracting_dims={1}, rhs_contracting_dims={0}
 }
 ";
-        let interp = Interpreter::new(parse(text).unwrap());
+        let interp = Interpreter::new(parse(text).unwrap()).unwrap();
         let pt = interp.packed_consts[0]
             .get(&1)
             .expect("ternary constant must pre-pack");
@@ -1885,7 +1916,7 @@ ENTRY main.1 {
   ROOT d.4 = f32[2,2]{1,0} dot(x.2, w.3), lhs_contracting_dims={1}, rhs_contracting_dims={0}
 }
 ";
-        let interp = Interpreter::new(parse(text).unwrap());
+        let interp = Interpreter::new(parse(text).unwrap()).unwrap();
         assert!(interp.packed_consts[0].is_empty());
     }
 
@@ -1936,7 +1967,7 @@ ENTRY main.15 {
   ROOT g.21 = f32[8]{0} get-tuple-element(w.20), index=0
 }
 ";
-        let interp = Interpreter::new(parse(text).unwrap());
+        let interp = Interpreter::new(parse(text).unwrap()).unwrap();
         let runs_before = plan::run_count();
         let planned = interp.eval_comp_planned(interp.module.entry, &[]).unwrap();
         assert!(plan::run_count() > runs_before, "planned loop must run");
@@ -1964,7 +1995,9 @@ ENTRY main.5 {
   ROOT s.6 = f32[4]{0} sort(), dimensions={0}, to_apply=cmp.1
 }
 ";
-        let interp = Interpreter::new(parse(text).unwrap());
+        // the verifier rejects this at load; build unverified to prove
+        // the eval-time guard still stands on its own
+        let interp = Interpreter::new_unverified(parse(text).unwrap());
         let planned = interp.eval_comp_planned(interp.module.entry, &[]);
         let tree = interp.run_entry_tree(&[]);
         for res in [planned, tree] {
@@ -1989,7 +2022,7 @@ ENTRY main.5 {
   ROOT r.6 = f32[2]{0} reduce(), dimensions={1}, to_apply=add.1
 }
 ";
-        let interp = Interpreter::new(parse(text).unwrap());
+        let interp = Interpreter::new_unverified(parse(text).unwrap());
         let planned = interp.eval_comp_planned(interp.module.entry, &[]);
         let tree = interp.run_entry_tree(&[]);
         for res in [planned, tree] {
@@ -2015,7 +2048,7 @@ ENTRY main.5 {
   ROOT s.7 = f32[4]{0} sort(x.6), dimensions={1}, to_apply=cmp.1
 }
 ";
-        let interp = Interpreter::new(parse(text).unwrap());
+        let interp = Interpreter::new_unverified(parse(text).unwrap());
         let arg = f32_input(&[4], &[3.0, 1.0, 2.0, 4.0]);
         let planned = interp.eval_comp_planned(interp.module.entry, &[arg.clone()]);
         let tree = interp.run_entry_tree(&[arg]);

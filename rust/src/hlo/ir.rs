@@ -50,6 +50,23 @@ impl Type {
             Type::Tuple(_) => 0,
         }
     }
+
+    /// Flat backing-store size in bytes: `f32`/`s32` elements are 4
+    /// bytes, `pred` 1; tuples own no flat buffer (their parts are
+    /// separate values).  `hlo::plan` sizes arena regions with this and
+    /// `hlo::verify` re-checks every resident buffer against it.
+    pub fn byte_size(&self) -> usize {
+        match self {
+            Type::Array(dt, _) => {
+                self.elements()
+                    * match dt {
+                        DType::F32 | DType::S32 => 4,
+                        DType::Pred => 1,
+                    }
+            }
+            Type::Tuple(_) => 0,
+        }
+    }
 }
 
 /// Flat row-major tensor storage, one variant per element type.

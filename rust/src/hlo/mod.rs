@@ -28,10 +28,12 @@ pub mod ir;
 pub mod lexer;
 pub mod parser;
 pub mod plan;
+pub mod verify;
 
 pub use eval::{Interpreter, Value};
 pub use ir::{ArrayVal, Data, DType, Module, Type};
 pub use parser::parse;
+pub use verify::{VerifyError, VerifyErrorKind};
 
 /// Every opcode the interpreter implements — exactly the census of the
 /// shipped artifacts. The conformance test greps the artifacts and

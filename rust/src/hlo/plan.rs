@@ -85,6 +85,11 @@ pub struct CompPlan {
     pub region_of: Vec<usize>,
     /// Number of regions = peak simultaneously live slots.
     pub n_regions: usize,
+    /// Per region: the byte size of the largest buffer ever resident in
+    /// it ([`Type::byte_size`] of every occupant) — the slab size a
+    /// region-backed allocator would reserve, and the bound
+    /// `hlo::verify` checks every resident buffer against.
+    pub region_bytes: Vec<usize>,
 }
 
 /// Per-module plan: one [`CompPlan`] per computation (while/call bodies
@@ -213,11 +218,12 @@ fn compile_comp(c: &Computation, packed: &HashMap<usize, Arc<PackedTernary>>) ->
             }
         })
         .collect();
-    let (region_of, n_regions) = assign_regions(c);
+    let (region_of, region_bytes) = assign_regions(c);
     CompPlan {
         steps,
         region_of,
-        n_regions,
+        n_regions: region_bytes.len(),
+        region_bytes,
     }
 }
 
@@ -225,27 +231,34 @@ fn compile_comp(c: &Computation, packed: &HashMap<usize, Arc<PackedTernary>>) ->
 /// definition order and reuse the first region whose occupant's
 /// `last_use` precedes the new slot's definition.  Slots sharing a
 /// region therefore have disjoint lifetimes, and the region count is
-/// the peak number of simultaneously live slots.
-fn assign_regions(c: &Computation) -> (Vec<usize>, usize) {
+/// the peak number of simultaneously live slots.  Alongside the
+/// assignment, each region records the byte size of its largest
+/// occupant — the slab size a region-backed allocator would reserve.
+fn assign_regions(c: &Computation) -> (Vec<usize>, Vec<usize>) {
     let n = c.instrs.len();
     let mut region_of = vec![0usize; n];
     // per region: last_use of the current occupant
     let mut region_end: Vec<usize> = Vec::new();
+    // per region: max byte size over every occupant so far
+    let mut region_bytes: Vec<usize> = Vec::new();
     for i in 0..n {
         let (def, end) = c.live_range(i);
+        let bytes = c.instrs[i].ty.byte_size();
         let reuse = region_end.iter().position(|&e| e < def);
         region_of[i] = match reuse {
             Some(r) => {
                 region_end[r] = end;
+                region_bytes[r] = region_bytes[r].max(bytes);
                 r
             }
             None => {
                 region_end.push(end);
+                region_bytes.push(bytes);
                 region_end.len() - 1
             }
         };
     }
-    (region_of, region_end.len())
+    (region_of, region_bytes)
 }
 
 #[cfg(test)]
@@ -394,6 +407,14 @@ ENTRY main.1 {
                         cp.region_of[a]
                     );
                 }
+            }
+            // every resident buffer fits its region's recorded slab size
+            assert_eq!(cp.region_bytes.len(), cp.n_regions);
+            for (s, ins) in c.instrs.iter().enumerate() {
+                assert!(
+                    ins.ty.byte_size() <= cp.region_bytes[cp.region_of[s]],
+                    "comp {ci} slot {s} overflows its region"
+                );
             }
             // the region count actually compacts: the body threads a
             // long chain, so some region must be reused

@@ -1,0 +1,1710 @@
+//! Load-time static verification of parsed HLO modules and their
+//! compiled step programs.
+//!
+//! Two passes, both run eagerly by `Interpreter::new` before any
+//! execution (and therefore once per artifact path, amortized to zero
+//! on the serve path by the `runtime::Executable` cache):
+//!
+//! * **Module pass** ([`verify_module`]): every instruction's opcode is
+//!   in the 33-opcode census, operand references resolve to earlier
+//!   slots, operand arity and shape/dtype agree with the declared IR
+//!   types (dot contraction dims, dynamic-update-slice ranks, while
+//!   cond/body signatures, reduce/sort comparator arity — the
+//!   empty-operand panics PR 9 fixed are one instance of the general
+//!   arity rule), and the computation call graph is acyclic.
+//! * **Plan pass** ([`verify_plan`]): re-derives liveness
+//!   **independently** of `Computation::last_use` (a fresh scan over the
+//!   operand lists, so verifier and planner cannot share a bug) and
+//!   checks each [`Step`](super::plan::Step) against it — a movable bit
+//!   on a live-after slot is a hard error, every read slot is dropped
+//!   exactly once at its true last use and never read after its drop
+//!   point, `WriteMode::InPlace` tags appear only where the independent
+//!   liveness says the buffer is uniquely held, and arena regions are
+//!   pairwise lifetime-disjoint with every region sized to hold its
+//!   largest resident buffer.
+//!
+//! Failures surface as a typed [`VerifyError`] carrying the module
+//! name, computation name, and instruction id — instead of downstream
+//! panics or silent mis-optimization.  [`set_enabled`]`(false)` is the
+//! ablation switch (benches measure the load-time delta with it); the
+//! `hlo.verify.{modules,steps,rejects}` counters join `obs::registry`.
+
+use std::fmt;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+use super::ir::{Computation, DType, Instr, Module, Op, Type};
+use super::plan::{ModulePlan, WriteMode};
+use super::SUPPORTED_OPS;
+
+// ---------------------------------------------------------------------------
+// error type
+// ---------------------------------------------------------------------------
+
+/// What a verification pass found wrong, attributed to one instruction.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum VerifyErrorKind {
+    /// Opcode name is outside the 33-opcode census.
+    UnknownOpcode { opcode: String },
+    /// Operand count disagrees with the opcode's arity rule.
+    BadArity {
+        opcode: &'static str,
+        got: usize,
+        want: String,
+    },
+    /// Operand slot index is past the end of the computation.
+    OperandOutOfRange {
+        operand: usize,
+        slot: usize,
+        limit: usize,
+    },
+    /// Operand slot is not defined before its use (definition order).
+    ForwardOperandRef { operand: usize, slot: usize },
+    /// Element types disagree where the opcode requires agreement.
+    DTypeMismatch { detail: String },
+    /// Shapes disagree where the opcode requires agreement.
+    ShapeMismatch { detail: String },
+    /// An attribute payload is malformed (bad permutation, dim out of
+    /// range, literal/shape mismatch, ...).
+    BadAttribute { detail: String },
+    /// `dot` contraction dimension numbers are inconsistent.
+    BadDotContraction { detail: String },
+    /// `dynamic-update-slice` operand/update ranks or extents disagree.
+    BadDusRank { detail: String },
+    /// `get-tuple-element` index past the operand tuple's arity.
+    TupleIndexOutOfRange { index: usize, len: usize },
+    /// `while` cond/body signatures disagree with the carried state.
+    BadWhileSignature { detail: String },
+    /// A `reduce`/`sort`/`scatter` region's signature is malformed.
+    BadRegionSignature { detail: String },
+    /// The computation call graph contains a cycle.
+    CyclicComputation { detail: String },
+    /// Plan vectors are missing or sized inconsistently with the IR.
+    BadPlanShape { detail: String },
+    /// A movable bit is set on a slot that stays live past the step.
+    MovableLiveAfter { operand: usize, slot: usize },
+    /// A movable bit disagrees with the independent liveness rule
+    /// (cleared where it must be set, or set on a repeated operand).
+    BadMovableBit { operand: usize, slot: usize },
+    /// A drop list is wrong: missing, extra, duplicated, or mistimed.
+    BadDrop { detail: String },
+    /// A step reads a slot after the plan dropped it.
+    ReadAfterDrop { slot: usize, dropped_at: usize },
+    /// A `WriteMode` tag disagrees with the independent liveness.
+    BadWriteTag { detail: String },
+    /// Two slots sharing an arena region have overlapping lifetimes.
+    RegionOverlap { detail: String },
+    /// A region is smaller than a buffer resident in it.
+    RegionTooSmall { detail: String },
+}
+
+impl fmt::Display for VerifyErrorKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        use VerifyErrorKind::*;
+        match self {
+            UnknownOpcode { opcode } => write!(f, "unknown opcode `{opcode}`"),
+            BadArity { opcode, got, want } => {
+                write!(f, "`{opcode}` has {got} operands, wants {want}")
+            }
+            OperandOutOfRange {
+                operand,
+                slot,
+                limit,
+            } => write!(
+                f,
+                "operand {operand} references slot {slot}, computation has {limit}"
+            ),
+            ForwardOperandRef { operand, slot } => {
+                write!(f, "operand {operand} references slot {slot} defined later")
+            }
+            DTypeMismatch { detail } => write!(f, "dtype mismatch: {detail}"),
+            ShapeMismatch { detail } => write!(f, "shape mismatch: {detail}"),
+            BadAttribute { detail } => write!(f, "bad attribute: {detail}"),
+            BadDotContraction { detail } => write!(f, "bad dot contraction: {detail}"),
+            BadDusRank { detail } => {
+                write!(f, "bad dynamic-update-slice operands: {detail}")
+            }
+            TupleIndexOutOfRange { index, len } => {
+                write!(f, "tuple index {index} out of range for {len}-tuple")
+            }
+            BadWhileSignature { detail } => write!(f, "bad while signature: {detail}"),
+            BadRegionSignature { detail } => {
+                write!(f, "bad region signature: {detail}")
+            }
+            CyclicComputation { detail } => {
+                write!(f, "cyclic computation graph: {detail}")
+            }
+            BadPlanShape { detail } => write!(f, "bad plan shape: {detail}"),
+            MovableLiveAfter { operand, slot } => write!(
+                f,
+                "movable bit on operand {operand} (slot {slot}) still live after the step"
+            ),
+            BadMovableBit { operand, slot } => write!(
+                f,
+                "movable bit on operand {operand} (slot {slot}) disagrees with liveness"
+            ),
+            BadDrop { detail } => write!(f, "bad drop list: {detail}"),
+            ReadAfterDrop { slot, dropped_at } => {
+                write!(f, "slot {slot} read after its drop at step {dropped_at}")
+            }
+            BadWriteTag { detail } => write!(f, "bad write tag: {detail}"),
+            RegionOverlap { detail } => write!(f, "region overlap: {detail}"),
+            RegionTooSmall { detail } => write!(f, "region too small: {detail}"),
+        }
+    }
+}
+
+/// A static-verification failure: which module, computation, and
+/// instruction, plus the typed defect.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct VerifyError {
+    /// `HloModule` name from the artifact text.
+    pub module: String,
+    /// Name of the computation holding the offending instruction.
+    pub comp: String,
+    /// Definition-order slot of the offending instruction (0 for
+    /// whole-computation defects such as cycles).
+    pub instr: usize,
+    /// The typed defect.
+    pub kind: VerifyErrorKind,
+}
+
+impl fmt::Display for VerifyError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "hlo verify: module {}, computation {}, instruction #{}: {}",
+            self.module, self.comp, self.instr, self.kind
+        )
+    }
+}
+
+impl std::error::Error for VerifyError {}
+
+// ---------------------------------------------------------------------------
+// observability: counters and the process-wide toggle
+// ---------------------------------------------------------------------------
+
+static VERIFY_ENABLED: AtomicBool = AtomicBool::new(true);
+/// Modules that passed both passes.
+static VERIFY_MODULES: AtomicU64 = AtomicU64::new(0);
+/// Plan steps checked across all verified modules.
+static VERIFY_STEPS: AtomicU64 = AtomicU64::new(0);
+/// Verification failures (either pass).
+static VERIFY_REJECTS: AtomicU64 = AtomicU64::new(0);
+
+/// Process-wide toggle for load-time verification (default on).  Off,
+/// `Interpreter::new` skips both passes — the bench ablation switch,
+/// exactly like `plan::set_enabled` / `cim::packed::set_enabled`.
+pub fn set_enabled(on: bool) {
+    VERIFY_ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// True when `Interpreter::new` runs the verifier.
+pub fn enabled() -> bool {
+    VERIFY_ENABLED.load(Ordering::Relaxed)
+}
+
+/// Process-wide count of modules that verified clean (both passes).
+/// Monotone; tests assert on deltas.
+pub fn modules_count() -> u64 {
+    VERIFY_MODULES.load(Ordering::Relaxed)
+}
+
+/// Process-wide count of plan steps checked by the plan pass.  Monotone.
+pub fn steps_count() -> u64 {
+    VERIFY_STEPS.load(Ordering::Relaxed)
+}
+
+/// Process-wide count of verification rejections (either pass).
+/// Monotone; the artifact sweep asserts this stays zero.
+pub fn rejects_count() -> u64 {
+    VERIFY_REJECTS.load(Ordering::Relaxed)
+}
+
+// ---------------------------------------------------------------------------
+// shared helpers
+// ---------------------------------------------------------------------------
+
+fn err(m: &Module, ci: usize, i: usize, kind: VerifyErrorKind) -> VerifyError {
+    VerifyError {
+        module: m.name.clone(),
+        comp: m.comps.get(ci).map(|c| c.name.clone()).unwrap_or_default(),
+        instr: i,
+        kind,
+    }
+}
+
+fn as_array(ty: &Type) -> Option<(DType, &[usize])> {
+    match ty {
+        Type::Array(dt, d) => Some((*dt, d)),
+        Type::Tuple(_) => None,
+    }
+}
+
+fn is_scalar_s32(ty: &Type) -> bool {
+    matches!(ty, Type::Array(DType::S32, d) if d.is_empty())
+}
+
+fn is_scalar_array(ty: &Type) -> bool {
+    matches!(ty, Type::Array(_, d) if d.is_empty())
+}
+
+/// Ceil-div for slice output extents (`b >= 1` checked by the caller).
+fn ceil_div(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}
+
+// ---------------------------------------------------------------------------
+// module pass
+// ---------------------------------------------------------------------------
+
+/// Verify a parsed module: opcode census, operand resolution, arity,
+/// per-opcode shape/dtype rules, and call-graph acyclicity.  Runs
+/// before plan compilation (the planner indexes by operand slot, so it
+/// must only ever see resolved references).
+pub fn verify_module(m: &Module) -> Result<(), VerifyError> {
+    let r = verify_module_inner(m);
+    if r.is_err() {
+        VERIFY_REJECTS.fetch_add(1, Ordering::Relaxed);
+    }
+    r
+}
+
+fn verify_module_inner(m: &Module) -> Result<(), VerifyError> {
+    verify_comp_graph(m)?;
+    for (ci, c) in m.comps.iter().enumerate() {
+        verify_comp(m, ci, c)?;
+    }
+    Ok(())
+}
+
+/// Computation references resolve and form a DAG (iterative
+/// three-color DFS; a back edge is a cycle).
+fn verify_comp_graph(m: &Module) -> Result<(), VerifyError> {
+    if m.entry >= m.comps.len() {
+        return Err(err(
+            m,
+            0,
+            0,
+            VerifyErrorKind::BadAttribute {
+                detail: format!(
+                    "entry index {} out of range for {} computations",
+                    m.entry,
+                    m.comps.len()
+                ),
+            },
+        ));
+    }
+    // collect child refs, validating indices as we go
+    let mut children: Vec<Vec<usize>> = Vec::with_capacity(m.comps.len());
+    for (ci, c) in m.comps.iter().enumerate() {
+        let mut kids = Vec::new();
+        for (i, ins) in c.instrs.iter().enumerate() {
+            let refs: Vec<usize> = match &ins.op {
+                Op::Call { comp }
+                | Op::Reduce { comp, .. }
+                | Op::Sort { comp, .. }
+                | Op::Scatter { comp, .. } => vec![*comp],
+                Op::While { cond, body } => vec![*cond, *body],
+                _ => Vec::new(),
+            };
+            for r in refs {
+                if r >= m.comps.len() {
+                    return Err(err(
+                        m,
+                        ci,
+                        i,
+                        VerifyErrorKind::BadAttribute {
+                            detail: format!(
+                                "computation reference {r} out of range for {}",
+                                m.comps.len()
+                            ),
+                        },
+                    ));
+                }
+                kids.push(r);
+            }
+        }
+        children.push(kids);
+    }
+    // 0 = white, 1 = gray (on stack), 2 = black
+    let mut color = vec![0u8; m.comps.len()];
+    for start in 0..m.comps.len() {
+        if color[start] != 0 {
+            continue;
+        }
+        // (comp, next child index)
+        let mut stack: Vec<(usize, usize)> = vec![(start, 0)];
+        color[start] = 1;
+        while let Some(&mut (ci, ref mut next)) = stack.last_mut() {
+            if *next < children[ci].len() {
+                let child = children[ci][*next];
+                *next += 1;
+                match color[child] {
+                    0 => {
+                        color[child] = 1;
+                        stack.push((child, 0));
+                    }
+                    1 => {
+                        return Err(err(
+                            m,
+                            ci,
+                            0,
+                            VerifyErrorKind::CyclicComputation {
+                                detail: format!(
+                                    "{} reaches {} which is already on the call stack",
+                                    m.comps[ci].name, m.comps[child].name
+                                ),
+                            },
+                        ));
+                    }
+                    _ => {}
+                }
+            } else {
+                color[ci] = 2;
+                stack.pop();
+            }
+        }
+    }
+    Ok(())
+}
+
+fn verify_comp(m: &Module, ci: usize, c: &Computation) -> Result<(), VerifyError> {
+    if c.root >= c.instrs.len() {
+        return Err(err(
+            m,
+            ci,
+            0,
+            VerifyErrorKind::BadAttribute {
+                detail: format!(
+                    "root slot {} out of range for {} instructions",
+                    c.root,
+                    c.instrs.len()
+                ),
+            },
+        ));
+    }
+    for (o, &slot) in c.params.iter().enumerate() {
+        let ok = slot < c.instrs.len()
+            && matches!(c.instrs[slot].op, Op::Parameter(p) if p == o);
+        if !ok {
+            return Err(err(
+                m,
+                ci,
+                slot.min(c.instrs.len().saturating_sub(1)),
+                VerifyErrorKind::BadAttribute {
+                    detail: format!("parameter ordinal {o} does not map to a parameter({o})"),
+                },
+            ));
+        }
+    }
+    for (i, ins) in c.instrs.iter().enumerate() {
+        // census: the closed Op enum should make this unreachable, but
+        // it pins Op::name against SUPPORTED_OPS drift
+        if !SUPPORTED_OPS.contains(&ins.op.name()) {
+            return Err(err(
+                m,
+                ci,
+                i,
+                VerifyErrorKind::UnknownOpcode {
+                    opcode: ins.op.name().to_string(),
+                },
+            ));
+        }
+        // operand resolution: in range, defined earlier
+        for (k, &slot) in ins.operands.iter().enumerate() {
+            if slot >= c.instrs.len() {
+                return Err(err(
+                    m,
+                    ci,
+                    i,
+                    VerifyErrorKind::OperandOutOfRange {
+                        operand: k,
+                        slot,
+                        limit: c.instrs.len(),
+                    },
+                ));
+            }
+            if slot >= i {
+                return Err(err(
+                    m,
+                    ci,
+                    i,
+                    VerifyErrorKind::ForwardOperandRef { operand: k, slot },
+                ));
+            }
+        }
+        verify_instr(m, ci, c, i, ins)?;
+    }
+    Ok(())
+}
+
+/// Arity + per-opcode shape/dtype rules for one instruction.  Operand
+/// references are already validated, so indexing `c.instrs` by operand
+/// slot is safe.
+fn verify_instr(
+    m: &Module,
+    ci: usize,
+    c: &Computation,
+    i: usize,
+    ins: &Instr,
+) -> Result<(), VerifyError> {
+    let bad_arity = |want: &str| {
+        Err(err(
+            m,
+            ci,
+            i,
+            VerifyErrorKind::BadArity {
+                opcode: ins.op.name(),
+                got: ins.operands.len(),
+                want: want.to_string(),
+            },
+        ))
+    };
+    let need = |n: usize, want: &str| -> Result<(), VerifyError> {
+        if ins.operands.len() != n {
+            bad_arity(want)
+        } else {
+            Ok(())
+        }
+    };
+    let oty = |k: usize| -> &Type { &c.instrs[ins.operands[k]].ty };
+    let shape_err = |detail: String| Err(err(m, ci, i, VerifyErrorKind::ShapeMismatch { detail }));
+    let dtype_err = |detail: String| Err(err(m, ci, i, VerifyErrorKind::DTypeMismatch { detail }));
+    let attr_err = |detail: String| Err(err(m, ci, i, VerifyErrorKind::BadAttribute { detail }));
+    // declared result as array (most opcodes); tuple-typed results are
+    // handled per opcode below
+    let out_arr = as_array(&ins.ty);
+
+    match &ins.op {
+        Op::Parameter(o) => {
+            need(0, "0")?;
+            if *o >= c.params.len() || c.params[*o] != i {
+                return attr_err(format!("parameter ordinal {o} not registered at slot {i}"));
+            }
+        }
+        Op::Constant(val) => {
+            need(0, "0")?;
+            let Some((dt, dims)) = out_arr else {
+                return attr_err("constant with tuple result type".into());
+            };
+            if val.dtype() != dt {
+                return dtype_err(format!(
+                    "constant literal is {}, declared {}",
+                    val.dtype().name(),
+                    dt.name()
+                ));
+            }
+            if val.shape != dims {
+                return attr_err(format!(
+                    "constant literal shape {:?} vs declared {:?}",
+                    val.shape, dims
+                ));
+            }
+            if val.data.len() != ins.ty.elements() {
+                return attr_err(format!(
+                    "constant literal has {} elements, type wants {}",
+                    val.data.len(),
+                    ins.ty.elements()
+                ));
+            }
+        }
+        Op::Iota { dim } => {
+            need(0, "0")?;
+            let Some((_, dims)) = out_arr else {
+                return attr_err("iota with tuple result type".into());
+            };
+            if *dim >= dims.len() {
+                return attr_err(format!("iota dim {dim} out of range for rank {}", dims.len()));
+            }
+        }
+        Op::Broadcast { dims } => {
+            need(1, "1")?;
+            let Some((dt, out)) = out_arr else {
+                return attr_err("broadcast with tuple result type".into());
+            };
+            let Some((sdt, sdims)) = as_array(oty(0)) else {
+                return shape_err("broadcast of a tuple".into());
+            };
+            if sdt != dt {
+                return dtype_err(format!("broadcast {} to {}", sdt.name(), dt.name()));
+            }
+            if dims.len() != sdims.len() {
+                return attr_err(format!(
+                    "broadcast dimensions {:?} vs operand rank {}",
+                    dims,
+                    sdims.len()
+                ));
+            }
+            for (k, &d) in dims.iter().enumerate() {
+                if d >= out.len() || out[d] != sdims[k] {
+                    return shape_err(format!(
+                        "broadcast maps operand dim {k} ({}) to output dim {d} of {:?}",
+                        sdims[k], out
+                    ));
+                }
+            }
+        }
+        Op::Convert => {
+            need(1, "1")?;
+            let (Some((_, out)), Some((_, inp))) = (out_arr, as_array(oty(0))) else {
+                return shape_err("convert on a tuple".into());
+            };
+            if out != inp {
+                return shape_err(format!("convert {inp:?} to {out:?}"));
+            }
+        }
+        Op::Rsqrt => {
+            need(1, "1")?;
+            if oty(0) != &ins.ty {
+                return shape_err(format!("rsqrt operand {:?} vs result {:?}", oty(0), ins.ty));
+            }
+        }
+        Op::Binary(_) => {
+            need(2, "2")?;
+            if out_arr.is_none() {
+                return shape_err("elementwise op with tuple result".into());
+            }
+            if oty(0) != &ins.ty || oty(1) != &ins.ty {
+                return shape_err(format!(
+                    "`{}` operands {:?} / {:?} vs result {:?}",
+                    ins.op.name(),
+                    oty(0),
+                    oty(1),
+                    ins.ty
+                ));
+            }
+        }
+        Op::Compare(_) => {
+            need(2, "2")?;
+            if oty(0) != oty(1) {
+                return shape_err(format!("compare operands {:?} vs {:?}", oty(0), oty(1)));
+            }
+            let (Some((dt, out)), Some((_, inp))) = (out_arr, as_array(oty(0))) else {
+                return shape_err("compare on a tuple".into());
+            };
+            if dt != DType::Pred {
+                return dtype_err(format!("compare result is {}, wants pred", dt.name()));
+            }
+            if out != inp {
+                return shape_err(format!("compare result {out:?} vs operand {inp:?}"));
+            }
+        }
+        Op::Select => {
+            need(3, "3")?;
+            let Some((pdt, pdims)) = as_array(oty(0)) else {
+                return shape_err("select predicate is a tuple".into());
+            };
+            if pdt != DType::Pred {
+                return dtype_err(format!("select predicate is {}, wants pred", pdt.name()));
+            }
+            if oty(1) != &ins.ty || oty(2) != &ins.ty {
+                return shape_err(format!(
+                    "select branches {:?} / {:?} vs result {:?}",
+                    oty(1),
+                    oty(2),
+                    ins.ty
+                ));
+            }
+            // scalar predicate selects whole values; otherwise it must
+            // match the result shape
+            if !pdims.is_empty() {
+                let Some((_, out)) = out_arr else {
+                    return shape_err("non-scalar select predicate with tuple result".into());
+                };
+                if pdims != out {
+                    return shape_err(format!("select predicate {pdims:?} vs result {out:?}"));
+                }
+            }
+        }
+        Op::Reshape => {
+            need(1, "1")?;
+            let (Some((dt, _)), Some((sdt, _))) = (out_arr, as_array(oty(0))) else {
+                return shape_err("reshape on a tuple".into());
+            };
+            if dt != sdt {
+                return dtype_err(format!("reshape {} to {}", sdt.name(), dt.name()));
+            }
+            if ins.ty.elements() != oty(0).elements() {
+                return shape_err(format!(
+                    "reshape {} elements to {}",
+                    oty(0).elements(),
+                    ins.ty.elements()
+                ));
+            }
+        }
+        Op::Transpose { perm } => {
+            need(1, "1")?;
+            let (Some((_, out)), Some((_, inp))) = (out_arr, as_array(oty(0))) else {
+                return shape_err("transpose on a tuple".into());
+            };
+            let rank = inp.len();
+            let mut seen = vec![false; rank];
+            let valid = perm.len() == rank
+                && perm.iter().all(|&p| {
+                    p < rank && !std::mem::replace(&mut seen[p], true)
+                });
+            if !valid {
+                return attr_err(format!("permutation {perm:?} over rank {rank}"));
+            }
+            if out.len() != rank || (0..rank).any(|d| out[d] != inp[perm[d]]) {
+                return shape_err(format!(
+                    "transpose of {inp:?} by {perm:?} declared {out:?}"
+                ));
+            }
+        }
+        Op::Slice {
+            starts,
+            limits,
+            strides,
+        } => {
+            need(1, "1")?;
+            let (Some((_, out)), Some((_, inp))) = (out_arr, as_array(oty(0))) else {
+                return shape_err("slice on a tuple".into());
+            };
+            let rank = inp.len();
+            if starts.len() != rank || limits.len() != rank || strides.len() != rank {
+                return attr_err(format!(
+                    "slice attribute ranks {}/{}/{} vs operand rank {rank}",
+                    starts.len(),
+                    limits.len(),
+                    strides.len()
+                ));
+            }
+            for d in 0..rank {
+                if strides[d] == 0 || starts[d] > limits[d] || limits[d] > inp[d] {
+                    return attr_err(format!(
+                        "slice dim {d}: [{}:{}:{}] over extent {}",
+                        starts[d], limits[d], strides[d], inp[d]
+                    ));
+                }
+            }
+            let want: Vec<usize> = (0..rank)
+                .map(|d| ceil_div(limits[d] - starts[d], strides[d]))
+                .collect();
+            if out != want.as_slice() {
+                return shape_err(format!("slice result {out:?}, computed {want:?}"));
+            }
+        }
+        Op::Pad { lo, hi, interior } => {
+            need(2, "2")?;
+            let (Some((dt, out)), Some((sdt, inp))) = (out_arr, as_array(oty(0))) else {
+                return shape_err("pad on a tuple".into());
+            };
+            match as_array(oty(1)) {
+                Some((pdt, pdims)) if pdims.is_empty() && pdt == dt && sdt == dt => {}
+                _ => {
+                    return dtype_err(format!(
+                        "pad value {:?} for {} operand",
+                        oty(1),
+                        dt.name()
+                    ))
+                }
+            }
+            let rank = inp.len();
+            if lo.len() != rank || hi.len() != rank || interior.len() != rank {
+                return attr_err(format!(
+                    "pad attribute ranks {}/{}/{} vs operand rank {rank}",
+                    lo.len(),
+                    hi.len(),
+                    interior.len()
+                ));
+            }
+            for d in 0..rank {
+                let inner = inp[d] as i64 + (inp[d].max(1) as i64 - 1) * interior[d] as i64;
+                let want = lo[d] + hi[d] + inner;
+                if want < 0 || out.get(d).copied() != Some(want as usize) {
+                    return shape_err(format!(
+                        "pad dim {d}: lo {} hi {} interior {} over {} declared {:?}",
+                        lo[d], hi[d], interior[d], inp[d], out
+                    ));
+                }
+            }
+            if out.len() != rank {
+                return shape_err(format!("pad result rank {} vs {rank}", out.len()));
+            }
+        }
+        Op::Concatenate { dim } => {
+            if ins.operands.is_empty() {
+                return bad_arity(">= 1");
+            }
+            let Some((dt, out)) = out_arr else {
+                return shape_err("concatenate with tuple result".into());
+            };
+            let rank = out.len();
+            if *dim >= rank {
+                return attr_err(format!("concatenate dim {dim} out of range for rank {rank}"));
+            }
+            let mut total = 0usize;
+            for k in 0..ins.operands.len() {
+                let Some((odt, odims)) = as_array(oty(k)) else {
+                    return shape_err("concatenate of a tuple".into());
+                };
+                if odt != dt {
+                    return dtype_err(format!(
+                        "concatenate operand {k} is {}, result {}",
+                        odt.name(),
+                        dt.name()
+                    ));
+                }
+                if odims.len() != rank
+                    || (0..rank).any(|d| d != *dim && odims[d] != out[d])
+                {
+                    return shape_err(format!(
+                        "concatenate operand {k} {odims:?} vs result {out:?} on dim {dim}"
+                    ));
+                }
+                total += odims[*dim];
+            }
+            if out[*dim] != total {
+                return shape_err(format!(
+                    "concatenate dim {dim} totals {total}, declared {}",
+                    out[*dim]
+                ));
+            }
+        }
+        Op::DynamicSlice { sizes } => {
+            if ins.operands.is_empty() {
+                return bad_arity("1 + rank");
+            }
+            let Some((dt, inp)) = as_array(oty(0)) else {
+                return shape_err("dynamic-slice of a tuple".into());
+            };
+            let rank = inp.len();
+            if ins.operands.len() != 1 + rank {
+                return bad_arity(&format!("1 + rank ({})", 1 + rank));
+            }
+            for k in 1..ins.operands.len() {
+                if !is_scalar_s32(oty(k)) {
+                    return dtype_err(format!(
+                        "dynamic-slice start {k} is {:?}, wants s32[]",
+                        oty(k)
+                    ));
+                }
+            }
+            if sizes.len() != rank || (0..rank).any(|d| sizes[d] > inp[d]) {
+                return attr_err(format!("dynamic-slice sizes {sizes:?} over {inp:?}"));
+            }
+            if ins.ty != Type::Array(dt, sizes.clone()) {
+                return shape_err(format!(
+                    "dynamic-slice result {:?} vs sizes {sizes:?}",
+                    ins.ty
+                ));
+            }
+        }
+        Op::DynamicUpdateSlice => {
+            if ins.operands.is_empty() {
+                return bad_arity("2 + rank");
+            }
+            let Some((dt, inp)) = as_array(oty(0)) else {
+                return shape_err("dynamic-update-slice of a tuple".into());
+            };
+            let rank = inp.len();
+            if ins.operands.len() != 2 + rank {
+                return bad_arity(&format!("2 + rank ({})", 2 + rank));
+            }
+            let Some((udt, udims)) = as_array(oty(1)) else {
+                return Err(err(
+                    m,
+                    ci,
+                    i,
+                    VerifyErrorKind::BadDusRank {
+                        detail: "update is a tuple".into(),
+                    },
+                ));
+            };
+            if udt != dt || udims.len() != rank || (0..rank).any(|d| udims[d] > inp[d]) {
+                return Err(err(
+                    m,
+                    ci,
+                    i,
+                    VerifyErrorKind::BadDusRank {
+                        detail: format!(
+                            "update {}{udims:?} into {}{inp:?}",
+                            udt.name(),
+                            dt.name()
+                        ),
+                    },
+                ));
+            }
+            for k in 2..ins.operands.len() {
+                if !is_scalar_s32(oty(k)) {
+                    return dtype_err(format!(
+                        "dynamic-update-slice start {k} is {:?}, wants s32[]",
+                        oty(k)
+                    ));
+                }
+            }
+            if &ins.ty != oty(0) {
+                return shape_err(format!(
+                    "dynamic-update-slice result {:?} vs operand {:?}",
+                    ins.ty,
+                    oty(0)
+                ));
+            }
+        }
+        Op::GetTupleElement { index } => {
+            need(1, "1")?;
+            let Type::Tuple(parts) = oty(0) else {
+                return shape_err("get-tuple-element of a non-tuple".into());
+            };
+            if *index >= parts.len() {
+                return Err(err(
+                    m,
+                    ci,
+                    i,
+                    VerifyErrorKind::TupleIndexOutOfRange {
+                        index: *index,
+                        len: parts.len(),
+                    },
+                ));
+            }
+            if ins.ty != parts[*index] {
+                return shape_err(format!(
+                    "get-tuple-element {index} result {:?} vs element {:?}",
+                    ins.ty, parts[*index]
+                ));
+            }
+        }
+        Op::Tuple => {
+            let Type::Tuple(parts) = &ins.ty else {
+                return shape_err("tuple with non-tuple result type".into());
+            };
+            if parts.len() != ins.operands.len() {
+                return bad_arity(&format!("{} (tuple arity)", parts.len()));
+            }
+            for (k, part) in parts.iter().enumerate() {
+                if oty(k) != part {
+                    return shape_err(format!(
+                        "tuple element {k} is {:?}, declared {:?}",
+                        oty(k),
+                        part
+                    ));
+                }
+            }
+        }
+        Op::Call { comp } => {
+            let target = &m.comps[*comp];
+            if ins.operands.len() != target.params.len() {
+                return bad_arity(&format!("{} (callee params)", target.params.len()));
+            }
+            for k in 0..ins.operands.len() {
+                let want = &target.instrs[target.params[k]].ty;
+                if oty(k) != want {
+                    return shape_err(format!(
+                        "call argument {k} is {:?}, callee wants {:?}",
+                        oty(k),
+                        want
+                    ));
+                }
+            }
+            if ins.ty != target.instrs[target.root].ty {
+                return shape_err(format!(
+                    "call result {:?} vs callee root {:?}",
+                    ins.ty, target.instrs[target.root].ty
+                ));
+            }
+        }
+        Op::While { cond, body } => {
+            need(1, "1")?;
+            let carried = oty(0);
+            let sig = |what: &str, got: &Type| -> Result<(), VerifyError> {
+                if got != carried {
+                    return Err(err(
+                        m,
+                        ci,
+                        i,
+                        VerifyErrorKind::BadWhileSignature {
+                            detail: format!("{what} is {got:?}, carried state {carried:?}"),
+                        },
+                    ));
+                }
+                Ok(())
+            };
+            for (what, r) in [("cond", *cond), ("body", *body)] {
+                let rc = &m.comps[r];
+                if rc.params.len() != 1 {
+                    return Err(err(
+                        m,
+                        ci,
+                        i,
+                        VerifyErrorKind::BadWhileSignature {
+                            detail: format!("{what} takes {} parameters", rc.params.len()),
+                        },
+                    ));
+                }
+                sig(
+                    match what {
+                        "cond" => "cond parameter",
+                        _ => "body parameter",
+                    },
+                    &rc.instrs[rc.params[0]].ty,
+                )?;
+            }
+            let cond_root = &m.comps[*cond].instrs[m.comps[*cond].root].ty;
+            if cond_root != &Type::Array(DType::Pred, Vec::new()) {
+                return Err(err(
+                    m,
+                    ci,
+                    i,
+                    VerifyErrorKind::BadWhileSignature {
+                        detail: format!("cond root is {cond_root:?}, wants pred[]"),
+                    },
+                ));
+            }
+            let body_root = &m.comps[*body].instrs[m.comps[*body].root].ty;
+            sig("body root", body_root)?;
+            sig("while result", &ins.ty)?;
+        }
+        Op::Reduce { dims, comp } => {
+            let n2 = ins.operands.len();
+            if n2 < 2 || n2 % 2 != 0 {
+                return bad_arity("inputs + matching inits (even, >= 2)");
+            }
+            let n = n2 / 2;
+            let Some((_, in0)) = as_array(oty(0)) else {
+                return shape_err("reduce input is a tuple".into());
+            };
+            let in_dims = in0.to_vec();
+            for k in 0..n {
+                let Some((idt, idims)) = as_array(oty(k)) else {
+                    return shape_err(format!("reduce input {k} is a tuple"));
+                };
+                if idims != in_dims {
+                    return shape_err(format!(
+                        "reduce input {k} {idims:?} vs input 0 {in_dims:?}"
+                    ));
+                }
+                match as_array(oty(n + k)) {
+                    Some((edt, ed)) if ed.is_empty() && edt == idt => {}
+                    _ => {
+                        return dtype_err(format!(
+                            "reduce init {k} is {:?}, wants {}[]",
+                            oty(n + k),
+                            idt.name()
+                        ))
+                    }
+                }
+            }
+            for &d in dims {
+                if d >= in_dims.len() {
+                    return attr_err(format!(
+                        "reduce dim {d} out of range for rank {}",
+                        in_dims.len()
+                    ));
+                }
+            }
+            verify_region_signature(m, ci, i, *comp, n, "reduce")?;
+            let out_dims: Vec<usize> = in_dims
+                .iter()
+                .enumerate()
+                .filter(|(d, _)| !dims.contains(d))
+                .map(|(_, &e)| e)
+                .collect();
+            let ok = match (&ins.ty, n) {
+                (Type::Array(_, d), 1) => d == &out_dims,
+                (Type::Tuple(parts), _) => {
+                    parts.len() == n
+                        && parts
+                            .iter()
+                            .all(|p| matches!(p, Type::Array(_, d) if d == &out_dims))
+                }
+                _ => false,
+            };
+            if !ok {
+                return shape_err(format!(
+                    "reduce result {:?} vs reduced shape {out_dims:?} x {n}",
+                    ins.ty
+                ));
+            }
+        }
+        Op::Sort { dim, comp } => {
+            let n = ins.operands.len();
+            if n == 0 {
+                return bad_arity(">= 1");
+            }
+            let Some((_, in0)) = as_array(oty(0)) else {
+                return shape_err("sort operand is a tuple".into());
+            };
+            let in_dims = in0.to_vec();
+            if *dim >= in_dims.len() {
+                return attr_err(format!(
+                    "sort dim {dim} out of range for rank {}",
+                    in_dims.len()
+                ));
+            }
+            for k in 1..n {
+                match as_array(oty(k)) {
+                    Some((_, d)) if d == in_dims.as_slice() => {}
+                    _ => {
+                        return shape_err(format!(
+                            "sort operand {k} is {:?}, operand 0 {in_dims:?}",
+                            oty(k)
+                        ))
+                    }
+                }
+            }
+            verify_region_signature(m, ci, i, *comp, n, "sort")?;
+            let ok = match (&ins.ty, n) {
+                (Type::Array(_, d), 1) => d == &in_dims,
+                (Type::Tuple(parts), _) => parts.len() == n,
+                _ => false,
+            };
+            if !ok {
+                return shape_err(format!(
+                    "sort result {:?} vs {n} operands of {in_dims:?}",
+                    ins.ty
+                ));
+            }
+        }
+        Op::Scatter { comp, .. } => {
+            need(3, "3")?;
+            match as_array(oty(1)) {
+                Some((DType::S32, _)) => {}
+                _ => {
+                    return dtype_err(format!(
+                        "scatter indices are {:?}, wants s32",
+                        oty(1)
+                    ))
+                }
+            }
+            verify_region_signature(m, ci, i, *comp, 1, "scatter")?;
+            if &ins.ty != oty(0) {
+                return shape_err(format!(
+                    "scatter result {:?} vs operand {:?}",
+                    ins.ty,
+                    oty(0)
+                ));
+            }
+        }
+        Op::Gather(_) => {
+            need(2, "2")?;
+            match as_array(oty(1)) {
+                Some((DType::S32, _)) => {}
+                _ => {
+                    return dtype_err(format!("gather indices are {:?}, wants s32", oty(1)))
+                }
+            }
+            let (Some((dt, _)), Some((sdt, _))) = (out_arr, as_array(oty(0))) else {
+                return shape_err("gather over a tuple".into());
+            };
+            if dt != sdt {
+                return dtype_err(format!("gather of {} declared {}", sdt.name(), dt.name()));
+            }
+        }
+        Op::Dot {
+            lhs_contracting,
+            rhs_contracting,
+        } => {
+            need(2, "2")?;
+            let (Some((ldt, ld)), Some((rdt, rd))) = (as_array(oty(0)), as_array(oty(1)))
+            else {
+                return shape_err("dot over a tuple".into());
+            };
+            if ldt != rdt {
+                return dtype_err(format!("dot of {} by {}", ldt.name(), rdt.name()));
+            }
+            let bad = |detail: String| {
+                Err(err(m, ci, i, VerifyErrorKind::BadDotContraction { detail }))
+            };
+            if lhs_contracting.len() != rhs_contracting.len() {
+                return bad(format!(
+                    "lhs contracts {lhs_contracting:?}, rhs {rhs_contracting:?}"
+                ));
+            }
+            for (&l, &r) in lhs_contracting.iter().zip(rhs_contracting) {
+                if l >= ld.len() || r >= rd.len() {
+                    return bad(format!(
+                        "contracting dims ({l},{r}) over ranks ({},{})",
+                        ld.len(),
+                        rd.len()
+                    ));
+                }
+                if ld[l] != rd[r] {
+                    return bad(format!(
+                        "contracted extents differ: lhs dim {l} = {}, rhs dim {r} = {}",
+                        ld[l], rd[r]
+                    ));
+                }
+            }
+            let mut want: Vec<usize> = ld
+                .iter()
+                .enumerate()
+                .filter(|(d, _)| !lhs_contracting.contains(d))
+                .map(|(_, &e)| e)
+                .collect();
+            want.extend(
+                rd.iter()
+                    .enumerate()
+                    .filter(|(d, _)| !rhs_contracting.contains(d))
+                    .map(|(_, &e)| e),
+            );
+            match out_arr {
+                Some((dt, out)) if dt == ldt && out == want.as_slice() => {}
+                _ => {
+                    return shape_err(format!(
+                        "dot result {:?} vs computed {}{want:?}",
+                        ins.ty,
+                        ldt.name()
+                    ))
+                }
+            }
+        }
+        Op::Convolution(cd) => {
+            need(2, "2")?;
+            let (Some((xdt, xd)), Some((wdt, wd))) = (as_array(oty(0)), as_array(oty(1)))
+            else {
+                return shape_err("convolution over a tuple".into());
+            };
+            if xdt != wdt {
+                return dtype_err(format!("convolution of {} by {}", xdt.name(), wdt.name()));
+            }
+            let Some((_, od)) = out_arr else {
+                return shape_err("convolution with tuple result".into());
+            };
+            if xd.len() != 4 || wd.len() != 4 || od.len() != 4 {
+                return shape_err(format!(
+                    "convolution ranks {} / {} -> {} (wants 4 / 4 -> 4)",
+                    xd.len(),
+                    wd.len(),
+                    od.len()
+                ));
+            }
+            if cd.window_size.len() != 2 || cd.stride.len() != 2 {
+                return attr_err(format!(
+                    "convolution window {:?} stride {:?} (wants 2 spatial dims)",
+                    cd.window_size, cd.stride
+                ));
+            }
+            if cd.feature_group_count == 0
+                || xd[3] != wd[2] * cd.feature_group_count
+                || od[3] != wd[3]
+                || od[0] != xd[0]
+            {
+                return shape_err(format!(
+                    "convolution features: input {xd:?}, kernel {wd:?}, output {od:?}, \
+                     groups {}",
+                    cd.feature_group_count
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// A `reduce`/`sort` comparator or `scatter` combiner over `n` value
+/// streams: `2 * n` scalar parameters, scalar root (`n` scalars, as a
+/// tuple when `n > 1`; sort comparators return one `pred[]`).
+fn verify_region_signature(
+    m: &Module,
+    ci: usize,
+    i: usize,
+    comp: usize,
+    n: usize,
+    what: &str,
+) -> Result<(), VerifyError> {
+    let rc = &m.comps[comp];
+    let bad = |detail: String| {
+        Err(err(
+            m,
+            ci,
+            i,
+            VerifyErrorKind::BadRegionSignature { detail },
+        ))
+    };
+    if rc.params.len() != 2 * n {
+        return bad(format!(
+            "{what} region {} takes {} parameters, wants {}",
+            rc.name,
+            rc.params.len(),
+            2 * n
+        ));
+    }
+    for &p in &rc.params {
+        if !is_scalar_array(&rc.instrs[p].ty) {
+            return bad(format!(
+                "{what} region {} parameter is {:?}, wants a scalar",
+                rc.name, rc.instrs[p].ty
+            ));
+        }
+    }
+    let root = &rc.instrs[rc.root].ty;
+    let root_ok = match (what, root) {
+        ("sort", t) => t == &Type::Array(DType::Pred, Vec::new()),
+        (_, t) if n == 1 => is_scalar_array(t),
+        (_, Type::Tuple(parts)) => parts.len() == n && parts.iter().all(is_scalar_array),
+        _ => false,
+    };
+    if !root_ok {
+        return bad(format!(
+            "{what} region {} root is {root:?}, wants {} scalar(s)",
+            rc.name,
+            if what == "sort" { 1 } else { n }
+        ));
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// plan pass
+// ---------------------------------------------------------------------------
+
+/// Verify a compiled plan against liveness re-derived **from the
+/// operand lists alone** — `Computation::last_use` is never read here,
+/// so a liveness bug in the parser/planner cannot hide from this pass.
+pub fn verify_plan(m: &Module, plan: &ModulePlan) -> Result<(), VerifyError> {
+    let r = verify_plan_inner(m, plan);
+    match &r {
+        Ok(steps) => {
+            VERIFY_MODULES.fetch_add(1, Ordering::Relaxed);
+            VERIFY_STEPS.fetch_add(*steps, Ordering::Relaxed);
+        }
+        Err(_) => {
+            VERIFY_REJECTS.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+    r.map(|_| ())
+}
+
+fn verify_plan_inner(m: &Module, plan: &ModulePlan) -> Result<u64, VerifyError> {
+    if plan.comps.len() != m.comps.len() {
+        return Err(err(
+            m,
+            0,
+            0,
+            VerifyErrorKind::BadPlanShape {
+                detail: format!(
+                    "plan has {} computations, module {}",
+                    plan.comps.len(),
+                    m.comps.len()
+                ),
+            },
+        ));
+    }
+    let mut total_steps = 0u64;
+    for (ci, c) in m.comps.iter().enumerate() {
+        let cp = &plan.comps[ci];
+        let n = c.instrs.len();
+        total_steps += n as u64;
+        let plan_shape = |detail: String| {
+            Err(err(m, ci, 0, VerifyErrorKind::BadPlanShape { detail }))
+        };
+        if cp.steps.len() != n {
+            return plan_shape(format!("{} steps for {n} instructions", cp.steps.len()));
+        }
+        if cp.region_of.len() != n {
+            return plan_shape(format!(
+                "{} region assignments for {n} slots",
+                cp.region_of.len()
+            ));
+        }
+        if cp.region_bytes.len() != cp.n_regions {
+            return plan_shape(format!(
+                "{} region sizes for {} regions",
+                cp.region_bytes.len(),
+                cp.n_regions
+            ));
+        }
+
+        // Independent liveness: live_end[s] = max over reads, pinned to
+        // n for the root; read[s] marks slots consumed by anyone.
+        let mut live_end: Vec<usize> = (0..n).collect();
+        let mut read = vec![false; n];
+        for (i, ins) in c.instrs.iter().enumerate() {
+            for &s in &ins.operands {
+                live_end[s] = live_end[s].max(i);
+                read[s] = true;
+            }
+        }
+        live_end[c.root] = n;
+
+        // phase 1: structural sizes + the drop schedule (a double drop
+        // is caught while recording it)
+        let mut drop_at: Vec<Option<usize>> = vec![None; n];
+        for (i, ins) in c.instrs.iter().enumerate() {
+            let step = &cp.steps[i];
+            if step.movable.len() != ins.operands.len() {
+                return plan_shape(format!(
+                    "step {i} has {} movable bits for {} operands",
+                    step.movable.len(),
+                    ins.operands.len()
+                ));
+            }
+            for &s in &step.drops {
+                if s >= n {
+                    return Err(err(
+                        m,
+                        ci,
+                        i,
+                        VerifyErrorKind::BadDrop {
+                            detail: format!("step {i} drops slot {s} of {n}"),
+                        },
+                    ));
+                }
+                if let Some(j) = drop_at[s] {
+                    return Err(err(
+                        m,
+                        ci,
+                        i,
+                        VerifyErrorKind::BadDrop {
+                            detail: format!("slot {s} dropped at step {j} and again at {i}"),
+                        },
+                    ));
+                }
+                drop_at[s] = Some(i);
+            }
+        }
+        // phase 2: no step reads a slot after the schedule dropped it
+        // (drops take effect after the dropping step runs, so a read at
+        // the drop step itself is fine)
+        for (i, ins) in c.instrs.iter().enumerate() {
+            for &s in &ins.operands {
+                if let Some(j) = drop_at[s] {
+                    if j < i {
+                        return Err(err(
+                            m,
+                            ci,
+                            i,
+                            VerifyErrorKind::ReadAfterDrop {
+                                slot: s,
+                                dropped_at: j,
+                            },
+                        ));
+                    }
+                }
+            }
+        }
+        // phase 3: movable bits, drop lists, and write tags against the
+        // independent liveness
+        for (i, ins) in c.instrs.iter().enumerate() {
+            let step = &cp.steps[i];
+            for (k, &slot) in ins.operands.iter().enumerate() {
+                let unique = ins.operands.iter().filter(|&&s| s == slot).count() == 1;
+                let independent = live_end[slot] == i && unique;
+                if step.movable[k] != independent {
+                    let kind = if step.movable[k] && live_end[slot] > i {
+                        VerifyErrorKind::MovableLiveAfter { operand: k, slot }
+                    } else {
+                        VerifyErrorKind::BadMovableBit { operand: k, slot }
+                    };
+                    return Err(err(m, ci, i, kind));
+                }
+            }
+            let mut want_drops: Vec<usize> = ins
+                .operands
+                .iter()
+                .copied()
+                .filter(|&s| live_end[s] == i)
+                .collect();
+            want_drops.sort_unstable();
+            want_drops.dedup();
+            if step.drops != want_drops {
+                return Err(err(
+                    m,
+                    ci,
+                    i,
+                    VerifyErrorKind::BadDrop {
+                        detail: format!(
+                            "step {i} drops {:?}, liveness says {want_drops:?}",
+                            step.drops
+                        ),
+                    },
+                ));
+            }
+            // write tags: DUS carries the liveness answer, nothing else
+            // carries one
+            let want_write = match &ins.op {
+                Op::DynamicUpdateSlice => {
+                    let slot0 = ins.operands[0];
+                    let unique =
+                        ins.operands.iter().filter(|&&s| s == slot0).count() == 1;
+                    Some(if live_end[slot0] == i && unique {
+                        WriteMode::InPlace
+                    } else {
+                        WriteMode::Fresh
+                    })
+                }
+                _ => None,
+            };
+            if step.write != want_write {
+                return Err(err(
+                    m,
+                    ci,
+                    i,
+                    VerifyErrorKind::BadWriteTag {
+                        detail: format!(
+                            "step {i} tagged {:?}, liveness says {want_write:?}",
+                            step.write
+                        ),
+                    },
+                ));
+            }
+        }
+        // drop discipline: every read non-root slot dropped exactly once
+        // at its true last use; roots and never-read slots never dropped
+        for s in 0..n {
+            let want = if s != c.root && read[s] {
+                Some(live_end[s])
+            } else {
+                None
+            };
+            if drop_at[s] != want {
+                return Err(err(
+                    m,
+                    ci,
+                    s,
+                    VerifyErrorKind::BadDrop {
+                        detail: format!(
+                            "slot {s} dropped at {:?}, liveness says {want:?}",
+                            drop_at[s]
+                        ),
+                    },
+                ));
+            }
+        }
+        // regions: valid indices, pairwise-disjoint lifetimes, sized to
+        // the largest resident buffer
+        let mut last_in_region: Vec<Option<usize>> = vec![None; cp.n_regions];
+        for s in 0..n {
+            let r = cp.region_of[s];
+            if r >= cp.n_regions {
+                return plan_shape(format!(
+                    "slot {s} assigned region {r} of {}",
+                    cp.n_regions
+                ));
+            }
+            if let Some(prev) = last_in_region[r] {
+                // defs are in slot order, so disjointness of every pair
+                // in a region reduces to each consecutive pair
+                if live_end[prev] >= s {
+                    return Err(err(
+                        m,
+                        ci,
+                        s,
+                        VerifyErrorKind::RegionOverlap {
+                            detail: format!(
+                                "slots {prev} (live to {}) and {s} share region {r}",
+                                live_end[prev]
+                            ),
+                        },
+                    ));
+                }
+            }
+            last_in_region[r] = Some(s);
+            let bytes = c.instrs[s].ty.byte_size();
+            if bytes > cp.region_bytes[r] {
+                return Err(err(
+                    m,
+                    ci,
+                    s,
+                    VerifyErrorKind::RegionTooSmall {
+                        detail: format!(
+                            "slot {s} needs {bytes} bytes, region {r} holds {}",
+                            cp.region_bytes[r]
+                        ),
+                    },
+                ));
+            }
+        }
+    }
+    Ok(total_steps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hlo::eval::scan_ternary_dot_constants;
+    use crate::hlo::parser::parse;
+    use crate::hlo::plan;
+
+    const GOOD: &str = "HloModule g
+cond.1 {
+  p.2 = (f32[8]{0}, s32[]) parameter(0)
+  i.3 = s32[] get-tuple-element(p.2), index=1
+  c.4 = s32[] constant(4)
+  ROOT lt.5 = pred[] compare(i.3, c.4), direction=LT
+}
+body.6 {
+  p.7 = (f32[8]{0}, s32[]) parameter(0)
+  b.8 = f32[8]{0} get-tuple-element(p.7), index=0
+  i.9 = s32[] get-tuple-element(p.7), index=1
+  u.10 = f32[2]{0} constant({1, 2})
+  d.11 = f32[8]{0} dynamic-update-slice(b.8, u.10, i.9)
+  o.12 = s32[] constant(1)
+  n.13 = s32[] add(i.9, o.12)
+  ROOT t.14 = (f32[8]{0}, s32[]) tuple(d.11, n.13)
+}
+ENTRY main.15 {
+  z.16 = f32[] constant(0)
+  b.17 = f32[8]{0} broadcast(z.16), dimensions={}
+  i.18 = s32[] constant(0)
+  t.19 = (f32[8]{0}, s32[]) tuple(b.17, i.18)
+  w.20 = (f32[8]{0}, s32[]) while(t.19), condition=cond.1, body=body.6
+  ROOT g.21 = f32[8]{0} get-tuple-element(w.20), index=0
+}
+";
+
+    fn compiled(text: &str) -> (Module, ModulePlan) {
+        let module = parse(text).unwrap();
+        let packed = scan_ternary_dot_constants(&module);
+        let p = plan::compile(&module, &packed);
+        (module, p)
+    }
+
+    #[test]
+    fn a_well_formed_module_and_plan_verify_clean() {
+        let (module, p) = compiled(GOOD);
+        verify_module(&module).unwrap();
+        let before = modules_count();
+        verify_plan(&module, &p).unwrap();
+        assert!(modules_count() > before, "modules counter must advance");
+    }
+
+    #[test]
+    fn forward_and_out_of_range_operands_are_typed_errors() {
+        let (mut module, _) = compiled(GOOD);
+        let entry = module.entry;
+        // point the root GTE at a slot past the end
+        let n = module.comps[entry].instrs.len();
+        let root = module.comps[entry].root;
+        module.comps[entry].instrs[root].operands[0] = n + 3;
+        let e = verify_module(&module).unwrap_err();
+        assert!(
+            matches!(e.kind, VerifyErrorKind::OperandOutOfRange { slot, .. } if slot == n + 3),
+            "{e}"
+        );
+        // point it at itself: defined no earlier than its use
+        module.comps[entry].instrs[root].operands[0] = root;
+        let e = verify_module(&module).unwrap_err();
+        assert!(
+            matches!(e.kind, VerifyErrorKind::ForwardOperandRef { slot, .. } if slot == root),
+            "{e}"
+        );
+    }
+
+    #[test]
+    fn rejects_bump_the_counter_and_name_the_site() {
+        let (mut module, _) = compiled(GOOD);
+        let entry = module.entry;
+        let root = module.comps[entry].root;
+        module.comps[entry].instrs[root].operands.push(root - 1);
+        let before = rejects_count();
+        let e = verify_module(&module).unwrap_err();
+        assert!(rejects_count() > before, "rejects counter must advance");
+        assert!(matches!(e.kind, VerifyErrorKind::BadArity { .. }), "{e}");
+        assert_eq!(e.module, "g");
+        assert_eq!(e.instr, root);
+        let shown = e.to_string();
+        assert!(shown.contains("module g"), "{shown}");
+        assert!(shown.contains(&format!("instruction #{root}")), "{shown}");
+    }
+
+    #[test]
+    fn movable_bit_on_a_live_after_slot_is_a_hard_error() {
+        let (module, mut p) = compiled(GOOD);
+        // find a step with a non-movable, live-after operand (the body's
+        // carried tuple is read twice) and force the bit on
+        let (ci, i, k, slot) = module
+            .comps
+            .iter()
+            .enumerate()
+            .find_map(|(ci, c)| {
+                c.instrs.iter().enumerate().find_map(|(i, ins)| {
+                    ins.operands
+                        .iter()
+                        .enumerate()
+                        .find(|&(k, &s)| {
+                            !p.comps[ci].steps[i].movable[k] && c.last_use[s] > i
+                        })
+                        .map(|(k, &s)| (ci, i, k, s))
+                })
+            })
+            .expect("GOOD has a non-movable live-after operand");
+        p.comps[ci].steps[i].movable[k] = true;
+        let before = rejects_count();
+        let e = verify_plan(&module, &p).unwrap_err();
+        assert!(rejects_count() > before);
+        assert!(
+            matches!(
+                e.kind,
+                VerifyErrorKind::MovableLiveAfter { operand, slot: s }
+                    if operand == k && s == slot
+            ),
+            "{e}"
+        );
+    }
+
+    #[test]
+    fn dropped_slots_must_never_be_read_again() {
+        let (module, mut p) = compiled(GOOD);
+        let entry = module.entry;
+        // schedule the while's carried tuple for dropping at its own
+        // defining step — the while's later read must trip ReadAfterDrop
+        let c = &module.comps[entry];
+        let w = c
+            .instrs
+            .iter()
+            .position(|ins| matches!(ins.op, Op::While { .. }))
+            .unwrap();
+        let carried = c.instrs[w].operands[0];
+        p.comps[entry].steps[carried].drops.push(carried);
+        p.comps[entry].steps[carried].drops.sort_unstable();
+        let e = verify_plan(&module, &p).unwrap_err();
+        assert!(
+            matches!(
+                e.kind,
+                VerifyErrorKind::ReadAfterDrop { slot, .. } if slot == carried
+            ),
+            "{e}"
+        );
+    }
+
+    #[test]
+    fn write_tags_and_region_sizes_are_checked() {
+        let (module, p) = compiled(GOOD);
+        let body = module
+            .comps
+            .iter()
+            .position(|c| c.name.starts_with("body"))
+            .unwrap();
+        let dus = module.comps[body]
+            .instrs
+            .iter()
+            .position(|ins| matches!(ins.op, Op::DynamicUpdateSlice))
+            .unwrap();
+        // flip the InPlace tag to Fresh: liveness disagrees
+        let mut mangled = p.clone();
+        mangled.comps[body].steps[dus].write = Some(WriteMode::Fresh);
+        let e = verify_plan(&module, &mangled).unwrap_err();
+        assert!(matches!(e.kind, VerifyErrorKind::BadWriteTag { .. }), "{e}");
+        // shrink a region below its resident buffer
+        let mut mangled = p.clone();
+        let r = mangled.comps[body].region_of[dus];
+        mangled.comps[body].region_bytes[r] = 0;
+        let e = verify_plan(&module, &mangled).unwrap_err();
+        assert!(
+            matches!(e.kind, VerifyErrorKind::RegionTooSmall { .. }),
+            "{e}"
+        );
+        // merge two live-overlapping slots into one region
+        let mut mangled = p.clone();
+        mangled.comps[body].region_of.fill(0);
+        let e = verify_plan(&module, &mangled).unwrap_err();
+        assert!(
+            matches!(
+                e.kind,
+                VerifyErrorKind::RegionOverlap { .. } | VerifyErrorKind::RegionTooSmall { .. }
+            ),
+            "{e}"
+        );
+    }
+
+    #[test]
+    fn toggle_gates_nothing_here_but_flips_the_flag() {
+        assert!(enabled());
+        set_enabled(false);
+        assert!(!enabled());
+        set_enabled(true);
+        assert!(enabled());
+    }
+}

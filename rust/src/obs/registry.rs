@@ -108,6 +108,9 @@ pub fn install_default_probes() {
         register_probe("hlo.plan.runs", crate::hlo::plan::run_count);
         register_probe("hlo.plan.in_place_tags", crate::hlo::plan::in_place_tag_count);
         register_probe("hlo.plan.fresh_tags", crate::hlo::plan::fresh_tag_count);
+        register_probe("hlo.verify.modules", crate::hlo::verify::modules_count);
+        register_probe("hlo.verify.steps", crate::hlo::verify::steps_count);
+        register_probe("hlo.verify.rejects", crate::hlo::verify::rejects_count);
         register_probe("pool.workers_alive", || {
             crate::util::pool::workers_alive() as u64
         });
@@ -198,6 +201,9 @@ mod tests {
         assert!(names.contains(&"hlo.plan.runs"));
         assert!(names.contains(&"hlo.plan.in_place_tags"));
         assert!(names.contains(&"hlo.plan.fresh_tags"));
+        assert!(names.contains(&"hlo.verify.modules"));
+        assert!(names.contains(&"hlo.verify.steps"));
+        assert!(names.contains(&"hlo.verify.rejects"));
     }
 
     #[test]

@@ -377,6 +377,29 @@ mod tests {
     }
 
     #[test]
+    fn quote_bearing_error_message_survives_the_jsonl_round_trip() {
+        // an EngineError detail string full of JSON metacharacters must
+        // reach the trace-out line escaped, parse back as one JSON value,
+        // and round-trip byte-identically (the shared
+        // util::json::escape_into helper is the single routine behind
+        // every serialized string)
+        let hostile = "factory \"b1\\resnet\" failed:\n\tshape [8, 28] != [8,\r28]";
+        let t = RequestTrace::rejected(3, 1, 44.0, hostile.into());
+        let line = t.to_json(&EnergyModel::default()).to_string();
+        assert!(
+            !line.contains('\n'),
+            "JSON-lines record must stay on one line: {line}"
+        );
+        let j = Json::parse(&line).expect("escaped trace line must parse");
+        let spans = j.get("spans").and_then(|v| v.as_arr()).unwrap();
+        let msg = spans
+            .last()
+            .and_then(|s| s.get("message"))
+            .and_then(|v| v.as_str());
+        assert_eq!(msg, Some(hostile));
+    }
+
+    #[test]
     fn ring_bounds_and_counts_drops() {
         let ring = TraceRing::new(2);
         for i in 0..5u64 {

@@ -125,10 +125,12 @@ impl Executable {
             Type::Tuple(parts) => parts.len(),
             Type::Array(..) => 1,
         };
+        let interp = Interpreter::new(module)
+            .with_context(|| format!("statically verifying {path:?}"))?;
         Ok(Executable {
             path,
             n_outputs,
-            interp: Interpreter::new(module),
+            interp,
             param_dims,
         })
     }

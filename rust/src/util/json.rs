@@ -289,6 +289,27 @@ impl<'a> Parser<'a> {
 
 // -- serialization ------------------------------------------------------
 
+/// Write `s` into `out` with JSON string escaping (quotes, backslashes,
+/// `\n`/`\r`/`\t`, and `\u00XX` for remaining control characters) — no
+/// surrounding quotes.  The single escaping routine behind every string
+/// this crate serializes ([`Json::Str`] values and object keys), so
+/// embedded error messages (e.g. `EngineError` detail strings carrying
+/// `"` or `\`) can never corrupt the trace-out JSON-lines.
+pub fn escape_into<W: fmt::Write>(out: &mut W, s: &str) -> fmt::Result {
+    for c in s.chars() {
+        match c {
+            '"' => out.write_str("\\\"")?,
+            '\\' => out.write_str("\\\\")?,
+            '\n' => out.write_str("\\n")?,
+            '\r' => out.write_str("\\r")?,
+            '\t' => out.write_str("\\t")?,
+            c if (c as u32) < 0x20 => write!(out, "\\u{:04x}", c as u32)?,
+            c => out.write_char(c)?,
+        }
+    }
+    Ok(())
+}
+
 impl fmt::Display for Json {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
@@ -303,17 +324,7 @@ impl fmt::Display for Json {
             }
             Json::Str(s) => {
                 write!(f, "\"")?;
-                for c in s.chars() {
-                    match c {
-                        '"' => write!(f, "\\\"")?,
-                        '\\' => write!(f, "\\\\")?,
-                        '\n' => write!(f, "\\n")?,
-                        '\r' => write!(f, "\\r")?,
-                        '\t' => write!(f, "\\t")?,
-                        c if (c as u32) < 0x20 => write!(f, "\\u{:04x}", c as u32)?,
-                        c => write!(f, "{c}")?,
-                    }
-                }
+                escape_into(f, s)?;
                 write!(f, "\"")
             }
             Json::Arr(v) => {
@@ -397,5 +408,32 @@ mod tests {
         for (s, v) in [("0", 0.0), ("-1", -1.0), ("2.5", 2.5), ("1e3", 1000.0)] {
             assert_eq!(Json::parse(s).unwrap().as_f64(), Some(v));
         }
+    }
+
+    #[test]
+    fn escape_into_covers_every_hostile_class() {
+        let mut out = String::new();
+        escape_into(&mut out, "a\"b\\c\nd\re\tf\u{1}g").unwrap();
+        assert_eq!(out, "a\\\"b\\\\c\\nd\\re\\tf\\u0001g");
+        // plain text passes through untouched
+        let mut out = String::new();
+        escape_into(&mut out, "plain · text").unwrap();
+        assert_eq!(out, "plain · text");
+    }
+
+    #[test]
+    fn hostile_strings_round_trip_through_display() {
+        // an embedded error message full of JSON metacharacters must
+        // serialize to parseable JSON and survive a round trip intact —
+        // in values AND in object keys
+        let hostile = "engine \"fail\\ure\"\n\tat step 3\u{2}";
+        let j = obj(vec![
+            ("msg", Json::Str(hostile.to_string())),
+            (hostile, Json::Num(1.0)),
+        ]);
+        let rendered = j.to_string();
+        let back = Json::parse(&rendered).expect("escaped output must parse");
+        assert_eq!(back.get("msg").unwrap().as_str(), Some(hostile));
+        assert_eq!(back.get(hostile).unwrap().as_f64(), Some(1.0));
     }
 }

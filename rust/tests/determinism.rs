@@ -675,7 +675,7 @@ ENTRY main.14 {
 }
 ";
     let m = memdyn::hlo::parse(text).unwrap();
-    let interp = memdyn::hlo::Interpreter::new(m);
+    let interp = memdyn::hlo::Interpreter::new(m).unwrap();
     let arg = [memdyn::hlo::Value::arr(memdyn::hlo::ArrayVal {
         shape: vec![4],
         data: memdyn::hlo::Data::F32(vec![1.0, -2.0, 0.5, 3.0]),
@@ -688,6 +688,58 @@ ENTRY main.14 {
     };
     assert_eq!(get(&planned), vec![8.0, -16.0, 4.0, 24.0]);
     assert_eq!(get(&planned), get(&oracle), "planned != tree-walk oracle");
+}
+
+#[test]
+fn verify_toggle_is_invisible_to_outcomes_and_energy() {
+    // Static verification (hlo::verify) is a load-time accept/reject
+    // gate: it never rewrites the module or the plan, so outcomes and
+    // energy must be bit-identical with the verifier on vs off — the
+    // same invariant the plan and packed-kernel toggles hold.
+    let n = 12;
+    let xs = inputs(n);
+    memdyn::hlo::verify::set_enabled(true);
+    let on_engine = engine(1);
+    let on = on_engine.infer_batch(&xs, n).unwrap();
+    let on_energy = energy(&on_engine);
+    memdyn::hlo::verify::set_enabled(false);
+    let off_engine = engine(1);
+    let off = off_engine.infer_batch(&xs, n).unwrap();
+    let off_energy = energy(&off_engine);
+    memdyn::hlo::verify::set_enabled(true);
+    assert_outcomes_eq(&on, &off, "verify off");
+    assert_eq!(on_energy, off_energy, "verify toggled the energy counters");
+
+    // And on the interpreter surface: the same module built with the
+    // verifier on and off produces the same bits (verification happens
+    // before execution and touches nothing the evaluator reads).
+    let text = "HloModule v
+ENTRY main.1 {
+  x.2 = f32[4] parameter(0)
+  y.3 = f32[4] add(x.2, x.2)
+  ROOT z.4 = f32[4] multiply(y.3, x.2)
+}
+";
+    let arg = [memdyn::hlo::Value::arr(memdyn::hlo::ArrayVal {
+        shape: vec![4],
+        data: memdyn::hlo::Data::F32(vec![1.5, -2.0, 0.25, 3.0]),
+    })];
+    let verified = memdyn::hlo::Interpreter::new(memdyn::hlo::parse(text).unwrap())
+        .unwrap()
+        .run_entry(&arg)
+        .unwrap();
+    memdyn::hlo::verify::set_enabled(false);
+    let unverified = memdyn::hlo::Interpreter::new(memdyn::hlo::parse(text).unwrap())
+        .unwrap()
+        .run_entry(&arg)
+        .unwrap();
+    memdyn::hlo::verify::set_enabled(true);
+    let get = |v: &memdyn::hlo::Value| match &v.as_arr().unwrap().data {
+        memdyn::hlo::Data::F32(d) => d.clone(),
+        other => panic!("expected f32, got {other:?}"),
+    };
+    assert_eq!(get(&verified), vec![4.5, 8.0, 0.125, 18.0]);
+    assert_eq!(get(&verified), get(&unverified), "verify toggle changed bits");
 }
 
 #[test]

@@ -45,7 +45,10 @@ fn vs32(shape: &[usize], data: Vec<i32>) -> Value {
 
 fn run(text: &str, inputs: &[Value]) -> Value {
     let m = parse(text).expect("module should parse");
-    Interpreter::new(m).run_entry(inputs).expect("module should evaluate")
+    Interpreter::new(m)
+        .expect("module should verify")
+        .run_entry(inputs)
+        .expect("module should evaluate")
 }
 
 fn out_f32(v: &Value) -> Vec<f32> {
@@ -829,7 +832,7 @@ fn planned_execution_matches_tree_walk_oracle_bit_for_bit() {
     // explicit run_entry_tree oracle
     let _g = packed_gate(); // serializes all global-toggle tests
     let m = parse(WHILE_DUS_TEXT).expect("module should parse");
-    let interp = Interpreter::new(m);
+    let interp = Interpreter::new(m).expect("module should verify");
     let args = [vf32(&[8], vec![0.0; 8])];
     let want = vec![1.0, 1.0, 1.0, 1.0, 0.0, 0.0, 0.0, 0.0];
 

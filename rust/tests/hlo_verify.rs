@@ -1,0 +1,323 @@
+//! Static-verification suite for the load-time HLO checker.
+//!
+//! Three layers, mirroring `src/hlo/verify.rs`:
+//!
+//! 1. **Malformed corpus** (`tests/data/bad_hlo/`) — every sample *parses*
+//!    (the defect is semantic, not syntactic) and is then rejected by
+//!    `Interpreter::new` with the expected typed `VerifyErrorKind`. Because
+//!    `new` returns `Result`, a rejected module never yields an interpreter
+//!    at all, so evaluation is unreachable by construction.
+//! 2. **Plan mangles** — a clean module's compiled plan, corrupted through
+//!    the public plan fields, must be caught by the independent plan pass.
+//! 3. **Artifact sweep** (needs `make artifacts`) — every shipped module
+//!    still verifies clean: zero rejects on real inputs.
+//!
+//! NOTE: nothing in this binary may call `verify::set_enabled(false)` —
+//! tests run in parallel threads and a disabled gate would turn the
+//! rejection assertions below into races. Ablation is exercised through
+//! `Interpreter::new_unverified` instead (and, cross-process, by
+//! `tests/determinism.rs`).
+
+use std::path::PathBuf;
+
+use memdyn::hlo::{parse, verify, Interpreter, VerifyError, VerifyErrorKind};
+
+fn corpus_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/data/bad_hlo")
+}
+
+fn corpus(name: &str) -> String {
+    let p = corpus_dir().join(name);
+    std::fs::read_to_string(&p).unwrap_or_else(|e| panic!("reading {p:?}: {e}"))
+}
+
+/// Parse a corpus sample (must succeed — the defect is semantic) and return
+/// the typed error the load-time verifier rejects it with.
+fn reject(name: &str) -> VerifyError {
+    let module = parse(&corpus(name))
+        .unwrap_or_else(|e| panic!("{name} must parse; its defect is semantic: {e:#}"));
+    match Interpreter::new(module) {
+        Ok(_) => panic!("{name} verified clean; expected a typed rejection"),
+        Err(e) => e,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// corpus: one test per sample, asserting the exact typed variant
+// ---------------------------------------------------------------------------
+
+#[test]
+fn corpus_arity_rsqrt() {
+    let e = reject("arity_rsqrt.hlo.txt");
+    assert!(
+        matches!(e.kind, VerifyErrorKind::BadArity { got: 2, .. }),
+        "want BadArity with 2 operands, got {:?}",
+        e.kind
+    );
+}
+
+#[test]
+fn corpus_dangling_tuple_ref() {
+    let e = reject("dangling_tuple_ref.hlo.txt");
+    assert!(
+        matches!(e.kind, VerifyErrorKind::TupleIndexOutOfRange { index: 2, len: 2 }),
+        "want TupleIndexOutOfRange{{2, 2}}, got {:?}",
+        e.kind
+    );
+}
+
+#[test]
+fn corpus_dot_shape_mismatch() {
+    let e = reject("dot_shape_mismatch.hlo.txt");
+    assert!(
+        matches!(e.kind, VerifyErrorKind::BadDotContraction { .. }),
+        "want BadDotContraction, got {:?}",
+        e.kind
+    );
+}
+
+#[test]
+fn corpus_cyclic_call() {
+    let e = reject("cyclic_call.hlo.txt");
+    assert!(
+        matches!(e.kind, VerifyErrorKind::CyclicComputation { .. }),
+        "want CyclicComputation, got {:?}",
+        e.kind
+    );
+}
+
+#[test]
+fn corpus_dus_rank_mismatch() {
+    let e = reject("dus_rank_mismatch.hlo.txt");
+    assert!(
+        matches!(e.kind, VerifyErrorKind::BadDusRank { .. }),
+        "want BadDusRank, got {:?}",
+        e.kind
+    );
+}
+
+#[test]
+fn corpus_while_sig_mismatch() {
+    let e = reject("while_sig_mismatch.hlo.txt");
+    assert!(
+        matches!(e.kind, VerifyErrorKind::BadWhileSignature { .. }),
+        "want BadWhileSignature, got {:?}",
+        e.kind
+    );
+}
+
+#[test]
+fn corpus_comparator_arity() {
+    let e = reject("comparator_arity.hlo.txt");
+    assert!(
+        matches!(e.kind, VerifyErrorKind::BadRegionSignature { .. }),
+        "want BadRegionSignature, got {:?}",
+        e.kind
+    );
+}
+
+#[test]
+fn corpus_binary_shape_mismatch() {
+    let e = reject("binary_shape_mismatch.hlo.txt");
+    assert!(
+        matches!(e.kind, VerifyErrorKind::ShapeMismatch { .. }),
+        "want ShapeMismatch, got {:?}",
+        e.kind
+    );
+}
+
+#[test]
+fn corpus_transpose_bad_perm() {
+    let e = reject("transpose_bad_perm.hlo.txt");
+    assert!(
+        matches!(e.kind, VerifyErrorKind::BadAttribute { .. }),
+        "want BadAttribute, got {:?}",
+        e.kind
+    );
+}
+
+#[test]
+fn corpus_reduce_odd_operands() {
+    let e = reject("reduce_odd_operands.hlo.txt");
+    assert!(
+        matches!(e.kind, VerifyErrorKind::BadArity { .. }),
+        "want BadArity, got {:?}",
+        e.kind
+    );
+}
+
+#[test]
+fn corpus_select_dtype() {
+    let e = reject("select_dtype.hlo.txt");
+    assert!(
+        matches!(e.kind, VerifyErrorKind::DTypeMismatch { .. }),
+        "want DTypeMismatch, got {:?}",
+        e.kind
+    );
+}
+
+/// Every file in the corpus directory must be claimed by a test above, so a
+/// new sample can't land without a typed-variant assertion.
+#[test]
+fn corpus_directory_matches_the_test_roster() {
+    let mut on_disk: Vec<String> = std::fs::read_dir(corpus_dir())
+        .expect("tests/data/bad_hlo must exist")
+        .flatten()
+        .filter_map(|e| {
+            let n = e.file_name().to_string_lossy().into_owned();
+            n.ends_with(".hlo.txt").then_some(n)
+        })
+        .collect();
+    on_disk.sort();
+    let mut roster = vec![
+        "arity_rsqrt.hlo.txt",
+        "binary_shape_mismatch.hlo.txt",
+        "comparator_arity.hlo.txt",
+        "cyclic_call.hlo.txt",
+        "dangling_tuple_ref.hlo.txt",
+        "dot_shape_mismatch.hlo.txt",
+        "dus_rank_mismatch.hlo.txt",
+        "reduce_odd_operands.hlo.txt",
+        "select_dtype.hlo.txt",
+        "transpose_bad_perm.hlo.txt",
+        "while_sig_mismatch.hlo.txt",
+    ];
+    roster.sort();
+    assert_eq!(on_disk, roster, "corpus files and test roster drifted apart");
+}
+
+// ---------------------------------------------------------------------------
+// rejection semantics: errors carry the site, counters move, eval unreachable
+// ---------------------------------------------------------------------------
+
+#[test]
+fn rejection_names_module_computation_and_instruction() {
+    let e = reject("dangling_tuple_ref.hlo.txt");
+    assert_eq!(e.module, "dangling_tuple_ref");
+    assert_eq!(e.comp, "main.1");
+    let msg = e.to_string();
+    assert!(msg.contains("module dangling_tuple_ref"), "{msg}");
+    assert!(msg.contains("tuple index 2 out of range"), "{msg}");
+}
+
+#[test]
+fn rejections_bump_the_rejects_counter() {
+    // Other tests in this binary reject modules concurrently, so only a
+    // monotone lower bound is race-safe here.
+    let before = verify::rejects_count();
+    let _ = reject("binary_shape_mismatch.hlo.txt");
+    assert!(verify::rejects_count() > before, "hlo.verify.rejects did not move");
+}
+
+#[test]
+fn runtime_load_rejects_before_any_evaluation() {
+    // Through the runtime front door the rejection surfaces at load time,
+    // wrapped with the verification context — no Executable is ever built,
+    // so `run` (and with it eval) is unreachable for this module.
+    let err = memdyn::runtime::Executable::parse_text(
+        &corpus("dangling_tuple_ref.hlo.txt"),
+        PathBuf::from("dangling_tuple_ref.hlo.txt"),
+    )
+    .expect_err("malformed module must not produce an executable");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("statically verifying"), "{msg}");
+    assert!(msg.contains("tuple index 2 out of range"), "{msg}");
+}
+
+#[test]
+fn ablation_path_loads_what_the_gate_rejects() {
+    // `new_unverified` is the ablation hook: the same module that the
+    // verifier rejects constructs fine without it (the extra rsqrt operand
+    // is simply ignored by the evaluator), proving the rejection is the
+    // verifier's judgement rather than a parser or planner failure.
+    let module = parse(&corpus("arity_rsqrt.hlo.txt")).unwrap();
+    let _interp = Interpreter::new_unverified(module);
+}
+
+// ---------------------------------------------------------------------------
+// plan pass, through the public plan surface
+// ---------------------------------------------------------------------------
+
+const STRAIGHT_LINE: &str = r#"
+HloModule straight
+
+ENTRY main.1 {
+  a.2 = f32[4]{0} parameter(0)
+  b.3 = f32[4]{0} add(a.2, a.2)
+  ROOT c.4 = f32[4]{0} multiply(b.3, b.3)
+}
+"#;
+
+#[test]
+fn mangled_drop_schedule_is_rejected() {
+    let interp = Interpreter::new(parse(STRAIGHT_LINE).unwrap()).unwrap();
+    let mut plan = interp.plan().clone();
+    // Slot 0 (`a.2`) is dropped at step 1; dropping it again at the root
+    // step violates the drop-exactly-once discipline.
+    plan.comps[0].steps[2].drops.push(0);
+    let e = verify::verify_plan(interp.module(), &plan)
+        .expect_err("double drop must be rejected");
+    assert!(
+        matches!(e.kind, VerifyErrorKind::BadDrop { .. }),
+        "want BadDrop, got {:?}",
+        e.kind
+    );
+}
+
+#[test]
+fn mangled_region_sizing_is_rejected() {
+    let interp = Interpreter::new(parse(STRAIGHT_LINE).unwrap()).unwrap();
+    let mut plan = interp.plan().clone();
+    let r = plan.comps[0].region_of[1];
+    plan.comps[0].region_bytes[r] = 0;
+    let e = verify::verify_plan(interp.module(), &plan)
+        .expect_err("undersized region must be rejected");
+    assert!(
+        matches!(e.kind, VerifyErrorKind::RegionTooSmall { .. }),
+        "want RegionTooSmall, got {:?}",
+        e.kind
+    );
+}
+
+// ---------------------------------------------------------------------------
+// artifact sweep (needs `make artifacts`)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn all_shipped_artifacts_verify_clean_with_zero_rejects() {
+    let dir = memdyn::model::artifacts_dir(None);
+    if !dir.join("index.json").exists() {
+        eprintln!("SKIP: no artifacts at {dir:?} (run `make artifacts`)");
+        return;
+    }
+    let mut files = 0usize;
+    let mut rejected: Vec<String> = Vec::new();
+    for sub in ["resnet", "pointnet", "kernels"] {
+        let Ok(entries) = std::fs::read_dir(dir.join(sub)) else {
+            continue;
+        };
+        for e in entries.flatten() {
+            let p = e.path();
+            if !p.to_string_lossy().ends_with(".hlo.txt") {
+                continue;
+            }
+            let text = std::fs::read_to_string(&p).unwrap();
+            let module =
+                parse(&text).unwrap_or_else(|err| panic!("{p:?} failed to parse: {err:#}"));
+            // Each `Ok` below is a load that contributed nothing to
+            // `hlo.verify.rejects` (the counter moves only on `Err`), so an
+            // empty `rejected` list is exactly the rejects == 0 claim —
+            // stated per-call because parallel corpus tests move the global.
+            if let Err(err) = Interpreter::new(module) {
+                rejected.push(format!("{p:?}: {err}"));
+            }
+            files += 1;
+        }
+    }
+    assert!(files >= 40, "only {files} HLO artifacts found");
+    assert!(
+        rejected.is_empty(),
+        "verifier false-rejected shipped artifacts (rejects must stay 0):\n{}",
+        rejected.join("\n")
+    );
+}

@@ -30,11 +30,29 @@ a strong aliasing check: it drops slots the moment last_use passes and
 mutates uniquely-held buffers in place, so a wrong movable bit, drop
 index, or write tag corrupts a later read and diverges from the tree
 walk instead of hiding.
+
+Every compiled plan additionally passes `verify_plan_soundness` — the
+stdlib mirror of `rust/src/hlo/verify.rs`'s plan pass: liveness is
+re-derived from the operand lists alone and the plan's movable bits,
+drop schedule (each slot at most once, never read after), write tags,
+and byte-sized arena regions are checked against it.  A negative
+self-check mangles a movable bit and an undersized region and asserts
+the pass rejects both.
 """
 import math
 from functools import cmp_to_key
 from check_hlo_smoke import parse_module_ir, strides_of, fnum
 from check_hlo_parse import nelem
+
+def byte_size(ty):
+    # mirror of Type::byte_size in rust/src/hlo/ir.rs: f32/s32 are 4
+    # bytes per element, pred 1; tuples own no flat buffer
+    if ty[0] == "tuple":
+        return 0
+    n = 1
+    for d in ty[2]:
+        n *= d
+    return n * (1 if ty[1] == "pred" else 4)
 
 def inc(idx, shape):
     for d in range(len(idx) - 1, -1, -1):
@@ -461,6 +479,7 @@ class Planned(Ev):
 
     def __init__(self, comps, entry):
         super().__init__(comps, entry)
+        self.regions = {}
         self.plans = {c: self.compile_comp(c) for c in comps}
         self.frames = []
         self.external = []
@@ -494,36 +513,45 @@ class Planned(Ev):
             if op == "dynamic-update-slice":
                 w = "in_place" if mv and mv[0] else "fresh"
             write.append(w)
-        region_of, n_regions = self.assign_regions(lu)
-        self.check_regions(cname, lu, region_of, n_regions)
+        sizes = [byte_size(ins[2]) for ins in instrs]
+        region_of, region_bytes = self.assign_regions(lu, sizes)
+        self.check_regions(cname, lu, region_of, region_bytes, sizes)
+        self.regions[cname] = (region_of, region_bytes)
         return (lu, movable, drops, write)
 
     @staticmethod
-    def assign_regions(lu):
-        # greedy first-fit over [def, last_use] lifetimes, as in plan.rs
-        region_of, region_end = [], []
+    def assign_regions(lu, sizes):
+        # greedy first-fit over [def, last_use] lifetimes, as in plan.rs;
+        # a region's slab is sized for its largest occupant
+        region_of, region_end, region_bytes = [], [], []
         for s, end in enumerate(lu):
             for r in range(len(region_end)):
                 if region_end[r] < s:
                     region_of.append(r)
                     region_end[r] = end
+                    region_bytes[r] = max(region_bytes[r], sizes[s])
                     break
             else:
                 region_of.append(len(region_end))
                 region_end.append(end)
-        return region_of, len(region_end)
+                region_bytes.append(sizes[s])
+        return region_of, region_bytes
 
     @staticmethod
-    def check_regions(cname, lu, region_of, n_regions):
+    def check_regions(cname, lu, region_of, region_bytes, sizes):
         # first-fit assigns in definition order, so within a region the
         # consecutive-pair check proves pairwise lifetime disjointness
-        last = [None] * n_regions
+        last = [None] * len(region_bytes)
         for s, r in enumerate(region_of):
             if last[r] is not None:
                 assert lu[last[r]] < s, (
                     f"{cname}: region {r} slots {last[r]} and {s} overlap"
                 )
             last[r] = s
+            assert sizes[s] <= region_bytes[r], (
+                f"{cname}: slot {s} ({sizes[s]} B) exceeds region {r} "
+                f"({region_bytes[r]} B)"
+            )
 
     @staticmethod
     def pairs_in(v):
@@ -633,6 +661,63 @@ def load(path):
     comps, entry = parse_module_ir(path)
     return Ev(comps, entry)
 
+def verify_plan_soundness(planned):
+    """Stdlib mirror of the plan pass in rust/src/hlo/verify.rs: re-derive
+    liveness from the operand lists alone and check every compiled plan
+    against it.  Returns the number of steps verified; raises on the first
+    unsound plan (movable bit on a live-after slot, drop schedule that
+    double-drops or drops a slot somebody still reads, wrong write tag,
+    or an arena region smaller than a resident buffer)."""
+    steps = 0
+    for cname, (_lu, movable, drops, write) in planned.plans.items():
+        instrs, slot_of, root = planned.comps[cname]
+        n = len(instrs)
+        slots_of = [
+            [] if op == "parameter"
+            else [slot_of[o] for o in ops if o in slot_of]
+            for (op, ops, _ty, _at, _lit) in instrs
+        ]
+        # independent liveness: reads only, root pinned past the end
+        live_end = list(range(n))
+        for i, slots in enumerate(slots_of):
+            for s in slots:
+                live_end[s] = max(live_end[s], i)
+        live_end[root] = n
+        # drop schedule: each slot at most once, exactly the dying reads
+        drop_at = {}
+        for i, ds in enumerate(drops):
+            for s in ds:
+                assert 0 <= s < n, f"{cname}: step {i} drops slot {s} of {n}"
+                assert s not in drop_at, (
+                    f"{cname}: slot {s} dropped at {drop_at[s]} and again at {i}"
+                )
+                drop_at[s] = i
+            want = sorted({s for s in slots_of[i] if live_end[s] == i})
+            assert ds == want, f"{cname}: step {i} drops {ds}, liveness says {want}"
+        for i, slots in enumerate(slots_of):
+            for s in slots:
+                assert drop_at.get(s, i) >= i, (
+                    f"{cname}: step {i} reads slot {s} dropped at {drop_at[s]}"
+                )
+        # movable bits and write tags against the independent liveness
+        for i, slots in enumerate(slots_of):
+            mv = movable[i]
+            assert len(mv) == len(slots), f"{cname}: step {i} movable arity"
+            for k, s in enumerate(slots):
+                indep = live_end[s] == i and slots.count(s) == 1
+                assert mv[k] == indep, (
+                    f"{cname}: step {i} operand {k} movable={mv[k]}, "
+                    f"independent liveness says {indep}"
+                )
+            op = instrs[i][0]
+            want_w = ("in_place" if mv and mv[0] else "fresh") \
+                if op == "dynamic-update-slice" else None
+            assert write[i] == want_w, (
+                f"{cname}: step {i} write tag {write[i]} != {want_w}"
+            )
+            steps += 1
+    return steps
+
 def flat(v):
     out = []
     def go(x):
@@ -650,9 +735,13 @@ def run_both(path, args_builder):
     return the tree-walk result."""
     comps, entry = parse_module_ir(path)
     tree = Ev(comps, entry).run(args_builder())
-    planned = Planned(comps, entry).run(args_builder())
+    pl = Planned(comps, entry)
+    run_both.steps_verified += verify_plan_soundness(pl)
+    planned = pl.run(args_builder())
     assert flat(tree) == flat(planned), f"{path}: planned != tree walk"
     return tree
+
+run_both.steps_verified = 0
 
 def maxdiff(a, b):
     return max(abs(x - y) for x, y in zip(a, b))
@@ -726,6 +815,7 @@ def syn_check(name, text, args_builder, want):
         comps, entry = parse_module_ir(path)
         tree = Ev(comps, entry).run(args_builder())
         pl = Planned(comps, entry)
+        verify_plan_soundness(pl)
         got = pl.run(args_builder())
         assert flat(tree) == flat(got), f"{name}: planned != tree walk"
         _, td = tree
@@ -752,6 +842,36 @@ print(
     f"synthetic plan-vs-tree self-check passed "
     f"(in_place={pl.in_place}, copied={pl.copied + pl2.copied})"
 )
+
+# --- 0b. plan-soundness negative self-check ------------------------------
+# the mirror of hlo::verify's plan pass must actually bite: a flipped
+# movable bit and an undersized region slab are both rejected
+body = next(c for c in pl.plans if pl.plans[c][1] and any(
+    any(m) for m in pl.plans[c][1]
+))
+_lu, mv, _dr, _wr = pl.plans[body]
+i, k = next((i, k) for i, row in enumerate(mv) for k, b in enumerate(row) if b)
+mv[i][k] = False
+try:
+    verify_plan_soundness(pl)
+    raise SystemExit("soundness pass accepted a mangled movable bit")
+except AssertionError:
+    mv[i][k] = True
+entry_name = next(iter(pl.regions))
+region_of, region_bytes = pl.regions[entry_name]
+instrs, _so, _rt = pl.comps[entry_name]
+sizes = [byte_size(ins[2]) for ins in instrs]
+big = max(range(len(sizes)), key=lambda s: sizes[s])
+mangled = list(region_bytes)
+mangled[region_of[big]] = 0
+try:
+    Planned.check_regions(
+        entry_name, pl.plans[entry_name][0], region_of, mangled, sizes
+    )
+    raise SystemExit("region check accepted an undersized slab")
+except AssertionError:
+    pass
+print("plan-soundness negative self-check passed (movable bit + region slab)")
 
 if not os.path.exists(f"{A}/resnet/stem_b1.hlo.txt"):
     print(f"SKIP artifact cross-checks: no artifacts at {A}")
@@ -800,4 +920,8 @@ print(f"sa_0 feats b1-vs-b4 max diff: {maxdiff(f1, f4[:len(f1)]):.2e}")
 print(f"sa_0 sv b1-vs-b4 max diff:    {maxdiff(v1, v4[:len(v1)]):.2e}")
 assert maxdiff(v1, v4[:len(v1)]) < 1e-4
 assert maxdiff(x1, x4[:len(x1)]) < 1e-4
+print(
+    f"plan-soundness mirror: {run_both.steps_verified} steps verified "
+    "across the b1 artifacts"
+)
 print("ALL CROSS-BUCKET PARITY CHECKS PASSED")

@@ -1,0 +1,312 @@
+#!/usr/bin/env python3
+"""Repo-wide determinism and hygiene lint (pure stdlib).
+
+Four rule classes, each one a structural invariant the test suite cannot
+express (tests see behaviour; these see source):
+
+  R1 wall-clock / entropy / hash-order isolation
+     `Instant`, `SystemTime`, and RNG tokens may appear only in the
+     timing allowlist (the serving front-end, its metrics, the bench
+     harness, and `main.rs`) — everywhere else, request outcomes must be
+     a pure function of inputs.  Additionally, no file may *iterate* a
+     `HashMap` (nondeterministic order): variables declared with a
+     HashMap type are tracked per file and any `for .. in` / `.iter()` /
+     `.keys()` / `.values()` / `.drain()` over them is flagged.
+
+  R2 observability counter drift
+     Every counter/probe name registered in `rust/src` must have a row
+     in the `docs/OBSERVABILITY.md` name table, and every name the table
+     documents must still exist in code.  Names under `test.` are
+     fixture-only and exempt.
+
+  R3 CI coverage of the mirror suite
+     Every `tools/check_*.py` must be invoked from `ci.sh` — a mirror
+     nobody runs is a mirror that silently rots.
+
+  R4 missing_docs stays on
+     Files in the manifest below must keep their `#![warn(missing_docs)]`.
+
+`--selftest` seeds one violation per rule class in a scratch tree and
+asserts each is caught, so the linter itself is regression-tested in CI.
+
+Exit status: 0 clean, 1 violations (or selftest failure).
+"""
+
+import argparse
+import os
+import re
+import sys
+import tempfile
+
+REPO = os.path.normpath(os.path.join(os.path.dirname(__file__), ".."))
+
+TIMING_TOKENS = ("Instant", "SystemTime", "thread_rng", "rand::random", "from_entropy")
+
+# Files allowed to read the wall clock: the serving path (queue deadlines,
+# batching waits), its metrics emitter, the bench harness, and the CLI.
+# None of them feed timing back into request *outcomes* — that contract is
+# what tests/determinism.rs sweeps behaviourally.
+TIMING_ALLOWLIST = {
+    "rust/src/coordinator/server.rs",
+    "rust/src/coordinator/metrics.rs",
+    "rust/src/util/bench.rs",
+    "rust/src/main.rs",
+}
+
+# Modules that declare #![warn(missing_docs)] and must keep it.
+MISSING_DOCS_MANIFEST = ["rust/src/coordinator/server.rs"]
+
+HASHMAP_DECL = [
+    # `name: HashMap<..>` (struct fields, args, let-with-annotation),
+    # possibly behind & or Mutex<..>
+    re.compile(r"\b(\w+)\s*:\s*&?\s*(?:Mutex<\s*)?HashMap\b"),
+    # `let [mut] name = HashMap::new()` / `HashMap::with_capacity(..)`
+    re.compile(r"\blet\s+(?:mut\s+)?(\w+)\s*=\s*HashMap::"),
+]
+HASHMAP_ITER_METHODS = (
+    "iter|iter_mut|keys|values|values_mut|drain|into_iter|into_keys|into_values"
+)
+
+CODE_COUNTER_RES = [
+    re.compile(r'register_probe\(\s*"([^"]+)"'),
+    re.compile(r'\bcounter\(\s*"([^"]+)"\s*\)'),
+    re.compile(r'serve_counter\(\s*&\w+\s*,\s*"([^"]+)"\s*\)'),
+]
+DOC_COUNTER_RE = re.compile(r"`([a-z0-9_]+(?:\.[a-z0-9_]+)+)`")
+
+
+def rust_sources(root):
+    src = os.path.join(root, "rust", "src")
+    for dirpath, _dirs, files in os.walk(src):
+        for f in sorted(files):
+            if f.endswith(".rs"):
+                path = os.path.join(dirpath, f)
+                yield os.path.relpath(path, root).replace(os.sep, "/"), path
+
+
+def code_only(line):
+    """Strip `// ...` comments (good enough: no timing token hides in a
+    string literal containing `//`)."""
+    return line.split("//", 1)[0]
+
+
+def check_timing(root):
+    """R1: timing/RNG tokens outside the allowlist + HashMap iteration."""
+    out = []
+    for rel, path in rust_sources(root):
+        with open(path, encoding="utf-8") as fh:
+            lines = fh.readlines()
+        allowed = rel in TIMING_ALLOWLIST
+        # pass 1: every HashMap-typed name declared anywhere in the file
+        maps = set()
+        for line in lines:
+            code = code_only(line)
+            for rx in HASHMAP_DECL:
+                maps.update(m.group(1) for m in rx.finditer(code))
+        iter_res = [
+            re.compile(
+                rf"\b{re.escape(name)}\s*\.\s*(?:{HASHMAP_ITER_METHODS})\s*\("
+            )
+            for name in sorted(maps)
+        ] + [
+            re.compile(rf"\bfor\s+[\w\s,()&]+\bin\s+&?(?:mut\s+)?{re.escape(name)}\b")
+            for name in sorted(maps)
+        ]
+        for i, line in enumerate(lines, 1):
+            code = code_only(line)
+            if not allowed:
+                for tok in TIMING_TOKENS:
+                    if tok in code:
+                        out.append(
+                            f"R1 {rel}:{i}: `{tok}` outside the timing allowlist "
+                            "(outcomes must not read the wall clock or RNG)"
+                        )
+            for rx in iter_res:
+                if rx.search(code):
+                    out.append(
+                        f"R1 {rel}:{i}: HashMap iteration "
+                        "(nondeterministic order): " + line.strip()
+                    )
+    return out
+
+
+def check_counter_drift(root):
+    """R2: registered counter names <-> docs/OBSERVABILITY.md table rows."""
+    out = []
+    in_code = set()
+    where = {}
+    for rel, path in rust_sources(root):
+        with open(path, encoding="utf-8") as fh:
+            for i, line in enumerate(fh, 1):
+                for rx in CODE_COUNTER_RES:
+                    for m in rx.finditer(line):
+                        name = m.group(1)
+                        if not name.startswith("test."):
+                            in_code.add(name)
+                            where.setdefault(name, f"{rel}:{i}")
+    doc_rel = "docs/OBSERVABILITY.md"
+    doc_path = os.path.join(root, doc_rel)
+    in_docs = set()
+    if os.path.exists(doc_path):
+        with open(doc_path, encoding="utf-8") as fh:
+            for line in fh:
+                if line.startswith("|"):
+                    in_docs.update(DOC_COUNTER_RE.findall(line))
+    for name in sorted(in_code - in_docs):
+        out.append(
+            f"R2 {where[name]}: counter `{name}` registered in code but "
+            f"missing from the {doc_rel} name table"
+        )
+    for name in sorted(in_docs - in_code):
+        out.append(
+            f"R2 {doc_rel}: counter `{name}` documented but no longer "
+            "registered anywhere in rust/src"
+        )
+    return out
+
+
+def check_ci_coverage(root):
+    """R3: every tools/check_*.py is invoked from ci.sh."""
+    out = []
+    ci_path = os.path.join(root, "ci.sh")
+    ci = open(ci_path, encoding="utf-8").read() if os.path.exists(ci_path) else ""
+    tools_dir = os.path.join(root, "tools")
+    names = sorted(
+        f
+        for f in (os.listdir(tools_dir) if os.path.isdir(tools_dir) else [])
+        if f.startswith("check_") and f.endswith(".py")
+    )
+    for name in names:
+        if name not in ci:
+            out.append(f"R3 tools/{name}: checker never invoked from ci.sh")
+    return out
+
+
+def check_missing_docs(root):
+    """R4: the missing_docs lint stays on in every manifest module."""
+    out = []
+    for rel in MISSING_DOCS_MANIFEST:
+        path = os.path.join(root, rel)
+        if not os.path.exists(path):
+            out.append(f"R4 {rel}: manifest file vanished")
+            continue
+        if "#![warn(missing_docs)]" not in open(path, encoding="utf-8").read():
+            out.append(f"R4 {rel}: `#![warn(missing_docs)]` was removed")
+    return out
+
+
+RULES = [check_timing, check_counter_drift, check_ci_coverage, check_missing_docs]
+
+
+def run_all(root):
+    violations = []
+    for rule in RULES:
+        violations.extend(rule(root))
+    return violations
+
+
+# ---------------------------------------------------------------------------
+# selftest: each rule class must catch a seeded violation
+# ---------------------------------------------------------------------------
+
+
+def _write(root, rel, text):
+    path = os.path.join(root, rel)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w", encoding="utf-8") as fh:
+        fh.write(text)
+
+
+def selftest():
+    with tempfile.TemporaryDirectory(prefix="lint_selftest_") as root:
+        _write(
+            root,
+            "rust/src/lib.rs",
+            "use std::time::Instant;\n"
+            "pub fn bad_clock() -> u64 { Instant::now().elapsed().as_nanos() as u64 }\n",
+        )
+        _write(
+            root,
+            "rust/src/iter.rs",
+            "use std::collections::HashMap;\n"
+            "pub fn bad_order(m: &HashMap<u32, u32>) -> u32 {\n"
+            "    let mut s = 0; for (_k, v) in m.iter() { s += v; } s\n"
+            "}\n",
+        )
+        _write(
+            root,
+            "rust/src/reg.rs",
+            'pub fn hook() { register_probe("real.counter", || 0); }\n',
+        )
+        _write(
+            root,
+            "docs/OBSERVABILITY.md",
+            "| name | kind |\n|---|---|\n| `ghost.counter` | counter |\n",
+        )
+        _write(root, "tools/check_orphan.py", "print('never wired into ci')\n")
+        _write(root, "ci.sh", "#!/usr/bin/env bash\necho no checkers here\n")
+        _write(
+            root,
+            "rust/src/coordinator/server.rs",
+            "// the missing_docs attribute was deleted\n",
+        )
+
+        got = run_all(root)
+        expect = [
+            ("R1", "`Instant`"),
+            ("R1", "HashMap iteration"),
+            ("R2", "`real.counter` registered in code"),
+            ("R2", "`ghost.counter` documented"),
+            ("R3", "check_orphan.py"),
+            ("R4", "missing_docs"),
+        ]
+        missed = [
+            (rule, frag)
+            for rule, frag in expect
+            if not any(v.startswith(rule) and frag in v for v in got)
+        ]
+        if missed:
+            print("selftest FAILED; seeded violations not caught:")
+            for rule, frag in missed:
+                print(f"  {rule}: {frag}")
+            print("linter reported:")
+            for v in got:
+                print(f"  {v}")
+            return 1
+        # and a clean tree must stay clean
+        with tempfile.TemporaryDirectory(prefix="lint_clean_") as clean:
+            _write(
+                clean,
+                "rust/src/coordinator/server.rs",
+                "#![warn(missing_docs)]\n",
+            )
+            _write(clean, "ci.sh", "#!/usr/bin/env bash\n")
+            stray = run_all(clean)
+            if stray:
+                print("selftest FAILED; clean tree flagged:")
+                for v in stray:
+                    print(f"  {v}")
+                return 1
+    print(f"OK: lint selftest caught all {len(expect)} seeded violations")
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--selftest", action="store_true", help="seed violations, assert caught")
+    ap.add_argument("--root", default=REPO, help="repo root (default: alongside tools/)")
+    args = ap.parse_args()
+    if args.selftest:
+        return selftest()
+    violations = run_all(args.root)
+    if violations:
+        print(f"lint_invariants: {len(violations)} violation(s)")
+        for v in violations:
+            print(f"  {v}")
+        return 1
+    print("OK: determinism + hygiene invariants hold (R1-R4)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
